@@ -1,0 +1,91 @@
+//! CSD design-space explorer: sweep flash geometry and SparF group sizes
+//! on the functional engine and report page traffic, bandwidth use and
+//! write amplification — the co-design loop of paper §IV-C.
+//!
+//!     cargo run --release --example csd_explorer
+
+use instinfer::config::hw::FlashSpec;
+use instinfer::config::model::SparsityParams;
+use instinfer::csd::{AttnMode, InstCsd};
+use instinfer::config::hw::CsdSpec;
+use instinfer::ftl::FtlConfig;
+use instinfer::util::rng::Rng;
+use instinfer::util::table::{eng, Table};
+
+fn explore(channels: usize, n_group: usize, sparse: bool) -> anyhow::Result<Vec<String>> {
+    let d = 32usize;
+    let page_bytes = n_group * d * 2;
+    let flash = FlashSpec {
+        channels,
+        dies_per_channel: 2,
+        planes_per_die: 1,
+        blocks_per_plane: 64,
+        pages_per_block: 64,
+        page_bytes,
+        channel_bw: 1.4e9,
+        read_us: 50.0,
+        program_us: 600.0,
+        erase_ms: 3.0,
+    };
+    let spec = CsdSpec {
+        name: "explorer",
+        flash,
+        engine_flops: 768.0 * 285e6 * 2.0,
+        clock_hz: 285e6,
+        dram_bytes: 64 << 20,
+        attn_kernels: 2,
+        argtopk_elems_per_s: 285e6,
+        filter_bw_per_channel: flash.channel_bw,
+        kv_capacity_bytes: flash.capacity_bytes() as u64,
+    };
+    let mut csd = InstCsd::new(spec, FtlConfig { d_head: d, m: 4, n: n_group })?;
+
+    let mut rng = Rng::new(99);
+    let s_len = 96usize;
+    for t in 0..s_len {
+        let k: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+        let v: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+        csd.write_token(0, 0, &k, &v, t as f64 * 1e-6)?;
+    }
+    let before = csd.ftl.array.counters.page_reads;
+    csd.ftl.array.reset_timing();
+    let q: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+    let mode = if sparse {
+        AttnMode::SparF(SparsityParams { r: 8, k: 12, m: 4, n: n_group })
+    } else {
+        AttnMode::Dense
+    };
+    let key = instinfer::ftl::StreamKey { slot: 0, layer: 0, head: 0 };
+    let (_, t_done, bd) = csd.attention_head(key, &q, s_len, mode, 0.0)?;
+    let reads = csd.ftl.array.counters.page_reads - before;
+    Ok(vec![
+        channels.to_string(),
+        n_group.to_string(),
+        if sparse { "SparF" } else { "dense" }.into(),
+        reads.to_string(),
+        eng(t_done * 1e6),
+        eng(bd.flash_read * 1e6),
+        eng(csd.ftl.write_amplification()),
+    ])
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut t = Table::new(
+        "CSD design space: one attention step over a 96-token stream",
+        &["channels", "group n", "mode", "page reads", "step us", "flash us", "WA"],
+    );
+    for &channels in &[2usize, 4, 8] {
+        for &n in &[4usize, 8, 16] {
+            for &sparse in &[false, true] {
+                t.row(explore(channels, n, sparse)?);
+            }
+        }
+    }
+    t.print();
+    println!(
+        "\nreading guide: larger groups cut page count for dense streaming but\n\
+         over-fetch for sparse gathers; more channels cut step latency; WA\n\
+         stays ~1.5 (K stored twice) regardless — the paper's §IV-C tradeoff."
+    );
+    Ok(())
+}

@@ -1,0 +1,8 @@
+//! Regenerate every table and figure of the paper's evaluation in one go
+//! (the same code `instinfer bench all` runs).
+//!
+//!     cargo run --release --example paper_figures
+
+fn main() {
+    instinfer::bench::run_all();
+}

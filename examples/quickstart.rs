@@ -1,0 +1,46 @@
+//! Quickstart: open the AOT artifacts, validate them against the jax
+//! golden record, and generate a few tokens through the full InstInfer
+//! stack (PJRT "GPU" + simulated CSD with in-storage attention).
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use instinfer::coordinator::{EngineConfig, InferenceEngine, Sequence, SlotManager};
+use instinfer::runtime::{golden, Runtime};
+use instinfer::workload::Request;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::env::var("INSTINFER_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let rt = Runtime::open(&dir)?;
+    println!("PJRT platform: {}", rt.platform());
+
+    // 1) the python<->rust seam: every artifact reproduces jax bit-closely
+    for r in golden::check_all(&rt, 2e-4)? {
+        println!("golden {:<16} max_abs_err {:.2e}", r.exe, r.max_abs_err);
+    }
+
+    // 2) run a tiny offline batch through the whole system
+    let mut engine = InferenceEngine::new(rt, EngineConfig::micro(2))?;
+    let mut slots = SlotManager::new(8);
+    let prompts = [
+        vec![11, 45, 209, 17, 300, 4],
+        vec![7, 7, 7, 99, 123, 54, 32, 10],
+    ];
+    let seqs: Vec<Sequence> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            Sequence::new(
+                Request { id: i as u64, prompt: p.clone(), max_new_tokens: 8 },
+                slots.alloc().unwrap(),
+            )
+        })
+        .collect();
+    let done = engine.generate(seqs, 4)?;
+    for s in &done {
+        println!("prompt {:?} -> generated {:?}", s.req.prompt, s.generated);
+    }
+    println!("{}", engine.metrics.report());
+    println!("simulated CSD device time: {:.6}s", engine.sim_now);
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,122 @@
+//! End-to-end offline serving driver (the EXPERIMENTS.md E2E run).
+//!
+//! Loads the AOT-compiled opt-micro model, serves batched offline
+//! requests through the full three-layer stack — rust coordinator ->
+//! PJRT executables (GPU-side operators) -> simulated InstCSD array
+//! (flash-resident KV + in-storage attention) — and reports throughput,
+//! latency, CSD unit breakdown, and flash statistics for BOTH the dense
+//! and SparF attention modes.
+//!
+//!     cargo run --release --example serve_offline -- --batch 8 --steps 16
+
+use instinfer::config::model::SparsityParams;
+use instinfer::coordinator::{
+    EngineConfig, InferenceEngine, OfflineBatcher, Sequence, SlotManager,
+};
+use instinfer::runtime::Runtime;
+use instinfer::util::stats::percentile;
+use instinfer::workload::{LengthProfile, WorkloadGen};
+
+fn flag(args: &[String], name: &str, default: usize) -> usize {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn run_mode(dir: &str, sparse: bool, n_req: usize, batch: usize, gen: usize) -> anyhow::Result<()> {
+    let rt = Runtime::open(dir)?;
+    let meta = rt.manifest.model.clone();
+    let buckets = rt.manifest.batch_buckets.clone();
+    rt.warmup()?;
+    let mut cfg = EngineConfig::micro(2);
+    if sparse {
+        cfg = cfg.sparse(SparsityParams { r: meta.r, k: meta.k, m: meta.m, n: meta.n });
+    }
+    let mut engine = InferenceEngine::new(rt, cfg)?;
+    let mut wg = WorkloadGen::new(
+        1234, meta.vocab, meta.max_seq, LengthProfile::Chat, meta.prefill_seq / 2, gen,
+    );
+    let mut batcher = OfflineBatcher::new(buckets, batch);
+    for mut r in wg.batch(n_req) {
+        r.prompt.truncate(meta.prefill_seq);
+        r.max_new_tokens = r.max_new_tokens.clamp(2, gen);
+        batcher.push(r);
+    }
+    let mut slots = SlotManager::new(64);
+    let t0 = std::time::Instant::now();
+    let mut done_all = Vec::new();
+    while let Some((reqs, bucket)) = batcher.next_batch() {
+        let seqs: Vec<Sequence> = reqs
+            .into_iter()
+            .map(|r| Sequence::new(r, slots.alloc().unwrap()))
+            .collect();
+        let done = engine.generate(seqs, bucket)?;
+        for s in &done {
+            slots.release(s.slot).unwrap();
+        }
+        done_all.extend(done);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mode = if sparse { "InstI-SparF" } else { "InstI-Dense" };
+    println!("== {mode} ==");
+    println!("{}", engine.metrics.report());
+    println!(
+        "wall {:.2}s  e2e {:.1} tok/s  simulated-device {:.4}s",
+        wall,
+        engine.metrics.tokens_generated as f64 / wall,
+        engine.sim_now
+    );
+    let mut lats = engine.metrics.batch_latencies.clone();
+    if !lats.is_empty() {
+        println!(
+            "batch latency p50 {:.3}s p95 {:.3}s",
+            percentile(&mut lats.clone(), 50.0),
+            percentile(&mut lats, 95.0)
+        );
+    }
+    let mut reads = 0u64;
+    let mut programs = 0u64;
+    let mut wa = 0.0;
+    for q in &engine.csds {
+        reads += q.csd.ftl.array.counters.page_reads;
+        programs += q.csd.ftl.array.counters.page_programs;
+        wa += q.csd.ftl.write_amplification();
+    }
+    println!(
+        "flash: {} page reads, {} programs, write amplification {:.2}",
+        reads,
+        programs,
+        wa / engine.csds.len() as f64
+    );
+    let u = &engine.metrics.units;
+    if u.total() > 0.0 {
+        println!(
+            "CSD units: argtopk {:.1}% flash {:.1}% filter {:.1}% logit0 {:.1}% logit {:.1}% attend {:.1}%",
+            100.0 * u.argtopk / u.total(),
+            100.0 * u.flash_read / u.total(),
+            100.0 * u.nfc_filter / u.total(),
+            100.0 * u.logit0 / u.total(),
+            100.0 * u.logit / u.total(),
+            100.0 * u.attend / u.total(),
+        );
+    }
+    println!();
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let n_req = flag(&args, "--requests", 12);
+    let batch = flag(&args, "--batch", 8);
+    let gen = flag(&args, "--steps", 12);
+    let dir = std::env::var("INSTINFER_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    println!(
+        "serve_offline: {n_req} requests, batch {batch}, {gen} new tokens each\n"
+    );
+    run_mode(&dir, false, n_req, batch, gen)?;
+    run_mode(&dir, true, n_req, batch, gen)?;
+    Ok(())
+}

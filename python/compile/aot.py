@@ -1,0 +1,274 @@
+"""AOT pipeline: lower the L2 operator groups to HLO text artifacts.
+
+Runs ONCE at build time (`make artifacts`); python is never on the request
+path.  Emits into --out-dir:
+
+    <exe>__b<B>.hlo.txt   HLO text per executable per batch bucket
+    manifest.json         model config + executable signatures + indices
+    weights.bin           all parameters, raw little-endian float32
+    golden.bin            input/output tensors for the rust golden tests
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+BATCH_BUCKETS = [1, 4, 8]
+PREFILL_SEQ = 64  # baked prompt-chunk length; rust pads shorter prompts
+
+F32, I32 = "f32", "i32"
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _np_dtype(d: str):
+    return np.int32 if d == I32 else np.float32
+
+
+class ArgSpec:
+    """One positional argument of an executable.
+
+    kind   'input' (runtime tensor) or 'weight' (bound from weights.bin)
+    scope  for weights: 'global' (bind by name) or 'layer' (bind
+           'layers.{i}.<name>')
+    shape  may contain the symbol 'B' (batch bucket) as a string entry.
+    """
+
+    def __init__(self, name, kind, shape, dtype=F32, scope="global"):
+        self.name, self.kind, self.shape, self.dtype, self.scope = (
+            name, kind, shape, dtype, scope)
+
+    def concrete(self, B: int) -> Tuple[int, ...]:
+        return tuple(B if s == "B" else s for s in self.shape)
+
+    def manifest(self) -> dict:
+        return {
+            "name": self.name, "kind": self.kind, "scope": self.scope,
+            "shape": list(self.shape), "dtype": self.dtype,
+        }
+
+
+def inp(name, shape, dtype=F32):
+    return ArgSpec(name, "input", shape, dtype)
+
+
+def wgt(name, shape, scope="layer"):
+    return ArgSpec(name, "weight", shape, F32, scope)
+
+
+def registry(cfg: M.ModelConfig) -> Dict[str, Tuple[Callable, List[ArgSpec]]]:
+    """Executable name -> (fn, arg specs in positional order)."""
+    D, H, dh, F, S, V = (cfg.d_model, cfg.n_heads, cfg.d_head, cfg.d_ffn,
+                         cfg.max_seq, cfg.vocab)
+    SP = PREFILL_SEQ
+    ls = M.layer_slot_shapes(cfg)
+
+    def lw(*slots):
+        return [wgt(s, ls[s]) for s in slots]
+
+    qkv = functools.partial(M.qkv_proj, cfg=cfg)
+    adense = functools.partial(M.attn_dense, cfg=cfg)
+    asparf = functools.partial(M.attn_sparf, cfg=cfg)
+    pattn = functools.partial(M.post_attn, cfg=cfg)
+    pblock = functools.partial(M.prefill_block, cfg=cfg)
+
+    return {
+        "embed_decode": (
+            M.embed_decode,
+            [inp("ids", ("B",), I32), inp("pos", ("B",), I32),
+             wgt("tok_emb", (V, D), "global"), wgt("pos_emb", (S, D), "global")],
+        ),
+        "qkv_proj": (
+            qkv,
+            [inp("x", ("B", D))] + lw("ln1_g", "ln1_b", "wq", "bq", "wk", "bk",
+                                      "wv", "bv"),
+        ),
+        "attn_dense": (
+            adense,
+            [inp("q", ("B", H, dh)), inp("K", ("B", H, S, dh)),
+             inp("V", ("B", H, S, dh)), inp("lens", ("B",))],
+        ),
+        "attn_sparf": (
+            asparf,
+            [inp("q", ("B", H, dh)), inp("K", ("B", H, S, dh)),
+             inp("V", ("B", H, S, dh)), inp("lens", ("B",))],
+        ),
+        "post_attn": (
+            pattn,
+            [inp("x", ("B", D)), inp("attn", ("B", H, dh))]
+            + lw("wo", "bo", "ln2_g", "ln2_b", "w1", "b1", "w2", "b2"),
+        ),
+        "logits": (
+            M.logits,
+            [inp("x", ("B", D)), wgt("ln_f_g", (D,), "global"),
+             wgt("ln_f_b", (D,), "global"), wgt("tok_emb", (V, D), "global")],
+        ),
+        "embed_prefill": (
+            M.embed_prefill,
+            [inp("ids", ("B", SP), I32), wgt("tok_emb", (V, D), "global"),
+             wgt("pos_emb", (S, D), "global")],
+        ),
+        "prefill_block": (
+            pblock,
+            [inp("x", ("B", SP, D))] + lw(*M.LAYER_SLOTS),
+        ),
+    }
+
+
+def golden_inputs(name: str, specs: List[ArgSpec], B: int, cfg: M.ModelConfig):
+    """Deterministic non-weight inputs for the golden record."""
+    rng = np.random.default_rng(abs(hash(name)) % (2**31))
+    out = []
+    for s in specs:
+        if s.kind != "input":
+            continue
+        shape = s.concrete(B)
+        if s.dtype == I32:
+            hi = cfg.vocab if s.name == "ids" else cfg.max_seq
+            arr = rng.integers(0, hi, shape, dtype=np.int32)
+        elif s.name == "lens":
+            arr = rng.integers(1, cfg.max_seq, shape).astype(np.float32)
+        else:
+            arr = rng.standard_normal(shape).astype(np.float32)
+        out.append((s.name, arr))
+    return out
+
+
+def flatten_outputs(res) -> List[np.ndarray]:
+    leaves = jax.tree_util.tree_leaves(res)
+    return [np.asarray(x) for x in leaves]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", required=True)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    cfg = M.SMALL
+    params = M.init_params(cfg, seed=args.seed)
+    reg = registry(cfg)
+
+    manifest: dict = {
+        "model": {
+            "name": cfg.name, "vocab": cfg.vocab, "d_model": cfg.d_model,
+            "n_heads": cfg.n_heads, "d_head": cfg.d_head, "d_ffn": cfg.d_ffn,
+            "n_layers": cfg.n_layers, "max_seq": cfg.max_seq,
+            "prefill_seq": PREFILL_SEQ,
+            "r": cfg.r, "k": cfg.k, "m": cfg.m, "n": cfg.n,
+        },
+        "batch_buckets": BATCH_BUCKETS,
+        "executables": {},
+        "weights": {},
+        "golden": {},
+    }
+
+    # ---- weights.bin ------------------------------------------------------
+    woff = 0
+    with open(os.path.join(args.out_dir, "weights.bin"), "wb") as wf:
+        for name in sorted(params):
+            arr = np.asarray(params[name], np.float32)
+            manifest["weights"][name] = {
+                "offset": woff, "shape": list(arr.shape), "dtype": F32,
+            }
+            wf.write(arr.tobytes())
+            woff += arr.nbytes
+    manifest["weights_bytes"] = woff
+
+    # ---- HLO artifacts ----------------------------------------------------
+    for name, (fn, specs) in reg.items():
+        files = {}
+        for B in BATCH_BUCKETS:
+            shapes = [
+                jax.ShapeDtypeStruct(s.concrete(B), _np_dtype(s.dtype))
+                for s in specs
+            ]
+            lowered = jax.jit(fn).lower(*shapes)
+            fname = f"{name}__b{B}.hlo.txt"
+            with open(os.path.join(args.out_dir, fname), "w") as f:
+                f.write(to_hlo_text(lowered))
+            outs = jax.eval_shape(fn, *shapes)
+            files[str(B)] = {
+                "file": fname,
+                "outputs": [
+                    {"shape": list(o.shape),
+                     "dtype": I32 if np.issubdtype(o.dtype, np.integer) else F32}
+                    for o in jax.tree_util.tree_leaves(outs)
+                ],
+            }
+            print(f"lowered {fname}")
+        manifest["executables"][name] = {
+            "args": [s.manifest() for s in specs],
+            "buckets": files,
+        }
+
+    # ---- golden.bin (B=1, layer-0 weights) --------------------------------
+    goff = 0
+    with open(os.path.join(args.out_dir, "golden.bin"), "wb") as gf:
+
+        def emit(arr: np.ndarray) -> dict:
+            nonlocal goff
+            arr = np.ascontiguousarray(arr)
+            rec = {
+                "offset": goff, "shape": list(arr.shape),
+                "dtype": I32 if arr.dtype == np.int32 else F32,
+            }
+            gf.write(arr.tobytes())
+            goff += arr.nbytes
+            return rec
+
+        for name, (fn, specs) in reg.items():
+            B = 1
+            gin = dict(golden_inputs(name, specs, B, cfg))
+            call_args, in_recs = [], []
+            for s in specs:
+                if s.kind == "input":
+                    arr = gin[s.name]
+                    r = emit(arr)
+                    r["name"] = s.name
+                    in_recs.append(r)
+                    call_args.append(jnp.asarray(arr))
+                else:
+                    pname = s.name if s.scope == "global" else f"layers.0.{s.name}"
+                    call_args.append(params[pname])
+            res = jax.jit(fn)(*call_args)
+            out_recs = []
+            for arr in flatten_outputs(res):
+                r = emit(arr.astype(np.int32 if arr.dtype == np.int32 else np.float32))
+                out_recs.append(r)
+            manifest["golden"][name] = {
+                "batch": B, "layer": 0, "inputs": in_recs, "outputs": out_recs,
+            }
+            print(f"golden {name}: {len(in_recs)} in / {len(out_recs)} out")
+
+    manifest["golden_bytes"] = goff
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest written; weights={woff}B golden={goff}B")
+
+
+if __name__ == "__main__":
+    main()

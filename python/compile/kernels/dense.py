@@ -1,0 +1,83 @@
+"""Pallas kernel: dense decode-phase attention (the InstI-Dense engine).
+
+One grid step per (batch x head).  The KV cache for the head is streamed
+group-by-group (a "group" = one flash page worth of tokens, the same unit
+the InstCSD NFC fetches) with an online-softmax accumulator, mirroring how
+the in-storage attention engine consumes pages as they arrive from the
+flash channels.
+
+TPU adaptation (DESIGN.md §2): the flash page group maps to the block over
+the sequence axis; the online-softmax carry lives in registers/VMEM.  The
+kernel is lowered with interpret=True — CPU PJRT cannot execute Mosaic
+custom-calls — and its VMEM/MXU characteristics are estimated statically
+(EXPERIMENTS.md §Perf).
+
+Shapes:
+    q    (BH, d)        current-token queries, one row per (batch, head)
+    K, V (BH, S, d)     padded KV cache
+    lens (BH,)          float32 valid lengths
+    out  (BH, d)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _dense_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, *, group: int):
+    """One (batch, head) slot: online-softmax attention over page groups."""
+    q = q_ref[0]                    # (d,)
+    K = k_ref[0]                    # (S, d)
+    V = v_ref[0]                    # (S, d)
+    length = len_ref[0]
+    S, d = K.shape
+    n_groups = S // group
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, q.dtype))
+
+    def body(g, carry):
+        m_run, l_run, acc = carry
+        kg = jax.lax.dynamic_slice(K, (g * group, 0), (group, d))
+        vg = jax.lax.dynamic_slice(V, (g * group, 0), (group, d))
+        idx = g * group + jnp.arange(group)
+        valid = (idx.astype(length.dtype) < length)
+        logits = jnp.where(valid, (kg @ q) * scale, NEG_INF)
+        m_new = jnp.maximum(m_run, jnp.max(logits))
+        corr = jnp.exp(m_run - m_new)
+        p = jnp.exp(logits - m_new) * valid.astype(q.dtype)
+        l_new = l_run * corr + jnp.sum(p)
+        acc_new = acc * corr + p @ vg
+        return m_new, l_new, acc_new
+
+    init = (jnp.asarray(NEG_INF, q.dtype), jnp.asarray(0.0, q.dtype), jnp.zeros((d,), q.dtype))
+    _, l_fin, acc = jax.lax.fori_loop(0, n_groups, body, init)
+    o_ref[0] = acc / jnp.maximum(l_fin, 1e-30)
+
+
+def dense_decode_attention(q, K, V, lens, *, group: int = 16, interpret: bool = True):
+    """softmax(q K^T / sqrt(d)) V per (batch, head) slot, page-streamed.
+
+    `group` is the flash-page token group size (16 tokens for d_head=128
+    FP16 on 4 KiB pages — paper §IV-C; scaled configs pass their own).
+    """
+    BH, S, d = K.shape
+    assert S % group == 0, f"S={S} must be a multiple of the page group {group}"
+    kernel = functools.partial(_dense_kernel, group=group)
+    return pl.pallas_call(
+        kernel,
+        grid=(BH,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, S, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, S, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, d), q.dtype),
+        interpret=interpret,
+    )(q, K, V, lens)

@@ -1,0 +1,272 @@
+"""Pure-jnp oracles for the attention kernels (the CORE correctness signal).
+
+Every Pallas kernel in this package, every HLO artifact executed by the rust
+runtime, and the rust-native CSD engine are all validated against the
+functions in this module.
+
+Shapes follow the paper's single-head decode-step convention
+(Algorithm 1 of the InstInfer paper):
+
+    q       : (d,)      current-token query vector for one head
+    K, V    : (S, d)    per-head KV cache, padded to S rows
+    length  : ()        number of valid rows in K/V (<= S)
+
+Batched/multi-head variants are produced with `jax.vmap` by callers.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def topk_mask(x: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Boolean mask of the k largest entries of 1-D `x` (ties -> lower index).
+
+    Implemented with a stable descending argsort instead of `lax.top_k`:
+    the HLO `topk` op only exists in newer XLA and the AOT consumer
+    (xla_extension 0.5.1, see aot.py) cannot parse it, while `sort` +
+    scatter round-trip cleanly.  Semantics match `lax.top_k` (stable sort
+    breaks ties by index).
+    """
+    order = jnp.argsort(-x, stable=True)
+    return jnp.zeros(x.shape, bool).at[order[:k]].set(True)
+
+
+def _valid_mask(S: int, length) -> jnp.ndarray:
+    """Boolean (S,) mask of valid (non-padding) token rows."""
+    return jnp.arange(S) < length
+
+
+def masked_softmax(logits: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Numerically-stable softmax over `logits` restricted to `mask`.
+
+    Entries where mask is False receive probability exactly 0.  If the mask
+    is empty the result is all zeros (callers guarantee length >= 1).
+    """
+    logits = jnp.where(mask, logits, NEG_INF)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m) * mask.astype(logits.dtype)
+    z = jnp.sum(e, axis=-1, keepdims=True)
+    return e / jnp.maximum(z, 1e-30)
+
+
+def dense_attention(q: jnp.ndarray, K: jnp.ndarray, V: jnp.ndarray, length) -> jnp.ndarray:
+    """Vanilla decode-phase attention for one head: softmax(qK^T/sqrt(d)) V."""
+    S, d = K.shape
+    mask = _valid_mask(S, length)
+    logits = (K @ q) / jnp.sqrt(jnp.asarray(d, q.dtype))
+    s = masked_softmax(logits, mask)
+    return s @ V
+
+
+def v_mean(V: jnp.ndarray, length) -> jnp.ndarray:
+    """Mean of the valid V rows — the compensation vector v̄ of Algorithm 1."""
+    S = V.shape[0]
+    mask = _valid_mask(S, length).astype(V.dtype)
+    return (mask @ V) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def sparq_attention(
+    q: jnp.ndarray,
+    K: jnp.ndarray,
+    V: jnp.ndarray,
+    vbar: jnp.ndarray,
+    length,
+    *,
+    r: int,
+    k: int,
+) -> jnp.ndarray:
+    """Vanilla SparQ attention [Ribar et al.] — the baseline of Algorithm 1.
+
+    Step A: approximate scores using only the top-r |q| embedding channels.
+    Step B: exact attention over the top-k tokens of the approximate scores,
+            blended with v̄ by the coverage weight alpha.
+    """
+    S, d = K.shape
+    mask = _valid_mask(S, length)
+
+    # -- step A: top-r embedding channels of |q|
+    emb = topk_mask(jnp.abs(q), r)
+    qr = jnp.where(emb, q, 0.0)
+    # softmax temperature correction from the SparQ paper:
+    # sqrt(d * |q_r|_1 / |q|_1)
+    scale = jnp.sqrt(
+        jnp.asarray(d, q.dtype)
+        * jnp.sum(jnp.abs(qr))
+        / jnp.maximum(jnp.sum(jnp.abs(q)), 1e-30)
+    )
+    s_hat = masked_softmax((K @ qr) / jnp.maximum(scale, 1e-30), mask)
+
+    # -- step B: top-k tokens of the approximate scores
+    tok = topk_mask(jnp.where(mask, s_hat, -1.0), k) & mask
+    alpha = jnp.sum(jnp.where(tok, s_hat, 0.0))
+
+    logits = (K @ q) / jnp.sqrt(jnp.asarray(d, q.dtype))
+    s = masked_softmax(logits, tok)
+    return alpha * (s @ V) + (1.0 - alpha) * vbar
+
+
+def sparf_token_groups(s_hat: jnp.ndarray, mask: jnp.ndarray, *, k: int, n: int):
+    """Group-aligned top-k token selection (steps 5-9 of Algorithm 1).
+
+    Returns (tok_mask, group_mask):
+      tok_mask   (S,)    exact top-k tokens (what the NFC filter keeps)
+      group_mask (S//n,) flash pages that must be fetched (a page is fetched
+                         iff it contains at least one selected token)
+    """
+    S = s_hat.shape[0]
+    tok = topk_mask(jnp.where(mask, s_hat, -1.0), k) & mask
+    group = jnp.any(tok.reshape(S // n, n), axis=1)
+    return tok, group
+
+
+def sparf_embed_groups(q: jnp.ndarray, *, r: int, m: int):
+    """Group-aligned top-r embedding selection (steps 1-3 of Algorithm 1).
+
+    Returns (emb_mask, group_mask):
+      emb_mask   (d,)    exact top-r channels (post-filter)
+      group_mask (d//m,) embedding-indexed flash pages to fetch
+    """
+    d = q.shape[0]
+    emb = topk_mask(jnp.abs(q), r)
+    group = jnp.any(emb.reshape(d // m, m), axis=1)
+    return emb, group
+
+
+def sparf_attention(
+    q: jnp.ndarray,
+    K: jnp.ndarray,
+    V: jnp.ndarray,
+    vbar: jnp.ndarray,
+    length,
+    *,
+    r: int,
+    k: int,
+    m: int,
+    n: int,
+) -> jnp.ndarray:
+    """SparF attention — Algorithm 1 of the InstInfer paper.
+
+    Functionally this equals SparQ with the same (r, k): the dual-step
+    loading fetches whole flash pages (embedding groups of m channels,
+    token groups of n tokens) but the NFC filter discards the weak units
+    before any compute, so the arithmetic is identical.  The group
+    structure is what the FTL and the bandwidth model consume; it is
+    exposed separately via `sparf_stats`.
+    """
+    del m, n  # groups affect data movement, not the arithmetic
+    return sparq_attention(q, K, V, vbar, length, r=r, k=k)
+
+
+def sparf_stats(
+    q: jnp.ndarray,
+    K: jnp.ndarray,
+    V: jnp.ndarray,
+    length,
+    *,
+    r: int,
+    k: int,
+    m: int,
+    n: int,
+):
+    """Data-movement statistics of one SparF step (for the bandwidth model).
+
+    Returns a dict of scalar counts:
+      emb_pages   embedding-indexed pages fetched in step 2
+      tok_pages   token-indexed pages fetched in step 8 (x2: K and V)
+      emb_kept    channels surviving the NFC filter (== r)
+      tok_kept    tokens surviving the NFC filter  (== min(k, length))
+    """
+    S, d = K.shape
+    mask = _valid_mask(S, length)
+    emb, eg = sparf_embed_groups(q, r=r, m=m)
+    qr = jnp.where(emb, q, 0.0)
+    scale = jnp.sqrt(
+        jnp.asarray(d, q.dtype)
+        * jnp.sum(jnp.abs(qr))
+        / jnp.maximum(jnp.sum(jnp.abs(q)), 1e-30)
+    )
+    s_hat = masked_softmax((K @ qr) / jnp.maximum(scale, 1e-30), mask)
+    tok, tg = sparf_token_groups(s_hat, mask, k=k, n=n)
+    return {
+        "emb_pages": jnp.sum(eg.astype(jnp.int32)),
+        "tok_pages": jnp.sum(tg.astype(jnp.int32)),
+        "emb_kept": jnp.sum(emb.astype(jnp.int32)),
+        "tok_kept": jnp.sum(tok.astype(jnp.int32)),
+    }
+
+
+def h2o_attention(
+    q: jnp.ndarray,
+    K: jnp.ndarray,
+    V: jnp.ndarray,
+    acc_scores: jnp.ndarray,
+    length,
+    *,
+    k: int,
+    window: int,
+) -> jnp.ndarray:
+    """H2O-style heavy-hitter attention (accuracy baseline for Fig. 11).
+
+    Keeps the `window` most recent tokens plus the heaviest hitters by
+    accumulated historical attention mass (`acc_scores`, maintained by the
+    caller across decode steps), up to `k` tokens total.
+    """
+    S, d = K.shape
+    mask = _valid_mask(S, length)
+    recent = (jnp.arange(S) >= (length - window)) & mask
+    heavy_pool = jnp.where(mask & ~recent, acc_scores, -1.0)
+    n_heavy = max(k - window, 0)
+    if n_heavy > 0:
+        heavy = topk_mask(heavy_pool, n_heavy) & mask & ~recent
+    else:
+        heavy = jnp.zeros((S,), bool)
+    keep = recent | heavy
+    logits = (K @ q) / jnp.sqrt(jnp.asarray(d, q.dtype))
+    s = masked_softmax(logits, keep)
+    return s @ V
+
+
+def local_attention(
+    q: jnp.ndarray,
+    K: jnp.ndarray,
+    V: jnp.ndarray,
+    length,
+    *,
+    k: int,
+) -> jnp.ndarray:
+    """Sliding-window attention over the k most recent tokens (Fig. 11)."""
+    S, d = K.shape
+    mask = _valid_mask(S, length)
+    keep = (jnp.arange(S) >= (length - k)) & mask
+    logits = (K @ q) / jnp.sqrt(jnp.asarray(d, q.dtype))
+    s = masked_softmax(logits, keep)
+    return s @ V
+
+
+def causal_attention(Q: jnp.ndarray, K: jnp.ndarray, V: jnp.ndarray) -> jnp.ndarray:
+    """Prefill-phase causal attention for one head: Q,K,V (S, d) -> (S, d)."""
+    S, d = Q.shape
+    logits = (Q @ K.T) / jnp.sqrt(jnp.asarray(d, Q.dtype))
+    causal = jnp.tril(jnp.ones((S, S), bool))
+    logits = jnp.where(causal, logits, NEG_INF)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m) * causal.astype(logits.dtype)
+    s = e / jnp.maximum(jnp.sum(e, axis=-1, keepdims=True), 1e-30)
+    return s @ V
+
+
+# Convenience batched variants (B*H leading axis), used by the L2 model and
+# by the golden-generation path in aot.py.
+dense_attention_bh = jax.vmap(dense_attention, in_axes=(0, 0, 0, 0))
+causal_attention_bh = jax.vmap(causal_attention, in_axes=(0, 0, 0))
+
+
+def sparf_attention_bh(q, K, V, vbar, length, *, r, k, m, n):
+    fn = functools.partial(sparf_attention, r=r, k=k, m=m, n=n)
+    return jax.vmap(fn, in_axes=(0, 0, 0, 0, 0))(q, K, V, vbar, length)

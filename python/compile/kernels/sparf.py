@@ -1,0 +1,123 @@
+"""Pallas kernel: SparF attention (Algorithm 1) — the InstCSD hot-spot.
+
+One grid step per (batch x head) slot, executing the full dual-step SparF
+pipeline exactly as the in-storage engine does:
+
+  step 1    argtopk unit: top-r channels of |q|
+  step 2-3  embedding-indexed page fetch + NFC filter (here: group-aligned
+            load mask, then exact channel mask — the masked elements never
+            contribute, mirroring the filter discarding weak units)
+  step 4    Attention Kernel #1: approximate scores over masked channels
+  step 5-6  argtopk unit: top-k tokens
+  step 7    alpha = covered approximate mass
+  step 8-9  token-indexed page fetch + NFC filter
+  step 10   Attention Kernel #2: exact scores over kept tokens
+  step 11   output blended with v̄ by alpha
+
+TPU adaptation: gathers become mask-multiplies (dense-friendly on the MXU;
+the savings appear in the HBM<->VMEM schedule, which on the CSD is the
+flash-channel schedule).  interpret=True for CPU PJRT (see dense.py).
+
+Shapes:
+    q    (BH, d)
+    K, V (BH, S, d)
+    lens (BH,)  float32 valid lengths
+    out  (BH, d)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _sparf_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, *, r: int, k: int, m: int, n: int):
+    q = q_ref[0]                    # (d,)
+    K = k_ref[0]                    # (S, d)
+    V = v_ref[0]                    # (S, d)
+    length = len_ref[0]
+    S, d = K.shape
+    fdtype = q.dtype
+    valid = (jnp.arange(S).astype(length.dtype) < length)
+    validf = valid.astype(fdtype)
+
+    # v̄: compensation vector (paper computes it incrementally on writes;
+    # functionally it is the mean of valid V rows).
+    n_valid = jnp.maximum(jnp.sum(validf), 1.0)
+    vbar = (validf @ V) / n_valid
+
+    # ---- step 1: argtopk over |q| channels -------------------------------
+    # top-k via stable descending argsort: the consumer XLA (0.5.1) cannot
+    # parse the newer `topk` HLO op, while sort+scatter round-trip (ref.py
+    # uses the identical construction, keeping kernel == oracle bit-exact).
+    absq = jnp.abs(q)
+    ei = jnp.argsort(-absq, stable=True)[:r]
+    emb = jnp.zeros((d,), jnp.bool_).at[ei].set(True)
+
+    # ---- steps 2-3: embedding-page load + NFC filter ---------------------
+    # Page-level OR over groups of m channels decides which embedding-indexed
+    # pages stream in; the filter then zeroes the weak channels.  In the
+    # masked formulation only `emb` survives — the group mask is what the
+    # FTL/bandwidth model charges for.
+    emb_group = jnp.repeat(jnp.any(emb.reshape(d // m, m), axis=1), m)
+    emb_eff = emb & emb_group       # == emb; keeps the dataflow explicit
+    qr = jnp.where(emb_eff, q, 0.0)
+
+    # ---- step 4: Attention Kernel #1 (approximate scores) ----------------
+    scale_hat = jnp.sqrt(
+        jnp.asarray(d, fdtype) * jnp.sum(jnp.abs(qr))
+        / jnp.maximum(jnp.sum(absq), 1e-30)
+    )
+    logits_hat = jnp.where(valid, (K @ qr) / jnp.maximum(scale_hat, 1e-30), NEG_INF)
+    mh = jnp.max(logits_hat)
+    eh = jnp.exp(logits_hat - mh) * validf
+    s_hat = eh / jnp.maximum(jnp.sum(eh), 1e-30)
+
+    # ---- steps 5-6: argtopk over tokens ----------------------------------
+    ti = jnp.argsort(-jnp.where(valid, s_hat, -1.0), stable=True)[:k]
+    tok = jnp.zeros((S,), jnp.bool_).at[ti].set(True) & valid
+
+    # ---- step 7: covered mass --------------------------------------------
+    alpha = jnp.sum(jnp.where(tok, s_hat, 0.0))
+
+    # ---- steps 8-9: token-page load + NFC filter -------------------------
+    tok_group = jnp.repeat(jnp.any(tok.reshape(S // n, n), axis=1), n)
+    tok_eff = tok & tok_group       # == tok
+
+    # ---- step 10: Attention Kernel #2 (exact scores on kept tokens) ------
+    logits = jnp.where(tok_eff, (K @ q) / jnp.sqrt(jnp.asarray(d, fdtype)), NEG_INF)
+    mx = jnp.max(logits)
+    ex = jnp.exp(logits - mx) * tok_eff.astype(fdtype)
+    s = ex / jnp.maximum(jnp.sum(ex), 1e-30)
+
+    # ---- step 11: blend with v̄ -------------------------------------------
+    o_ref[0] = alpha * (s @ V) + (1.0 - alpha) * vbar
+
+
+def sparf_decode_attention(
+    q, K, V, lens, *, r: int, k: int, m: int, n: int, interpret: bool = True
+):
+    """SparF attention over (BH, S, d) KV caches; see module docstring."""
+    BH, S, d = K.shape
+    assert d % m == 0, f"d={d} must be a multiple of the embedding group {m}"
+    assert S % n == 0, f"S={S} must be a multiple of the token group {n}"
+    assert r <= d and k <= S
+    kernel = functools.partial(_sparf_kernel, r=r, k=k, m=m, n=n)
+    return pl.pallas_call(
+        kernel,
+        grid=(BH,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, S, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, S, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, d), q.dtype),
+        interpret=interpret,
+    )(q, K, V, lens)

@@ -1,0 +1,304 @@
+"""L2: OPT-style decoder-only transformer, split along the paper's GPU/CSD cut.
+
+The paper partitions each decode step as (Fig. 2, §III-B):
+
+    GPU : embed -> LN -> QKV projection            (`embed_decode`, `qkv_proj`)
+    CSD : decoding-phase attention over the KV cache (`attn_dense`/`attn_sparf`)
+    GPU : O projection -> FFN -> (last layer) logits (`post_attn`, `logits`)
+
+and the whole prefill phase stays on the GPU (`embed_prefill`,
+`prefill_block`).  Each of these groups is its own AOT artifact so the rust
+coordinator can schedule them independently, exactly like the real system
+schedules GPU kernels vs CSD NVMe commands.
+
+All functions are pure: weights are explicit arguments (the artifacts are
+layer-agnostic; the rust side binds layer i's tensors at call time).
+Everything is float32 — the CPU PJRT path has no native FP16; byte-level
+accounting elsewhere uses the paper's FP16 sizes (DESIGN.md §1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import dense as kdense
+from .kernels import ref as kref
+from .kernels import sparf as ksparf
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture + SparF hyper-parameters.
+
+    m = embedding-group size (channels per embedding-indexed flash page),
+    n = token-group size (tokens per token-indexed flash page),
+    r, k = SparF top-r channels / top-k tokens (compression = r/d = k-ish/S).
+    """
+
+    name: str
+    vocab: int
+    d_model: int
+    n_heads: int
+    d_head: int
+    d_ffn: int
+    n_layers: int
+    max_seq: int
+    r: int
+    k: int
+    m: int
+    n: int
+
+    @property
+    def bh(self) -> int:
+        return self.n_heads * self.d_head
+
+
+# Functional-plane model: small enough that CPU PJRT runs it interactively,
+# shaped like OPT (pre-LN, learned positions, tied unembedding).
+SMALL = ModelConfig(
+    name="opt-micro-14m",
+    vocab=512,
+    d_model=256,
+    n_heads=8,
+    d_head=32,
+    d_ffn=1024,
+    n_layers=4,
+    max_seq=128,
+    r=8,      # 1/4 of d_head
+    k=16,     # 1/8 of max_seq
+    m=4,
+    n=8,
+)
+
+# Timing-plane shape reference (never lowered — drives the rust DES).
+OPT_13B = ModelConfig(
+    name="opt-13b",
+    vocab=50272,
+    d_model=5120,
+    n_heads=40,
+    d_head=128,
+    d_ffn=20480,
+    n_layers=40,
+    max_seq=2048,
+    r=32,     # 1/4 of d_head
+    k=256,    # 1/8 of max_seq
+    m=8,
+    n=16,     # 16 tokens x 128 x FP16 = 4 KiB page (paper §IV-C)
+)
+
+
+# --------------------------------------------------------------------------
+# Parameter initialisation (deterministic; shared with golden generation)
+# --------------------------------------------------------------------------
+
+LAYER_SLOTS = [
+    "ln1_g", "ln1_b", "wq", "bq", "wk", "bk", "wv", "bv",
+    "wo", "bo", "ln2_g", "ln2_b", "w1", "b1", "w2", "b2",
+]
+
+
+def layer_slot_shapes(cfg: ModelConfig) -> Dict[str, tuple]:
+    D, F = cfg.d_model, cfg.d_ffn
+    return {
+        "ln1_g": (D,), "ln1_b": (D,),
+        "wq": (D, D), "bq": (D,),
+        "wk": (D, D), "bk": (D,),
+        "wv": (D, D), "bv": (D,),
+        "wo": (D, D), "bo": (D,),
+        "ln2_g": (D,), "ln2_b": (D,),
+        "w1": (D, F), "b1": (F,),
+        "w2": (F, D), "b2": (D,),
+    }
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Dict[str, jnp.ndarray]:
+    """Deterministic OPT-style init; keys are flat dotted names."""
+    key = jax.random.PRNGKey(seed)
+    params: Dict[str, jnp.ndarray] = {}
+
+    def nxt():
+        nonlocal key
+        key, sub = jax.random.split(key)
+        return sub
+
+    def dense_init(shape, fan_in):
+        return jax.random.normal(nxt(), shape, jnp.float32) * (fan_in ** -0.5)
+
+    params["tok_emb"] = dense_init((cfg.vocab, cfg.d_model), cfg.d_model)
+    params["pos_emb"] = dense_init((cfg.max_seq, cfg.d_model), cfg.d_model)
+    shapes = layer_slot_shapes(cfg)
+    for layer in range(cfg.n_layers):
+        for slot in LAYER_SLOTS:
+            shape = shapes[slot]
+            name = f"layers.{layer}.{slot}"
+            if slot.startswith(("ln",)) and slot.endswith("_g"):
+                params[name] = jnp.ones(shape, jnp.float32)
+            elif len(shape) == 1:
+                params[name] = jnp.zeros(shape, jnp.float32)
+            else:
+                params[name] = dense_init(shape, shape[0])
+    params["ln_f_g"] = jnp.ones((cfg.d_model,), jnp.float32)
+    params["ln_f_b"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    return params
+
+
+# --------------------------------------------------------------------------
+# Operator groups (one AOT artifact each)
+# --------------------------------------------------------------------------
+
+
+def layer_norm(x: jnp.ndarray, g: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + 1e-5) * g + b
+
+
+def embed_decode(ids, pos, tok_emb, pos_emb):
+    """Decode-step embedding: ids,pos (B,) int32 -> x (B, D)."""
+    return tok_emb[ids] + pos_emb[pos]
+
+
+def embed_prefill(ids, tok_emb, pos_emb):
+    """Prefill embedding: ids (B, S) int32 -> x (B, S, D)."""
+    B, S = ids.shape
+    return tok_emb[ids] + pos_emb[jnp.arange(S)][None, :, :]
+
+
+def qkv_proj(x, ln1_g, ln1_b, wq, bq, wk, bk, wv, bv, *, cfg: ModelConfig):
+    """Pre-LN QKV projection: x (B, D) -> q, k, v each (B, H, d_head)."""
+    B = x.shape[0]
+    h = layer_norm(x, ln1_g, ln1_b)
+    q = (h @ wq + bq).reshape(B, cfg.n_heads, cfg.d_head)
+    k = (h @ wk + bk).reshape(B, cfg.n_heads, cfg.d_head)
+    v = (h @ wv + bv).reshape(B, cfg.n_heads, cfg.d_head)
+    return q, k, v
+
+
+def _to_bh(t, cfg: ModelConfig):
+    """(B, H, S, d) -> (B*H, S, d) / (B, H, d) -> (B*H, d)."""
+    return t.reshape((-1,) + t.shape[2:])
+
+
+def attn_dense(q, K, V, lens, *, cfg: ModelConfig):
+    """Decode attention (dense) — the InstI-Dense CSD engine artifact.
+
+    q (B,H,d); K,V (B,H,S,d); lens (B,) f32 -> (B,H,d).
+    """
+    B = q.shape[0]
+    lens_bh = jnp.repeat(lens, cfg.n_heads)
+    out = kdense.dense_decode_attention(
+        _to_bh(q, cfg), _to_bh(K, cfg), _to_bh(V, cfg), lens_bh, group=cfg.n
+    )
+    return out.reshape(B, cfg.n_heads, cfg.d_head)
+
+
+def attn_sparf(q, K, V, lens, *, cfg: ModelConfig):
+    """Decode attention (SparF, Algorithm 1) — the InstI-SparF CSD artifact."""
+    B = q.shape[0]
+    lens_bh = jnp.repeat(lens, cfg.n_heads)
+    out = ksparf.sparf_decode_attention(
+        _to_bh(q, cfg), _to_bh(K, cfg), _to_bh(V, cfg), lens_bh,
+        r=cfg.r, k=cfg.k, m=cfg.m, n=cfg.n,
+    )
+    return out.reshape(B, cfg.n_heads, cfg.d_head)
+
+
+def post_attn(x, attn, wo, bo, ln2_g, ln2_b, w1, b1, w2, b2, *, cfg: ModelConfig):
+    """O projection + residual + FFN: x (B,D), attn (B,H,d) -> x' (B,D)."""
+    B = x.shape[0]
+    o = attn.reshape(B, cfg.d_model) @ wo + bo
+    x = x + o
+    h = layer_norm(x, ln2_g, ln2_b)
+    f = jax.nn.relu(h @ w1 + b1) @ w2 + b2
+    return x + f
+
+
+def logits(x, ln_f_g, ln_f_b, tok_emb):
+    """Final LN + tied unembedding; returns (logits (B,V), greedy ids (B,))."""
+    h = layer_norm(x, ln_f_g, ln_f_b)
+    lg = h @ tok_emb.T
+    return lg, jnp.argmax(lg, axis=-1).astype(jnp.int32)
+
+
+def prefill_block(
+    x, ln1_g, ln1_b, wq, bq, wk, bk, wv, bv,
+    wo, bo, ln2_g, ln2_b, w1, b1, w2, b2, *, cfg: ModelConfig,
+):
+    """One decoder block over a full prompt (GPU-resident in the paper).
+
+    x (B, S, D) -> (x' (B, S, D), K (B, H, S, d), V (B, H, S, d)).
+    The returned K/V are what the coordinator ships to the CSD layer-wise,
+    overlapped with the next block's compute (paper §IV-D).
+    """
+    B, S, D = x.shape
+    h = layer_norm(x, ln1_g, ln1_b)
+    q = (h @ wq + bq).reshape(B, S, cfg.n_heads, cfg.d_head).transpose(0, 2, 1, 3)
+    k = (h @ wk + bk).reshape(B, S, cfg.n_heads, cfg.d_head).transpose(0, 2, 1, 3)
+    v = (h @ wv + bv).reshape(B, S, cfg.n_heads, cfg.d_head).transpose(0, 2, 1, 3)
+    ar = kref.causal_attention_bh(
+        q.reshape(B * cfg.n_heads, S, cfg.d_head),
+        k.reshape(B * cfg.n_heads, S, cfg.d_head),
+        v.reshape(B * cfg.n_heads, S, cfg.d_head),
+    ).reshape(B, cfg.n_heads, S, cfg.d_head)
+    o = ar.transpose(0, 2, 1, 3).reshape(B, S, D) @ wo + bo
+    x = x + o
+    h2 = layer_norm(x, ln2_g, ln2_b)
+    f = jax.nn.relu(h2 @ w1 + b1) @ w2 + b2
+    return x + f, k, v
+
+
+# --------------------------------------------------------------------------
+# Whole-model reference paths (tests + golden only; never lowered)
+# --------------------------------------------------------------------------
+
+
+def layer_weights(params: Dict[str, jnp.ndarray], i: int):
+    return {s: params[f"layers.{i}.{s}"] for s in LAYER_SLOTS}
+
+
+def reference_prefill(params, cfg: ModelConfig, ids):
+    """Full prefill: ids (B, S) -> (x (B,S,D), K,V lists per layer)."""
+    x = embed_prefill(ids, params["tok_emb"], params["pos_emb"])
+    Ks, Vs = [], []
+    for i in range(cfg.n_layers):
+        w = layer_weights(params, i)
+        x, K, V = prefill_block(x, *[w[s] for s in LAYER_SLOTS], cfg=cfg)
+        Ks.append(K)
+        Vs.append(V)
+    return x, Ks, Vs
+
+
+def reference_decode_step(params, cfg: ModelConfig, ids, pos, Ks, Vs, lens, *, sparse: bool):
+    """One decode step over padded caches Ks/Vs (lists of (B,H,Smax,d)).
+
+    Returns (next_ids (B,), new k/v per layer).  The caller appends k/v to
+    the caches — mirroring the rust coordinator's KV manager.
+    """
+    x = embed_decode(ids, pos, params["tok_emb"], params["pos_emb"])
+    new_kv = []
+    for i in range(cfg.n_layers):
+        w = layer_weights(params, i)
+        q, k, v = qkv_proj(
+            x, w["ln1_g"], w["ln1_b"], w["wq"], w["bq"], w["wk"], w["bk"],
+            w["wv"], w["bv"], cfg=cfg,
+        )
+        # append k,v at position `lens` before attending (the new token
+        # attends to itself, as in standard KV-cache decode)
+        B = x.shape[0]
+        idx = lens.astype(jnp.int32)
+        K = Ks[i].at[jnp.arange(B), :, idx, :].set(k)
+        V = Vs[i].at[jnp.arange(B), :, idx, :].set(v)
+        Ks[i], Vs[i] = K, V
+        attend = attn_sparf if sparse else attn_dense
+        a = attend(q, K, V, lens + 1.0, cfg=cfg)
+        x = post_attn(
+            x, a, w["wo"], w["bo"], w["ln2_g"], w["ln2_b"], w["w1"], w["b1"],
+            w["w2"], w["b2"], cfg=cfg,
+        )
+        new_kv.append((k, v))
+    _, nxt = logits(x, params["ln_f_g"], params["ln_f_b"], params["tok_emb"])
+    return nxt, new_kv

@@ -1,0 +1,55 @@
+"""AOT registry sanity: signatures, bucket substitution, golden determinism."""
+
+import numpy as np
+
+from compile import aot
+from compile import model as M
+
+
+def test_registry_covers_decode_and_prefill_paths():
+    reg = aot.registry(M.SMALL)
+    assert {"embed_decode", "qkv_proj", "attn_dense", "attn_sparf",
+            "post_attn", "logits", "embed_prefill", "prefill_block"} <= set(reg)
+
+
+def test_argspec_bucket_substitution():
+    s = aot.ArgSpec("K", "input", ("B", 8, 128, 32))
+    assert s.concrete(4) == (4, 8, 128, 32)
+    assert s.concrete(1) == (1, 8, 128, 32)
+    m = s.manifest()
+    assert m["shape"][0] == "B" and m["kind"] == "input"
+
+
+def test_weight_specs_resolve_against_params():
+    cfg = M.SMALL
+    params = M.init_params(cfg, seed=0)
+    for name, (_, specs) in aot.registry(cfg).items():
+        for s in specs:
+            if s.kind != "weight":
+                continue
+            pname = s.name if s.scope == "global" else f"layers.0.{s.name}"
+            assert pname in params, f"{name}: missing weight {pname}"
+            assert tuple(params[pname].shape) == s.concrete(1), (
+                f"{name}.{s.name}: manifest {s.shape} vs param "
+                f"{params[pname].shape}")
+
+
+def test_golden_inputs_deterministic_and_typed():
+    cfg = M.SMALL
+    reg = aot.registry(cfg)
+    for name, (_, specs) in reg.items():
+        a = dict(aot.golden_inputs(name, specs, 1, cfg))
+        b = dict(aot.golden_inputs(name, specs, 1, cfg))
+        assert set(a) == set(b)
+        for k in a:
+            np.testing.assert_array_equal(a[k], b[k])
+            assert a[k].dtype in (np.float32, np.int32)
+        if "ids" in a:
+            assert a["ids"].max() < cfg.vocab
+        if "lens" in a:
+            assert 1 <= a["lens"].min() and a["lens"].max() < cfg.max_seq
+
+
+def test_layer_slots_complete():
+    shapes = M.layer_slot_shapes(M.SMALL)
+    assert set(M.LAYER_SLOTS) == set(shapes)

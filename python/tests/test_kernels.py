@@ -1,0 +1,146 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes/seeds; every comparison is assert_allclose against
+the reference — this is the core correctness signal for the kernels that the
+AOT artifacts embed.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import dense, ref, sparf
+
+SET = dict(deadline=None, max_examples=15)
+
+
+def mk(rng, BH, S, d):
+    q = jnp.asarray(rng.standard_normal((BH, d)), jnp.float32)
+    K = jnp.asarray(rng.standard_normal((BH, S, d)), jnp.float32)
+    V = jnp.asarray(rng.standard_normal((BH, S, d)), jnp.float32)
+    lens = jnp.asarray(rng.integers(1, S + 1, BH), jnp.float32)
+    return q, K, V, lens
+
+
+@settings(**SET)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    BH=st.integers(1, 8),
+    S=st.sampled_from([16, 32, 64, 128]),
+    d=st.sampled_from([8, 16, 32]),
+    group=st.sampled_from([4, 8, 16]),
+)
+def test_dense_kernel_matches_ref(seed, BH, S, d, group):
+    rng = np.random.default_rng(seed)
+    q, K, V, lens = mk(rng, BH, S, d)
+    out = dense.dense_decode_attention(q, K, V, lens, group=group)
+    want = ref.dense_attention_bh(q, K, V, lens)
+    assert_allclose(np.asarray(out), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+@settings(**SET)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    BH=st.integers(1, 6),
+    S=st.sampled_from([32, 64, 128]),
+    d=st.sampled_from([16, 32]),
+)
+def test_sparf_kernel_matches_ref(seed, BH, S, d):
+    rng = np.random.default_rng(seed)
+    q, K, V, lens = mk(rng, BH, S, d)
+    r, k, m, n = d // 4, S // 8, 4, 8
+    out = sparf.sparf_decode_attention(q, K, V, lens, r=r, k=k, m=m, n=n)
+    vbar = jax.vmap(ref.v_mean)(V, lens)
+    want = ref.sparf_attention_bh(q, K, V, vbar, lens, r=r, k=k, m=m, n=n)
+    assert_allclose(np.asarray(out), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_dense_kernel_full_length_equals_plain_softmax():
+    rng = np.random.default_rng(7)
+    BH, S, d = 4, 32, 16
+    q, K, V, _ = mk(rng, BH, S, d)
+    lens = jnp.full((BH,), float(S), jnp.float32)
+    out = dense.dense_decode_attention(q, K, V, lens, group=8)
+    logits = jnp.einsum("bsd,bd->bs", K, q) / jnp.sqrt(float(d))
+    want = jnp.einsum("bs,bsd->bd", jax.nn.softmax(logits, axis=-1), V)
+    assert_allclose(np.asarray(out), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_dense_kernel_ignores_padding_rows():
+    """Garbage in padded K/V rows must not change the output."""
+    rng = np.random.default_rng(11)
+    BH, S, d = 3, 64, 16
+    q, K, V, _ = mk(rng, BH, S, d)
+    lens = jnp.asarray([5.0, 17.0, 64.0], jnp.float32)
+    out1 = dense.dense_decode_attention(q, K, V, lens, group=8)
+    K2 = K.at[:, 40:, :].set(1e6)  # poison rows beyond length (head 0/1)
+    V2 = V.at[:, 40:, :].set(-1e6)
+    K2 = K2.at[2].set(K[2])  # head 2 uses full length; keep it intact
+    V2 = V2.at[2].set(V[2])
+    out2 = dense.dense_decode_attention(q, K2, V2, lens, group=8)
+    assert_allclose(np.asarray(out1), np.asarray(out2), rtol=1e-6, atol=1e-6)
+
+
+def test_sparf_kernel_ignores_padding_rows():
+    rng = np.random.default_rng(13)
+    BH, S, d = 2, 64, 32
+    q, K, V, _ = mk(rng, BH, S, d)
+    lens = jnp.asarray([9.0, 33.0], jnp.float32)
+    args = dict(r=8, k=8, m=4, n=8)
+    out1 = sparf.sparf_decode_attention(q, K, V, lens, **args)
+    K2 = K.at[:, 48:, :].set(1e6)
+    V2 = V.at[:, 48:, :].set(-1e6)
+    out2 = sparf.sparf_decode_attention(q, K2, V2, lens, **args)
+    assert_allclose(np.asarray(out1), np.asarray(out2), rtol=1e-6, atol=1e-6)
+
+
+def test_sparf_full_rank_recovers_alpha_weighted_dense():
+    """With r=d and k=S (no sparsity) alpha -> 1 and SparF == dense."""
+    rng = np.random.default_rng(3)
+    BH, S, d = 4, 32, 16
+    q, K, V, _ = mk(rng, BH, S, d)
+    lens = jnp.full((BH,), float(S), jnp.float32)
+    out = sparf.sparf_decode_attention(q, K, V, lens, r=d, k=S, m=4, n=8)
+    want = ref.dense_attention_bh(q, K, V, lens)
+    assert_allclose(np.asarray(out), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+@settings(**SET)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_sparf_error_decreases_with_budget(seed):
+    """More budget (r, k) must not make the approximation much worse.
+
+    Property is statistical per-head, so compare mean absolute error over a
+    moderate batch.
+    """
+    rng = np.random.default_rng(seed)
+    BH, S, d = 8, 128, 32
+    q, K, V, lens = mk(rng, BH, S, d)
+    lens = jnp.full((BH,), float(S), jnp.float32)
+    want = ref.dense_attention_bh(q, K, V, lens)
+
+    def err(r, k):
+        out = sparf.sparf_decode_attention(q, K, V, lens, r=r, k=k, m=4, n=8)
+        return float(jnp.mean(jnp.abs(out - want)))
+
+    lo = err(4, 8)
+    hi = err(16, 64)
+    assert hi <= lo * 1.05 + 1e-6
+
+
+def test_sparf_stats_page_bounds():
+    """Dual-step loading: fetched pages bounded by ceil-division of budget."""
+    rng = np.random.default_rng(5)
+    S, d, r, k, m, n = 128, 32, 8, 16, 4, 8
+    for _ in range(20):
+        q = jnp.asarray(rng.standard_normal(d), jnp.float32)
+        K = jnp.asarray(rng.standard_normal((S, d)), jnp.float32)
+        V = jnp.asarray(rng.standard_normal((S, d)), jnp.float32)
+        stats = ref.sparf_stats(q, K, V, float(S), r=r, k=k, m=m, n=n)
+        assert int(stats["emb_kept"]) == r
+        assert int(stats["tok_kept"]) == k
+        # at most one page per selected unit, at least ceil(selected/group)
+        assert (r + m - 1) // m <= int(stats["emb_pages"]) <= r
+        assert (k + n - 1) // n <= int(stats["tok_pages"]) <= k

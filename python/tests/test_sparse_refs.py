@@ -1,0 +1,111 @@
+"""Properties of the sparse-attention reference family (Fig. 11 methods)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import ref
+
+SET = dict(deadline=None, max_examples=20)
+
+
+def mk1(rng, S, d):
+    q = jnp.asarray(rng.standard_normal(d), jnp.float32)
+    K = jnp.asarray(rng.standard_normal((S, d)), jnp.float32)
+    V = jnp.asarray(rng.standard_normal((S, d)), jnp.float32)
+    return q, K, V
+
+
+def test_masked_softmax_sums_to_one_on_mask():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(64), jnp.float32)
+    mask = jnp.asarray(rng.integers(0, 2, 64), bool).at[0].set(True)
+    s = ref.masked_softmax(x, mask)
+    assert_allclose(float(jnp.sum(s)), 1.0, rtol=1e-5)
+    assert float(jnp.max(jnp.where(mask, 0.0, s))) == 0.0
+
+
+@settings(**SET)
+@given(seed=st.integers(0, 2**31 - 1), S=st.sampled_from([32, 64]),
+       d=st.sampled_from([16, 32]))
+def test_sparq_full_budget_equals_dense(seed, S, d):
+    rng = np.random.default_rng(seed)
+    q, K, V = mk1(rng, S, d)
+    vbar = ref.v_mean(V, float(S))
+    out = ref.sparq_attention(q, K, V, vbar, float(S), r=d, k=S)
+    want = ref.dense_attention(q, K, V, float(S))
+    assert_allclose(np.asarray(out), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+@settings(**SET)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_sparf_equals_sparq_functionally(seed):
+    """Group alignment moves pages, not arithmetic (paper: 'nearly identical
+    accuracy' because the filter discards weak units before compute)."""
+    rng = np.random.default_rng(seed)
+    q, K, V = mk1(rng, 64, 32)
+    vbar = ref.v_mean(V, 50.0)
+    a = ref.sparf_attention(q, K, V, vbar, 50.0, r=8, k=8, m=4, n=8)
+    b = ref.sparq_attention(q, K, V, vbar, 50.0, r=8, k=8)
+    assert_allclose(np.asarray(a), np.asarray(b), rtol=0, atol=0)
+
+
+def test_local_attention_equals_dense_on_short_sequence():
+    rng = np.random.default_rng(1)
+    q, K, V = mk1(rng, 64, 16)
+    # only 10 valid tokens, window of 16 covers everything
+    out = ref.local_attention(q, K, V, 10.0, k=16)
+    want = ref.dense_attention(q, K, V, 10.0)
+    assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_h2o_keeps_recent_window():
+    """With a huge recent token, H2O (which always keeps the window) must
+    match dense closely, while pure heavy-hitter selection could miss it."""
+    rng = np.random.default_rng(2)
+    q, K, V = mk1(rng, 64, 16)
+    K = K.at[49].set(q * 10.0)  # token 49 (recent) dominates attention
+    acc = jnp.asarray(rng.random(64), jnp.float32)
+    out = ref.h2o_attention(q, K, V, acc, 50.0, k=16, window=8)
+    want = ref.dense_attention(q, K, V, 50.0)
+    assert float(jnp.max(jnp.abs(out - want))) < 0.15
+
+
+@settings(**SET)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_alpha_blend_is_convex(seed):
+    """SparF output lies in the convex hull sense: alpha in [0,1]."""
+    rng = np.random.default_rng(seed)
+    q, K, V = mk1(rng, 64, 32)
+    mask = ref._valid_mask(64, 40.0)
+    emb, _ = ref.sparf_embed_groups(q, r=8, m=4)
+    qr = jnp.where(emb, q, 0.0)
+    scale = jnp.sqrt(32.0 * jnp.sum(jnp.abs(qr)) / jnp.sum(jnp.abs(q)))
+    s_hat = ref.masked_softmax((K @ qr) / scale, mask)
+    tok, _ = ref.sparf_token_groups(s_hat, mask, k=8, n=8)
+    alpha = float(jnp.sum(jnp.where(tok, s_hat, 0.0)))
+    assert 0.0 <= alpha <= 1.0 + 1e-6
+
+
+def test_causal_attention_last_row_equals_decode():
+    """Row t of causal prefill == decode attention with length t+1 — the
+    invariant the coordinator relies on when switching phases."""
+    rng = np.random.default_rng(3)
+    S, d = 32, 16
+    Q = jnp.asarray(rng.standard_normal((S, d)), jnp.float32)
+    K = jnp.asarray(rng.standard_normal((S, d)), jnp.float32)
+    V = jnp.asarray(rng.standard_normal((S, d)), jnp.float32)
+    full = ref.causal_attention(Q, K, V)
+    for t in [0, 1, 7, 31]:
+        dec = ref.dense_attention(Q[t], K, V, float(t + 1))
+        assert_allclose(np.asarray(full[t]), np.asarray(dec), rtol=2e-5, atol=2e-5)
+
+
+def test_vbar_ignores_padding():
+    rng = np.random.default_rng(4)
+    V = jnp.asarray(rng.standard_normal((16, 8)), jnp.float32)
+    vb = ref.v_mean(V, 5.0)
+    assert_allclose(np.asarray(vb), np.asarray(jnp.mean(V[:5], axis=0)),
+                    rtol=1e-6, atol=1e-6)

@@ -1,0 +1,26 @@
+//! `cargo bench --bench figures` — regenerates every paper table/figure
+//! (criterion is unavailable offline; this is a plain harness=false bench
+//! binary that times each figure's generation and prints the tables).
+
+use std::time::Instant;
+
+fn main() {
+    // honour `cargo bench -- <filter>`
+    let filter: Option<String> = std::env::args().skip(1).find(|a| !a.starts_with('-'));
+    let mut total = 0.0;
+    for (name, f) in instinfer::bench::registry() {
+        if let Some(flt) = &filter {
+            if !name.contains(flt.as_str()) {
+                continue;
+            }
+        }
+        let t0 = Instant::now();
+        let table = f();
+        let dt = t0.elapsed().as_secs_f64();
+        total += dt;
+        println!();
+        table.print();
+        println!("[bench {name}: generated in {dt:.3}s]");
+    }
+    println!("\nall figure benches done in {total:.2}s");
+}

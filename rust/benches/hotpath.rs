@@ -1,0 +1,179 @@
+//! `cargo bench --bench hotpath` — microbenchmarks of the request-path
+//! hot spots (custom harness; median-of-N timing with warmup).
+//!
+//! Covered:
+//!   topk          argtopk unit: heap vs full-sort selection
+//!   sparse-dense  rust-native dense attention (CSD kernel arithmetic)
+//!   sparse-sparf  rust-native SparF attention
+//!   ftl-fetch     FTL token-group fetch (page decode path)
+//!   csd-step      full in-storage attention step (dense + sparf)
+//!   pjrt-decode   one PJRT decode-layer round trip (qkv+attn+post)
+//!   e2e-step      full coordinator decode step, batch of 4
+
+use instinfer::config::hw::CsdSpec;
+use instinfer::config::model::SparsityParams;
+use instinfer::coordinator::{EngineConfig, InferenceEngine, Sequence, SlotManager};
+use instinfer::csd::{AttnMode, InstCsd};
+use instinfer::ftl::{FtlConfig, KvFtl, KvKind, StreamKey};
+use instinfer::runtime::{HostTensor, Runtime};
+use instinfer::sparse;
+use instinfer::util::rng::Rng;
+use instinfer::util::stats::percentile;
+use instinfer::workload::Request;
+
+fn time_it<F: FnMut()>(name: &str, iters: usize, mut f: F) {
+    // warmup
+    for _ in 0..3.min(iters) {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = std::time::Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    let p50 = percentile(&mut samples.clone(), 50.0);
+    let p95 = percentile(&mut samples, 95.0);
+    println!("{name:<28} p50 {p50:>10.2} us   p95 {p95:>10.2} us   ({iters} iters)");
+}
+
+fn main() {
+    let filter: Option<String> = std::env::args().skip(1).find(|a| !a.starts_with('-'));
+    let want = |n: &str| filter.as_ref().map_or(true, |f| n.contains(f.as_str()));
+    let mut rng = Rng::new(0xBE7C);
+
+    // ---- selection primitives --------------------------------------------
+    if want("topk") {
+        let xs: Vec<f32> = (0..2048).map(|_| rng.normal_f32()).collect();
+        time_it("topk-heap k=256 n=2048", 200, || {
+            std::hint::black_box(sparse::select::topk_mask_heap(&xs, 256));
+        });
+        time_it("topk-sort k=256 n=2048", 200, || {
+            std::hint::black_box(sparse::select::topk_mask(&xs, 256));
+        });
+        time_it("topk-select k=256 n=2048", 200, || {
+            std::hint::black_box(sparse::select::topk_mask_select(&xs, 256));
+        });
+    }
+
+    // ---- sparse attention arithmetic --------------------------------------
+    if want("sparse") {
+        let (s, d) = (2048usize, 128usize);
+        let q: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+        let k: Vec<f32> = (0..s * d).map(|_| rng.normal_f32()).collect();
+        let v: Vec<f32> = (0..s * d).map(|_| rng.normal_f32()).collect();
+        let vbar = sparse::v_mean(&v, d, s);
+        time_it("sparse-dense s=2048 d=128", 100, || {
+            std::hint::black_box(sparse::dense_attention(&q, &k, &v, s));
+        });
+        let sp = SparsityParams { r: 32, k: 256, m: 2, n: 16 };
+        time_it("sparse-sparf 1/8 s=2048", 100, || {
+            std::hint::black_box(sparse::sparf_attention(&q, &k, &v, &vbar, s, &sp));
+        });
+    }
+
+    // ---- FTL fetch path ----------------------------------------------------
+    if want("ftl") {
+        let mut ftl = KvFtl::new(
+            instinfer::config::hw::FlashSpec::tiny(),
+            FtlConfig { d_head: 32, m: 4, n: 8 },
+        )
+        .unwrap();
+        let key = StreamKey { slot: 0, layer: 0, head: 0 };
+        for _ in 0..96 {
+            let kr: Vec<f32> = (0..32).map(|_| rng.normal_f32()).collect();
+            let vr: Vec<f32> = (0..32).map(|_| rng.normal_f32()).collect();
+            ftl.append_token(key, &kr, &vr, 0.0).unwrap();
+        }
+        time_it("ftl-fetch 12 groups", 300, || {
+            let groups: Vec<usize> = (0..12).collect();
+            std::hint::black_box(ftl.fetch_token_groups(key, KvKind::K, &groups, 0.0).unwrap());
+        });
+        time_it("ftl-fetch 8 emb lanes", 300, || {
+            let ch: Vec<usize> = (0..8).collect();
+            std::hint::black_box(ftl.fetch_emb_channels(key, &ch, 96, 0.0).unwrap());
+        });
+    }
+
+    // ---- full CSD attention step -------------------------------------------
+    if want("csd") {
+        let mut csd =
+            InstCsd::new(CsdSpec::micro(), FtlConfig { d_head: 32, m: 4, n: 8 }).unwrap();
+        for t in 0..96 {
+            let kr: Vec<f32> = (0..8 * 32).map(|_| rng.normal_f32()).collect();
+            let vr: Vec<f32> = (0..8 * 32).map(|_| rng.normal_f32()).collect();
+            csd.write_token(0, 0, &kr, &vr, t as f64).unwrap();
+        }
+        let q: Vec<f32> = (0..8 * 32).map(|_| rng.normal_f32()).collect();
+        time_it("csd-step dense 8 heads s=96", 50, || {
+            std::hint::black_box(
+                csd.attention_layer(0, 0, &q, 96, AttnMode::Dense, 0.0).unwrap(),
+            );
+        });
+        let sp = SparsityParams { r: 8, k: 12, m: 4, n: 8 };
+        time_it("csd-step sparf 8 heads s=96", 50, || {
+            std::hint::black_box(
+                csd.attention_layer(0, 0, &q, 96, AttnMode::SparF(sp), 0.0).unwrap(),
+            );
+        });
+    }
+
+    // ---- PJRT + end-to-end -------------------------------------------------
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../artifacts");
+    if dir.join("manifest.json").exists() {
+        if want("pjrt") {
+            let rt = Runtime::open(&dir).unwrap();
+            rt.warmup().unwrap();
+            let m = rt.manifest.model.clone();
+            let b = 4usize;
+            let x = HostTensor::f32(
+                vec![b, m.d_model],
+                (0..b * m.d_model).map(|_| rng.normal_f32()).collect(),
+            );
+            time_it("pjrt qkv_proj b=4", 100, || {
+                std::hint::black_box(rt.call("qkv_proj", b, 0, &[x.clone()]).unwrap());
+            });
+            let q = HostTensor::f32(
+                vec![b, m.n_heads, m.d_head],
+                (0..b * m.d_model).map(|_| rng.normal_f32()).collect(),
+            );
+            let kv = HostTensor::f32(
+                vec![b, m.n_heads, m.max_seq, m.d_head],
+                (0..b * m.n_heads * m.max_seq * m.d_head)
+                    .map(|_| rng.normal_f32())
+                    .collect(),
+            );
+            let lens = HostTensor::f32(vec![b], vec![64.0; b]);
+            time_it("pjrt attn_dense b=4 s=128", 50, || {
+                std::hint::black_box(
+                    rt.call("attn_dense", b, 0, &[q.clone(), kv.clone(), kv.clone(), lens.clone()])
+                        .unwrap(),
+                );
+            });
+        }
+        if want("e2e") {
+            let rt = Runtime::open(&dir).unwrap();
+            rt.warmup().unwrap();
+            let mut eng = InferenceEngine::new(rt, EngineConfig::micro(2)).unwrap();
+            let mut slots = SlotManager::new(16);
+            let mut seqs: Vec<Sequence> = (0..4)
+                .map(|i| {
+                    Sequence::new(
+                        Request {
+                            id: i,
+                            prompt: (0..16).map(|t| (t * 7 + i as i32) % 512).collect(),
+                            max_new_tokens: 64,
+                        },
+                        slots.alloc().unwrap(),
+                    )
+                })
+                .collect();
+            eng.prefill(&mut seqs, 4).unwrap();
+            time_it("e2e decode step b=4", 30, || {
+                eng.decode_step(&mut seqs, 4).unwrap();
+            });
+        }
+    } else {
+        println!("(artifacts missing: skipping pjrt/e2e benches — run `make artifacts`)");
+    }
+}

@@ -1,0 +1,445 @@
+//! Throughput / latency / roofline / scalability figures (timing plane)
+//! and the design ablations.  Expected shapes are recorded next to each
+//! figure in EXPERIMENTS.md.
+
+use crate::baselines::{self, flexgen_tier};
+use crate::config::hw::{CsdSpec, GpuSpec};
+use crate::config::model::{ModelShape, SparsityParams};
+use crate::config::system::{OffloadPolicy, SystemConfig};
+use crate::csd::resources;
+use crate::ftl::{FtlConfig, KvFtl, KvKind, StreamKey};
+use crate::gpu;
+use crate::systems::{self, insti};
+use crate::util::rng::Rng;
+use crate::util::table::{eng, Table};
+
+fn base(p: OffloadPolicy) -> SystemConfig {
+    SystemConfig::paper_base(p)
+}
+
+fn tput(cfg: &SystemConfig, b: usize) -> String {
+    match systems::run(cfg, b) {
+        Ok(r) => eng(r.throughput),
+        Err(_) => "OOM".into(),
+    }
+}
+
+/// Fig. 4: DeepSpeed / FlexGen (tiered) throughput vs batch (motivation).
+pub fn fig4() -> Table {
+    let mut t = Table::new(
+        "Fig. 4 — DeepSpeed/FlexGen throughput vs batch (tok/s, OPT-13B 1024/1024)",
+        &["bs", "DeepSpeed", "FlexGen(tiered)"],
+    );
+    let ds = base(OffloadPolicy::HostDram);
+    let fg = base(OffloadPolicy::SsdViaHost).tiered();
+    for b in [4usize, 8, 16, 32, 64, 128] {
+        t.row(vec![b.to_string(), tput(&ds, b), tput(&fg, b)]);
+    }
+    t
+}
+
+/// Fig. 5: FlexGen decode latency breakdown vs batch.
+pub fn fig5() -> Table {
+    let mut t = Table::new(
+        "Fig. 5 — FlexGen decode latency breakdown (% of step)",
+        &["bs", "tier", "Weight%", "KV%", "Compute%"],
+    );
+    let fg = base(OffloadPolicy::SsdViaHost).tiered();
+    for b in [4usize, 8, 16, 32, 64] {
+        match baselines::flexgen(&fg, b) {
+            Ok(r) => {
+                let bd = r.decode_breakdown;
+                let tot = bd.total().max(1e-30);
+                let tier = format!("{:?}", flexgen_tier(&fg, b, fg.kv_bytes_total(b)));
+                t.row(vec![
+                    b.to_string(),
+                    tier,
+                    eng(100.0 * bd.weight / tot),
+                    eng(100.0 * bd.kv / tot),
+                    eng(100.0 * bd.compute / tot),
+                ]);
+            }
+            Err(_) => t.row(vec![b.to_string(), "OOM".into(), "-".into(), "-".into(), "-".into()]),
+        }
+    }
+    t
+}
+
+/// Fig. 6: roofline placement — per-operator intensity and time on
+/// A6000 vs Zynq7045 CSD (prefill and decode).
+pub fn fig6() -> Table {
+    let mut t = Table::new(
+        "Fig. 6 — operator roofline: A6000 vs InstCSD (OPT-13B, bs=64, s=1536)",
+        &["phase", "op", "FLOP/B", "gpu_ms", "csd_ms", "placement"],
+    );
+    let m = ModelShape::opt_13b();
+    let g = GpuSpec::a6000();
+    let c = CsdSpec::zynq7045();
+    let rows = gpu::prefill_ops(&m, 64, 1024)
+        .into_iter()
+        .map(|o| ("prefill", o))
+        .chain(gpu::decode_ops(&m, 64, 1536).into_iter().map(|o| ("decode", o)));
+    for (phase, op) in rows {
+        let gt = op.gpu_time(&g) * 1e3;
+        let ct = op.csd_time(&c) * 1e3;
+        let attn = op.name == "Logit" || op.name == "Attend";
+        let place = if phase == "decode" && attn { "CSD" } else { "GPU" };
+        t.row(vec![
+            phase.into(),
+            op.name.into(),
+            eng(op.intensity()),
+            eng(gt),
+            eng(ct),
+            place.into(),
+        ]);
+    }
+    t
+}
+
+fn sweep(table: &mut Table, cfgs: &[(&str, SystemConfig)], batches: &[usize]) {
+    for &b in batches {
+        let mut row = vec![b.to_string()];
+        for (_, cfg) in cfgs {
+            row.push(tput(cfg, b));
+        }
+        table.row(row);
+    }
+}
+
+/// Fig. 12: throughput of the five systems, 1 SSD/CSD.
+pub fn fig12() -> Table {
+    let mut t = Table::new(
+        "Fig. 12 — throughput, 1 SSD/CSD (tok/s)",
+        &["bs", "DeepSpeed", "FlexGen", "FlexGen-SparQ", "InstI-Dense", "InstI-SparF"],
+    );
+    let cfgs = [
+        ("ds", base(OffloadPolicy::HostDram)),
+        ("fg", base(OffloadPolicy::SsdViaHost)),
+        ("fgs", base(OffloadPolicy::SsdViaHost).with_default_sparsity()),
+        ("iid", base(OffloadPolicy::InStorage)),
+        ("iis", base(OffloadPolicy::InStorage).with_default_sparsity()),
+    ];
+    sweep(&mut t, &cfgs, &[4, 8, 16, 32, 64, 128, 256]);
+    t
+}
+
+/// Fig. 13: throughput with 2 SSDs/CSDs.
+pub fn fig13() -> Table {
+    let mut t = Table::new(
+        "Fig. 13 — throughput, 2 SSDs/CSDs (tok/s)",
+        &["bs", "DeepSpeed", "FlexGen", "FlexGen-SparQ", "InstI-Dense", "InstI-SparF"],
+    );
+    let cfgs = [
+        ("ds", base(OffloadPolicy::HostDram).with_devices(2)),
+        ("fg", base(OffloadPolicy::SsdViaHost).with_devices(2)),
+        ("fgs", base(OffloadPolicy::SsdViaHost).with_default_sparsity().with_devices(2)),
+        ("iid", base(OffloadPolicy::InStorage).with_devices(2)),
+        ("iis", base(OffloadPolicy::InStorage).with_default_sparsity().with_devices(2)),
+    ];
+    sweep(&mut t, &cfgs, &[4, 8, 16, 32, 64, 128, 256]);
+    t
+}
+
+fn breakdown_rows(t: &mut Table, label: &str, cfg: &SystemConfig, batches: &[usize]) {
+    for &b in batches {
+        match systems::run(cfg, b) {
+            Ok(r) => {
+                let bd = r.decode_breakdown;
+                let tot = bd.total().max(1e-30);
+                t.row(vec![
+                    label.into(),
+                    b.to_string(),
+                    eng(100.0 * bd.kv / tot),
+                    eng(100.0 * bd.weight / tot),
+                    eng(100.0 * bd.compute / tot),
+                    eng(100.0 * bd.comm / tot),
+                ]);
+            }
+            Err(_) => t.row(vec![
+                label.into(), b.to_string(), "OOM".into(), "-".into(), "-".into(), "-".into(),
+            ]),
+        }
+    }
+}
+
+/// Fig. 14: decode latency breakdown, dense systems.
+pub fn fig14() -> Table {
+    let mut t = Table::new(
+        "Fig. 14 — dense decode latency breakdown (% of step)",
+        &["system", "bs", "KV%", "Weight%", "Compute%", "Comm%"],
+    );
+    let batches = [4usize, 64, 256];
+    breakdown_rows(&mut t, "FlexGen", &base(OffloadPolicy::SsdViaHost), &batches);
+    breakdown_rows(&mut t, "InstI", &base(OffloadPolicy::InStorage), &batches);
+    breakdown_rows(&mut t, "InstI-2", &base(OffloadPolicy::InStorage).with_devices(2), &batches);
+    t
+}
+
+/// Fig. 15: decode latency breakdown, sparse (1/8) systems.
+pub fn fig15() -> Table {
+    let mut t = Table::new(
+        "Fig. 15 — sparse (1/8) decode latency breakdown (% of step)",
+        &["system", "bs", "KV%", "Weight%", "Compute%", "Comm%"],
+    );
+    let batches = [4usize, 64, 256];
+    breakdown_rows(
+        &mut t,
+        "FlexGen-SparQ",
+        &base(OffloadPolicy::SsdViaHost).with_default_sparsity(),
+        &batches,
+    );
+    breakdown_rows(
+        &mut t,
+        "InstI-SparF",
+        &base(OffloadPolicy::InStorage).with_default_sparsity(),
+        &batches,
+    );
+    breakdown_rows(
+        &mut t,
+        "InstI-SparF-2",
+        &base(OffloadPolicy::InStorage).with_default_sparsity().with_devices(2),
+        &batches,
+    );
+    t
+}
+
+/// Fig. 16: SparF attention-engine unit breakdown (dense vs 1/8).
+pub fn fig16() -> Table {
+    let mut t = Table::new(
+        "Fig. 16 — SparF engine unit breakdown (% of engine time, bs=64 s=1536)",
+        &["mode", "argtopk", "flash", "filter", "Logit-0", "Logit", "Attend"],
+    );
+    for (label, cfg) in [
+        ("dense", base(OffloadPolicy::InStorage)),
+        ("sparf-1/8", base(OffloadPolicy::InStorage).with_default_sparsity()),
+    ] {
+        let st = insti::csd_layer_step(&cfg, 64, 1536, cfg.model.n_heads);
+        let u = &st.units;
+        let tot = u.total().max(1e-30);
+        t.row(vec![
+            label.into(),
+            eng(100.0 * u.argtopk / tot),
+            eng(100.0 * u.flash_read / tot),
+            eng(100.0 * u.nfc_filter / tot),
+            eng(100.0 * u.logit0 / tot),
+            eng(100.0 * u.logit / tot),
+            eng(100.0 * u.attend / tot),
+        ]);
+    }
+    t
+}
+
+/// Fig. 17a: scalability with 1..20 CSDs at bs=256.
+pub fn fig17a() -> Table {
+    let mut t = Table::new(
+        "Fig. 17a — throughput vs number of CSDs (bs=256, tok/s)",
+        &["CSDs", "InstI-Dense", "InstI-SparF", "dense speedup", "sparf speedup"],
+    );
+    let d1 = systems::run(&base(OffloadPolicy::InStorage), 256).unwrap().throughput;
+    let s1 = systems::run(&base(OffloadPolicy::InStorage).with_default_sparsity(), 256)
+        .unwrap()
+        .throughput;
+    for n in [1usize, 2, 4, 8, 12, 16, 20] {
+        let d = systems::run(&base(OffloadPolicy::InStorage).with_devices(n), 256)
+            .unwrap()
+            .throughput;
+        let s = systems::run(
+            &base(OffloadPolicy::InStorage).with_default_sparsity().with_devices(n),
+            256,
+        )
+        .unwrap()
+        .throughput;
+        t.row(vec![n.to_string(), eng(d), eng(s), eng(d / d1), eng(s / s1)]);
+    }
+    t
+}
+
+/// Fig. 17b: sensitivity to compression ratio (1 and 2 CSDs, bs=256).
+pub fn fig17b() -> Table {
+    let mut t = Table::new(
+        "Fig. 17b — throughput vs compression ratio (bs=256, tok/s)",
+        &["ratio", "InstI x1", "InstI x2"],
+    );
+    let m = ModelShape::opt_13b();
+    for c in [2usize, 4, 8, 16, 32] {
+        let sp = SparsityParams::with_compression(&m, 2048, c);
+        let one = systems::run(&base(OffloadPolicy::InStorage).with_sparsity(sp), 256)
+            .unwrap()
+            .throughput;
+        let two = systems::run(
+            &base(OffloadPolicy::InStorage).with_sparsity(sp).with_devices(2),
+            256,
+        )
+        .unwrap()
+        .throughput;
+        t.row(vec![format!("1/{c}"), eng(one), eng(two)]);
+    }
+    t
+}
+
+/// Table I: Zynq7045 resource utilisation.
+pub fn table1() -> Table {
+    let mut t = Table::new(
+        "Table I — InstCSD resource utilisation on Zynq7045",
+        &["unit", "LUT(K)", "FF(K)", "BRAM", "DSP"],
+    );
+    for u in resources::UNITS {
+        t.row(vec![
+            u.name.into(),
+            eng(u.lut_k),
+            eng(u.ff_k),
+            eng(u.bram_tiles),
+            u.dsp.to_string(),
+        ]);
+    }
+    let a = resources::AVAILABLE;
+    t.row(vec!["Available".into(), eng(a.lut_k), eng(a.ff_k), eng(a.bram_tiles), a.dsp.to_string()]);
+    let (lut, ff, bram, dsp) = resources::utilisation();
+    t.row(vec![
+        "Percent(%)".into(),
+        eng(lut),
+        eng(ff),
+        eng(bram),
+        eng(dsp),
+    ]);
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Ablations (DESIGN.md §6)
+// ---------------------------------------------------------------------------
+
+/// Group-aligned dual-step loading vs token-granular random reads: page
+/// fetches per SparF step on the functional FTL.
+pub fn ablate_group() -> Table {
+    let mut t = Table::new(
+        "Ablation — dual-step group loading vs token-granular reads (pages/step)",
+        &["tokens", "group pages", "naive pages (1/token)", "saving"],
+    );
+    let mut rng = Rng::new(11);
+    for s in [32usize, 64, 96] {
+        let mut ftl =
+            KvFtl::new(crate::config::hw::FlashSpec::tiny(), FtlConfig { d_head: 32, m: 4, n: 8 })
+                .unwrap();
+        let key = StreamKey { slot: 0, layer: 0, head: 0 };
+        for _ in 0..s {
+            let kr: Vec<f32> = (0..32).map(|_| rng.normal_f32()).collect();
+            let vr: Vec<f32> = (0..32).map(|_| rng.normal_f32()).collect();
+            ftl.append_token(key, &kr, &vr, 0.0).unwrap();
+        }
+        // SparF top-k selection of k = s/8 clustered tokens
+        let k = (s / 8).max(1);
+        let toks: Vec<usize> = (0..k).map(|i| (i * 3) % s).collect();
+        let groups: std::collections::BTreeSet<usize> = toks.iter().map(|t| t / 8).collect();
+        let before = ftl.array.counters.page_reads;
+        let gl: Vec<usize> = groups.iter().cloned().collect();
+        ftl.fetch_token_groups(key, KvKind::K, &gl, 0.0).unwrap();
+        let group_pages = ftl.array.counters.page_reads - before;
+        // naive: one page-granule read per token (no grouping: each token
+        // row straddles its own page-sized access)
+        let naive = k as u64;
+        t.row(vec![
+            s.to_string(),
+            group_pages.to_string(),
+            naive.to_string(),
+            eng(naive as f64 / group_pages.max(1) as f64),
+        ]);
+    }
+    t
+}
+
+/// Storing K twice (dual-indexed) vs transposing token pages on the fly:
+/// step-2 bytes + capacity cost.
+pub fn ablate_dualk() -> Table {
+    let mut t = Table::new(
+        "Ablation — dual-indexed K copy vs on-the-fly transpose (per head step)",
+        &["s", "dual KB read", "transpose KB read", "capacity x"],
+    );
+    let m = ModelShape::opt_13b();
+    for s in [1024usize, 2048] {
+        let sp = SparsityParams::paper_default(&m, s);
+        // dual: embedding-indexed pages only fetch selected channel groups
+        let eg = m.d_head as f64 / sp.m as f64;
+        let f1 = insti::expected_groups(eg, sp.r as f64) / eg;
+        let dual = f1 * s as f64 * m.d_head as f64 * 2.0;
+        // without the K^T copy, step 2 must read ALL token pages of K
+        let transpose = s as f64 * m.d_head as f64 * 2.0;
+        t.row(vec![
+            s.to_string(),
+            eng(dual / 1024.0),
+            eng(transpose / 1024.0),
+            "1.5".into(),
+        ]);
+    }
+    t
+}
+
+/// Layer-wise pipelined prefill shipping vs bulk ship after compute.
+pub fn ablate_pipeline() -> Table {
+    let mut t = Table::new(
+        "Ablation — layer-wise pipelined prefill vs bulk ship (prefill s)",
+        &["bs", "pipelined", "bulk", "speedup"],
+    );
+    for b in [16usize, 64, 256] {
+        let pipe = systems::run(&base(OffloadPolicy::InStorage), b).map(|r| r.prefill_s);
+        let mut cfg = base(OffloadPolicy::InStorage);
+        cfg.layerwise_pipeline = false;
+        let bulk = systems::run(&cfg, b).map(|r| r.prefill_s);
+        match (pipe, bulk) {
+            (Ok(p), Ok(k)) => t.row(vec![b.to_string(), eng(p), eng(k), eng(k / p)]),
+            _ => t.row(vec![b.to_string(), "OOM".into(), "OOM".into(), "-".into()]),
+        }
+    }
+    t
+}
+
+/// P2P DMA vs host-mediated path for the decode-step vector exchange.
+pub fn ablate_p2p() -> Table {
+    let mut t = Table::new(
+        "Ablation — P2P DMA vs host-mediated CSD path (tok/s, bs=64)",
+        &["variant", "throughput", "prefill s"],
+    );
+    let p2p = systems::run(&base(OffloadPolicy::InStorage), 64).unwrap();
+    let mut cfg = base(OffloadPolicy::InStorage);
+    cfg.p2p_dma = false;
+    let host = systems::run(&cfg, 64).unwrap();
+    t.row(vec!["P2P".into(), eng(p2p.throughput), eng(p2p.prefill_s)]);
+    t.row(vec!["via host FS".into(), eng(host.throughput), eng(host.prefill_s)]);
+    t
+}
+
+/// Head-striped block placement vs sequential placement: channel balance
+/// of one head's group reads on the functional FTL.
+pub fn ablate_placement() -> Table {
+    let mut t = Table::new(
+        "Ablation — head-striped placement: channels touched by one head's groups",
+        &["head", "groups", "channels used", "of channels"],
+    );
+    let mut rng = Rng::new(13);
+    let mut ftl =
+        KvFtl::new(crate::config::hw::FlashSpec::tiny(), FtlConfig { d_head: 32, m: 4, n: 8 })
+            .unwrap();
+    for head in 0..2u16 {
+        let key = StreamKey { slot: 0, layer: 0, head };
+        for _ in 0..64 {
+            let kr: Vec<f32> = (0..32).map(|_| rng.normal_f32()).collect();
+            let vr: Vec<f32> = (0..32).map(|_| rng.normal_f32()).collect();
+            ftl.append_token(key, &kr, &vr, 0.0).unwrap();
+        }
+        let mut chans = std::collections::BTreeSet::new();
+        for g in 0..8usize {
+            // 64 tokens / 8 per group — where did each group's page land?
+            if let Some(c) = ftl.token_group_channel(key, KvKind::K, g) {
+                chans.insert(c);
+            }
+        }
+        let total = ftl.array.spec.channels;
+        t.row(vec![
+            head.to_string(),
+            "8".into(),
+            chans.len().to_string(),
+            format!("{}/{}", chans.len(), total),
+        ]);
+    }
+    t
+}

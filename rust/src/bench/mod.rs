@@ -1,0 +1,50 @@
+//! Bench harness: regenerates every table and figure of the paper's
+//! evaluation (§VI) plus the design-choice ablations of DESIGN.md §6.
+//! Each function prints the same rows/series the paper plots and returns
+//! the rendered table for logging.
+
+pub mod accuracy;
+pub mod figures;
+
+use crate::util::table::Table;
+
+/// All paper targets in order; returns rendered tables.
+pub fn run_all() -> Vec<String> {
+    let mut out = Vec::new();
+    for (name, f) in registry() {
+        let t = f();
+        println!();
+        t.print();
+        out.push(format!("[{name}]\n{}", t.render()));
+    }
+    out
+}
+
+type BenchFn = fn() -> Table;
+
+/// (target name, generator) — the CLI dispatches on the name.
+pub fn registry() -> Vec<(&'static str, BenchFn)> {
+    vec![
+        ("fig4", figures::fig4 as BenchFn),
+        ("fig5", figures::fig5),
+        ("fig6", figures::fig6),
+        ("fig11", accuracy::fig11),
+        ("fig12", figures::fig12),
+        ("fig13", figures::fig13),
+        ("fig14", figures::fig14),
+        ("fig15", figures::fig15),
+        ("fig16", figures::fig16),
+        ("fig17a", figures::fig17a),
+        ("fig17b", figures::fig17b),
+        ("table1", figures::table1),
+        ("ablate-group", figures::ablate_group),
+        ("ablate-dualk", figures::ablate_dualk),
+        ("ablate-pipeline", figures::ablate_pipeline),
+        ("ablate-p2p", figures::ablate_p2p),
+        ("ablate-placement", figures::ablate_placement),
+    ]
+}
+
+pub fn run_one(name: &str) -> Option<Table> {
+    registry().into_iter().find(|(n, _)| *n == name).map(|(_, f)| f())
+}

@@ -1,0 +1,292 @@
+//! Hardware specifications — every constant cites the paper section or the
+//! public datasheet it comes from.  These drive the roofline models (Fig. 6)
+//! and the DES timing plane.
+
+/// GPU compute/memory model (roofline, §III-B Fig. 6).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    /// peak FP16 tensor throughput, FLOP/s
+    pub flops_fp16: f64,
+    /// HBM/GDDR bandwidth, bytes/s
+    pub mem_bw: f64,
+    /// VRAM capacity, bytes
+    pub vram_bytes: usize,
+}
+
+impl GpuSpec {
+    /// NVIDIA RTX A6000 (paper §VI-A): 48 GB GDDR6, 768 GB/s,
+    /// ~155 TFLOP/s FP16 tensor (datasheet: 309.7 TFLOP/s with sparsity,
+    /// 154.8 dense).
+    pub fn a6000() -> Self {
+        GpuSpec {
+            name: "A6000",
+            flops_fp16: 154.8e12,
+            mem_bw: 768e9,
+            vram_bytes: 48 * (1 << 30),
+        }
+    }
+
+    /// Time to execute `flops` touching `bytes`, roofline style.
+    pub fn op_time(&self, flops: f64, bytes: f64) -> f64 {
+        (flops / self.flops_fp16).max(bytes / self.mem_bw)
+    }
+
+    /// Arithmetic-intensity knee (FLOP/byte) where compute == memory time.
+    pub fn knee(&self) -> f64 {
+        self.flops_fp16 / self.mem_bw
+    }
+}
+
+/// NAND flash array geometry + timing (§II-C, §V-B).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FlashSpec {
+    pub channels: usize,
+    pub dies_per_channel: usize,
+    pub planes_per_die: usize,
+    pub blocks_per_plane: usize,
+    pub pages_per_block: usize,
+    pub page_bytes: usize,
+    /// per-channel bus bandwidth, bytes/s
+    pub channel_bw: f64,
+    /// tR: page read (array -> die register), seconds
+    pub read_us: f64,
+    /// tProg: page program, seconds
+    pub program_us: f64,
+    /// tBERS: block erase, seconds
+    pub erase_ms: f64,
+}
+
+impl FlashSpec {
+    /// The paper's software-defined InstCSD backend (§V-B): 8 channels at
+    /// 1.4 GB/s (11.2 GB/s aggregate, quoted in §VI-C), 4 KiB pages;
+    /// read/program/erase latencies typical of recent TLC
+    /// (tR~50us, tProg~600us, tBERS~3ms).
+    pub fn instcsd() -> Self {
+        FlashSpec {
+            channels: 8,
+            dies_per_channel: 4,
+            planes_per_die: 2,
+            blocks_per_plane: 1024,
+            pages_per_block: 256,
+            page_bytes: 4096,
+            channel_bw: 1.4e9,
+            read_us: 50.0,
+            program_us: 600.0,
+            erase_ms: 3.0,
+        }
+    }
+
+    /// Samsung 980pro-like consumer NVMe (for the FlexGen baseline): the
+    /// external PCIe x4 link is the binding constraint, internal dies
+    /// similar to instcsd.
+    pub fn ssd_980pro() -> Self {
+        FlashSpec { channels: 8, ..Self::instcsd() }
+    }
+
+    /// A tiny geometry for unit tests (fast to fill and GC).
+    pub fn tiny() -> Self {
+        FlashSpec {
+            channels: 2,
+            dies_per_channel: 1,
+            planes_per_die: 1,
+            blocks_per_plane: 8,
+            pages_per_block: 16,
+            page_bytes: 512,
+            channel_bw: 1.0e9,
+            read_us: 10.0,
+            program_us: 100.0,
+            erase_ms: 1.0,
+        }
+    }
+
+    pub fn internal_bw(&self) -> f64 {
+        self.channels as f64 * self.channel_bw
+    }
+
+    pub fn total_blocks(&self) -> usize {
+        self.channels * self.dies_per_channel * self.planes_per_die * self.blocks_per_plane
+    }
+
+    pub fn total_pages(&self) -> usize {
+        self.total_blocks() * self.pages_per_block
+    }
+
+    pub fn capacity_bytes(&self) -> usize {
+        self.total_pages() * self.page_bytes
+    }
+
+    pub fn block_bytes(&self) -> usize {
+        self.pages_per_block * self.page_bytes
+    }
+}
+
+/// In-storage compute engine (§V-B, Table I).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CsdSpec {
+    pub name: &'static str,
+    pub flash: FlashSpec,
+    /// attention-engine peak, FLOP/s
+    pub engine_flops: f64,
+    /// engine clock, Hz
+    pub clock_hz: f64,
+    /// on-device DRAM, bytes
+    pub dram_bytes: usize,
+    /// number of parallel attention kernels in the engine (Fig. 8: two)
+    pub attn_kernels: usize,
+    /// argtopk unit throughput, elements/s (sorting-network style)
+    pub argtopk_elems_per_s: f64,
+    /// NFC filter throughput per channel, bytes/s (filters at line rate)
+    pub filter_bw_per_channel: f64,
+    /// KV capacity of the backing store, bytes.  The functional flash
+    /// array models the OpenSSD-like 68 GB geometry; the paper's
+    /// software-defined InstCSD is backed by a 2 TB 980pro (§V-B, §VI-A),
+    /// which is what the capacity gate in the timing plane uses.
+    pub kv_capacity_bytes: u64,
+}
+
+impl CsdSpec {
+    /// Zynq7045-based InstCSD (§V-B): 285 MHz engine; Table I shows 768 of
+    /// 900 DSP slices in the attention kernels => 768 MAC/cycle =
+    /// 768 · 285e6 · 2 ≈ 0.44 TFLOP/s — "2~3 orders of magnitude weaker
+    /// than GPUs" (§I) vs the A6000's 155 TFLOP/s.
+    pub fn zynq7045() -> Self {
+        let flash = FlashSpec::instcsd();
+        CsdSpec {
+            name: "InstCSD-Zynq7045",
+            flash,
+            engine_flops: 768.0 * 285e6 * 2.0,
+            clock_hz: 285e6,
+            dram_bytes: 2 << 30,
+            attn_kernels: 2,
+            argtopk_elems_per_s: 285e6, // 1 element/cycle streaming topk
+            filter_bw_per_channel: flash.channel_bw, // line-rate filtering
+            kv_capacity_bytes: 2_000_000_000_000, // 2 TB 980pro backing
+        }
+    }
+
+    /// A tiny engine matched to FlashSpec::tiny for unit tests.
+    pub fn tiny() -> Self {
+        CsdSpec {
+            name: "tiny-csd",
+            flash: FlashSpec::tiny(),
+            engine_flops: 1e9,
+            clock_hz: 100e6,
+            dram_bytes: 1 << 20,
+            attn_kernels: 2,
+            argtopk_elems_per_s: 100e6,
+            filter_bw_per_channel: 1.0e9,
+            kv_capacity_bytes: FlashSpec::tiny().capacity_bytes() as u64,
+        }
+    }
+
+    pub fn op_time(&self, flops: f64, kv_bytes: f64) -> f64 {
+        (flops / self.engine_flops).max(kv_bytes / self.flash.internal_bw())
+    }
+
+    pub fn knee(&self) -> f64 {
+        self.engine_flops / self.flash.internal_bw()
+    }
+}
+
+/// PCIe link + host-path overheads (§III-A, §IV-D).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PcieSpec {
+    /// GPU <-> host bandwidth (Gen4 x16), bytes/s
+    pub gpu_host_bw: f64,
+    /// SSD/CSD <-> host or peer bandwidth (Gen3/4 x4), bytes/s
+    pub ssd_link_bw: f64,
+    /// P2P DMA efficiency factor (switch traversal) in (0, 1]
+    pub p2p_efficiency: f64,
+    /// per-IO software latency through the host block/filesystem stack, s
+    pub host_fs_io_us: f64,
+    /// per-IO latency of the P2P/NVMe-command path (no FS), s
+    pub p2p_io_us: f64,
+}
+
+impl PcieSpec {
+    /// Paper testbed: GPU on Gen4 x16 (32 GB/s, §VI-C quotes 32GB/s);
+    /// CSD/SSD on Gen3x4/Gen4x4 ~3.5 GB/s effective (§I: 3~6 GB/s).
+    /// Host FS stack cost ~15us/IO (VFS+block+NVMe submission, cf. §VI-C
+    /// "heavy burden on data transmission"); P2P command path ~3us.
+    pub fn paper() -> Self {
+        PcieSpec {
+            gpu_host_bw: 32e9,
+            ssd_link_bw: 3.5e9,
+            p2p_efficiency: 0.9,
+            host_fs_io_us: 15.0,
+            p2p_io_us: 3.0,
+        }
+    }
+}
+
+/// Host CPU + DRAM (§VI-A: Xeon 5320, 96 GB DDR4).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HostSpec {
+    pub dram_bytes: usize,
+    /// DRAM bandwidth, bytes/s
+    pub dram_bw: f64,
+    /// fraction of DRAM usable for KV staging (rest: OS, activations)
+    pub usable_frac: f64,
+}
+
+impl HostSpec {
+    pub fn xeon_5320_96g() -> Self {
+        HostSpec {
+            dram_bytes: 96 * (1 << 30),
+            dram_bw: 38e9, // 6-ch DDR4-2933 derated
+            usable_frac: 0.75,
+        }
+    }
+
+    pub fn usable_dram(&self) -> usize {
+        (self.dram_bytes as f64 * self.usable_frac) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csd_is_2_to_3_orders_below_gpu() {
+        let ratio = GpuSpec::a6000().flops_fp16 / CsdSpec::zynq7045().engine_flops;
+        assert!((100.0..1000.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn internal_bw_exceeds_external_pcie() {
+        // the paper's core premise (§I): tens of GB/s inside vs 3-6 outside
+        let f = FlashSpec::instcsd();
+        let p = PcieSpec::paper();
+        assert!((11.0e9..12.0e9).contains(&f.internal_bw()));
+        assert!(f.internal_bw() > 2.0 * p.ssd_link_bw);
+        // ...but below GPU-host PCIe (paper §VI-C: InstI-dense only ~matches
+        // DeepSpeed's host-memory peak)
+        assert!(f.internal_bw() < p.gpu_host_bw);
+    }
+
+    #[test]
+    fn page_and_block_arithmetic() {
+        let f = FlashSpec::instcsd();
+        assert_eq!(f.block_bytes(), 256 * 4096);
+        assert_eq!(f.total_blocks(), 8 * 4 * 2 * 1024);
+        assert!(f.capacity_bytes() as u64 > 60 * (1u64 << 30)); // >= OpenSSD's 64 GB
+    }
+
+    #[test]
+    fn rooflines_order_operators_like_fig6() {
+        // Fig. 6 ordering: decode attention (GeMV, ~1 FLOP/byte) sits far
+        // below both knees (memory-bound everywhere); decode QKV/FFN at
+        // batch b has intensity ~b FLOP/byte — beyond the CSD knee for the
+        // paper's batches (so they'd saturate the CSD's compute: keep on
+        // GPU), below the GPU knee (memory-bound there: fine on GPU).
+        let gpu = GpuSpec::a6000();
+        let csd = CsdSpec::zynq7045();
+        let attn_intensity = 1.0; // 2 FLOPs per fp16 element read
+        assert!(attn_intensity < csd.knee() && attn_intensity < gpu.knee());
+        let ffn_intensity_bs64 = 64.0;
+        assert!(ffn_intensity_bs64 > csd.knee(), "FFN would be compute-bound on CSD");
+        assert!(ffn_intensity_bs64 < gpu.knee(), "FFN stays memory-bound on GPU");
+    }
+}

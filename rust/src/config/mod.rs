@@ -1,0 +1,13 @@
+//! Configuration system: model shapes, hardware specs, system presets.
+//!
+//! Presets mirror the paper's testbed (§V, §VI-A); every number is cited at
+//! its definition.  `SystemConfig` composes a model + hardware + offload
+//! policy and is what the bench harness sweeps.
+
+pub mod hw;
+pub mod model;
+pub mod system;
+
+pub use hw::{CsdSpec, FlashSpec, GpuSpec, HostSpec, PcieSpec};
+pub use model::{ModelShape, SparsityParams};
+pub use system::{OffloadPolicy, SystemConfig};

@@ -1,0 +1,228 @@
+//! Transformer shape parameters and derived size/FLOP accounting.
+//!
+//! Byte accounting uses FP16 (2 bytes/element) to match the paper even
+//! though the functional plane computes in f32 on CPU (DESIGN.md §1).
+
+pub const FP16_BYTES: usize = 2;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelShape {
+    pub name: &'static str,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub d_ffn: usize,
+    pub n_layers: usize,
+    pub max_seq: usize,
+}
+
+impl ModelShape {
+    /// OPT-13B — the paper's evaluation model (§VI-A).
+    pub fn opt_13b() -> Self {
+        ModelShape {
+            name: "opt-13b",
+            vocab: 50272,
+            d_model: 5120,
+            n_heads: 40,
+            d_head: 128,
+            d_ffn: 20480,
+            n_layers: 40,
+            max_seq: 2048,
+        }
+    }
+
+    /// OPT-30B — used for capacity headroom discussions.
+    pub fn opt_30b() -> Self {
+        ModelShape {
+            name: "opt-30b",
+            vocab: 50272,
+            d_model: 7168,
+            n_heads: 56,
+            d_head: 128,
+            d_ffn: 28672,
+            n_layers: 48,
+            max_seq: 2048,
+        }
+    }
+
+    /// The functional-plane model — must match `python/compile/model.SMALL`.
+    pub fn opt_micro() -> Self {
+        ModelShape {
+            name: "opt-micro-14m",
+            vocab: 512,
+            d_model: 256,
+            n_heads: 8,
+            d_head: 32,
+            d_ffn: 1024,
+            n_layers: 4,
+            max_seq: 128,
+        }
+    }
+
+    /// Total parameter count (embeddings + blocks, tied unembedding).
+    pub fn param_count(&self) -> usize {
+        let d = self.d_model;
+        let per_layer = 4 * d * d          // wq wk wv wo
+            + 4 * d                         // their biases
+            + 2 * d * self.d_ffn            // w1 w2
+            + self.d_ffn + d                // b1 b2
+            + 4 * d; // ln1/ln2 gain+bias
+        self.vocab * d + self.max_seq * d + self.n_layers * per_layer + 2 * d
+    }
+
+    /// Model weight bytes in FP16 (paper: "model weight size is 2p").
+    pub fn weight_bytes(&self) -> usize {
+        self.param_count() * FP16_BYTES
+    }
+
+    /// KV-cache bytes per token per layer (K and V, all heads, FP16).
+    pub fn kv_bytes_per_token_layer(&self) -> usize {
+        2 * self.n_heads * self.d_head * FP16_BYTES
+    }
+
+    /// KV-cache bytes per token across all layers
+    /// (paper: "KV cache size stored in FP16 is 4bsp/…" — i.e. 4·d·L bytes).
+    pub fn kv_bytes_per_token(&self) -> usize {
+        self.n_layers * self.kv_bytes_per_token_layer()
+    }
+
+    /// Full KV-cache bytes for `batch` sequences of `seq` tokens.
+    pub fn kv_bytes(&self, batch: usize, seq: usize) -> usize {
+        batch * seq * self.kv_bytes_per_token()
+    }
+
+    // ---- per-operator FLOP/byte accounting for one decode step -----------
+    // (drives the roofline placement analysis of Fig. 6)
+
+    /// FLOPs of the QKV projection for one token (per layer).
+    pub fn flops_qkv(&self) -> usize {
+        2 * 3 * self.d_model * self.d_model
+    }
+
+    /// FLOPs of the O projection (per layer, per token).
+    pub fn flops_oproj(&self) -> usize {
+        2 * self.d_model * self.d_model
+    }
+
+    /// FLOPs of the FFN (per layer, per token).
+    pub fn flops_ffn(&self) -> usize {
+        2 * 2 * self.d_model * self.d_ffn
+    }
+
+    /// FLOPs of decode attention (Logit + Attend) per layer per token at
+    /// context length `s`.
+    pub fn flops_attn_decode(&self, s: usize) -> usize {
+        2 * 2 * self.n_heads * s * self.d_head
+    }
+
+    /// Bytes the decode attention must read from the KV cache per layer
+    /// per token (dense).
+    pub fn attn_kv_read_bytes(&self, s: usize) -> usize {
+        2 * self.n_heads * s * self.d_head * FP16_BYTES
+    }
+}
+
+/// SparF/SparQ hyper-parameters (Algorithm 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SparsityParams {
+    /// top-r |q| channels used for approximate scores
+    pub r: usize,
+    /// top-k tokens attended exactly
+    pub k: usize,
+    /// embedding-indexed group: channels per flash page
+    pub m: usize,
+    /// token-indexed group: tokens per flash page
+    pub n: usize,
+}
+
+impl SparsityParams {
+    /// The paper's default 1/8 compression for OPT-13B-shaped heads:
+    /// r = d_head/4, k = s/8; token group 16 = 4 KiB page / (128·FP16);
+    /// embedding group m=2 (the paper adapts m within 2-8 to the context
+    /// length — m=2 keeps first-step overfetch at the reported "about
+    /// half of the sparsity" for 1-2K contexts, §IV-C).
+    pub fn paper_default(shape: &ModelShape, seq: usize) -> Self {
+        SparsityParams {
+            r: shape.d_head / 4,
+            k: (seq / 8).max(1),
+            m: 2,
+            n: 16,
+        }
+    }
+
+    /// Scale r and k for a target compression ratio `1/c` (Fig. 17b sweep).
+    pub fn with_compression(shape: &ModelShape, seq: usize, c: usize) -> Self {
+        SparsityParams {
+            r: (shape.d_head * 2 / c).max(1),
+            k: (seq / c).max(1),
+            m: 2,
+            n: 16,
+        }
+    }
+
+    /// Approximate fraction of dense KV bytes a SparQ/SparF step transfers:
+    /// r/d for the K-row pass + 2k/s for the exact K,V pass (SparQ paper).
+    pub fn transfer_fraction(&self, shape: &ModelShape, seq: usize) -> f64 {
+        let a = self.r as f64 / shape.d_head as f64 / 2.0; // only K, halved over K+V
+        let b = self.k as f64 / seq as f64;
+        (a + b).min(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn opt13b_sizes_match_paper() {
+        let m = ModelShape::opt_13b();
+        // ~13B params => ~26 GB FP16 ("about 24GB" with paper rounding)
+        let gb = m.weight_bytes() as f64 / 1e9;
+        assert!((24.0..28.5).contains(&gb), "weights {gb} GB");
+        // paper §I: 13B model, batch 32, 4K tokens => ~100 GB KV cache.
+        // OPT-13B caps at 2K context; the paper's example uses 4K tokens.
+        let kv = m.kv_bytes(32, 4096) as f64 / 1e9;
+        assert!((100.0..115.0).contains(&kv), "kv {kv} GB");
+        // paper §III-A: 2K-length batch 128 => ~200 GB
+        let kv2 = m.kv_bytes(128, 2048) as f64 / 1e9;
+        assert!((195.0..225.0).contains(&kv2), "kv2 {kv2} GB");
+    }
+
+    #[test]
+    fn kv_per_token_is_4dl_bytes() {
+        let m = ModelShape::opt_13b();
+        assert_eq!(m.kv_bytes_per_token(), 4 * m.d_model * m.n_layers);
+    }
+
+    #[test]
+    fn micro_matches_python_small() {
+        let m = ModelShape::opt_micro();
+        assert_eq!(m.d_model, m.n_heads * m.d_head);
+        assert_eq!((m.vocab, m.d_model, m.n_layers, m.max_seq), (512, 256, 4, 128));
+    }
+
+    #[test]
+    fn paper_default_sparsity_is_one_eighth() {
+        let m = ModelShape::opt_13b();
+        let sp = SparsityParams::paper_default(&m, 2048);
+        assert_eq!(sp.r, 32);
+        assert_eq!(sp.k, 256);
+        // 16 tokens x 128 channels x 2 B = 4 KiB page (paper §IV-C)
+        assert_eq!(sp.n * m.d_head * FP16_BYTES, 4096);
+        let f = sp.transfer_fraction(&m, 2048);
+        assert!((0.2..0.3).contains(&f), "fraction {f}");
+    }
+
+    #[test]
+    fn compression_sweep_monotone() {
+        let m = ModelShape::opt_13b();
+        let mut last = f64::MAX;
+        for c in [2, 4, 8, 16, 32] {
+            let f = SparsityParams::with_compression(&m, 2048, c)
+                .transfer_fraction(&m, 2048);
+            assert!(f < last, "c={c} f={f} last={last}");
+            last = f;
+        }
+    }
+}

@@ -1,0 +1,150 @@
+//! System-level configuration: which inference system, on what hardware,
+//! with what offload/sparsity policy.  This is the unit the bench harness
+//! sweeps (one `SystemConfig` per curve point in Figs. 4-17).
+
+use super::hw::{CsdSpec, GpuSpec, HostSpec, PcieSpec};
+use super::model::{ModelShape, SparsityParams};
+
+/// Where the KV cache lives and who computes decode attention.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OffloadPolicy {
+    /// everything in VRAM (upper-bound reference)
+    GpuOnly,
+    /// KV in host DRAM, attention on GPU (DeepSpeed-MII-like; spills to
+    /// SSD by kernel swapping once DRAM is exhausted)
+    HostDram,
+    /// KV on SSD through the host filesystem, attention on GPU
+    /// (FlexGen-like)
+    SsdViaHost,
+    /// KV on CSD flash, decode attention in storage (InstInfer)
+    InStorage,
+}
+
+impl OffloadPolicy {
+    pub fn label(&self) -> &'static str {
+        match self {
+            OffloadPolicy::GpuOnly => "GPU-only",
+            OffloadPolicy::HostDram => "DeepSpeed",
+            OffloadPolicy::SsdViaHost => "FlexGen",
+            OffloadPolicy::InStorage => "InstInfer",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct SystemConfig {
+    pub model: ModelShape,
+    pub gpu: GpuSpec,
+    pub host: HostSpec,
+    pub pcie: PcieSpec,
+    pub csd: CsdSpec,
+    pub policy: OffloadPolicy,
+    /// number of SSDs/CSDs attached (Figs. 12/13/17a)
+    pub n_devices: usize,
+    /// None = dense attention; Some = SparQ/SparF parameters
+    pub sparsity: Option<SparsityParams>,
+    /// prompt and generation lengths (paper: 1024/1024)
+    pub input_len: usize,
+    pub output_len: usize,
+    /// peer-to-peer DMA between GPU and CSD (InstInfer) vs host-mediated
+    pub p2p_dma: bool,
+    /// layer-wise pipelined prefill KV shipping (InstInfer §IV-D)
+    pub layerwise_pipeline: bool,
+    /// FlexGen tier policy: true = pick GPU/host/SSD by capacity (the
+    /// Fig. 4 motivation runs); false = offload target fixed to SSD
+    /// (the Fig. 12/13 configuration, §VI-A)
+    pub tiered: bool,
+}
+
+impl SystemConfig {
+    /// The paper's common testbed: OPT-13B, A6000, 1024/1024 (§VI-A).
+    pub fn paper_base(policy: OffloadPolicy) -> Self {
+        let model = ModelShape::opt_13b();
+        let in_storage = policy == OffloadPolicy::InStorage;
+        SystemConfig {
+            model,
+            gpu: GpuSpec::a6000(),
+            host: HostSpec::xeon_5320_96g(),
+            pcie: PcieSpec::paper(),
+            csd: CsdSpec::zynq7045(),
+            policy,
+            n_devices: 1,
+            sparsity: None,
+            input_len: 1024,
+            output_len: 1024,
+            p2p_dma: in_storage,
+            layerwise_pipeline: in_storage,
+            tiered: false,
+        }
+    }
+
+    pub fn with_sparsity(mut self, sp: SparsityParams) -> Self {
+        self.sparsity = Some(sp);
+        self
+    }
+
+    pub fn with_devices(mut self, n: usize) -> Self {
+        self.n_devices = n;
+        self
+    }
+
+    /// Capacity-tiered KV placement (Fig. 4 motivation configuration).
+    pub fn tiered(mut self) -> Self {
+        self.tiered = true;
+        self
+    }
+
+    /// Paper's default 1/8 compression on the decode context.
+    pub fn with_default_sparsity(self) -> Self {
+        let sp = SparsityParams::paper_default(&self.model, self.input_len + self.output_len);
+        self.with_sparsity(sp)
+    }
+
+    /// Display label matching the paper's legend names.
+    pub fn label(&self) -> String {
+        match (self.policy, self.sparsity.is_some()) {
+            (OffloadPolicy::HostDram, _) => "DeepSpeed".into(),
+            (OffloadPolicy::SsdViaHost, false) => "FlexGen".into(),
+            (OffloadPolicy::SsdViaHost, true) => "FlexGen-SparQ".into(),
+            (OffloadPolicy::InStorage, false) => format!("InstI-Dense x{}", self.n_devices),
+            (OffloadPolicy::InStorage, true) => format!("InstI-SparF x{}", self.n_devices),
+            (OffloadPolicy::GpuOnly, _) => "GPU-only".into(),
+        }
+    }
+
+    /// Total KV bytes at end of generation for batch `b`.
+    pub fn kv_bytes_total(&self, b: usize) -> usize {
+        self.model.kv_bytes(b, self.input_len + self.output_len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_base_sane() {
+        let c = SystemConfig::paper_base(OffloadPolicy::InStorage);
+        assert!(c.p2p_dma && c.layerwise_pipeline);
+        assert_eq!(c.input_len, 1024);
+        let f = SystemConfig::paper_base(OffloadPolicy::SsdViaHost);
+        assert!(!f.p2p_dma && !f.layerwise_pipeline);
+    }
+
+    #[test]
+    fn labels_match_paper_legends() {
+        let c = SystemConfig::paper_base(OffloadPolicy::SsdViaHost).with_default_sparsity();
+        assert_eq!(c.label(), "FlexGen-SparQ");
+        let i = SystemConfig::paper_base(OffloadPolicy::InStorage)
+            .with_default_sparsity()
+            .with_devices(2);
+        assert_eq!(i.label(), "InstI-SparF x2");
+    }
+
+    #[test]
+    fn kv_exceeds_vram_at_moderate_batch() {
+        // the motivation: at bs=64 with 2048 ctx, KV ~ 100+ GB >> 48 GB VRAM
+        let c = SystemConfig::paper_base(OffloadPolicy::SsdViaHost);
+        assert!(c.kv_bytes_total(64) > c.gpu.vram_bytes);
+    }
+}

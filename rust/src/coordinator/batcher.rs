@@ -1,0 +1,93 @@
+//! Offline batch former: groups queued requests into decode batches sized
+//! to the AOT batch buckets (the throughput-oriented policy of the paper's
+//! offline setting — fill the largest bucket that has work).
+
+use crate::workload::Request;
+use std::collections::VecDeque;
+
+#[derive(Debug)]
+pub struct OfflineBatcher {
+    queue: VecDeque<Request>,
+    buckets: Vec<usize>,
+    max_batch: usize,
+}
+
+impl OfflineBatcher {
+    /// `buckets` must be ascending (the manifest's batch buckets).
+    pub fn new(buckets: Vec<usize>, max_batch: usize) -> Self {
+        assert!(!buckets.is_empty());
+        assert!(buckets.windows(2).all(|w| w[0] < w[1]));
+        OfflineBatcher { queue: VecDeque::new(), buckets, max_batch }
+    }
+
+    pub fn push(&mut self, r: Request) {
+        self.queue.push_back(r);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Form the next batch: as many requests as fit the largest bucket
+    /// <= min(queue length rounded up to a bucket, max_batch).
+    /// Returns (requests, bucket) — the batch may be smaller than the
+    /// bucket (the engine pads), but never larger.
+    pub fn next_batch(&mut self) -> Option<(Vec<Request>, usize)> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let want = self.queue.len().min(self.max_batch);
+        // smallest bucket that fits `want`, else the largest bucket
+        let bucket = self
+            .buckets
+            .iter()
+            .copied()
+            .find(|&b| b >= want)
+            .unwrap_or(*self.buckets.last().unwrap());
+        let take = want.min(bucket);
+        let reqs = self.queue.drain(..take).collect();
+        Some((reqs, bucket))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reqs(n: usize) -> Vec<Request> {
+        (0..n)
+            .map(|i| Request { id: i as u64, prompt: vec![1], max_new_tokens: 1 })
+            .collect()
+    }
+
+    #[test]
+    fn batches_fill_buckets() {
+        let mut b = OfflineBatcher::new(vec![1, 4, 8], 8);
+        for r in reqs(11) {
+            b.push(r);
+        }
+        let (r1, bk1) = b.next_batch().unwrap();
+        assert_eq!((r1.len(), bk1), (8, 8));
+        let (r2, bk2) = b.next_batch().unwrap();
+        assert_eq!((r2.len(), bk2), (3, 4)); // remainder padded into bucket 4
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn respects_max_batch() {
+        let mut b = OfflineBatcher::new(vec![1, 4, 8], 4);
+        for r in reqs(9) {
+            b.push(r);
+        }
+        let (r1, bk1) = b.next_batch().unwrap();
+        assert_eq!((r1.len(), bk1), (4, 4));
+    }
+
+    #[test]
+    fn single_request_uses_smallest_bucket() {
+        let mut b = OfflineBatcher::new(vec![1, 4, 8], 8);
+        b.push(reqs(1).pop().unwrap());
+        let (r, bk) = b.next_batch().unwrap();
+        assert_eq!((r.len(), bk), (1, 1));
+    }
+}

@@ -1,0 +1,496 @@
+//! The inference engine: glues the PJRT artifacts ("GPU") to the CSD
+//! array per the paper's §IV-D dataflow.
+//!
+//! Decode step (per layer): GPU `qkv_proj` -> ship k,v to the CSDs
+//! (token write) -> in-storage attention (dense or SparF) -> GPU
+//! `post_attn`; after the last layer GPU `logits` picks the next token.
+//! Prefill: GPU `prefill_block` per layer, KV shipped to the CSDs
+//! layer-wise (overlapped in sim time with the next layer's compute).
+//!
+//! Two attention backends:
+//! * `Csd(mode)` — the paper's system: rust-native engine over simulated
+//!   flash (FP16 pages through the FTL), timed by the DES;
+//! * `GpuArtifact` — ablation/baseline: the `attn_dense`/`attn_sparf`
+//!   PJRT artifacts over host-resident padded caches (what a
+//!   FlexGen-style system computes), used for cross-validation.
+
+use crate::config::hw::{CsdSpec, FlashSpec, PcieSpec};
+use crate::csd::{AttnMode, CsdCommand, InstCsd, NvmeQueue};
+use crate::coordinator::metrics::EngineMetrics;
+use crate::coordinator::request::{RequestPhase, Sequence};
+use crate::coordinator::router::HeadRouter;
+use crate::ftl::FtlConfig;
+use crate::runtime::{HostTensor, Runtime};
+use crate::sim::Time;
+use anyhow::{bail, Context, Result};
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AttnBackend {
+    /// in-storage attention on the CSD array (the paper's system)
+    Csd(AttnMode),
+    /// PJRT artifact attention over host-padded caches (ablation)
+    GpuArtifact { sparse: bool },
+}
+
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub n_csds: usize,
+    pub backend: AttnBackend,
+    /// peer-to-peer command path to the CSDs (vs host-FS)
+    pub p2p: bool,
+    pub csd_spec: CsdSpec,
+}
+
+impl EngineConfig {
+    /// Functional-plane default: micro flash geometry sized for the
+    /// opt-micro model, in-storage dense attention, P2P on.
+    pub fn micro(n_csds: usize) -> Self {
+        EngineConfig {
+            n_csds,
+            backend: AttnBackend::Csd(AttnMode::Dense),
+            p2p: true,
+            csd_spec: CsdSpec::micro(),
+        }
+    }
+
+    pub fn sparse(mut self, sp: crate::config::model::SparsityParams) -> Self {
+        self.backend = AttnBackend::Csd(AttnMode::SparF(sp));
+        self
+    }
+}
+
+pub struct InferenceEngine {
+    pub rt: Runtime,
+    pub cfg: EngineConfig,
+    pub csds: Vec<NvmeQueue>,
+    pub router: HeadRouter,
+    pub metrics: EngineMetrics,
+    /// simulated device clock
+    pub sim_now: Time,
+    /// host-side padded KV caches per layer (GpuArtifact backend only)
+    host_kv: Vec<(HostTensor, HostTensor)>,
+    host_kv_bucket: usize,
+}
+
+impl InferenceEngine {
+    pub fn new(rt: Runtime, cfg: EngineConfig) -> Result<Self> {
+        let m = &rt.manifest.model;
+        let ftl_cfg = FtlConfig { d_head: m.d_head, m: m.m, n: m.n };
+        let mut csds = Vec::with_capacity(cfg.n_csds);
+        let pcie = PcieSpec::paper();
+        for _ in 0..cfg.n_csds {
+            let csd = InstCsd::new(cfg.csd_spec, ftl_cfg)
+                .context("constructing InstCSD")?;
+            csds.push(NvmeQueue::new(csd, &pcie, cfg.p2p));
+        }
+        let router = HeadRouter::new(m.n_heads, cfg.n_csds);
+        Ok(InferenceEngine {
+            rt,
+            cfg,
+            csds,
+            router,
+            metrics: EngineMetrics::default(),
+            sim_now: 0.0,
+            host_kv: Vec::new(),
+            host_kv_bucket: 0,
+        })
+    }
+
+    fn model(&self) -> crate::runtime::manifest::ModelMeta {
+        self.rt.manifest.model.clone()
+    }
+
+    /// Run prefill for a batch of sequences (prompts <= prefill_seq).
+    pub fn prefill(&mut self, seqs: &mut [Sequence], bucket: usize) -> Result<()> {
+        let m = self.model();
+        let sp = m.prefill_seq;
+        let b = seqs.len();
+        if b > bucket {
+            bail!("batch {b} exceeds bucket {bucket}");
+        }
+        for s in seqs.iter() {
+            if s.req.prompt.is_empty() || s.req.prompt.len() > sp {
+                bail!("prompt length {} outside 1..={sp}", s.req.prompt.len());
+            }
+        }
+        let t0 = Instant::now();
+
+        // ids (bucket, sp) padded with 0
+        let mut ids = vec![0i32; bucket * sp];
+        for (i, s) in seqs.iter().enumerate() {
+            ids[i * sp..i * sp + s.req.prompt.len()].copy_from_slice(&s.req.prompt);
+        }
+        let ids_t = HostTensor::i32(vec![bucket, sp], ids);
+        let x = self.rt.call("embed_prefill", bucket, 0, &[ids_t])?.remove(0);
+
+        // per-layer blocks; ship KV layer-wise (overlapped in sim time)
+        let mut x = x;
+        if matches!(self.cfg.backend, AttnBackend::GpuArtifact { .. }) {
+            self.alloc_host_kv(bucket)?;
+        }
+        let mut ship_done = self.sim_now;
+        for layer in 0..m.n_layers {
+            let mut outs = self.rt.call("prefill_block", bucket, layer, &[x])?;
+            let v = outs.pop().unwrap();
+            let k = outs.pop().unwrap();
+            x = outs.pop().unwrap();
+            // layer-wise pipeline: ship layer `layer` while the GPU computes
+            // layer+1 — in sim time the ship for this layer starts now
+            ship_done = ship_done.max(self.ship_prefill_kv(seqs, layer as u16, &k, &v, sp)?);
+        }
+        self.sim_now = self.sim_now.max(ship_done);
+
+        // next-token logits from each sequence's last valid row
+        let d = m.d_model;
+        let xs = x.as_f32()?;
+        let mut last = vec![0.0f32; bucket * d];
+        for (i, s) in seqs.iter().enumerate() {
+            let row = s.req.prompt.len() - 1;
+            let base = (i * sp + row) * d;
+            last[i * d..(i + 1) * d].copy_from_slice(&xs[base..base + d]);
+        }
+        let lg = self
+            .rt
+            .call("logits", bucket, 0, &[HostTensor::f32(vec![bucket, d], last)])?;
+        let next = lg[1].as_i32()?;
+        for (i, s) in seqs.iter_mut().enumerate() {
+            s.generated.push(next[i]);
+            s.kv_len = s.req.prompt.len();
+            s.phase = RequestPhase::Decoding;
+            self.metrics.prefill_tokens += s.req.prompt.len() as u64;
+            self.metrics.tokens_generated += 1;
+        }
+        self.metrics.gpu_wall_s += t0.elapsed().as_secs_f64();
+        Ok(())
+    }
+
+    fn alloc_host_kv(&mut self, bucket: usize) -> Result<()> {
+        let m = self.model();
+        self.host_kv = (0..m.n_layers)
+            .map(|_| {
+                (
+                    HostTensor::zeros_f32(vec![bucket, m.n_heads, m.max_seq, m.d_head]),
+                    HostTensor::zeros_f32(vec![bucket, m.n_heads, m.max_seq, m.d_head]),
+                )
+            })
+            .collect();
+        self.host_kv_bucket = bucket;
+        Ok(())
+    }
+
+    /// Ship one prefill layer's KV to the CSD array (or host caches).
+    fn ship_prefill_kv(
+        &mut self,
+        seqs: &[Sequence],
+        layer: u16,
+        k: &HostTensor,
+        v: &HostTensor,
+        sp: usize,
+    ) -> Result<Time> {
+        let m = self.model();
+        let (h, dh) = (m.n_heads, m.d_head);
+        let kd = k.as_f32()?;
+        let vd = v.as_f32()?;
+        match self.cfg.backend {
+            AttnBackend::GpuArtifact { .. } => {
+                let (kc, vc) = &mut self.host_kv[layer as usize];
+                let kcd = kc.as_f32_mut()?;
+                let smax = m.max_seq;
+                for (i, s) in seqs.iter().enumerate() {
+                    for hh in 0..h {
+                        for t in 0..s.req.prompt.len() {
+                            let src = ((i * h + hh) * sp + t) * dh;
+                            let dst = ((i * h + hh) * smax + t) * dh;
+                            kcd[dst..dst + dh].copy_from_slice(&kd[src..src + dh]);
+                        }
+                    }
+                }
+                let vcd = vc.as_f32_mut()?;
+                for (i, s) in seqs.iter().enumerate() {
+                    for hh in 0..h {
+                        for t in 0..s.req.prompt.len() {
+                            let src = ((i * h + hh) * sp + t) * dh;
+                            let dst = ((i * h + hh) * smax + t) * dh;
+                            vcd[dst..dst + dh].copy_from_slice(&vd[src..src + dh]);
+                        }
+                    }
+                }
+                Ok(self.sim_now)
+            }
+            AttnBackend::Csd(_) => {
+                let t0 = Instant::now();
+                let mut done = self.sim_now;
+                for (i, s) in seqs.iter().enumerate() {
+                    let len = s.req.prompt.len();
+                    for c in 0..self.router.n_csds() {
+                        let heads = self.router.heads_of(c).to_vec();
+                        let mut kp = Vec::with_capacity(heads.len() * len * dh);
+                        let mut vp = Vec::with_capacity(heads.len() * len * dh);
+                        for &hh in &heads {
+                            let base = (i * h + hh as usize) * sp * dh;
+                            kp.extend_from_slice(&kd[base..base + len * dh]);
+                            vp.extend_from_slice(&vd[base..base + len * dh]);
+                        }
+                        let comp = self.csds[c].submit(
+                            CsdCommand::WritePrefillLayer {
+                                slot: s.slot,
+                                layer,
+                                heads,
+                                s_len: len,
+                                k: kp,
+                                v: vp,
+                            },
+                            self.sim_now,
+                        )?;
+                        done = done.max(comp.done);
+                    }
+                }
+                self.metrics.csd_wall_s += t0.elapsed().as_secs_f64();
+                Ok(done)
+            }
+        }
+    }
+
+    /// One decode step over the batch; appends one token to every live
+    /// sequence.  `bucket` is the padded PJRT batch.
+    pub fn decode_step(&mut self, seqs: &mut [Sequence], bucket: usize) -> Result<()> {
+        let m = self.model();
+        let b = seqs.len();
+        let t0 = Instant::now();
+
+        let mut ids = vec![0i32; bucket];
+        let mut pos = vec![0i32; bucket];
+        for (i, s) in seqs.iter().enumerate() {
+            ids[i] = s.current_token();
+            pos[i] = (s.next_pos() as i32).min(m.max_seq as i32 - 1);
+        }
+        let x = self
+            .rt
+            .call(
+                "embed_decode",
+                bucket,
+                0,
+                &[HostTensor::i32(vec![bucket], ids), HostTensor::i32(vec![bucket], pos)],
+            )?
+            .remove(0);
+
+        let mut x = x;
+        let step_start = self.sim_now;
+        let mut step_done = step_start;
+        for layer in 0..m.n_layers {
+            let mut qkv = self.rt.call("qkv_proj", bucket, layer, &[x.clone()])?;
+            let v = qkv.pop().unwrap();
+            let k = qkv.pop().unwrap();
+            let q = qkv.pop().unwrap();
+
+            let attn = match self.cfg.backend {
+                AttnBackend::Csd(mode) => {
+                    let t1 = Instant::now();
+                    let a = self.csd_attention(seqs, layer as u16, &q, &k, &v, mode, bucket, &mut step_done)?;
+                    self.metrics.csd_wall_s += t1.elapsed().as_secs_f64();
+                    a
+                }
+                AttnBackend::GpuArtifact { sparse } => {
+                    self.gpu_attention(seqs, layer, &q, &k, &v, sparse, bucket)?
+                }
+            };
+            let outs = self.rt.call("post_attn", bucket, layer, &[x, attn])?;
+            x = outs.into_iter().next().unwrap();
+        }
+        // advance the device clock past this step's CSD work
+        self.sim_now = self.sim_now.max(step_done);
+
+        let lg = self.rt.call("logits", bucket, 0, &[x])?;
+        let next = lg[1].as_i32()?;
+        for (i, s) in seqs.iter_mut().enumerate().take(b) {
+            s.generated.push(next[i]);
+            s.kv_len += 1;
+            self.metrics.tokens_generated += 1;
+        }
+        self.metrics.decode_steps += 1;
+        self.metrics.gpu_wall_s += t0.elapsed().as_secs_f64();
+        Ok(())
+    }
+
+    /// In-storage attention: write this token's k/v, then attend (the new
+    /// token attends to itself, so length = kv_len + 1).
+    #[allow(clippy::too_many_arguments)]
+    fn csd_attention(
+        &mut self,
+        seqs: &[Sequence],
+        layer: u16,
+        q: &HostTensor,
+        k: &HostTensor,
+        v: &HostTensor,
+        mode: AttnMode,
+        bucket: usize,
+        step_done: &mut Time,
+    ) -> Result<HostTensor> {
+        let m = self.model();
+        let (h, dh) = (m.n_heads, m.d_head);
+        let qd = q.as_f32()?;
+        let kd = k.as_f32()?;
+        let vd = v.as_f32()?;
+        let mut out = vec![0.0f32; bucket * h * dh];
+        for (i, s) in seqs.iter().enumerate() {
+            let row = &kd[i * h * dh..(i + 1) * h * dh];
+            let vrow = &vd[i * h * dh..(i + 1) * h * dh];
+            let kparts = self.router.scatter(row, dh);
+            let vparts = self.router.scatter(vrow, dh);
+            let qparts = self.router.scatter(&qd[i * h * dh..(i + 1) * h * dh], dh);
+            let mut parts: Vec<Vec<f32>> = Vec::with_capacity(self.router.n_csds());
+            for c in 0..self.router.n_csds() {
+                let heads = self.router.heads_of(c).to_vec();
+                let wr = self.csds[c].submit(
+                    CsdCommand::WriteToken {
+                        slot: s.slot,
+                        layer,
+                        heads: heads.clone(),
+                        k: kparts[c].clone(),
+                        v: vparts[c].clone(),
+                    },
+                    self.sim_now,
+                )?;
+                let comp = self.csds[c].submit(
+                    CsdCommand::Attention {
+                        slot: s.slot,
+                        layer,
+                        heads,
+                        q: qparts[c].clone(),
+                        len: s.kv_len + 1,
+                        mode,
+                    },
+                    wr.done,
+                )?;
+                *step_done = step_done.max(comp.done);
+                if let Some(bd) = &comp.breakdown {
+                    self.metrics.units.merge(bd);
+                    self.metrics.csd_sim_s += bd.total();
+                }
+                parts.push(comp.data);
+            }
+            let gathered = self.router.gather(&parts, dh);
+            out[i * h * dh..(i + 1) * h * dh].copy_from_slice(&gathered);
+        }
+        Ok(HostTensor::f32(vec![bucket, h, dh], out))
+    }
+
+    /// Ablation backend: attention via the PJRT artifacts over host caches.
+    #[allow(clippy::too_many_arguments)]
+    fn gpu_attention(
+        &mut self,
+        seqs: &[Sequence],
+        layer: usize,
+        q: &HostTensor,
+        k: &HostTensor,
+        v: &HostTensor,
+        sparse: bool,
+        bucket: usize,
+    ) -> Result<HostTensor> {
+        let m = self.model();
+        let (h, dh, smax) = (m.n_heads, m.d_head, m.max_seq);
+        if self.host_kv_bucket != bucket {
+            self.alloc_host_kv(bucket)?;
+        }
+        let kd = k.as_f32()?.to_vec();
+        let vd = v.as_f32()?.to_vec();
+        {
+            let (kc, vc) = &mut self.host_kv[layer];
+            let kcd = kc.as_f32_mut()?;
+            let vcd = vc.as_f32_mut()?;
+            for (i, s) in seqs.iter().enumerate() {
+                let t = s.kv_len.min(smax - 1);
+                for hh in 0..h {
+                    let src = (i * h + hh) * dh;
+                    let dst = ((i * h + hh) * smax + t) * dh;
+                    kcd[dst..dst + dh].copy_from_slice(&kd[src..src + dh]);
+                    vcd[dst..dst + dh].copy_from_slice(&vd[src..src + dh]);
+                }
+            }
+        }
+        let mut lens = vec![1.0f32; bucket];
+        for (i, s) in seqs.iter().enumerate() {
+            lens[i] = (s.kv_len + 1) as f32;
+        }
+        let (kc, vc) = &self.host_kv[layer];
+        let exe = if sparse { "attn_sparf" } else { "attn_dense" };
+        let out = self.rt.call(
+            exe,
+            bucket,
+            0,
+            &[q.clone(), kc.clone(), vc.clone(), HostTensor::f32(vec![bucket], lens)],
+        )?;
+        Ok(out.into_iter().next().unwrap())
+    }
+
+    /// Release a finished sequence's KV on every CSD.
+    pub fn free_sequence(&mut self, seq: &Sequence) -> Result<()> {
+        if matches!(self.cfg.backend, AttnBackend::Csd(_)) {
+            for c in 0..self.csds.len() {
+                let comp = self.csds[c].submit(CsdCommand::FreeSlot { slot: seq.slot }, self.sim_now)?;
+                self.sim_now = self.sim_now.max(comp.done);
+            }
+        }
+        Ok(())
+    }
+
+    /// Run a whole batch to completion: prefill, then decode until every
+    /// sequence hits its token budget.  Returns the finished sequences.
+    pub fn generate(&mut self, mut seqs: Vec<Sequence>, bucket: usize) -> Result<Vec<Sequence>> {
+        let t0 = Instant::now();
+        self.prefill(&mut seqs, bucket)?;
+        let max_steps = seqs.iter().map(|s| s.req.max_new_tokens).max().unwrap_or(0);
+        let m = self.model();
+        for _ in 1..max_steps {
+            // stop early if everyone is done or context exhausted
+            if seqs.iter().all(|s| s.is_done()) {
+                break;
+            }
+            if seqs.iter().any(|s| s.next_pos() >= m.max_seq) {
+                break;
+            }
+            self.decode_step(&mut seqs, bucket)?;
+        }
+        for s in seqs.iter_mut() {
+            s.finish();
+            self.metrics.requests_done += 1;
+        }
+        for s in &seqs {
+            self.free_sequence(s)?;
+        }
+        self.metrics.batch_latencies.push(t0.elapsed().as_secs_f64());
+        Ok(seqs)
+    }
+}
+
+// Micro CSD spec lives here to keep hw.rs paper-focused.
+impl CsdSpec {
+    /// Functional-plane CSD: geometry sized for the opt-micro model
+    /// (512 B pages so n=8 token groups fill a page exactly; ~16 MB).
+    pub fn micro() -> Self {
+        let flash = FlashSpec {
+            channels: 4,
+            dies_per_channel: 2,
+            planes_per_die: 1,
+            blocks_per_plane: 64,
+            pages_per_block: 64,
+            page_bytes: 512,
+            channel_bw: 1.4e9,
+            read_us: 50.0,
+            program_us: 600.0,
+            erase_ms: 3.0,
+        };
+        CsdSpec {
+            name: "micro-csd",
+            flash,
+            engine_flops: 768.0 * 285e6 * 2.0,
+            clock_hz: 285e6,
+            dram_bytes: 64 << 20,
+            attn_kernels: 2,
+            argtopk_elems_per_s: 285e6,
+            filter_bw_per_channel: flash.channel_bw,
+            kv_capacity_bytes: flash.capacity_bytes() as u64,
+        }
+    }
+}

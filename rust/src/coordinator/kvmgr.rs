@@ -1,0 +1,75 @@
+//! Sequence-slot management: allocates KV slots (the unit the FTL maps),
+//! enforces a capacity bound, and reclaims on completion.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeSet;
+
+#[derive(Debug)]
+pub struct SlotManager {
+    capacity: usize,
+    free: BTreeSet<u32>,
+    live: BTreeSet<u32>,
+}
+
+impl SlotManager {
+    pub fn new(capacity: usize) -> Self {
+        SlotManager {
+            capacity,
+            free: (0..capacity as u32).collect(),
+            live: BTreeSet::new(),
+        }
+    }
+
+    pub fn alloc(&mut self) -> Result<u32> {
+        match self.free.pop_first() {
+            Some(s) => {
+                self.live.insert(s);
+                Ok(s)
+            }
+            None => bail!("no free KV slots (capacity {})", self.capacity),
+        }
+    }
+
+    pub fn release(&mut self, slot: u32) -> Result<()> {
+        if !self.live.remove(&slot) {
+            bail!("release of non-live slot {slot}");
+        }
+        self.free.insert(slot);
+        Ok(())
+    }
+
+    pub fn live_count(&self) -> usize {
+        self.live.len()
+    }
+
+    pub fn free_count(&self) -> usize {
+        self.free.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_release_cycle() {
+        let mut m = SlotManager::new(2);
+        let a = m.alloc().unwrap();
+        let b = m.alloc().unwrap();
+        assert_ne!(a, b);
+        assert!(m.alloc().is_err());
+        m.release(a).unwrap();
+        assert_eq!(m.live_count(), 1);
+        let c = m.alloc().unwrap();
+        assert_eq!(c, a); // lowest slot reused
+        assert!(m.release(99).is_err());
+    }
+
+    #[test]
+    fn double_release_rejected() {
+        let mut m = SlotManager::new(1);
+        let a = m.alloc().unwrap();
+        m.release(a).unwrap();
+        assert!(m.release(a).is_err());
+    }
+}

@@ -1,0 +1,66 @@
+//! Engine accounting: wall-clock (host-measured) + simulated-device time.
+//!
+//! The functional plane runs the micro model for real, so the interesting
+//! numbers are split: PJRT wall time (the "GPU"), simulated CSD time (the
+//! DES), and the per-unit breakdown the CSD engines report.
+
+use crate::csd::UnitBreakdown;
+use crate::sim::Time;
+
+#[derive(Debug, Default, Clone)]
+pub struct EngineMetrics {
+    pub requests_done: u64,
+    pub tokens_generated: u64,
+    pub prefill_tokens: u64,
+    pub decode_steps: u64,
+    /// host wall time in the PJRT executables
+    pub gpu_wall_s: f64,
+    /// host wall time in the rust CSD engines (functional compute)
+    pub csd_wall_s: f64,
+    /// simulated device-time accumulated on the CSDs
+    pub csd_sim_s: Time,
+    /// per-unit simulated breakdown (Fig. 16 numerator)
+    pub units: UnitBreakdown,
+    /// per-batch latencies (seconds, wall)
+    pub batch_latencies: Vec<f64>,
+}
+
+impl EngineMetrics {
+    pub fn throughput_tok_per_wall_s(&self) -> f64 {
+        let wall = self.gpu_wall_s + self.csd_wall_s;
+        if wall == 0.0 {
+            0.0
+        } else {
+            self.tokens_generated as f64 / wall
+        }
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "requests={} tokens={} prefill_toks={} steps={} gpu_wall={:.3}s \
+             csd_wall={:.3}s csd_sim={:.6}s tput={:.1} tok/s(wall)",
+            self.requests_done,
+            self.tokens_generated,
+            self.prefill_tokens,
+            self.decode_steps,
+            self.gpu_wall_s,
+            self.csd_wall_s,
+            self.csd_sim_s,
+            self.throughput_tok_per_wall_s(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_guarded_against_zero() {
+        let m = EngineMetrics::default();
+        assert_eq!(m.throughput_tok_per_wall_s(), 0.0);
+        let m = EngineMetrics { tokens_generated: 10, gpu_wall_s: 2.0, ..Default::default() };
+        assert_eq!(m.throughput_tok_per_wall_s(), 5.0);
+        assert!(m.report().contains("tokens=10"));
+    }
+}

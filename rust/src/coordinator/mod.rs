@@ -1,0 +1,26 @@
+//! L3 host control plane (paper Fig. 7, "InstHost"): the rust coordinator
+//! that owns the request lifecycle, batches offline work, schedules the
+//! prefill/decode phases, routes attention heads across CSDs, and manages
+//! KV slots — while the GPU (PJRT artifacts) and the CSDs (in-storage
+//! engines) do all the heavy lifting.  Python never runs here.
+//!
+//! * [`request`] — request/sequence state machine
+//! * [`batcher`] — offline batch former (bucketed to the AOT batch sizes)
+//! * [`router`]  — attention-head -> CSD assignment (Fig. 17a scaling)
+//! * [`kvmgr`]   — sequence-slot allocation and reclamation
+//! * [`engine`]  — the inference engine gluing PJRT + CSDs per §IV-D
+//! * [`metrics`] — throughput/latency/breakdown accounting
+
+pub mod batcher;
+pub mod engine;
+pub mod kvmgr;
+pub mod metrics;
+pub mod request;
+pub mod router;
+
+pub use batcher::OfflineBatcher;
+pub use engine::{EngineConfig, InferenceEngine};
+pub use kvmgr::SlotManager;
+pub use metrics::EngineMetrics;
+pub use request::{Request, RequestPhase, Sequence};
+pub use router::HeadRouter;

@@ -1,0 +1,72 @@
+//! Request / sequence state machine.
+
+pub use crate::workload::Request;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RequestPhase {
+    Queued,
+    Prefilling,
+    Decoding,
+    Finished,
+}
+
+/// A request admitted into the engine, bound to a KV slot.
+#[derive(Debug, Clone)]
+pub struct Sequence {
+    pub req: Request,
+    pub slot: u32,
+    pub phase: RequestPhase,
+    /// tokens currently represented in the KV cache
+    pub kv_len: usize,
+    pub generated: Vec<i32>,
+}
+
+impl Sequence {
+    pub fn new(req: Request, slot: u32) -> Self {
+        Sequence { req, slot, phase: RequestPhase::Queued, kv_len: 0, generated: Vec::new() }
+    }
+
+    /// Absolute position of the next token to be decoded.
+    pub fn next_pos(&self) -> usize {
+        self.req.prompt.len() + self.generated.len()
+    }
+
+    /// The token fed into the next decode step (last prompt token before
+    /// any generation, then the most recent generated token).
+    pub fn current_token(&self) -> i32 {
+        *self.generated.last().unwrap_or_else(|| {
+            self.req.prompt.last().expect("prompt must be non-empty")
+        })
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.generated.len() >= self.req.max_new_tokens
+    }
+
+    pub fn finish(&mut self) {
+        self.phase = RequestPhase::Finished;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(prompt: usize, maxnew: usize) -> Request {
+        Request { id: 1, prompt: (0..prompt as i32).collect(), max_new_tokens: maxnew }
+    }
+
+    #[test]
+    fn sequence_lifecycle() {
+        let mut s = Sequence::new(req(4, 2), 7);
+        assert_eq!(s.phase, RequestPhase::Queued);
+        assert_eq!(s.current_token(), 3);
+        assert_eq!(s.next_pos(), 4);
+        s.generated.push(42);
+        assert_eq!(s.current_token(), 42);
+        assert_eq!(s.next_pos(), 5);
+        assert!(!s.is_done());
+        s.generated.push(43);
+        assert!(s.is_done());
+    }
+}

@@ -1,0 +1,114 @@
+//! Attention-head -> CSD routing (paper §IV-D "Scale To CSD Array").
+//!
+//! Heads are independent, so the router stripes them round-robin across
+//! devices; for n_head >> n_csd every device gets an equal share and the
+//! attention outputs concatenate back on the GPU.
+
+#[derive(Debug, Clone)]
+pub struct HeadRouter {
+    n_heads: usize,
+    n_csds: usize,
+    /// heads assigned to each CSD (round-robin stripe)
+    assignment: Vec<Vec<u16>>,
+}
+
+impl HeadRouter {
+    pub fn new(n_heads: usize, n_csds: usize) -> Self {
+        assert!(n_csds > 0 && n_heads > 0);
+        let mut assignment = vec![Vec::new(); n_csds];
+        for h in 0..n_heads {
+            assignment[h % n_csds].push(h as u16);
+        }
+        HeadRouter { n_heads, n_csds, assignment }
+    }
+
+    pub fn n_csds(&self) -> usize {
+        self.n_csds
+    }
+
+    pub fn heads_of(&self, csd: usize) -> &[u16] {
+        &self.assignment[csd]
+    }
+
+    pub fn csd_of(&self, head: u16) -> usize {
+        head as usize % self.n_csds
+    }
+
+    /// Split a (H, d) row-major tensor into per-CSD packed sub-tensors
+    /// (rows in each CSD's head order).
+    pub fn scatter(&self, rows: &[f32], d: usize) -> Vec<Vec<f32>> {
+        debug_assert_eq!(rows.len(), self.n_heads * d);
+        self.assignment
+            .iter()
+            .map(|heads| {
+                let mut out = Vec::with_capacity(heads.len() * d);
+                for &h in heads {
+                    out.extend_from_slice(&rows[h as usize * d..(h as usize + 1) * d]);
+                }
+                out
+            })
+            .collect()
+    }
+
+    /// Inverse of `scatter`: reassemble per-CSD outputs into (H, d).
+    pub fn gather(&self, parts: &[Vec<f32>], d: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.n_heads * d];
+        for (c, heads) in self.assignment.iter().enumerate() {
+            for (i, &h) in heads.iter().enumerate() {
+                out[h as usize * d..(h as usize + 1) * d]
+                    .copy_from_slice(&parts[c][i * d..(i + 1) * d]);
+            }
+        }
+        out
+    }
+
+    /// Max heads on any device (the load-balance bound of Fig. 17a).
+    pub fn max_share(&self) -> usize {
+        self.assignment.iter().map(|a| a.len()).max().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn balanced_assignment() {
+        let r = HeadRouter::new(40, 3);
+        let sizes: Vec<usize> = (0..3).map(|c| r.heads_of(c).len()).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), 40);
+        assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
+        assert_eq!(r.max_share(), 14);
+        for c in 0..3 {
+            for &h in r.heads_of(c) {
+                assert_eq!(r.csd_of(h), c);
+            }
+        }
+    }
+
+    #[test]
+    fn scatter_gather_roundtrip_property() {
+        check(
+            "router_scatter_gather_id",
+            50,
+            |rng| {
+                let h = rng.range(1, 16);
+                let n = rng.range(1, h.min(5));
+                let d = rng.range(1, 8);
+                let rows: Vec<f32> = (0..h * d).map(|_| rng.normal_f32()).collect();
+                (h, n, d, rows)
+            },
+            |(h, n, d, rows)| {
+                let r = HeadRouter::new(*h, *n);
+                let parts = r.scatter(rows, *d);
+                let back = r.gather(&parts, *d);
+                if &back == rows {
+                    Ok(())
+                } else {
+                    Err("roundtrip mismatch".into())
+                }
+            },
+        );
+    }
+}

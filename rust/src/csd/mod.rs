@@ -1,0 +1,16 @@
+//! InstCSD: the computational storage drive (paper §IV-B, Fig. 8).
+//!
+//! * [`engine`]    — the hardware SparF/dense attention engine: argtopk
+//!   unit, per-NFC filters, two attention kernels, dual-step page loading
+//!   through the KV-oriented FTL.  Functional (real numerics over the
+//!   simulated flash bytes) *and* timed (per-unit busy ledger -> Fig. 16).
+//! * [`nvme`]      — the NVMe command surface the host coordinator drives
+//!   (extended commands for KV writes and attention offload, §V-A).
+//! * [`resources`] — the Zynq7045 resource-utilisation model (Table I).
+
+pub mod engine;
+pub mod nvme;
+pub mod resources;
+
+pub use engine::{AttnMode, InstCsd, UnitBreakdown};
+pub use nvme::{CsdCommand, CsdCompletion, NvmeQueue};

@@ -1,0 +1,73 @@
+//! Zynq7045 resource-utilisation model — reproduces Table I.
+//!
+//! These are the paper's reported synthesis results (§V-B Table I); we keep
+//! them as a structured model so the Table-I bench target can print the
+//! table and so the engine constants (DSP count -> FLOP/s) are derived,
+//! not free parameters.
+
+#[derive(Debug, Clone, Copy)]
+pub struct UnitResources {
+    pub name: &'static str,
+    pub lut_k: f64,
+    pub ff_k: f64,
+    pub bram_tiles: f64,
+    pub dsp: u32,
+}
+
+/// Table I rows (paper §V-B).
+pub const UNITS: &[UnitResources] = &[
+    UnitResources { name: "Attention Kernel", lut_k: 99.2, ff_k: 207.3, bram_tiles: 96.0, dsp: 768 },
+    UnitResources { name: "Argtopk", lut_k: 5.83, ff_k: 3.87, bram_tiles: 24.0, dsp: 0 },
+    UnitResources { name: "NFC", lut_k: 58.332, ff_k: 27.8, bram_tiles: 96.0, dsp: 0 },
+    UnitResources { name: "NVMe Controller", lut_k: 7.99, ff_k: 12.45, bram_tiles: 27.5, dsp: 0 },
+    UnitResources { name: "Interconnect", lut_k: 4.12, ff_k: 6.17, bram_tiles: 7.5, dsp: 0 },
+];
+
+/// Device totals (Zynq7045 datasheet, as quoted in Table I).
+pub const AVAILABLE: UnitResources =
+    UnitResources { name: "Available", lut_k: 218.6, ff_k: 437.2, bram_tiles: 545.0, dsp: 900 };
+
+pub fn used() -> UnitResources {
+    let mut u = UnitResources { name: "Used", lut_k: 0.0, ff_k: 0.0, bram_tiles: 0.0, dsp: 0 };
+    for r in UNITS {
+        u.lut_k += r.lut_k;
+        u.ff_k += r.ff_k;
+        u.bram_tiles += r.bram_tiles;
+        u.dsp += r.dsp;
+    }
+    u
+}
+
+/// Utilisation percentages (the Table I "Percent" row).
+pub fn utilisation() -> (f64, f64, f64, f64) {
+    let u = used();
+    (
+        100.0 * u.lut_k / AVAILABLE.lut_k,
+        100.0 * u.ff_k / AVAILABLE.ff_k,
+        100.0 * u.bram_tiles / AVAILABLE.bram_tiles,
+        100.0 * u.dsp as f64 / AVAILABLE.dsp as f64,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_paper_percentages() {
+        let (lut, ff, bram, dsp) = utilisation();
+        // paper: 80.27%, 58.92%, 46.06%, 85.33%
+        assert!((lut - 80.27).abs() < 0.2, "lut {lut}");
+        assert!((ff - 58.92).abs() < 0.2, "ff {ff}");
+        assert!((bram - 46.06).abs() < 0.2, "bram {bram}");
+        assert!((dsp - 85.33).abs() < 0.2, "dsp {dsp}");
+    }
+
+    #[test]
+    fn engine_flops_derived_from_dsp_count() {
+        // CsdSpec::zynq7045 must use Table I's attention-kernel DSP count
+        let spec = crate::config::hw::CsdSpec::zynq7045();
+        let dsp = UNITS[0].dsp as f64;
+        assert_eq!(spec.engine_flops, dsp * spec.clock_hz * 2.0);
+    }
+}

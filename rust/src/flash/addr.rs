@@ -1,0 +1,107 @@
+//! Physical addressing: (channel, die, plane, block, page) <-> linear ids.
+
+use crate::config::hw::FlashSpec;
+
+/// Geometry helper bound to a `FlashSpec`.
+#[derive(Debug, Clone, Copy)]
+pub struct Geometry {
+    pub channels: usize,
+    pub dies_per_channel: usize,
+    pub planes_per_die: usize,
+    pub blocks_per_plane: usize,
+    pub pages_per_block: usize,
+}
+
+/// Physical page address (linear id over the whole device).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Ppa(pub usize);
+
+/// Physical block address (linear id).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct BlockAddr(pub usize);
+
+impl Geometry {
+    pub fn of(spec: &FlashSpec) -> Self {
+        Geometry {
+            channels: spec.channels,
+            dies_per_channel: spec.dies_per_channel,
+            planes_per_die: spec.planes_per_die,
+            blocks_per_plane: spec.blocks_per_plane,
+            pages_per_block: spec.pages_per_block,
+        }
+    }
+
+    pub fn total_blocks(&self) -> usize {
+        self.channels * self.dies_per_channel * self.planes_per_die * self.blocks_per_plane
+    }
+
+    pub fn total_pages(&self) -> usize {
+        self.total_blocks() * self.pages_per_block
+    }
+
+    /// Block id layout: channel-major so `block % channels` recovers the
+    /// channel — blocks with consecutive ids round-robin across channels,
+    /// which is what the FTL's striped allocation exploits.
+    pub fn block_channel(&self, b: BlockAddr) -> usize {
+        b.0 % self.channels
+    }
+
+    pub fn block_die(&self, b: BlockAddr) -> usize {
+        (b.0 / self.channels) % self.dies_per_channel
+    }
+
+    /// Global die index (channel, die) for queueing.
+    pub fn block_die_global(&self, b: BlockAddr) -> usize {
+        self.block_channel(b) * self.dies_per_channel + self.block_die(b)
+    }
+
+    pub fn page_of(&self, b: BlockAddr, page_in_block: usize) -> Ppa {
+        debug_assert!(page_in_block < self.pages_per_block);
+        Ppa(b.0 * self.pages_per_block + page_in_block)
+    }
+
+    pub fn block_of(&self, p: Ppa) -> BlockAddr {
+        BlockAddr(p.0 / self.pages_per_block)
+    }
+
+    pub fn page_in_block(&self, p: Ppa) -> usize {
+        p.0 % self.pages_per_block
+    }
+
+    pub fn page_channel(&self, p: Ppa) -> usize {
+        self.block_channel(self.block_of(p))
+    }
+
+    pub fn page_die_global(&self, p: Ppa) -> usize {
+        self.block_die_global(self.block_of(p))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_and_striping() {
+        let g = Geometry::of(&FlashSpec::tiny());
+        assert_eq!(g.total_blocks(), 2 * 8);
+        assert_eq!(g.total_pages(), 16 * 16);
+        // consecutive blocks alternate channels (striping)
+        assert_eq!(g.block_channel(BlockAddr(0)), 0);
+        assert_eq!(g.block_channel(BlockAddr(1)), 1);
+        assert_eq!(g.block_channel(BlockAddr(2)), 0);
+        let p = g.page_of(BlockAddr(3), 5);
+        assert_eq!(g.block_of(p), BlockAddr(3));
+        assert_eq!(g.page_in_block(p), 5);
+        assert_eq!(g.page_channel(p), 1);
+    }
+
+    #[test]
+    fn die_indexing_within_bounds() {
+        let g = Geometry::of(&FlashSpec::instcsd());
+        for b in [0, 7, 8, 63, 1000] {
+            let d = g.block_die_global(BlockAddr(b));
+            assert!(d < g.channels * g.dies_per_channel);
+        }
+    }
+}

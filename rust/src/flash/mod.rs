@@ -1,0 +1,13 @@
+//! NAND flash array simulator: geometry, page/block state machine, and
+//! contention-aware timing (per-die tR/tProg/tBERS, per-channel bus).
+//!
+//! This is the substrate the paper's evaluation rests on (§V-B builds the
+//! same thing on NVMeVirt): it enforces the three flash facts the SparF /
+//! FTL co-design exists to handle — page-granular access, erase-before-
+//! program at block granularity, and parallelism across channels/dies.
+
+pub mod addr;
+pub mod array;
+
+pub use addr::{BlockAddr, Geometry, Ppa};
+pub use array::{FlashArray, FlashCounters};

@@ -1,0 +1,81 @@
+//! On-flash page layouts (FP16) for the two KV orientations.
+
+use crate::util::f16::{decode_slice, encode_slice, f16_bits_to_f32, f32_to_f16_bits};
+
+/// Quantise one value through the FP16 boundary (what flash will hold).
+#[inline]
+pub fn q16(x: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(x))
+}
+
+/// Encode token-major rows (n tokens x d channels) into page bytes.
+pub fn encode_rows(rows: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(rows.len() * 2);
+    encode_slice(rows, &mut out);
+    out
+}
+
+/// Decode `count` f32 values from page bytes (token-major layout).
+pub fn decode_rows(page: &[u8], count: usize) -> Vec<f32> {
+    let mut v = decode_slice(&page[..count * 2]);
+    v.truncate(count);
+    v
+}
+
+/// Build an embedding-indexed page: channels [eg*m, (eg+1)*m) of K over
+/// `t_emb` token rows, channel-major (`lane` = all tokens of one channel).
+/// `rows` is token-major (t_emb x d).
+pub fn encode_emb_page(rows: &[f32], d: usize, eg: usize, m: usize, t_emb: usize) -> Vec<u8> {
+    debug_assert_eq!(rows.len(), t_emb * d);
+    let mut lane_major = Vec::with_capacity(m * t_emb);
+    for off in 0..m {
+        let c = eg * m + off;
+        for t in 0..t_emb {
+            lane_major.push(rows[t * d + c]);
+        }
+    }
+    encode_rows(&lane_major)
+}
+
+/// Extract one channel lane (t_emb token values) from an embedding page.
+pub fn decode_emb_lane(page: &[u8], off: usize, t_emb: usize) -> Vec<f32> {
+    let start = off * t_emb * 2;
+    decode_slice(&page[start..start + t_emb * 2])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_rows_roundtrip() {
+        let rows: Vec<f32> = (0..8 * 4).map(|i| i as f32 * 0.25).collect();
+        let page = encode_rows(&rows);
+        assert_eq!(page.len(), rows.len() * 2);
+        assert_eq!(decode_rows(&page, rows.len()), rows); // values exact in f16
+    }
+
+    #[test]
+    fn emb_page_lane_extraction() {
+        let (d, m, t_emb) = (8usize, 4usize, 6usize);
+        // rows[t*d + c] = t*100 + c, exactly representable
+        let rows: Vec<f32> = (0..t_emb * d).map(|i| ((i / d) * 100 + i % d) as f32).collect();
+        for eg in 0..d / m {
+            let page = encode_emb_page(&rows, d, eg, m, t_emb);
+            for off in 0..m {
+                let lane = decode_emb_lane(&page, off, t_emb);
+                let c = eg * m + off;
+                for (t, &v) in lane.iter().enumerate() {
+                    assert_eq!(v, (t * 100 + c) as f32);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn q16_idempotent() {
+        for x in [0.1f32, -3.7, 1234.5, 1e-5] {
+            assert_eq!(q16(q16(x)), q16(x));
+        }
+    }
+}

@@ -1,0 +1,565 @@
+//! KV-cache-oriented FTL (paper §IV-C): dual address mappings
+//! (token-indexed and hidden-embedding-indexed), page-aligned group
+//! packing, a DRAM group buffer for incremental decode writes, striped
+//! block allocation, and GC with write-amplification accounting.
+//!
+//! Layouts (all FP16 on flash):
+//! * token-indexed page: one group of `n` consecutive tokens for one
+//!   (slot, layer, head, K|V) stream, token-major `n x d_head`;
+//! * embedding-indexed page: `m` channels x `T` tokens of the K cache,
+//!   channel-major, where `T = page_bytes / (m * 2)` (paper: 256-1K
+//!   tokens per page for 4 KiB pages) — K is stored twice, trading cheap
+//!   flash capacity for random access in both orientations;
+//! * decode-generated tokens buffer in CSD DRAM until a full group seals,
+//!   then program at page granularity into striped open blocks (writes
+//!   therefore always fill blocks sequentially — the batch-writing rule).
+
+pub mod layout;
+
+use crate::config::hw::FlashSpec;
+use crate::flash::{BlockAddr, FlashArray, Ppa};
+use crate::sim::Time;
+use anyhow::{anyhow, bail, Result};
+use layout::{decode_rows, encode_rows};
+use std::collections::{HashMap, VecDeque};
+
+/// One KV stream = one attention head of one layer of one sequence slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct StreamKey {
+    pub slot: u32,
+    pub layer: u16,
+    pub head: u16,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KvKind {
+    K,
+    V,
+}
+
+/// What a physical page currently holds (reverse map for GC).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum PageTag {
+    Token { key: StreamKey, kind: KvKind, group: u32 },
+    Emb { key: StreamKey, eg: u16, tpage: u32 },
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct FtlConfig {
+    /// head dimension (channels per token row)
+    pub d_head: usize,
+    /// embedding-group size: channels per embedding-indexed page
+    pub m: usize,
+    /// token-group size: tokens per token-indexed page
+    pub n: usize,
+}
+
+impl FtlConfig {
+    pub fn tokens_per_emb_page(&self, spec: &FlashSpec) -> usize {
+        spec.page_bytes / (self.m * 2)
+    }
+
+    pub fn validate(&self, spec: &FlashSpec) -> Result<()> {
+        if self.n * self.d_head * 2 > spec.page_bytes {
+            bail!(
+                "token group {}x{} (FP16) exceeds page size {}",
+                self.n, self.d_head, spec.page_bytes
+            );
+        }
+        if self.d_head % self.m != 0 {
+            bail!("d_head {} not a multiple of embedding group {}", self.d_head, self.m);
+        }
+        if self.tokens_per_emb_page(spec) == 0 {
+            bail!("embedding group {} too large for page", self.m);
+        }
+        Ok(())
+    }
+}
+
+/// DRAM-resident state per stream: the unsealed tail + running v̄.
+#[derive(Debug, Clone, Default)]
+struct StreamBuf {
+    /// total tokens appended so far
+    count: usize,
+    /// K/V rows since the last sealed token group (each d_head floats)
+    k_tail: Vec<f32>,
+    v_tail: Vec<f32>,
+    /// K rows since the last sealed embedding page row-block
+    emb_tail: Vec<f32>,
+    /// running sum of (f16-quantised) V rows for v̄
+    vbar_sum: Vec<f32>,
+}
+
+/// Per-step flash I/O statistics (what the bandwidth model charges).
+#[derive(Debug, Clone, Default)]
+pub struct FtlCounters {
+    pub gc_relocations: u64,
+    pub host_bytes: u64,
+    pub tail_hits: u64,
+    pub page_fetches: u64,
+}
+
+pub struct KvFtl {
+    pub cfg: FtlConfig,
+    pub array: FlashArray,
+    tokens_per_emb_page: usize,
+    /// free blocks per channel (striping pool)
+    free: Vec<VecDeque<BlockAddr>>,
+    /// open (partially programmed) block per channel
+    open: Vec<Option<BlockAddr>>,
+    token_map: HashMap<(StreamKey, KvKind, u32), Ppa>,
+    emb_map: HashMap<(StreamKey, u16, u32), Ppa>,
+    rev: HashMap<Ppa, PageTag>,
+    /// valid-page count per block
+    block_valid: Vec<u32>,
+    streams: HashMap<StreamKey, StreamBuf>,
+    pub counters: FtlCounters,
+    /// guards against GC re-entrancy (relocation needs target blocks; if
+    /// none exist the device is genuinely full and we must error, not
+    /// recurse)
+    gc_active: bool,
+}
+
+impl KvFtl {
+    pub fn new(spec: FlashSpec, cfg: FtlConfig) -> Result<Self> {
+        cfg.validate(&spec)?;
+        let array = FlashArray::new(spec);
+        let geo = array.geo;
+        let mut free: Vec<VecDeque<BlockAddr>> = (0..spec.channels).map(|_| VecDeque::new()).collect();
+        for b in 0..geo.total_blocks() {
+            let ba = BlockAddr(b);
+            free[geo.block_channel(ba)].push_back(ba);
+        }
+        Ok(KvFtl {
+            tokens_per_emb_page: cfg.tokens_per_emb_page(&spec),
+            cfg,
+            array,
+            free,
+            open: vec![None; spec.channels],
+            token_map: HashMap::new(),
+            emb_map: HashMap::new(),
+            rev: HashMap::new(),
+            block_valid: vec![0; geo.total_blocks()],
+            streams: HashMap::new(),
+            counters: FtlCounters::default(),
+            gc_active: false,
+        })
+    }
+
+    pub fn tokens_per_emb_page(&self) -> usize {
+        self.tokens_per_emb_page
+    }
+
+    // ---- block allocation / GC -------------------------------------------
+
+    fn alloc_block(&mut self, ch: usize, at: Time) -> Result<(BlockAddr, Time)> {
+        if let Some(b) = self.free[ch].pop_front() {
+            return Ok((b, at));
+        }
+        if self.gc_active {
+            bail!("channel {ch}: out of blocks during GC relocation (device full)");
+        }
+        // GC: reclaim the most-invalid full block on this channel.  Fully
+        // valid blocks are not candidates — relocating them frees nothing.
+        let geo = self.array.geo;
+        let candidate = (0..geo.total_blocks())
+            .map(BlockAddr)
+            .filter(|&b| geo.block_channel(b) == ch)
+            .filter(|&b| self.array.programmed_pages(b) == geo.pages_per_block)
+            .filter(|&b| (self.block_valid[b.0] as usize) < geo.pages_per_block)
+            .filter(|&b| self.open[ch] != Some(b))
+            .min_by_key(|&b| self.block_valid[b.0]);
+        let victim = candidate
+            .ok_or_else(|| anyhow!("channel {ch}: no reclaimable block (device full)"))?;
+        self.gc_active = true;
+        let res = self.gc_block(victim, at);
+        self.gc_active = false;
+        let t = res?;
+        self.free[ch]
+            .pop_front()
+            .map(|b| (b, t))
+            .ok_or_else(|| anyhow!("channel {ch}: GC did not free a block"))
+    }
+
+    /// Relocate valid pages out of `victim`, erase it, return completion.
+    fn gc_block(&mut self, victim: BlockAddr, at: Time) -> Result<Time> {
+        let mut t = at;
+        let valid = self.array.valid_pages(victim);
+        for pi in valid {
+            let ppa = self.array.geo.page_of(victim, pi);
+            let tag = match self.rev.get(&ppa) {
+                Some(t) => *t,
+                None => continue, // untagged (shouldn't happen) — drop it
+            };
+            let (data, rt) = {
+                let (d, rt) = self.array.read(ppa, t)?;
+                (d.to_vec(), rt)
+            };
+            // re-program on the same channel (keeps striping invariant)
+            let ch = self.array.geo.page_channel(ppa);
+            let (new_ppa, wt) = self.program_to_channel(ch, &data, rt)?;
+            self.retag(tag, new_ppa);
+            self.array.invalidate(ppa);
+            self.block_valid[victim.0] = self.block_valid[victim.0].saturating_sub(1);
+            self.counters.gc_relocations += 1;
+            t = t.max(wt);
+        }
+        let te = self.array.erase(victim, t)?;
+        self.block_valid[victim.0] = 0;
+        let ch = self.array.geo.block_channel(victim);
+        self.free[ch].push_back(victim);
+        Ok(te)
+    }
+
+    fn retag(&mut self, tag: PageTag, new_ppa: Ppa) {
+        match tag {
+            PageTag::Token { key, kind, group } => {
+                self.token_map.insert((key, kind, group), new_ppa);
+            }
+            PageTag::Emb { key, eg, tpage } => {
+                self.emb_map.insert((key, eg, tpage), new_ppa);
+            }
+        }
+        self.rev.insert(new_ppa, tag);
+        self.block_valid[self.array.geo.block_of(new_ppa).0] += 1;
+    }
+
+    fn program_to_channel(&mut self, ch: usize, data: &[u8], at: Time) -> Result<(Ppa, Time)> {
+        let geo = self.array.geo;
+        let mut t = at;
+        let block = match self.open[ch] {
+            Some(b) if self.array.programmed_pages(b) < geo.pages_per_block => b,
+            _ => {
+                let (b, ta) = self.alloc_block(ch, at)?;
+                t = ta;
+                self.open[ch] = Some(b);
+                b
+            }
+        };
+        let (ppa, done) = self.array.program_next(block, data, t)?;
+        Ok((ppa, done))
+    }
+
+    fn stage_page(&mut self, tag: PageTag, ch: usize, data: &[u8], at: Time) -> Result<Time> {
+        // drop any prior mapping (re-seal after GC-free never happens for
+        // KV streams, but keep the FTL self-consistent)
+        let prior = match tag {
+            PageTag::Token { key, kind, group } => self.token_map.get(&(key, kind, group)).copied(),
+            PageTag::Emb { key, eg, tpage } => self.emb_map.get(&(key, eg, tpage)).copied(),
+        };
+        if let Some(old) = prior {
+            self.array.invalidate(old);
+            self.rev.remove(&old);
+            self.block_valid[self.array.geo.block_of(old).0] =
+                self.block_valid[self.array.geo.block_of(old).0].saturating_sub(1);
+        }
+        let (ppa, t) = self.program_to_channel(ch, data, at)?;
+        self.retag(tag, ppa);
+        Ok(t)
+    }
+
+    // ---- write path --------------------------------------------------------
+
+    /// Append one token's K and V rows for a stream.  Rows are quantised to
+    /// FP16 at the DRAM buffer boundary (that is what will live on flash).
+    /// Seals and programs any group that fills.  Returns completion time of
+    /// flash activity (or `at` if everything stayed in DRAM).
+    pub fn append_token(
+        &mut self,
+        key: StreamKey,
+        k_row: &[f32],
+        v_row: &[f32],
+        at: Time,
+    ) -> Result<Time> {
+        let d = self.cfg.d_head;
+        if k_row.len() != d || v_row.len() != d {
+            bail!("append_token: row length {} != d_head {}", k_row.len(), d);
+        }
+        let n = self.cfg.n;
+        let t_emb = self.tokens_per_emb_page;
+        self.counters.host_bytes += (2 * d * 2) as u64;
+
+        // quantise at the buffer boundary
+        let kq: Vec<f32> = k_row.iter().map(|&x| layout::q16(x)).collect();
+        let vq: Vec<f32> = v_row.iter().map(|&x| layout::q16(x)).collect();
+
+        let buf = self.streams.entry(key).or_insert_with(|| StreamBuf {
+            vbar_sum: vec![0.0; d],
+            ..Default::default()
+        });
+        for c in 0..d {
+            buf.vbar_sum[c] += vq[c];
+        }
+        buf.k_tail.extend_from_slice(&kq);
+        buf.v_tail.extend_from_slice(&vq);
+        buf.emb_tail.extend_from_slice(&kq);
+        buf.count += 1;
+        let count = buf.count;
+
+        let mut done = at;
+        // seal a token group?
+        if buf.k_tail.len() == n * d {
+            let group = (count / n - 1) as u32;
+            let kpage = encode_rows(&self.streams[&key].k_tail);
+            let vpage = encode_rows(&self.streams[&key].v_tail);
+            let chans = self.array.spec.channels;
+            // stripe this head's groups across channels; K and V of the same
+            // group land on different channels so they can stream in parallel
+            let ch_k = (key.head as usize + group as usize) % chans;
+            let ch_v = (key.head as usize + group as usize + 1) % chans;
+            let t1 = self.stage_page(PageTag::Token { key, kind: KvKind::K, group }, ch_k, &kpage, at)?;
+            let t2 = self.stage_page(PageTag::Token { key, kind: KvKind::V, group }, ch_v, &vpage, at)?;
+            done = done.max(t1).max(t2);
+            let buf = self.streams.get_mut(&key).unwrap();
+            buf.k_tail.clear();
+            buf.v_tail.clear();
+        }
+        // seal an embedding-page row block?
+        if self.streams[&key].emb_tail.len() == t_emb * d {
+            let tpage = (count / t_emb - 1) as u32;
+            let rows = std::mem::take(&mut self.streams.get_mut(&key).unwrap().emb_tail);
+            let chans = self.array.spec.channels;
+            for eg in 0..(d / self.cfg.m) {
+                let page = layout::encode_emb_page(&rows, d, eg, self.cfg.m, t_emb);
+                let ch = (key.head as usize + eg + tpage as usize) % chans;
+                let t = self.stage_page(PageTag::Emb { key, eg: eg as u16, tpage }, ch, &page, at)?;
+                done = done.max(t);
+            }
+        }
+        Ok(done)
+    }
+
+    /// Bulk-append a whole prefill layer for one stream (s tokens).
+    pub fn append_prefill(
+        &mut self,
+        key: StreamKey,
+        k_rows: &[f32],
+        v_rows: &[f32],
+        at: Time,
+    ) -> Result<Time> {
+        let d = self.cfg.d_head;
+        let s = k_rows.len() / d;
+        let mut t = at;
+        for i in 0..s {
+            t = t.max(self.append_token(key, &k_rows[i * d..(i + 1) * d], &v_rows[i * d..(i + 1) * d], at)?);
+        }
+        Ok(t)
+    }
+
+    pub fn tokens_appended(&self, key: StreamKey) -> usize {
+        self.streams.get(&key).map_or(0, |b| b.count)
+    }
+
+    /// Running compensation vector v̄ = mean of all appended (quantised) V
+    /// rows — maintained incrementally, as the engine does on writes.
+    pub fn vbar(&self, key: StreamKey) -> Option<Vec<f32>> {
+        self.streams.get(&key).map(|b| {
+            let inv = 1.0 / b.count.max(1) as f32;
+            b.vbar_sum.iter().map(|&s| s * inv).collect()
+        })
+    }
+
+    // ---- read path ---------------------------------------------------------
+
+    /// Fetch token groups (dual-step loading, step 8): whole pages stream
+    /// from flash; groups still in the DRAM tail cost no flash I/O.
+    /// Returns rows as (first_token_index, n*d floats) per requested group,
+    /// plus the completion time.
+    pub fn fetch_token_groups(
+        &mut self,
+        key: StreamKey,
+        kind: KvKind,
+        groups: &[usize],
+        at: Time,
+    ) -> Result<(Vec<(usize, Vec<f32>)>, Time)> {
+        let d = self.cfg.d_head;
+        let n = self.cfg.n;
+        let count = self.tokens_appended(key);
+        let sealed_groups = count / n;
+        let mut ppas = Vec::new();
+        let mut out = Vec::with_capacity(groups.len());
+        for &g in groups {
+            if g < sealed_groups {
+                let ppa = *self
+                    .token_map
+                    .get(&(key, kind, g as u32))
+                    .ok_or_else(|| anyhow!("missing token map entry g={g}"))?;
+                ppas.push((g, ppa));
+            } else {
+                // tail group: serve from DRAM
+                let buf = self.streams.get(&key).ok_or_else(|| anyhow!("unknown stream"))?;
+                let tail = match kind {
+                    KvKind::K => &buf.k_tail,
+                    KvKind::V => &buf.v_tail,
+                };
+                let base_tok = sealed_groups * n;
+                if g != sealed_groups {
+                    bail!("requested group {g} beyond appended tokens {count}");
+                }
+                let mut rows = tail.clone();
+                rows.resize(n * d, 0.0);
+                out.push((base_tok, rows));
+                self.counters.tail_hits += 1;
+            }
+        }
+        let batch: Vec<Ppa> = ppas.iter().map(|&(_, p)| p).collect();
+        let done = self.array.read_batch(&batch, at)?;
+        self.counters.page_fetches += batch.len() as u64;
+        for (g, ppa) in ppas {
+            let rows = decode_rows(self.array.page_data(ppa)?, n * d);
+            out.push((g * n, rows));
+        }
+        out.sort_by_key(|&(base, _)| base);
+        Ok((out, done))
+    }
+
+    /// Fetch selected K channels for tokens [0, len) (dual-step loading,
+    /// step 2): reads the embedding-indexed pages covering the requested
+    /// channels (one page serves all m channels of its group — requests in
+    /// the same group share the fetch), serves the tail from DRAM.
+    /// Returns per-requested-channel vectors of `len` values.
+    pub fn fetch_emb_channels(
+        &mut self,
+        key: StreamKey,
+        channels: &[usize],
+        len: usize,
+        at: Time,
+    ) -> Result<(Vec<Vec<f32>>, Time)> {
+        let d = self.cfg.d_head;
+        let m = self.cfg.m;
+        let t_emb = self.tokens_per_emb_page;
+        let count = self.tokens_appended(key);
+        if len > count {
+            bail!("fetch_emb_channels: len {len} > appended {count}");
+        }
+        let sealed_tpages = count / t_emb;
+        let need_tpages = len.div_ceil(t_emb).min(sealed_tpages);
+
+        // unique pages to fetch (shared across channels in the same group)
+        let mut wanted: Vec<(u16, u32)> = Vec::new();
+        for &c in channels {
+            if c >= d {
+                bail!("channel {c} out of range");
+            }
+            let eg = (c / m) as u16;
+            for tp in 0..need_tpages {
+                if !wanted.contains(&(eg, tp as u32)) {
+                    wanted.push((eg, tp as u32));
+                }
+            }
+        }
+        let mut ppas = Vec::with_capacity(wanted.len());
+        for &(eg, tp) in &wanted {
+            let ppa = *self
+                .emb_map
+                .get(&(key, eg, tp))
+                .ok_or_else(|| anyhow!("missing emb map entry eg={eg} tp={tp}"))?;
+            ppas.push(ppa);
+        }
+        let done = self.array.read_batch(&ppas, at)?;
+        self.counters.page_fetches += ppas.len() as u64;
+
+        let buf = self.streams.get(&key).ok_or_else(|| anyhow!("unknown stream"))?;
+        let emb_tail = buf.emb_tail.clone();
+        let tail_base = sealed_tpages * t_emb;
+
+        let mut out = Vec::with_capacity(channels.len());
+        for &c in channels {
+            let eg = (c / m) as u16;
+            let off = c % m;
+            let mut vals = Vec::with_capacity(len);
+            for tp in 0..need_tpages {
+                let idx = wanted.iter().position(|&w| w == (eg, tp as u32)).unwrap();
+                let page = self.array.page_data(ppas[idx])?;
+                let lane = layout::decode_emb_lane(page, off, t_emb);
+                let take = (len - vals.len()).min(t_emb);
+                vals.extend_from_slice(&lane[..take]);
+                if vals.len() == len {
+                    break;
+                }
+            }
+            // tail from DRAM
+            while vals.len() < len {
+                let t = tail_base + (vals.len() - tail_base);
+                let row_in_tail = t - tail_base;
+                vals.push(emb_tail[row_in_tail * d + c]);
+            }
+            out.push(vals);
+        }
+        Ok((out, done))
+    }
+
+    // ---- lifecycle ---------------------------------------------------------
+
+    /// Drop every mapping of sequence `slot` and erase fully-dead blocks.
+    pub fn free_slot(&mut self, slot: u32, at: Time) -> Result<Time> {
+        let tkeys: Vec<_> = self
+            .token_map
+            .keys()
+            .filter(|(k, _, _)| k.slot == slot)
+            .cloned()
+            .collect();
+        for k in tkeys {
+            let ppa = self.token_map.remove(&k).unwrap();
+            self.rev.remove(&ppa);
+            self.array.invalidate(ppa);
+            self.block_valid[self.array.geo.block_of(ppa).0] =
+                self.block_valid[self.array.geo.block_of(ppa).0].saturating_sub(1);
+        }
+        let ekeys: Vec<_> = self
+            .emb_map
+            .keys()
+            .filter(|(k, _, _)| k.slot == slot)
+            .cloned()
+            .collect();
+        for k in ekeys {
+            let ppa = self.emb_map.remove(&k).unwrap();
+            self.rev.remove(&ppa);
+            self.array.invalidate(ppa);
+            self.block_valid[self.array.geo.block_of(ppa).0] =
+                self.block_valid[self.array.geo.block_of(ppa).0].saturating_sub(1);
+        }
+        self.streams.retain(|k, _| k.slot != slot);
+
+        // erase fully-dead full blocks eagerly (cheap: sequential lifetimes)
+        let geo = self.array.geo;
+        let mut t = at;
+        for b in 0..geo.total_blocks() {
+            let ba = BlockAddr(b);
+            if self.block_valid[b] == 0
+                && self.array.programmed_pages(ba) == geo.pages_per_block
+                && self.open.iter().all(|&o| o != Some(ba))
+            {
+                t = t.max(self.array.erase(ba, at)?);
+                let ch = geo.block_channel(ba);
+                self.free[ch].push_back(ba);
+            }
+        }
+        Ok(t)
+    }
+
+    /// Flash bytes programmed / host bytes written (>= 1.0; the group
+    /// buffer + block batching keep it near 1 for streaming KV).
+    pub fn write_amplification(&self) -> f64 {
+        if self.counters.host_bytes == 0 {
+            return 1.0;
+        }
+        self.array.counters.bytes_programmed as f64 / self.counters.host_bytes as f64
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.iter().map(|f| f.len()).sum()
+    }
+
+    /// Flash channel a sealed token group's page lives on (None if still
+    /// in the DRAM tail) — used by the placement ablation and tests to
+    /// verify the striping invariant.
+    pub fn token_group_channel(&self, key: StreamKey, kind: KvKind, group: usize) -> Option<usize> {
+        self.token_map
+            .get(&(key, kind, group as u32))
+            .map(|&ppa| self.array.geo.page_channel(ppa))
+    }
+}
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,199 @@
+//! GPU operator model: the per-operator FLOP/byte inventory of §III-B and
+//! the roofline placement analysis behind Fig. 6.
+//!
+//! The functional plane executes the same operators for real through PJRT;
+//! this module prices them at OPT-13B scale on the A6000 so the timing
+//! plane can compose decode/prefill step times.
+
+use crate::config::hw::{CsdSpec, GpuSpec};
+use crate::config::model::{ModelShape, FP16_BYTES};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Prefill,
+    Decode,
+}
+
+/// One operator class of one layer at a given batch/context point.
+#[derive(Debug, Clone)]
+pub struct OpCost {
+    pub name: &'static str,
+    pub phase: Phase,
+    /// FLOPs per layer for the whole batch
+    pub flops: f64,
+    /// bytes touched per layer (weights + activations + KV where relevant)
+    pub bytes: f64,
+}
+
+impl OpCost {
+    pub fn intensity(&self) -> f64 {
+        self.flops / self.bytes.max(1.0)
+    }
+
+    pub fn gpu_time(&self, gpu: &GpuSpec) -> f64 {
+        gpu.op_time(self.flops, self.bytes)
+    }
+
+    pub fn csd_time(&self, csd: &CsdSpec) -> f64 {
+        csd.op_time(self.flops, self.bytes)
+    }
+}
+
+/// Per-layer decode-step operators for batch `b` at context length `s`
+/// (Fig. 6's decode points; the paper's Logit/Attend split kept).
+pub fn decode_ops(m: &ModelShape, b: usize, s: usize) -> Vec<OpCost> {
+    let d = m.d_model as f64;
+    let f = m.d_ffn as f64;
+    let bf = b as f64;
+    let sf = s as f64;
+    let hd = (m.n_heads * m.d_head) as f64;
+    let w = FP16_BYTES as f64;
+    vec![
+        OpCost {
+            name: "QKV Proj.",
+            phase: Phase::Decode,
+            flops: bf * 2.0 * 3.0 * d * d,
+            bytes: 3.0 * d * d * w + bf * (d + 3.0 * d) * w,
+        },
+        OpCost {
+            name: "Logit",
+            phase: Phase::Decode,
+            flops: bf * 2.0 * sf * hd,
+            bytes: bf * (sf * hd + hd) * w, // K cache + q
+        },
+        OpCost {
+            name: "Attend",
+            phase: Phase::Decode,
+            flops: bf * 2.0 * sf * hd,
+            bytes: bf * (sf * hd + hd) * w, // V cache + out
+        },
+        OpCost {
+            name: "O Proj.",
+            phase: Phase::Decode,
+            flops: bf * 2.0 * d * d,
+            bytes: d * d * w + bf * 2.0 * d * w,
+        },
+        OpCost {
+            name: "FFN",
+            phase: Phase::Decode,
+            flops: bf * 2.0 * 2.0 * d * f,
+            bytes: 2.0 * d * f * w + bf * (2.0 * d + f) * w,
+        },
+    ]
+}
+
+/// Per-layer prefill operators for batch `b`, prompt length `s`.
+pub fn prefill_ops(m: &ModelShape, b: usize, s: usize) -> Vec<OpCost> {
+    let d = m.d_model as f64;
+    let f = m.d_ffn as f64;
+    let toks = (b * s) as f64;
+    let hd = (m.n_heads * m.d_head) as f64;
+    let w = FP16_BYTES as f64;
+    let bf = b as f64;
+    let sf = s as f64;
+    vec![
+        OpCost {
+            name: "QKV Proj.",
+            phase: Phase::Prefill,
+            flops: toks * 2.0 * 3.0 * d * d,
+            bytes: 3.0 * d * d * w + toks * 4.0 * d * w,
+        },
+        OpCost {
+            name: "Logit",
+            phase: Phase::Prefill,
+            flops: bf * 2.0 * sf * sf * hd,
+            bytes: bf * (2.0 * sf * hd + sf * sf * m.n_heads as f64) * w,
+        },
+        OpCost {
+            name: "Attend",
+            phase: Phase::Prefill,
+            flops: bf * 2.0 * sf * sf * hd,
+            bytes: bf * (2.0 * sf * hd + sf * sf * m.n_heads as f64) * w,
+        },
+        OpCost {
+            name: "O Proj.",
+            phase: Phase::Prefill,
+            flops: toks * 2.0 * d * d,
+            bytes: d * d * w + toks * 2.0 * d * w,
+        },
+        OpCost {
+            name: "FFN",
+            phase: Phase::Prefill,
+            flops: toks * 2.0 * 2.0 * d * f,
+            bytes: 2.0 * d * f * w + toks * (2.0 * d + f) * w,
+        },
+    ]
+}
+
+/// Whole-layer GPU decode time excluding attention (the part InstInfer
+/// keeps on the GPU: QKV + O proj + FFN).
+pub fn gpu_decode_nonattn_time(m: &ModelShape, gpu: &GpuSpec, b: usize) -> f64 {
+    decode_ops(m, b, 1)
+        .iter()
+        .filter(|o| o.name != "Logit" && o.name != "Attend")
+        .map(|o| o.gpu_time(gpu))
+        .sum()
+}
+
+/// Whole-layer GPU decode attention time (dense, KV resident in VRAM).
+pub fn gpu_decode_attn_time(m: &ModelShape, gpu: &GpuSpec, b: usize, s: usize) -> f64 {
+    decode_ops(m, b, s)
+        .iter()
+        .filter(|o| o.name == "Logit" || o.name == "Attend")
+        .map(|o| o.gpu_time(gpu))
+        .sum()
+}
+
+/// Whole-layer GPU prefill time for the full prompt.
+pub fn gpu_prefill_layer_time(m: &ModelShape, gpu: &GpuSpec, b: usize, s: usize) -> f64 {
+    prefill_ops(m, b, s).iter().map(|o| o.gpu_time(gpu)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig6_placement_decisions() {
+        // the roofline analysis of §III-B, quantified:
+        let m = ModelShape::opt_13b();
+        let gpu = GpuSpec::a6000();
+        let csd = CsdSpec::zynq7045();
+
+        // prefill ops are compute-intense: GPU >> CSD on every op
+        for op in prefill_ops(&m, 8, 1024) {
+            assert!(
+                op.csd_time(&csd) > 20.0 * op.gpu_time(&gpu),
+                "{}: csd {} gpu {}", op.name, op.csd_time(&csd), op.gpu_time(&gpu)
+            );
+        }
+
+        // decode attention has intensity ~1: memory-bound on both
+        let ops = decode_ops(&m, 64, 2048);
+        let logit = ops.iter().find(|o| o.name == "Logit").unwrap();
+        assert!(logit.intensity() < 2.0);
+        // decode QKV/FFN at bs=64 are near/above the CSD's knee
+        let ffn = ops.iter().find(|o| o.name == "FFN").unwrap();
+        assert!(ffn.intensity() > csd.knee(), "FFN intensity {}", ffn.intensity());
+    }
+
+    #[test]
+    fn decode_attention_scales_with_context() {
+        let m = ModelShape::opt_13b();
+        let gpu = GpuSpec::a6000();
+        let t1 = gpu_decode_attn_time(&m, &gpu, 16, 512);
+        let t2 = gpu_decode_attn_time(&m, &gpu, 16, 2048);
+        assert!(t2 > 3.0 * t1 && t2 < 5.0 * t1);
+    }
+
+    #[test]
+    fn prefill_dominated_by_projections() {
+        let m = ModelShape::opt_13b();
+        let ops = prefill_ops(&m, 8, 1024);
+        let proj: f64 = ops.iter().filter(|o| o.name != "Logit" && o.name != "Attend")
+            .map(|o| o.flops).sum();
+        let attn: f64 = ops.iter().filter(|o| o.name == "Logit" || o.name == "Attend")
+            .map(|o| o.flops).sum();
+        assert!(proj > attn, "projection flops should dominate at s=1024");
+    }
+}

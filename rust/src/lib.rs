@@ -1,0 +1,31 @@
+//! InstInfer: in-storage attention offloading for cost-effective long-context
+//! LLM inference — a full-system reproduction of the cs.AR 2024 paper.
+//!
+//! Architecture (see DESIGN.md):
+//! * [`runtime`] loads and executes the AOT-compiled HLO artifacts produced
+//!   by `python/compile/aot.py` via the PJRT C API (functional plane).
+//! * [`flash`], [`ftl`], [`csd`], [`gpu`], [`pcie`] model the hardware
+//!   substrate the paper runs on (timing plane + page-accurate KV storage).
+//! * [`sparse`] is the rust-native attention family (dense/SparQ/SparF/H2O/
+//!   local) that the in-storage engine executes and Fig. 11 evaluates.
+//! * [`systems`] and [`baselines`] are the InstInfer dataflows and the
+//!   FlexGen/DeepSpeed-style comparators, all on the same DES substrate.
+//! * [`coordinator`] is the L3 host control plane: request batching,
+//!   prefill/decode scheduling, head->CSD routing, KV management.
+//! * [`bench`] regenerates every table and figure of the paper's evaluation.
+
+pub mod bench;
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod csd;
+pub mod flash;
+pub mod ftl;
+pub mod gpu;
+pub mod pcie;
+pub mod runtime;
+pub mod sim;
+pub mod sparse;
+pub mod systems;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,188 @@
+//! InstInfer CLI — the leader entrypoint.
+//!
+//! Subcommands (hand-rolled arg parsing; no clap in the offline crate set):
+//!   serve    run the functional engine on a synthetic offline workload
+//!   bench    regenerate paper figures/tables (fig4..fig17b, table1,
+//!            ablate-*, or `all`)
+//!   golden   validate every AOT artifact against the jax golden record
+//!   inspect  dump the artifact manifest summary
+
+use anyhow::{bail, Context, Result};
+use instinfer::bench;
+use instinfer::config::model::SparsityParams;
+use instinfer::coordinator::{
+    EngineConfig, InferenceEngine, OfflineBatcher, Sequence, SlotManager,
+};
+use instinfer::runtime::{golden, Runtime};
+use instinfer::workload::{LengthProfile, WorkloadGen};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: instinfer <command> [options]\n\
+         \n\
+         commands:\n\
+         \x20 serve [--requests N] [--batch B] [--gen T] [--csds K] [--sparse]\n\
+         \x20       [--profile fixed|chat|qa] [--artifacts DIR]\n\
+         \x20 bench <target|all>      regenerate paper figures (fig4 fig5 fig6\n\
+         \x20       fig11 fig12 fig13 fig14 fig15 fig16 fig17a fig17b table1\n\
+         \x20       ablate-group ablate-dualk ablate-pipeline ablate-p2p\n\
+         \x20       ablate-placement)\n\
+         \x20 golden [--artifacts DIR] [--tol T]\n\
+         \x20 inspect [--artifacts DIR]"
+    );
+    std::process::exit(2);
+}
+
+fn flag_value<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .map(|s| s.as_str())
+}
+
+fn has_flag(args: &[String], name: &str) -> bool {
+    args.iter().any(|a| a == name)
+}
+
+fn artifacts_dir(args: &[String]) -> String {
+    flag_value(args, "--artifacts").unwrap_or("artifacts").to_string()
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    match args.first().map(|s| s.as_str()) {
+        Some("serve") => serve(&args[1..]),
+        Some("bench") => bench_cmd(&args[1..]),
+        Some("golden") => golden_cmd(&args[1..]),
+        Some("inspect") => inspect(&args[1..]),
+        _ => usage(),
+    }
+}
+
+fn serve(args: &[String]) -> Result<()> {
+    let n_req: usize = flag_value(args, "--requests").unwrap_or("8").parse()?;
+    let batch: usize = flag_value(args, "--batch").unwrap_or("4").parse()?;
+    let gen_toks: usize = flag_value(args, "--gen").unwrap_or("8").parse()?;
+    let n_csds: usize = flag_value(args, "--csds").unwrap_or("2").parse()?;
+    let profile = match flag_value(args, "--profile").unwrap_or("fixed") {
+        "fixed" => LengthProfile::Fixed,
+        "chat" => LengthProfile::Chat,
+        "qa" => LengthProfile::Qa,
+        other => bail!("unknown profile {other:?}"),
+    };
+
+    let rt = Runtime::open(artifacts_dir(args)).context("opening artifacts")?;
+    println!("platform: {}", rt.platform());
+    let compiled = rt.warmup()?;
+    println!("compiled {compiled} executables");
+    let meta = rt.manifest.model.clone();
+    let mut cfg = EngineConfig::micro(n_csds);
+    if has_flag(args, "--sparse") {
+        cfg = cfg.sparse(SparsityParams { r: meta.r, k: meta.k, m: meta.m, n: meta.n });
+    }
+    let buckets = rt.manifest.batch_buckets.clone();
+    let mut engine = InferenceEngine::new(rt, cfg)?;
+
+    let mut wg = WorkloadGen::new(42, meta.vocab, meta.max_seq, profile,
+                                  meta.prefill_seq / 2, gen_toks);
+    let mut batcher = OfflineBatcher::new(buckets, batch);
+    for r in wg.batch(n_req) {
+        let mut r = r;
+        r.prompt.truncate(meta.prefill_seq);
+        r.max_new_tokens = r.max_new_tokens.min(gen_toks);
+        batcher.push(r);
+    }
+    let mut slots = SlotManager::new(64);
+    let t0 = std::time::Instant::now();
+    while let Some((reqs, bucket)) = batcher.next_batch() {
+        let seqs: Vec<Sequence> = reqs
+            .into_iter()
+            .map(|r| Ok(Sequence::new(r, slots.alloc()?)))
+            .collect::<Result<_>>()?;
+        let done = engine.generate(seqs, bucket)?;
+        for s in &done {
+            println!(
+                "req {:>3} slot {:>2} prompt {:>3} -> {:?}",
+                s.req.id, s.slot, s.req.prompt.len(), s.generated
+            );
+            slots.release(s.slot)?;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!("\n{}", engine.metrics.report());
+    println!(
+        "wall {:.2}s | simulated CSD device time {:.4}s | e2e {:.1} tok/s",
+        wall,
+        engine.sim_now,
+        engine.metrics.tokens_generated as f64 / wall
+    );
+    let u = &engine.metrics.units;
+    if u.total() > 0.0 {
+        println!(
+            "CSD units: argtopk {:.1}% flash {:.1}% filter {:.1}% logit0 {:.1}% \
+             logit {:.1}% attend {:.1}%",
+            100.0 * u.argtopk / u.total(),
+            100.0 * u.flash_read / u.total(),
+            100.0 * u.nfc_filter / u.total(),
+            100.0 * u.logit0 / u.total(),
+            100.0 * u.logit / u.total(),
+            100.0 * u.attend / u.total(),
+        );
+    }
+    Ok(())
+}
+
+fn bench_cmd(args: &[String]) -> Result<()> {
+    match args.first().map(|s| s.as_str()) {
+        None | Some("all") => {
+            bench::run_all();
+        }
+        Some(name) => match bench::run_one(name) {
+            Some(t) => t.print(),
+            None => bail!(
+                "unknown bench target {name:?}; known: {:?}",
+                bench::registry().iter().map(|(n, _)| *n).collect::<Vec<_>>()
+            ),
+        },
+    }
+    Ok(())
+}
+
+fn golden_cmd(args: &[String]) -> Result<()> {
+    let tol: f32 = flag_value(args, "--tol").unwrap_or("2e-4").parse()?;
+    let rt = Runtime::open(artifacts_dir(args))?;
+    for r in golden::check_all(&rt, tol)? {
+        println!("golden {:<16} max_abs_err {:.3e} ({} outputs)", r.exe, r.max_abs_err, r.outputs);
+    }
+    println!("all golden checks passed (tol {tol})");
+    Ok(())
+}
+
+fn inspect(args: &[String]) -> Result<()> {
+    let rt = Runtime::open(artifacts_dir(args))?;
+    let m = &rt.manifest.model;
+    println!(
+        "model {} — vocab {} d_model {} heads {}x{} ffn {} layers {} ctx {} \
+         (prefill chunk {})",
+        m.name, m.vocab, m.d_model, m.n_heads, m.d_head, m.d_ffn, m.n_layers,
+        m.max_seq, m.prefill_seq
+    );
+    println!("sparsity defaults: r={} k={} m={} n={}", m.r, m.k, m.m, m.n);
+    println!("batch buckets: {:?}", rt.manifest.batch_buckets);
+    println!("{} weights, {} golden records", rt.manifest.weights.len(), rt.manifest.golden.len());
+    for (name, exe) in &rt.manifest.executables {
+        let inputs: Vec<String> = exe
+            .inputs()
+            .map(|a| format!("{}{:?}", a.name, a.concrete_shape(1)))
+            .collect();
+        println!("  {name:<14} ({} buckets) inputs: {}", exe.buckets.len(), inputs.join(", "));
+    }
+    Ok(())
+}

@@ -1,0 +1,92 @@
+//! PCIe fabric model: link bandwidths, the host-mediated path (bounce
+//! buffer + filesystem stack), and peer-to-peer DMA (paper §IV-D).
+
+use crate::config::hw::PcieSpec;
+use crate::sim::Time;
+
+/// Which datapath a transfer takes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Path {
+    /// GPU <-> host DRAM (Gen4 x16)
+    GpuHost,
+    /// SSD <-> host through the block/filesystem stack
+    SsdHostFs,
+    /// SSD <-> GPU bounced through host DRAM (two hops + FS stack)
+    SsdGpuViaHost,
+    /// SSD/CSD <-> GPU direct P2P DMA (no host copy, no FS)
+    P2p,
+}
+
+/// Time for `bytes` over `path`, issued as `ios` commands.
+/// Returns the transfer latency (bandwidth + per-IO software overhead).
+pub fn transfer_time(pcie: &PcieSpec, path: Path, bytes: f64, ios: u64) -> Time {
+    let ios = ios.max(1) as f64;
+    match path {
+        Path::GpuHost => bytes / pcie.gpu_host_bw + ios * 1e-6,
+        Path::SsdHostFs => bytes / pcie.ssd_link_bw + ios * pcie.host_fs_io_us * 1e-6,
+        Path::SsdGpuViaHost => {
+            // serial hops: SSD->host (FS stack) then host->GPU; the bounce
+            // buffer copy rides the slower link's shadow, so charge both
+            bytes / pcie.ssd_link_bw
+                + bytes / pcie.gpu_host_bw
+                + ios * pcie.host_fs_io_us * 1e-6
+        }
+        Path::P2p => bytes / (pcie.ssd_link_bw * pcie.p2p_efficiency) + ios * pcie.p2p_io_us * 1e-6,
+    }
+}
+
+/// Effective bandwidth of a path for large transfers (bytes/s).
+pub fn effective_bw(pcie: &PcieSpec, path: Path) -> f64 {
+    let bytes = 1e9;
+    bytes / transfer_time(pcie, path, bytes, 1)
+}
+
+/// Aggregate bandwidth with `n` devices on independent links; the
+/// host-mediated path does NOT scale (the FS/bounce stack serialises —
+/// the paper's Fig. 13 observation), while P2P scales per-device.
+pub fn multi_device_bw(pcie: &PcieSpec, path: Path, n: usize) -> f64 {
+    match path {
+        Path::P2p => effective_bw(pcie, path) * n as f64,
+        Path::SsdHostFs | Path::SsdGpuViaHost => effective_bw(pcie, path),
+        Path::GpuHost => effective_bw(pcie, path),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn path_ordering_matches_paper() {
+        let p = PcieSpec::paper();
+        // 1 GB issued as 128 KiB commands (realistic NVMe transfer size)
+        let gb = 1e9;
+        let ios = (1e9 / (128.0 * 1024.0)) as u64;
+        let t_host = transfer_time(&p, Path::GpuHost, gb, ios);
+        let t_p2p = transfer_time(&p, Path::P2p, gb, ios);
+        let t_via = transfer_time(&p, Path::SsdGpuViaHost, gb, ios);
+        // host DRAM path is the fastest pipe; P2P beats the bounced path
+        assert!(t_host < t_p2p, "host {t_host} !< p2p {t_p2p}");
+        assert!(t_p2p < t_via, "p2p {t_p2p} !< via-host {t_via}");
+    }
+
+    #[test]
+    fn io_overhead_dominates_small_transfers() {
+        let p = PcieSpec::paper();
+        // 4 KiB x 1000 IOs through the FS stack: software cost >> wire time
+        let t = transfer_time(&p, Path::SsdHostFs, 4096.0 * 1000.0, 1000);
+        let wire = 4096.0 * 1000.0 / p.ssd_link_bw;
+        assert!(t > 10.0 * wire);
+    }
+
+    #[test]
+    fn p2p_scales_with_devices_host_path_does_not() {
+        let p = PcieSpec::paper();
+        let one = multi_device_bw(&p, Path::P2p, 1);
+        let four = multi_device_bw(&p, Path::P2p, 4);
+        assert!((four / one - 4.0).abs() < 1e-9);
+        let h1 = multi_device_bw(&p, Path::SsdGpuViaHost, 1);
+        let h4 = multi_device_bw(&p, Path::SsdGpuViaHost, 4);
+        assert_eq!(h1, h4);
+    }
+}

@@ -1,0 +1,78 @@
+//! Golden cross-checks: execute each artifact with the inputs recorded by
+//! `aot.py` and compare against the jax outputs bit-for-bit-ish.
+//!
+//! This is the python<->rust seam test: if it passes, the rust runtime is
+//! running the exact computation the jax/pallas layer defined.
+
+use super::manifest::{DType, GoldenRec, TensorRec};
+use super::tensor::{read_f32_at, read_i32_at, HostTensor};
+use super::Runtime;
+use anyhow::{bail, Context, Result};
+use std::fs::File;
+
+/// Read one tensor recorded in golden.bin.
+pub fn read_golden_tensor(f: &mut File, rec: &TensorRec) -> Result<HostTensor> {
+    Ok(match rec.dtype {
+        DType::F32 => HostTensor::f32(rec.shape.clone(), read_f32_at(f, rec.offset, rec.len())?),
+        DType::I32 => HostTensor::i32(rec.shape.clone(), read_i32_at(f, rec.offset, rec.len())?),
+    })
+}
+
+/// Result of checking one executable against its golden record.
+#[derive(Debug)]
+pub struct GoldenReport {
+    pub exe: String,
+    pub max_abs_err: f32,
+    pub outputs: usize,
+}
+
+/// Execute `exe` with its golden inputs and compare outputs.
+/// `tol` is the max absolute error allowed on f32 outputs; i32 outputs
+/// (greedy token ids) must match exactly unless the float margin is tiny.
+pub fn check_exe(rt: &Runtime, exe: &str, tol: f32) -> Result<GoldenReport> {
+    let g: &GoldenRec = rt
+        .manifest
+        .golden
+        .get(exe)
+        .with_context(|| format!("no golden record for {exe}"))?;
+    let mut f = File::open(rt.manifest.dir.join("golden.bin"))?;
+    let inputs: Vec<HostTensor> = g
+        .inputs
+        .iter()
+        .map(|r| read_golden_tensor(&mut f, r))
+        .collect::<Result<Vec<_>>>()?;
+    let outs = rt.call(exe, g.batch, g.layer, &inputs)?;
+    if outs.len() != g.outputs.len() {
+        bail!("{exe}: {} outputs vs {} golden", outs.len(), g.outputs.len());
+    }
+    let mut max_err = 0f32;
+    for (i, (got, rec)) in outs.iter().zip(&g.outputs).enumerate() {
+        let want = read_golden_tensor(&mut f, rec)?;
+        match rec.dtype {
+            DType::F32 => {
+                let e = got.max_abs_diff(&want)?;
+                if e > tol {
+                    bail!("{exe} out{i}: max abs err {e} > tol {tol}");
+                }
+                max_err = max_err.max(e);
+            }
+            DType::I32 => {
+                let a = got.as_i32()?;
+                let b = want.as_i32()?;
+                let diff = a.iter().zip(b).filter(|(x, y)| x != y).count();
+                // greedy argmax can flip on ~ulp logit ties; allow none here,
+                // the micro model's logit margins are wide
+                if diff != 0 {
+                    bail!("{exe} out{i}: {diff} of {} token ids differ", a.len());
+                }
+            }
+        }
+    }
+    Ok(GoldenReport { exe: exe.to_string(), max_abs_err: max_err, outputs: outs.len() })
+}
+
+/// Check every executable with a golden record; returns per-exe reports.
+pub fn check_all(rt: &Runtime, tol: f32) -> Result<Vec<GoldenReport>> {
+    let names: Vec<String> = rt.manifest.golden.keys().cloned().collect();
+    names.iter().map(|n| check_exe(rt, n, tol)).collect()
+}

@@ -1,0 +1,323 @@
+//! Typed view of `artifacts/manifest.json` (written by python/compile/aot.py).
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => bail!("unknown dtype {other:?}"),
+        }
+    }
+}
+
+/// A dimension in a manifest shape: the batch symbol or a fixed size.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dim {
+    Batch,
+    Fixed(usize),
+}
+
+impl Dim {
+    pub fn concrete(&self, b: usize) -> usize {
+        match self {
+            Dim::Batch => b,
+            Dim::Fixed(n) => *n,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArgKind {
+    Input,
+    Weight,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WeightScope {
+    Global,
+    Layer,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: String,
+    pub kind: ArgKind,
+    pub scope: WeightScope,
+    pub shape: Vec<Dim>,
+    pub dtype: DType,
+}
+
+impl ArgSpec {
+    pub fn concrete_shape(&self, b: usize) -> Vec<usize> {
+        self.shape.iter().map(|d| d.concrete(b)).collect()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct OutSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+#[derive(Debug, Clone)]
+pub struct BucketSpec {
+    pub file: String,
+    pub outputs: Vec<OutSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ExeSpec {
+    pub args: Vec<ArgSpec>,
+    pub buckets: BTreeMap<usize, BucketSpec>,
+}
+
+impl ExeSpec {
+    pub fn inputs(&self) -> impl Iterator<Item = &ArgSpec> {
+        self.args.iter().filter(|a| a.kind == ArgKind::Input)
+    }
+}
+
+/// Location of one tensor inside weights.bin / golden.bin.
+#[derive(Debug, Clone)]
+pub struct TensorRec {
+    pub name: String,
+    pub offset: u64,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorRec {
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct GoldenRec {
+    pub batch: usize,
+    pub layer: usize,
+    pub inputs: Vec<TensorRec>,
+    pub outputs: Vec<TensorRec>,
+}
+
+/// Metadata of the functional-plane model (matches python SMALL config).
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub d_ffn: usize,
+    pub n_layers: usize,
+    pub max_seq: usize,
+    pub prefill_seq: usize,
+    pub r: usize,
+    pub k: usize,
+    pub m: usize,
+    pub n: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelMeta,
+    pub batch_buckets: Vec<usize>,
+    pub executables: BTreeMap<String, ExeSpec>,
+    pub weights: BTreeMap<String, TensorRec>,
+    pub golden: BTreeMap<String, GoldenRec>,
+}
+
+fn usize_of(j: &Json, key: &str) -> Result<usize> {
+    j.req(key)?
+        .as_usize()
+        .ok_or_else(|| anyhow!("{key} is not a number"))
+}
+
+fn dims_of(arr: &Json) -> Result<Vec<Dim>> {
+    arr.as_arr()
+        .context("shape not an array")?
+        .iter()
+        .map(|d| match d {
+            Json::Str(s) if s == "B" => Ok(Dim::Batch),
+            Json::Num(n) => Ok(Dim::Fixed(*n as usize)),
+            other => bail!("bad dim {other:?}"),
+        })
+        .collect()
+}
+
+fn fixed_shape_of(arr: &Json) -> Result<Vec<usize>> {
+    arr.as_arr()
+        .context("shape not an array")?
+        .iter()
+        .map(|d| d.as_usize().ok_or_else(|| anyhow!("non-numeric dim")))
+        .collect()
+}
+
+fn tensor_rec(name: String, j: &Json) -> Result<TensorRec> {
+    Ok(TensorRec {
+        name,
+        offset: usize_of(j, "offset")? as u64,
+        shape: fixed_shape_of(j.req("shape")?)?,
+        dtype: DType::parse(j.req("dtype")?.as_str().context("dtype")?)?,
+    })
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{path:?}: {e}"))?;
+
+        let m = j.req("model")?;
+        let model = ModelMeta {
+            name: m.req("name")?.as_str().context("name")?.to_string(),
+            vocab: usize_of(m, "vocab")?,
+            d_model: usize_of(m, "d_model")?,
+            n_heads: usize_of(m, "n_heads")?,
+            d_head: usize_of(m, "d_head")?,
+            d_ffn: usize_of(m, "d_ffn")?,
+            n_layers: usize_of(m, "n_layers")?,
+            max_seq: usize_of(m, "max_seq")?,
+            prefill_seq: usize_of(m, "prefill_seq")?,
+            r: usize_of(m, "r")?,
+            k: usize_of(m, "k")?,
+            m: usize_of(m, "m")?,
+            n: usize_of(m, "n")?,
+        };
+
+        let batch_buckets = j
+            .req("batch_buckets")?
+            .as_arr()
+            .context("batch_buckets")?
+            .iter()
+            .map(|b| b.as_usize().context("bucket"))
+            .collect::<Result<Vec<_>>>()?;
+
+        let mut executables = BTreeMap::new();
+        for (name, spec) in j.req("executables")?.as_obj().context("executables")? {
+            let mut args = Vec::new();
+            for a in spec.req("args")?.as_arr().context("args")? {
+                args.push(ArgSpec {
+                    name: a.req("name")?.as_str().context("arg name")?.to_string(),
+                    kind: match a.req("kind")?.as_str().context("kind")? {
+                        "input" => ArgKind::Input,
+                        "weight" => ArgKind::Weight,
+                        other => bail!("bad arg kind {other:?}"),
+                    },
+                    scope: match a.req("scope")?.as_str().context("scope")? {
+                        "global" => WeightScope::Global,
+                        "layer" => WeightScope::Layer,
+                        other => bail!("bad scope {other:?}"),
+                    },
+                    shape: dims_of(a.req("shape")?)?,
+                    dtype: DType::parse(a.req("dtype")?.as_str().context("dtype")?)?,
+                });
+            }
+            let mut buckets = BTreeMap::new();
+            for (b, bj) in spec.req("buckets")?.as_obj().context("buckets")? {
+                let outputs = bj
+                    .req("outputs")?
+                    .as_arr()
+                    .context("outputs")?
+                    .iter()
+                    .map(|o| {
+                        Ok(OutSpec {
+                            shape: fixed_shape_of(o.req("shape")?)?,
+                            dtype: DType::parse(o.req("dtype")?.as_str().context("dtype")?)?,
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                buckets.insert(
+                    b.parse::<usize>().context("bucket key")?,
+                    BucketSpec {
+                        file: bj.req("file")?.as_str().context("file")?.to_string(),
+                        outputs,
+                    },
+                );
+            }
+            executables.insert(name.clone(), ExeSpec { args, buckets });
+        }
+
+        let mut weights = BTreeMap::new();
+        for (name, w) in j.req("weights")?.as_obj().context("weights")? {
+            weights.insert(name.clone(), tensor_rec(name.clone(), w)?);
+        }
+
+        let mut golden = BTreeMap::new();
+        for (name, g) in j.req("golden")?.as_obj().context("golden")? {
+            let inputs = g
+                .req("inputs")?
+                .as_arr()
+                .context("golden inputs")?
+                .iter()
+                .map(|i| {
+                    tensor_rec(
+                        i.req("name")?.as_str().context("name")?.to_string(),
+                        i,
+                    )
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = g
+                .req("outputs")?
+                .as_arr()
+                .context("golden outputs")?
+                .iter()
+                .enumerate()
+                .map(|(idx, o)| tensor_rec(format!("out{idx}"), o))
+                .collect::<Result<Vec<_>>>()?;
+            golden.insert(
+                name.clone(),
+                GoldenRec {
+                    batch: usize_of(g, "batch")?,
+                    layer: usize_of(g, "layer")?,
+                    inputs,
+                    outputs,
+                },
+            );
+        }
+
+        Ok(Manifest { dir, model, batch_buckets, executables, weights, golden })
+    }
+
+    /// Resolve the weight-bin tensor name for an argument of `exe` bound at
+    /// `layer` (layer-scoped slots become `layers.{i}.<slot>`).
+    pub fn weight_name(&self, arg: &ArgSpec, layer: usize) -> String {
+        match arg.scope {
+            WeightScope::Global => arg.name.clone(),
+            WeightScope::Layer => format!("layers.{layer}.{}", arg.name),
+        }
+    }
+
+    /// Smallest bucket that fits `batch`, or the largest bucket if none do.
+    pub fn bucket_for(&self, batch: usize) -> usize {
+        self.batch_buckets
+            .iter()
+            .copied()
+            .find(|&b| b >= batch)
+            .unwrap_or_else(|| *self.batch_buckets.last().unwrap())
+    }
+
+    pub fn exe(&self, name: &str) -> Result<&ExeSpec> {
+        self.executables
+            .get(name)
+            .ok_or_else(|| anyhow!("no executable {name:?} in manifest"))
+    }
+}

@@ -1,0 +1,17 @@
+//! PJRT runtime: load the AOT artifacts produced by `python/compile/aot.py`
+//! and execute them from the rust request path (python is build-time only).
+//!
+//! * [`tensor`]   — host-side tensors + raw .bin readers
+//! * [`manifest`] — typed view of `artifacts/manifest.json`
+//! * [`client`]   — PJRT CPU client, executable cache, device-resident
+//!                  weights, typed call interface
+//! * [`golden`]   — cross-language checks against `golden.bin`
+
+pub mod client;
+pub mod golden;
+pub mod manifest;
+pub mod tensor;
+
+pub use client::Runtime;
+pub use manifest::{ArgKind, DType, Dim, Manifest};
+pub use tensor::HostTensor;

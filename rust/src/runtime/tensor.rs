@@ -1,0 +1,159 @@
+//! Host tensors: the typed boundary between the coordinator and PJRT.
+
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Seek, SeekFrom};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub dims: Vec<usize>,
+    pub data: TensorData,
+}
+
+impl HostTensor {
+    pub fn f32(dims: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        HostTensor { dims, data: TensorData::F32(data) }
+    }
+
+    pub fn i32(dims: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        HostTensor { dims, data: TensorData::I32(data) }
+    }
+
+    pub fn zeros_f32(dims: Vec<usize>) -> Self {
+        let n = dims.iter().product();
+        HostTensor { dims, data: TensorData::F32(vec![0.0; n]) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            TensorData::I32(_) => bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Ok(v),
+            TensorData::F32(_) => bail!("tensor is f32, expected i32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match &mut self.data {
+            TensorData::F32(v) => Ok(v),
+            TensorData::I32(_) => bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    /// Pad the leading (batch) dimension with zeros up to `b`.
+    pub fn pad_batch(&self, b: usize) -> Result<HostTensor> {
+        let cur = *self.dims.first().context("pad_batch on rank-0 tensor")?;
+        if cur > b {
+            bail!("cannot pad batch {cur} down to {b}");
+        }
+        let row = self.len() / cur.max(1);
+        let mut dims = self.dims.clone();
+        dims[0] = b;
+        Ok(match &self.data {
+            TensorData::F32(v) => {
+                let mut out = vec![0.0f32; row * b];
+                out[..v.len()].copy_from_slice(v);
+                HostTensor { dims, data: TensorData::F32(out) }
+            }
+            TensorData::I32(v) => {
+                let mut out = vec![0i32; row * b];
+                out[..v.len()].copy_from_slice(v);
+                HostTensor { dims, data: TensorData::I32(out) }
+            }
+        })
+    }
+
+    /// Truncate the leading (batch) dimension to `b`.
+    pub fn trim_batch(&self, b: usize) -> HostTensor {
+        let cur = self.dims[0];
+        assert!(b <= cur);
+        let row = self.len() / cur.max(1);
+        let mut dims = self.dims.clone();
+        dims[0] = b;
+        match &self.data {
+            TensorData::F32(v) => HostTensor { dims, data: TensorData::F32(v[..row * b].to_vec()) },
+            TensorData::I32(v) => HostTensor { dims, data: TensorData::I32(v[..row * b].to_vec()) },
+        }
+    }
+
+    /// Max absolute difference against another f32 tensor.
+    pub fn max_abs_diff(&self, other: &HostTensor) -> Result<f32> {
+        let a = self.as_f32()?;
+        let b = other.as_f32()?;
+        if a.len() != b.len() {
+            bail!("length mismatch {} vs {}", a.len(), b.len());
+        }
+        Ok(a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max))
+    }
+}
+
+/// Read `count` f32 values at byte `offset` from an open file.
+pub fn read_f32_at(f: &mut std::fs::File, offset: u64, count: usize) -> Result<Vec<f32>> {
+    let mut bytes = vec![0u8; count * 4];
+    f.seek(SeekFrom::Start(offset))?;
+    f.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Read `count` i32 values at byte `offset` from an open file.
+pub fn read_i32_at(f: &mut std::fs::File, offset: u64, count: usize) -> Result<Vec<i32>> {
+    let mut bytes = vec![0u8; count * 4];
+    f.seek(SeekFrom::Start(offset))?;
+    f.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_and_trim_roundtrip() {
+        let t = HostTensor::f32(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let p = t.pad_batch(4).unwrap();
+        assert_eq!(p.dims, vec![4, 3]);
+        assert_eq!(p.as_f32().unwrap()[6..], [0.0; 6]);
+        let back = p.trim_batch(2);
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn type_mismatch_errors() {
+        let t = HostTensor::i32(vec![2], vec![1, 2]);
+        assert!(t.as_f32().is_err());
+        assert!(t.as_i32().is_ok());
+    }
+
+    #[test]
+    fn max_abs_diff_works() {
+        let a = HostTensor::f32(vec![3], vec![1.0, 2.0, 3.0]);
+        let b = HostTensor::f32(vec![3], vec![1.0, 2.5, 3.0]);
+        assert_eq!(a.max_abs_diff(&b).unwrap(), 0.5);
+    }
+}

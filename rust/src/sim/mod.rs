@@ -1,0 +1,182 @@
+//! Discrete-event scheduling primitives for the timing plane.
+//!
+//! The simulators model hardware units as FIFO servers: a job arrives at
+//! time `a`, waits until the unit is free, occupies it for its service
+//! time, and completes.  Composing these through the dataflow graph gives
+//! event-ordered, contention-aware completion times without a global event
+//! queue — every path in this codebase that "takes time" routes through
+//! these primitives, and per-unit busy counters feed the latency-breakdown
+//! figures (Figs. 5/14/15/16).
+
+/// Simulated time in seconds.
+pub type Time = f64;
+
+/// A serial FIFO resource (one job at a time): a flash die, a PCIe link,
+/// a DMA engine, the argtopk unit...
+#[derive(Debug, Clone, Default)]
+pub struct FifoResource {
+    free_at: Time,
+    busy: Time,
+    jobs: u64,
+}
+
+impl FifoResource {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Schedule a job arriving at `arrival` needing `service` seconds.
+    /// Returns (start, completion).
+    pub fn schedule(&mut self, arrival: Time, service: Time) -> (Time, Time) {
+        debug_assert!(service >= 0.0);
+        let start = self.free_at.max(arrival);
+        let end = start + service;
+        self.free_at = end;
+        self.busy += service;
+        self.jobs += 1;
+        (start, end)
+    }
+
+    pub fn free_at(&self) -> Time {
+        self.free_at
+    }
+
+    /// Total busy seconds (for utilisation/breakdown accounting).
+    pub fn busy(&self) -> Time {
+        self.busy
+    }
+
+    pub fn jobs(&self) -> u64 {
+        self.jobs
+    }
+
+    pub fn reset(&mut self) {
+        *self = Self::default();
+    }
+}
+
+/// `k` identical servers with earliest-free dispatch: the two attention
+/// kernels in the SparF engine, a pool of NFC filters, multi-queue NVMe.
+#[derive(Debug, Clone)]
+pub struct MultiServer {
+    free_at: Vec<Time>,
+    busy: Time,
+    jobs: u64,
+}
+
+impl MultiServer {
+    pub fn new(k: usize) -> Self {
+        assert!(k > 0);
+        MultiServer { free_at: vec![0.0; k], busy: 0.0, jobs: 0 }
+    }
+
+    /// Dispatch to the earliest-free server; returns (server, start, end).
+    pub fn schedule(&mut self, arrival: Time, service: Time) -> (usize, Time, Time) {
+        let (idx, &t) = self
+            .free_at
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        let start = t.max(arrival);
+        let end = start + service;
+        self.free_at[idx] = end;
+        self.busy += service;
+        self.jobs += 1;
+        (idx, start, end)
+    }
+
+    /// When all outstanding work completes.
+    pub fn drained(&self) -> Time {
+        self.free_at.iter().cloned().fold(0.0, f64::max)
+    }
+
+    pub fn busy(&self) -> Time {
+        self.busy
+    }
+
+    pub fn servers(&self) -> usize {
+        self.free_at.len()
+    }
+
+    pub fn reset(&mut self) {
+        self.free_at.iter_mut().for_each(|t| *t = 0.0);
+        self.busy = 0.0;
+        self.jobs = 0;
+    }
+}
+
+/// Per-component busy-time ledger -> latency breakdown rows.
+#[derive(Debug, Clone, Default)]
+pub struct BusyLedger {
+    entries: std::collections::BTreeMap<&'static str, Time>,
+}
+
+impl BusyLedger {
+    pub fn add(&mut self, component: &'static str, t: Time) {
+        *self.entries.entry(component).or_insert(0.0) += t;
+    }
+
+    pub fn get(&self, component: &str) -> Time {
+        self.entries.get(component).copied().unwrap_or(0.0)
+    }
+
+    pub fn total(&self) -> Time {
+        self.entries.values().sum()
+    }
+
+    /// (component, seconds, fraction) rows sorted by component name.
+    pub fn rows(&self) -> Vec<(&'static str, Time, f64)> {
+        let total = self.total().max(1e-30);
+        self.entries.iter().map(|(k, v)| (*k, *v, v / total)).collect()
+    }
+
+    pub fn merge(&mut self, other: &BusyLedger) {
+        for (k, v) in &other.entries {
+            self.add(k, *v);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_serialises() {
+        let mut r = FifoResource::new();
+        let (s1, e1) = r.schedule(0.0, 2.0);
+        let (s2, e2) = r.schedule(1.0, 3.0); // arrives while busy
+        assert_eq!((s1, e1), (0.0, 2.0));
+        assert_eq!((s2, e2), (2.0, 5.0));
+        let (s3, e3) = r.schedule(10.0, 1.0); // idle gap
+        assert_eq!((s3, e3), (10.0, 11.0));
+        assert_eq!(r.busy(), 6.0);
+        assert_eq!(r.jobs(), 3);
+    }
+
+    #[test]
+    fn multiserver_parallelises() {
+        let mut m = MultiServer::new(2);
+        let (_, s1, e1) = m.schedule(0.0, 4.0);
+        let (_, s2, e2) = m.schedule(0.0, 4.0);
+        let (_, s3, e3) = m.schedule(0.0, 4.0);
+        assert_eq!((s1, e1), (0.0, 4.0));
+        assert_eq!((s2, e2), (0.0, 4.0));
+        assert_eq!((s3, e3), (4.0, 8.0)); // third waits for a server
+        assert_eq!(m.drained(), 8.0);
+    }
+
+    #[test]
+    fn ledger_fractions_sum_to_one() {
+        let mut l = BusyLedger::default();
+        l.add("flash", 3.0);
+        l.add("engine", 1.0);
+        l.add("flash", 1.0);
+        let rows = l.rows();
+        assert_eq!(rows.len(), 2);
+        let fsum: f64 = rows.iter().map(|r| r.2).sum();
+        assert!((fsum - 1.0).abs() < 1e-12);
+        assert_eq!(l.get("flash"), 4.0);
+    }
+}

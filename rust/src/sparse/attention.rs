@@ -1,0 +1,382 @@
+//! Single-head decode attention variants over (S, d) caches — arithmetic
+//! mirrors python/compile/kernels/ref.py exactly (see module docs there).
+//!
+//! All functions take the padded cache plus a `length` of valid rows.
+//! Row-major layout: `K[t * d + c]` is token t, channel c.
+
+use super::select::{dot, softmax_masked, topk_mask_heap, topk_mask_select, NEG_INF};
+use crate::config::model::SparsityParams;
+
+/// Mean of the valid V rows (the compensation vector v̄).
+pub fn v_mean(v: &[f32], d: usize, length: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; d];
+    for t in 0..length {
+        for c in 0..d {
+            out[c] += v[t * d + c];
+        }
+    }
+    let inv = 1.0 / (length.max(1)) as f32;
+    for o in &mut out {
+        *o *= inv;
+    }
+    out
+}
+
+/// Dense decode attention: softmax(K q / sqrt(d)) V over the first
+/// `length` rows.
+pub fn dense_attention(q: &[f32], k: &[f32], v: &[f32], length: usize) -> Vec<f32> {
+    let d = q.len();
+    let s_rows = k.len() / d;
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut logits = vec![NEG_INF; s_rows];
+    for t in 0..length {
+        logits[t] = dot(q, &k[t * d..(t + 1) * d]) * scale;
+    }
+    let mask: Vec<bool> = (0..s_rows).map(|t| t < length).collect();
+    let s = softmax_masked(&logits, &mask);
+    weighted_sum(&s, v, d, length)
+}
+
+fn weighted_sum(w: &[f32], v: &[f32], d: usize, length: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; d];
+    for t in 0..length {
+        let wt = w[t];
+        if wt == 0.0 {
+            continue;
+        }
+        let row = &v[t * d..(t + 1) * d];
+        for c in 0..d {
+            out[c] += wt * row[c];
+        }
+    }
+    out
+}
+
+/// Everything a SparF/SparQ step produces: the output vector plus the
+/// data-movement facts the FTL/bandwidth model charges for.
+#[derive(Debug, Clone)]
+pub struct SparfOutput {
+    pub out: Vec<f32>,
+    /// exact channels kept by the filter (== r)
+    pub emb_mask: Vec<bool>,
+    /// exact tokens kept by the filter
+    pub tok_mask: Vec<bool>,
+    /// embedding-indexed pages fetched in step 2 (group-OR of emb_mask)
+    pub emb_groups: Vec<bool>,
+    /// token-indexed pages fetched in step 8 (group-OR of tok_mask)
+    pub tok_groups: Vec<bool>,
+    /// covered approximate-score mass (step 7)
+    pub alpha: f32,
+}
+
+/// SparQ attention [Ribar et al.]: the functional core of Algorithm 1
+/// (SparF adds the group/page structure on top).
+pub fn sparq_attention(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    vbar: &[f32],
+    length: usize,
+    r: usize,
+    kk: usize,
+) -> SparfOutput {
+    sparf_attention(
+        q,
+        k,
+        v,
+        vbar,
+        length,
+        &SparsityParams { r, k: kk, m: 1, n: 1 },
+    )
+}
+
+/// SparF attention — Algorithm 1.  Group sizes (m, n) shape `emb_groups` /
+/// `tok_groups` (what moves over the flash channels); the arithmetic uses
+/// the exact post-filter masks, identical to SparQ.
+pub fn sparf_attention(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    vbar: &[f32],
+    length: usize,
+    sp: &SparsityParams,
+) -> SparfOutput {
+    let d = q.len();
+    let s_rows = k.len() / d;
+    debug_assert_eq!(k.len(), v.len());
+    debug_assert_eq!(vbar.len(), d);
+    debug_assert_eq!(d % sp.m, 0, "d must be a multiple of the embedding group");
+    debug_assert_eq!(s_rows % sp.n, 0, "S must be a multiple of the token group");
+
+    // ---- step 1: top-r channels of |q| (argtopk unit)
+    let absq: Vec<f32> = q.iter().map(|x| x.abs()).collect();
+    let emb_mask = topk_mask_select(&absq, sp.r);
+    let emb_groups = group_or(&emb_mask, sp.m);
+
+    // ---- step 4: approximate scores with temperature correction
+    let l1_all: f32 = absq.iter().sum();
+    let l1_kept: f32 = absq
+        .iter()
+        .zip(&emb_mask)
+        .filter(|(_, &m)| m)
+        .map(|(a, _)| a)
+        .sum();
+    let scale_hat = (d as f32 * l1_kept / l1_all.max(1e-30)).sqrt().max(1e-30);
+    let valid: Vec<bool> = (0..s_rows).map(|t| t < length).collect();
+    // gather the r selected channels once (§Perf iteration 3: ~r/d fewer
+    // multiplies than the masked full-width loop — the same win the NFC
+    // filter gives the hardware kernel)
+    let sel: Vec<(usize, f32)> =
+        (0..d).filter(|&c| emb_mask[c]).map(|c| (c, q[c])).collect();
+    let inv_scale_hat = 1.0 / scale_hat;
+    let mut logits_hat = vec![NEG_INF; s_rows];
+    for t in 0..length {
+        let row = &k[t * d..(t + 1) * d];
+        let mut acc = 0.0f32;
+        for &(c, qc) in &sel {
+            acc += qc * row[c];
+        }
+        logits_hat[t] = acc * inv_scale_hat;
+    }
+    let s_hat = softmax_masked(&logits_hat, &valid);
+
+    // ---- steps 5-6: top-k tokens of the approximate scores
+    let pool: Vec<f32> = s_hat
+        .iter()
+        .zip(&valid)
+        .map(|(&s, &m)| if m { s } else { -1.0 })
+        .collect();
+    let mut tok_mask = topk_mask_select(&pool, sp.k);
+    for t in 0..s_rows {
+        tok_mask[t] &= valid[t];
+    }
+    let tok_groups = group_or(&tok_mask, sp.n);
+
+    // ---- step 7: covered mass
+    let alpha: f32 = s_hat
+        .iter()
+        .zip(&tok_mask)
+        .filter(|(_, &m)| m)
+        .map(|(s, _)| s)
+        .sum::<f32>()
+        .clamp(0.0, 1.0);
+
+    // ---- step 10: exact scores over kept tokens
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut logits = vec![NEG_INF; s_rows];
+    for t in 0..s_rows {
+        if tok_mask[t] {
+            logits[t] = dot(q, &k[t * d..(t + 1) * d]) * scale;
+        }
+    }
+    let s = softmax_masked(&logits, &tok_mask);
+
+    // ---- step 11: blend with v̄
+    let mut out = weighted_sum(&s, v, d, s_rows.min(length));
+    for c in 0..d {
+        out[c] = alpha * out[c] + (1.0 - alpha) * vbar[c];
+    }
+
+    SparfOutput { out, emb_mask, tok_mask, emb_groups, tok_groups, alpha }
+}
+
+fn group_or(mask: &[bool], g: usize) -> Vec<bool> {
+    mask.chunks(g).map(|c| c.iter().any(|&b| b)).collect()
+}
+
+/// H2O-style heavy hitters: `window` recent tokens + heaviest accumulated
+/// historical scores, `k` total.
+pub fn h2o_attention(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    acc_scores: &[f32],
+    length: usize,
+    kk: usize,
+    window: usize,
+) -> Vec<f32> {
+    let d = q.len();
+    let s_rows = k.len() / d;
+    let recent_from = length.saturating_sub(window);
+    let mut keep: Vec<bool> = (0..s_rows).map(|t| t >= recent_from && t < length).collect();
+    let n_heavy = kk.saturating_sub(window);
+    if n_heavy > 0 {
+        let pool: Vec<f32> = (0..s_rows)
+            .map(|t| if t < recent_from { acc_scores[t] } else { -1.0 })
+            .collect();
+        let heavy = topk_mask_heap(&pool, n_heavy);
+        for t in 0..recent_from {
+            keep[t] |= heavy[t];
+        }
+    }
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut logits = vec![NEG_INF; s_rows];
+    for t in 0..s_rows {
+        if keep[t] {
+            logits[t] = dot(q, &k[t * d..(t + 1) * d]) * scale;
+        }
+    }
+    let s = softmax_masked(&logits, &keep);
+    weighted_sum(&s, v, d, length)
+}
+
+/// Sliding-window attention over the `k` most recent tokens.
+pub fn local_attention(q: &[f32], k: &[f32], v: &[f32], length: usize, kk: usize) -> Vec<f32> {
+    let d = q.len();
+    let s_rows = k.len() / d;
+    let from = length.saturating_sub(kk);
+    let keep: Vec<bool> = (0..s_rows).map(|t| t >= from && t < length).collect();
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut logits = vec![NEG_INF; s_rows];
+    for t in from..length {
+        logits[t] = dot(q, &k[t * d..(t + 1) * d]) * scale;
+    }
+    let s = softmax_masked(&logits, &keep);
+    weighted_sum(&s, v, d, length)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn mk(rng: &mut Rng, s: usize, d: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let q: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+        let k: Vec<f32> = (0..s * d).map(|_| rng.normal_f32()).collect();
+        let v: Vec<f32> = (0..s * d).map(|_| rng.normal_f32()).collect();
+        (q, k, v)
+    }
+
+    #[test]
+    fn dense_weights_sum_to_one_effectively() {
+        let mut rng = Rng::new(1);
+        let (q, k, v) = mk(&mut rng, 32, 16);
+        // with V = all-ones, output must be all-ones
+        let ones = vec![1.0f32; 32 * 16];
+        let out = dense_attention(&q, &k, &ones, 20);
+        for o in out {
+            assert!((o - 1.0).abs() < 1e-5);
+        }
+        let _ = v;
+    }
+
+    #[test]
+    fn sparf_full_budget_equals_dense() {
+        let mut rng = Rng::new(2);
+        let (q, k, v) = mk(&mut rng, 32, 16);
+        let vbar = v_mean(&v, 16, 32);
+        let sp = SparsityParams { r: 16, k: 32, m: 4, n: 8 };
+        let o = sparf_attention(&q, &k, &v, &vbar, 32, &sp);
+        let d = dense_attention(&q, &k, &v, 32);
+        assert!((o.alpha - 1.0).abs() < 1e-5, "alpha={}", o.alpha);
+        for (a, b) in o.out.iter().zip(&d) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn sparf_group_masks_cover_token_masks() {
+        let mut rng = Rng::new(3);
+        let (q, k, v) = mk(&mut rng, 64, 32);
+        let vbar = v_mean(&v, 32, 50);
+        let sp = SparsityParams { r: 8, k: 8, m: 4, n: 8 };
+        let o = sparf_attention(&q, &k, &v, &vbar, 50, &sp);
+        assert_eq!(o.emb_mask.iter().filter(|&&b| b).count(), 8);
+        assert_eq!(o.tok_mask.iter().filter(|&&b| b).count(), 8);
+        for (t, &m) in o.tok_mask.iter().enumerate() {
+            if m {
+                assert!(o.tok_groups[t / sp.n], "token {t} kept but group not fetched");
+            }
+        }
+        for (c, &m) in o.emb_mask.iter().enumerate() {
+            if m {
+                assert!(o.emb_groups[c / sp.m]);
+            }
+        }
+        // page counts bounded by ceil-division and budget
+        let tg = o.tok_groups.iter().filter(|&&b| b).count();
+        assert!((1..=8).contains(&tg));
+    }
+
+    #[test]
+    fn sparq_equals_sparf_arithmetic() {
+        let mut rng = Rng::new(4);
+        let (q, k, v) = mk(&mut rng, 64, 32);
+        let vbar = v_mean(&v, 32, 48);
+        let sp = SparsityParams { r: 8, k: 12, m: 4, n: 8 };
+        let a = sparf_attention(&q, &k, &v, &vbar, 48, &sp);
+        let b = sparq_attention(&q, &k, &v, &vbar, 48, 8, 12);
+        assert_eq!(a.out, b.out);
+    }
+
+    #[test]
+    fn local_covers_short_sequences() {
+        let mut rng = Rng::new(5);
+        let (q, k, v) = mk(&mut rng, 32, 8);
+        let a = local_attention(&q, &k, &v, 10, 16);
+        let b = dense_attention(&q, &k, &v, 10);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn h2o_window_tracks_dominant_recent_token() {
+        let mut rng = Rng::new(6);
+        let (q, mut k, v) = mk(&mut rng, 64, 16);
+        // token 49 strongly dominates attention and is inside the window,
+        // so H2O (window always kept) must track dense closely
+        for c in 0..16 {
+            k[49 * 16 + c] = q[c] * 30.0;
+        }
+        let acc: Vec<f32> = (0..64).map(|_| rng.f32()).collect();
+        let a = h2o_attention(&q, &k, &v, &acc, 50, 16, 8);
+        let b = dense_attention(&q, &k, &v, 50);
+        let err = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max);
+        assert!(err < 0.05, "err={err}");
+    }
+
+    #[test]
+    fn sparsity_error_ordering_matches_fig11_premise() {
+        // averaged over heads: SparF(=SparQ) error < H2O error < local error
+        // on heavy-hitter-structured attention at 1/8 compression
+        let mut rng = Rng::new(7);
+        let (s, d, kk) = (128usize, 32usize, 16usize);
+        let (mut e_sparf, mut e_h2o, mut e_local) = (0.0f64, 0.0f64, 0.0f64);
+        let trials = 50;
+        for _ in 0..trials {
+            let (q, mut k, v) = mk(&mut rng, s, d);
+            // plant a few heavy hitters aligned with q spread across history
+            for _ in 0..4 {
+                let t = rng.below(s);
+                for c in 0..d {
+                    k[t * d + c] += q[c] * 2.0;
+                }
+            }
+            let truth = dense_attention(&q, &k, &v, s);
+            let vbar = v_mean(&v, d, s);
+            let sp = SparsityParams { r: d / 4, k: kk, m: 4, n: 8 };
+            let o = sparf_attention(&q, &k, &v, &vbar, s, &sp).out;
+            // H2O "history" = true accumulated scores (its idealised oracle)
+            let scale = 1.0 / (d as f32).sqrt();
+            let logits: Vec<f32> =
+                (0..s).map(|t| dot(&q, &k[t * d..(t + 1) * d]) * scale).collect();
+            let mask = vec![true; s];
+            let acc = softmax_masked(&logits, &mask);
+            let h = h2o_attention(&q, &k, &v, &acc, s, kk, 4);
+            let l = local_attention(&q, &k, &v, s, kk);
+            let err = |a: &[f32]| -> f64 {
+                a.iter()
+                    .zip(&truth)
+                    .map(|(x, y)| ((x - y) as f64).powi(2))
+                    .sum::<f64>()
+                    .sqrt()
+            };
+            e_sparf += err(&o);
+            e_h2o += err(&h);
+            e_local += err(&l);
+        }
+        assert!(e_sparf < e_h2o, "sparf={e_sparf} h2o={e_h2o}");
+        assert!(e_h2o < e_local, "h2o={e_h2o} local={e_local}");
+    }
+}

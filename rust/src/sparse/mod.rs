@@ -1,0 +1,18 @@
+//! Rust-native sparse attention family — the arithmetic the InstCSD engine
+//! executes, mirroring `python/compile/kernels/ref.py` function-for-function
+//! (same masks, same alpha blend, same stable-argsort top-k tie-breaking).
+//!
+//! Used by:
+//! * [`crate::csd::engine`] — the functional in-storage attention engine
+//!   (operates on f16-decoded page data fetched through the FTL);
+//! * the Fig. 11 accuracy study (dense vs SparQ/SparF/H2O/local);
+//! * integration tests cross-checking rust vs the PJRT artifacts.
+
+pub mod attention;
+pub mod select;
+
+pub use attention::{
+    dense_attention, h2o_attention, local_attention, sparf_attention, sparq_attention,
+    v_mean, SparfOutput,
+};
+pub use select::{softmax_masked, topk_mask};

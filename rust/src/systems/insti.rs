@@ -1,0 +1,272 @@
+//! InstInfer system model (InstI-Dense / InstI-SparF, 1..n CSDs).
+//!
+//! Decode step dataflow (paper §IV-D): GPU runs QKV/O-proj/FFN; q,k,v
+//! vectors cross to the CSDs over P2P DMA; each CSD computes attention
+//! for its share of heads against flash-resident KV; outputs return over
+//! P2P.  GPU and CSD work overlap in mini-batches, so the step time is
+//! max(gpu, csd) plus the un-overlappable transfer tails.
+//!
+//! The SparF data-movement model below reproduces Algorithm 1's dual-step
+//! loading at page granularity, including the paper's measured overfetch
+//! ("about half of the sparsity" retained during the first-step loading):
+//! expected distinct pages follow the occupancy formula
+//! `E[G] = G(1-(1-1/G)^x)`, with token selections clustered
+//! (`TOKEN_CLUSTER` effective independent draws per selected token —
+//! heavy hitters are contiguous passages, observed in the functional
+//! engine's page counts as well).
+
+use crate::config::model::{ModelShape, SparsityParams, FP16_BYTES};
+use crate::config::system::SystemConfig;
+use crate::csd::UnitBreakdown;
+use crate::pcie::{self, Path};
+use crate::systems::stepmodel::{
+    check_vram, gpu_nonattn_step, integrate_decode, RunSummary, StepBreakdown,
+};
+
+/// Effective independent page draws per selected token (selection
+/// clustering).  Calibrated so the dual-step loading retains the paper's
+/// reported sparsity (§IV-C "about half of the sparsity … during the
+/// first-step loading"; 2.08x SparF speedup at bs=256 pins the total).
+pub const TOKEN_CLUSTER: f64 = 0.16;
+
+/// E[distinct groups] when drawing `x` of `g` groups uniformly.
+pub fn expected_groups(g: f64, x: f64) -> f64 {
+    if g <= 0.0 {
+        return 0.0;
+    }
+    g * (1.0 - (1.0 - 1.0 / g).powf(x))
+}
+
+/// Flash bytes one head must stream for one SparF step at context `s`
+/// (dense = the full 2*s*d KV bytes).
+pub fn sparf_head_flash_bytes(m: &ModelShape, sp: &SparsityParams, s: usize) -> f64 {
+    let d = m.d_head as f64;
+    let dense_k = s as f64 * d * FP16_BYTES as f64; // K bytes (V same)
+    // step 2: embedding-indexed pages — r channels over d/m groups
+    let eg = d / sp.m as f64;
+    let f1 = expected_groups(eg, sp.r as f64) / eg;
+    let step1 = f1 * dense_k;
+    // step 8: token-indexed pages — k clustered tokens over s/n groups, K+V
+    let tg = s as f64 / sp.n as f64;
+    let f2 = expected_groups(tg, sp.k as f64 * TOKEN_CLUSTER) / tg;
+    let step2 = f2 * 2.0 * dense_k;
+    // the engine falls back to dense streaming whenever the sparse plan
+    // would move more bytes (possible at very low compression, where the
+    // dual-indexed K copy is pure overhead)
+    (step1 + step2).min(2.0 * dense_k)
+}
+
+pub fn dense_head_flash_bytes(m: &ModelShape, s: usize) -> f64 {
+    2.0 * s as f64 * m.d_head as f64 * FP16_BYTES as f64
+}
+
+/// Engine FLOPs one head costs per step.
+fn head_flops(m: &ModelShape, sp: Option<&SparsityParams>, s: usize) -> f64 {
+    let d = m.d_head as f64;
+    match sp {
+        None => 2.0 * 2.0 * s as f64 * d, // Logit + Attend over full context
+        Some(sp) => {
+            2.0 * s as f64 * sp.r as f64        // Logit-0 approx scores
+                + 2.0 * 2.0 * sp.k as f64 * d   // exact Logit + Attend on k
+        }
+    }
+}
+
+/// Per-CSD attention time for its share of one layer's heads, plus the
+/// unit breakdown (all heads, all layers, per step) for Fig. 16.
+pub struct CsdStep {
+    pub time: f64,
+    pub units: UnitBreakdown,
+    pub flash_bytes: f64,
+}
+
+pub fn csd_layer_step(cfg: &SystemConfig, b: usize, s: usize, heads: usize) -> CsdStep {
+    let m = &cfg.model;
+    let sp = cfg.sparsity.as_ref();
+    let units_per_layer = (b * heads) as f64;
+
+    let bytes_per_head = match sp {
+        Some(sp) => sparf_head_flash_bytes(m, sp, s),
+        None => dense_head_flash_bytes(m, s),
+    };
+    let flash_bytes = bytes_per_head * units_per_layer;
+    let flops = head_flops(m, sp, s) * units_per_layer;
+
+    let csd = &cfg.csd;
+    // sustained internal rate is the aggregated channel bandwidth (the
+    // paper's 11.2 GB/s; multi-plane die reads keep the dies off the
+    // critical path) plus one array-read latency to first byte
+    let t_flash = flash_bytes / csd.flash.internal_bw() + csd.flash.read_us * 1e-6;
+    let t_kernel = flops / csd.engine_flops;
+    let t_filter = flash_bytes / (csd.filter_bw_per_channel * csd.flash.channels as f64);
+    let t_argtopk = match sp {
+        Some(_) => units_per_layer * (m.d_head + s) as f64 / csd.argtopk_elems_per_s,
+        None => 0.0,
+    };
+
+    // pipeline: the kernels and NFC filters consume pages as they stream,
+    // but page-batch synchronisation exposes ~25% of their time as stalls
+    // (calibrated against Fig. 14's 80.7% KV-access share; the functional
+    // engine shows the same page-boundary bubbles)
+    const PIPE_STALL: f64 = 0.25;
+    let time = t_argtopk + t_flash + PIPE_STALL * (t_kernel + t_filter);
+
+    let (logit0, logit, attend) = match sp {
+        Some(sp) => {
+            let f0 = 2.0 * s as f64 * sp.r as f64 * units_per_layer / csd.engine_flops;
+            let fk = 2.0 * sp.k as f64 * m.d_head as f64 * units_per_layer / csd.engine_flops;
+            (f0, fk, fk)
+        }
+        None => {
+            let fk = 2.0 * s as f64 * m.d_head as f64 * units_per_layer / csd.engine_flops;
+            (0.0, fk, fk)
+        }
+    };
+    CsdStep {
+        time,
+        units: UnitBreakdown {
+            argtopk: t_argtopk,
+            flash_read: t_flash,
+            nfc_filter: t_filter,
+            logit0,
+            logit,
+            attend,
+            writeback: 0.0,
+        },
+        flash_bytes,
+    }
+}
+
+/// Full InstInfer run at batch `b`.
+pub fn run(cfg: &SystemConfig, b: usize) -> Result<RunSummary, String> {
+    let m = &cfg.model;
+    // layer-wise pipelined prefill shipping: only ~2 layers of KV buffered
+    check_vram(cfg, b, 2)?;
+    let n = cfg.n_devices.max(1);
+    let heads_per_csd = m.n_heads.div_ceil(n);
+
+    // capacity: each CSD stores its heads' K (twice) + V
+    let kv_per_csd = cfg.kv_bytes_total(b) as f64 * 1.5 * heads_per_csd as f64 / m.n_heads as f64;
+    if kv_per_csd > cfg.csd.kv_capacity_bytes as f64 {
+        return Err(format!(
+            "CSD capacity: {:.0} GB KV per device > {:.0} GB flash",
+            kv_per_csd / 1e9,
+            cfg.csd.kv_capacity_bytes as f64 / 1e9
+        ));
+    }
+
+    // ---- prefill: GPU compute, KV shipped layer-wise over P2P, overlapped
+    let prefill_compute = m.n_layers as f64
+        * crate::gpu::gpu_prefill_layer_time(m, &cfg.gpu, b, cfg.input_len);
+    let kv_bytes = m.kv_bytes(b, cfg.input_len) as f64 * 1.5; // K stored twice
+    let ship_path = if cfg.p2p_dma { Path::P2p } else { Path::SsdGpuViaHost };
+    let ios = (kv_bytes / (128.0 * 1024.0)).ceil() as u64;
+    let ship = pcie::transfer_time(&cfg.pcie, ship_path, kv_bytes / n as f64, ios / n as u64)
+        .max(kv_bytes / n as f64 / cfg.csd.flash.internal_bw());
+    let prefill = if cfg.layerwise_pipeline {
+        prefill_compute.max(ship) + ship / m.n_layers as f64
+    } else {
+        prefill_compute + ship
+    };
+
+    // ---- decode: GPU part overlaps CSD part (mini-batch pipelining)
+    let step = move |s: usize| {
+        let (w, c) = gpu_nonattn_step(cfg, b);
+        let gpu_t = w + c;
+        let per_csd = csd_layer_step(cfg, b, s, heads_per_csd);
+        let csd_t = per_csd.time * m.n_layers as f64;
+        let csd_flash_t = (per_csd.units.flash_read) * m.n_layers as f64;
+        let csd_other_t = (csd_t - csd_flash_t).max(0.0);
+        // qkv + attention-output vectors over P2P, per layer
+        let vec_bytes =
+            (b * m.n_layers * 4 * m.d_model * FP16_BYTES) as f64; // q,k,v out + attn in
+        let comm = pcie::transfer_time(
+            &cfg.pcie,
+            if cfg.p2p_dma { Path::P2p } else { Path::SsdGpuViaHost },
+            vec_bytes / n as f64,
+            (2 * m.n_layers) as u64,
+        );
+        // wall time: GPU and CSD overlap; comm + pipeline bubble don't.
+        // Attribute components proportionally so the breakdown keeps the
+        // paper's percentage semantics while summing to wall time.
+        let bubble = 0.02 * gpu_t.min(csd_t); // pipeline fill/drain
+        let wall = gpu_t.max(csd_t) + comm + bubble;
+        let raw = (gpu_t + csd_t + comm).max(1e-30);
+        let f = wall / raw;
+        StepBreakdown {
+            weight: w * f,
+            kv: csd_flash_t * f,
+            compute: (c + csd_other_t) * f,
+            comm: comm * f,
+        }
+    };
+    let (decode_s, bd) = integrate_decode(cfg, step);
+    let total = prefill + decode_s;
+    Ok(RunSummary {
+        label: cfg.label(),
+        batch: b,
+        throughput: (b * cfg.output_len) as f64 / total,
+        prefill_s: prefill,
+        decode_s,
+        decode_breakdown: bd,
+        kv_bytes: cfg.kv_bytes_total(b),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::system::OffloadPolicy;
+
+    #[test]
+    fn expected_groups_limits() {
+        assert!((expected_groups(64.0, 1.0) - 1.0).abs() < 1e-9);
+        assert!(expected_groups(64.0, 10000.0) > 63.9);
+        assert!(expected_groups(64.0, 32.0) < 32.0); // collisions only reduce
+    }
+
+    #[test]
+    fn sparf_bytes_below_dense_and_monotone_in_budget() {
+        let m = ModelShape::opt_13b();
+        let s = 2048;
+        let dense = dense_head_flash_bytes(&m, s);
+        let mut last = dense * 1.001; // c=2 may cap at the dense fallback
+        for c in [2usize, 4, 8, 16, 32] {
+            let sp = SparsityParams::with_compression(&m, s, c);
+            let b = sparf_head_flash_bytes(&m, &sp, s);
+            assert!(b < last, "c={c}: {b} !< {last}");
+            last = b;
+        }
+        // at the paper's 1/8 point, roughly half the dense traffic
+        let sp = SparsityParams::paper_default(&m, s);
+        let frac = sparf_head_flash_bytes(&m, &sp, s) / dense;
+        assert!((0.25..0.7).contains(&frac), "frac {frac}");
+    }
+
+    #[test]
+    fn fig16_shape_logit0_only_in_sparf() {
+        let cfg = SystemConfig::paper_base(OffloadPolicy::InStorage);
+        let dense = csd_layer_step(&cfg, 64, 1536, cfg.model.n_heads);
+        let scfg = cfg.clone().with_default_sparsity();
+        let sparse = csd_layer_step(&scfg, 64, 1536, scfg.model.n_heads);
+        assert_eq!(dense.units.logit0, 0.0);
+        assert!(sparse.units.logit0 > 0.0);
+        assert!(sparse.flash_bytes < dense.flash_bytes);
+        assert!(sparse.units.argtopk > 0.0 && dense.units.argtopk == 0.0);
+    }
+
+    #[test]
+    fn capacity_gate_on_huge_batches() {
+        // a single 68 GB CSD cannot hold bs=2048 x 2K-ctx KV (1.6 TB x1.5)
+        let cfg = SystemConfig::paper_base(OffloadPolicy::InStorage);
+        assert!(run(&cfg, 2048).is_err());
+        assert!(run(&cfg, 32).is_ok());
+    }
+
+    #[test]
+    fn csd_bound_decode_dominated_by_flash() {
+        let cfg = SystemConfig::paper_base(OffloadPolicy::InStorage);
+        let st = csd_layer_step(&cfg, 256, 1536, cfg.model.n_heads);
+        assert!(st.units.flash_read > st.units.logit + st.units.attend);
+    }
+}

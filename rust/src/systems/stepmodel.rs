@@ -1,0 +1,161 @@
+//! Shared timing-plane pieces: step breakdowns, run summaries, memory
+//! feasibility, and the effective-bandwidth calibrations.
+//!
+//! Calibration constants (documented per DESIGN.md §1; each reproduces a
+//! measured inefficiency of the corresponding real system, and the values
+//! are pinned by the paper's own reported ratios):
+//! * `HOST_STAGE_EFF` — DeepSpeed-style layer-staged KV transfers reach
+//!   ~1/3 of raw PCIe Gen4 x16 (pinned-buffer copies + per-layer sync; the
+//!   paper's observation that InstI-dense at 11.2 GB/s internal ~matches
+//!   DeepSpeed's host path implies ~10.7 GB/s effective).
+//! * `SSD_FS_EFF` — FlexGen's SSD path through the filesystem reaches
+//!   ~70% of the already-charged two-hop + per-IO cost (the 6.85x
+//!   InstI/FlexGen ratio at bs=64 pins ~1.6 GB/s effective end-to-end).
+//! * `SWAP_BW` — DeepSpeed's kernel-swap cliff: once the KV working set
+//!   exceeds DRAM, the sequential full-scan access pattern defeats LRU
+//!   (classic scan-thrash: every page faults), so ALL KV traffic moves at
+//!   swap readahead speed (~350 MB/s; reproduces the 32.6x collapse).
+
+use crate::config::system::SystemConfig;
+
+pub const HOST_STAGE_EFF: f64 = 0.335;
+pub const SSD_FS_EFF: f64 = 0.70;
+pub const SWAP_BW: f64 = 350e6;
+
+/// Per-decode-step component times (seconds, whole model, one step).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct StepBreakdown {
+    /// streaming model weights through the GPU compute units
+    pub weight: f64,
+    /// KV-cache access (the paper's "KV Cache Access")
+    pub kv: f64,
+    /// arithmetic not hidden behind the above (GPU + CSD kernels)
+    pub compute: f64,
+    /// qkv/output vector movement, command overheads
+    pub comm: f64,
+}
+
+impl StepBreakdown {
+    pub fn total(&self) -> f64 {
+        self.weight + self.kv + self.compute + self.comm
+    }
+
+    pub fn scaled(&self, f: f64) -> StepBreakdown {
+        StepBreakdown {
+            weight: self.weight * f,
+            kv: self.kv * f,
+            compute: self.compute * f,
+            comm: self.comm * f,
+        }
+    }
+
+    pub fn add(&mut self, o: &StepBreakdown) {
+        self.weight += o.weight;
+        self.kv += o.kv;
+        self.compute += o.compute;
+        self.comm += o.comm;
+    }
+}
+
+/// Outcome of one simulated offline batch run.
+#[derive(Debug, Clone)]
+pub struct RunSummary {
+    pub label: String,
+    pub batch: usize,
+    /// end-to-end generated tokens per second
+    pub throughput: f64,
+    pub prefill_s: f64,
+    pub decode_s: f64,
+    /// aggregate over all decode steps
+    pub decode_breakdown: StepBreakdown,
+    /// total KV bytes at end of run
+    pub kv_bytes: usize,
+}
+
+/// Aggregate decode time over the whole generation by sampling the
+/// per-step model at the midpoint context (components are affine in s,
+/// so midpoint x steps is exact for the total).
+pub fn integrate_decode(
+    cfg: &SystemConfig,
+    step: impl Fn(usize) -> StepBreakdown,
+) -> (f64, StepBreakdown) {
+    let s_mid = cfg.input_len + cfg.output_len / 2;
+    let per = step(s_mid);
+    let total = per.scaled(cfg.output_len as f64);
+    (total.total(), total)
+}
+
+/// GPU VRAM demand during prefill (bytes).  `kv_layers_buffered` models
+/// how many layers of full-batch KV the system keeps resident before
+/// offloading — the FlexGen OOM mechanism at bs=128 (§VI-C).
+pub fn vram_demand(cfg: &SystemConfig, b: usize, kv_layers_buffered: usize) -> usize {
+    let m = &cfg.model;
+    let weights = m.weight_bytes();
+    // activations: x + residual + ffn scratch for the prompt
+    let act = 3 * b * cfg.input_len * m.d_model * crate::config::model::FP16_BYTES;
+    let kv_buf = kv_layers_buffered * b * cfg.input_len * m.kv_bytes_per_token_layer();
+    weights + act + kv_buf
+}
+
+pub fn check_vram(cfg: &SystemConfig, b: usize, kv_layers_buffered: usize) -> Result<(), String> {
+    let need = vram_demand(cfg, b, kv_layers_buffered);
+    if need > cfg.gpu.vram_bytes {
+        return Err(format!(
+            "OOM: prefill needs {:.1} GB VRAM ({} layers of KV buffered) > {:.0} GB",
+            need as f64 / 1e9,
+            kv_layers_buffered,
+            cfg.gpu.vram_bytes as f64 / 1e9
+        ));
+    }
+    Ok(())
+}
+
+/// Non-attention GPU work per decode step (QKV + O proj + FFN, all layers)
+/// split into weight-streaming vs arithmetic for the breakdown figures.
+pub fn gpu_nonattn_step(cfg: &SystemConfig, b: usize) -> (f64, f64) {
+    let m = &cfg.model;
+    let weight_t = m.weight_bytes() as f64 / cfg.gpu.mem_bw;
+    let total: f64 =
+        m.n_layers as f64 * crate::gpu::gpu_decode_nonattn_time(m, &cfg.gpu, b);
+    let compute_t = (total - weight_t).max(total * 0.05);
+    (weight_t, compute_t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::system::OffloadPolicy;
+
+    #[test]
+    fn vram_demand_reproduces_flexgen_oom_boundary() {
+        let cfg = SystemConfig::paper_base(OffloadPolicy::SsdViaHost);
+        // FlexGen's block schedule buffers ~10 layers of full-batch KV:
+        // fits at bs=64, OOMs at bs=128 (Fig. 12)
+        assert!(check_vram(&cfg, 64, 10).is_ok());
+        assert!(check_vram(&cfg, 128, 10).is_err());
+        // InstInfer's layer-wise pipeline buffers ~2: fine at bs=256
+        assert!(check_vram(&cfg, 256, 2).is_ok());
+    }
+
+    #[test]
+    fn breakdown_arithmetic() {
+        let mut a = StepBreakdown { weight: 1.0, kv: 2.0, compute: 3.0, comm: 4.0 };
+        assert_eq!(a.total(), 10.0);
+        let b = a.scaled(2.0);
+        assert_eq!(b.total(), 20.0);
+        a.add(&b);
+        assert_eq!(a.total(), 30.0);
+    }
+
+    #[test]
+    fn integrate_uses_midpoint() {
+        let cfg = SystemConfig::paper_base(OffloadPolicy::GpuOnly);
+        let (t, bd) = integrate_decode(&cfg, |s| StepBreakdown {
+            kv: s as f64 * 1e-6,
+            ..Default::default()
+        });
+        let s_mid = (cfg.input_len + cfg.output_len / 2) as f64;
+        assert!((t - cfg.output_len as f64 * s_mid * 1e-6).abs() < 1e-9);
+        assert!(bd.kv > 0.0);
+    }
+}

@@ -1,0 +1,156 @@
+//! IEEE 754 half-precision conversion (no `half` crate offline).
+//!
+//! The flash pages store KV tensors in FP16 exactly as the paper's CSD does
+//! (§IV-C sizes all groups in FP16); the engine decodes to f32 for compute.
+//! Round-to-nearest-even on encode, standard widening on decode.
+
+/// f32 -> f16 bit pattern, round-to-nearest-even, IEEE semantics
+/// (overflow -> inf, subnormal flush handled properly).
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let man = bits & 0x7f_ffff;
+
+    if exp == 0xff {
+        // inf / nan
+        let nan = if man != 0 { 0x0200 } else { 0 };
+        return sign | 0x7c00 | nan | ((man >> 13) as u16 & 0x3ff);
+    }
+    // unbiased exponent for f16
+    let e = exp - 127 + 15;
+    if e >= 0x1f {
+        return sign | 0x7c00; // overflow -> inf
+    }
+    if e <= 0 {
+        // subnormal or zero
+        if e < -10 {
+            return sign; // too small -> +-0
+        }
+        // add implicit bit, shift into subnormal position with rounding
+        let man = man | 0x80_0000;
+        let shift = (14 - e) as u32;
+        let half = 1u32 << (shift - 1);
+        let rounded = man + half - 1 + ((man >> shift) & 1);
+        return sign | (rounded >> shift) as u16;
+    }
+    // normal: round mantissa from 23 to 10 bits, RNE
+    let half = 0x0fff + ((man >> 13) & 1);
+    let man_r = man + half;
+    if man_r & 0x80_0000 != 0 {
+        // mantissa overflow bumps exponent
+        let e = e + 1;
+        if e >= 0x1f {
+            return sign | 0x7c00;
+        }
+        return sign | ((e as u16) << 10);
+    }
+    sign | ((e as u16) << 10) | ((man_r >> 13) as u16 & 0x3ff)
+}
+
+/// f16 bit pattern -> f32.
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x3ff) as u32;
+    let bits = if exp == 0 {
+        if man == 0 {
+            sign
+        } else {
+            // subnormal: value = man * 2^-24; normalise around the MSB
+            let p = 31 - man.leading_zeros(); // MSB position, 0..=9
+            let exp32 = 103 + p; // -24 + p + 127
+            let man32 = (man << (23 - p)) & 0x7f_ffff;
+            sign | (exp32 << 23) | man32
+        }
+    } else if exp == 0x1f {
+        sign | 0x7f80_0000 | (man << 13)
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Encode a f32 slice to packed little-endian f16 bytes.
+pub fn encode_slice(xs: &[f32], out: &mut Vec<u8>) {
+    out.reserve(xs.len() * 2);
+    for &x in xs {
+        out.extend_from_slice(&f32_to_f16_bits(x).to_le_bytes());
+    }
+}
+
+/// Decode packed little-endian f16 bytes to f32.
+pub fn decode_slice(bytes: &[u8]) -> Vec<f32> {
+    assert_eq!(bytes.len() % 2, 0);
+    bytes
+        .chunks_exact(2)
+        .map(|c| f16_bits_to_f32(u16::from_le_bytes([c[0], c[1]])))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn exact_values_roundtrip() {
+        for x in [0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 65504.0, -65504.0, 1.5, 0.099975586] {
+            let h = f32_to_f16_bits(x);
+            assert_eq!(f16_bits_to_f32(h), x, "x={x}");
+        }
+    }
+
+    #[test]
+    fn special_values() {
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(f32::INFINITY)), f32::INFINITY);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(f32::NEG_INFINITY)), f32::NEG_INFINITY);
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+        // overflow saturates to inf
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(1e8)), f32::INFINITY);
+        // tiny flushes to zero
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(1e-12)), 0.0);
+    }
+
+    #[test]
+    fn subnormals_roundtrip() {
+        // smallest positive f16 subnormal = 2^-24
+        let tiny = 2.0f32.powi(-24);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(tiny)), tiny);
+        let sub = 2.0f32.powi(-20);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(sub)), sub);
+    }
+
+    #[test]
+    fn relative_error_bounded() {
+        let mut rng = Rng::new(1);
+        for _ in 0..10_000 {
+            let x = (rng.normal() * 10.0) as f32;
+            let y = f16_bits_to_f32(f32_to_f16_bits(x));
+            let rel = ((x - y) / x.abs().max(1e-3)).abs();
+            assert!(rel < 1e-3, "x={x} y={y}");
+        }
+    }
+
+    #[test]
+    fn rne_ties() {
+        // 1 + 2^-11 is exactly between 1.0 and 1+2^-10: RNE rounds to even (1.0)
+        let x = 1.0 + 2.0f32.powi(-11);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(x)), 1.0);
+        // 1 + 3*2^-11 is a tie between mantissa 1 and 2: RNE picks even (2)
+        let x = 1.0 + 3.0 * 2.0f32.powi(-11);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(x)), 1.0 + 2.0f32.powi(-9));
+    }
+
+    #[test]
+    fn slice_roundtrip() {
+        let xs: Vec<f32> = (0..257).map(|i| (i as f32 - 128.0) * 0.37).collect();
+        let mut bytes = Vec::new();
+        encode_slice(&xs, &mut bytes);
+        assert_eq!(bytes.len(), xs.len() * 2);
+        let back = decode_slice(&bytes);
+        for (a, b) in xs.iter().zip(&back) {
+            assert!((a - b).abs() <= a.abs() * 1e-3 + 1e-4);
+        }
+    }
+}

@@ -1,0 +1,10 @@
+//! Small self-contained utilities (no external deps available offline):
+//! a JSON parser/writer, a fast PRNG, statistics helpers, a table printer,
+//! and a minimal property-testing harness.
+
+pub mod f16;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,205 @@
+//! Deterministic PRNG (xoshiro256**) — no `rand` crate offline.
+//!
+//! Used by the workload generators, the property-test harness, and the
+//! synthetic attention-statistics model.  Seeded explicitly everywhere so
+//! every benchmark run is reproducible.
+
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+    /// cached second normal sample from Box-Muller
+    spare: Option<f64>,
+}
+
+fn splitmix64(x: &mut u64) -> u64 {
+    *x = x.wrapping_add(0x9e3779b97f4a7c15);
+    let mut z = *x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        let mut x = seed;
+        let s = [
+            splitmix64(&mut x),
+            splitmix64(&mut x),
+            splitmix64(&mut x),
+            splitmix64(&mut x),
+        ];
+        Rng { s, spare: None }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    pub fn f32(&mut self) -> f32 {
+        self.f64() as f32
+    }
+
+    /// Uniform integer in [0, n) without modulo bias (n > 0).
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        let n = n as u64;
+        let zone = u64::MAX - u64::MAX % n;
+        loop {
+            let v = self.next_u64();
+            if v < zone {
+                return (v % n) as usize;
+            }
+        }
+    }
+
+    /// Uniform integer in [lo, hi] inclusive.
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo <= hi);
+        lo + self.below(hi - lo + 1)
+    }
+
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare.take() {
+            return z;
+        }
+        loop {
+            let u = self.f64();
+            if u <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let v = self.f64();
+            let r = (-2.0 * u.ln()).sqrt();
+            let (s, c) = (2.0 * std::f64::consts::PI * v).sin_cos();
+            self.spare = Some(r * s);
+            return r * c;
+        }
+    }
+
+    pub fn normal_f32(&mut self) -> f32 {
+        self.normal() as f32
+    }
+
+    /// Exponential with mean `mu` (arrival gaps, flash latency jitter).
+    pub fn exp(&mut self, mu: f64) -> f64 {
+        -mu * (1.0 - self.f64()).ln()
+    }
+
+    /// Zipf-like heavy-tail sample in [0, n): used by the attention
+    /// statistics generator (a few tokens dominate attention mass).
+    pub fn zipf(&mut self, n: usize, alpha: f64) -> usize {
+        // inverse-cdf on a truncated pareto; cheap and good enough for
+        // shaping score distributions
+        let u = self.f64().max(1e-12);
+        let x = (1.0 - u * (1.0 - (n as f64).powf(1.0 - alpha))).powf(1.0 / (1.0 - alpha));
+        (x as usize).min(n - 1)
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            xs.swap(i, self.below(i + 1));
+        }
+    }
+
+    /// Fresh child generator (for per-request / per-head streams).
+    pub fn fork(&mut self) -> Rng {
+        Rng::new(self.next_u64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn uniform_bounds() {
+        let mut r = Rng::new(1);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+            let n = r.range(3, 7);
+            assert!((3..=7).contains(&n));
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(7);
+        let n = 100_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = r.normal();
+            s += x;
+            s2 += x * x;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn below_is_unbiased_enough() {
+        let mut r = Rng::new(3);
+        let mut counts = [0usize; 5];
+        for _ in 0..50_000 {
+            counts[r.below(5)] += 1;
+        }
+        for c in counts {
+            assert!((8_000..12_000).contains(&c), "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn zipf_is_heavy_headed() {
+        let mut r = Rng::new(5);
+        let mut head = 0;
+        let n = 20_000;
+        for _ in 0..n {
+            if r.zipf(1024, 1.2) < 16 {
+                head += 1;
+            }
+        }
+        // the first 16 of 1024 buckets should hold far more than 16/1024
+        assert!(head as f64 / n as f64 > 0.3, "head={head}");
+    }
+
+    #[test]
+    fn shuffle_permutes() {
+        let mut r = Rng::new(9);
+        let mut v: Vec<usize> = (0..32).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..32).collect::<Vec<_>>());
+        assert_ne!(v, (0..32).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,184 @@
+//! Workload generation: request batches with realistic length
+//! distributions (the paper samples ShareGPT/WikiText-2/SQuAD/TriviaQA;
+//! offline, we synthesise matched distributions — DESIGN.md §1) and the
+//! attention-statistics model behind the Fig. 11 accuracy study.
+
+use crate::util::rng::Rng;
+
+/// One offline inference request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+}
+
+/// Length distribution families matched to the paper's datasets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LengthProfile {
+    /// fixed input/output (the paper's throughput runs: 1024/1024)
+    Fixed,
+    /// ShareGPT-like: lognormal-ish chat turns, long tail
+    Chat,
+    /// SQuAD-like: mid-length context, short answers
+    Qa,
+}
+
+#[derive(Debug, Clone)]
+pub struct WorkloadGen {
+    rng: Rng,
+    vocab: usize,
+    max_seq: usize,
+    profile: LengthProfile,
+    input_len: usize,
+    output_len: usize,
+    next_id: u64,
+}
+
+impl WorkloadGen {
+    pub fn new(
+        seed: u64,
+        vocab: usize,
+        max_seq: usize,
+        profile: LengthProfile,
+        input_len: usize,
+        output_len: usize,
+    ) -> Self {
+        WorkloadGen { rng: Rng::new(seed), vocab, max_seq, profile, input_len, output_len, next_id: 0 }
+    }
+
+    fn sample_lens(&mut self) -> (usize, usize) {
+        match self.profile {
+            LengthProfile::Fixed => (self.input_len, self.output_len),
+            LengthProfile::Chat => {
+                // lognormal around the configured mean, clipped to context
+                let ln = |rng: &mut Rng, mean: f64| -> usize {
+                    let mu = mean.ln() - 0.32; // sigma^2/2 with sigma=0.8
+                    let x = (mu + 0.8 * rng.normal()).exp();
+                    (x as usize).clamp(4, mean as usize * 4)
+                };
+                let i = ln(&mut self.rng, self.input_len as f64);
+                let o = ln(&mut self.rng, self.output_len as f64);
+                let i = i.min(self.max_seq / 2);
+                let o = o.min(self.max_seq - i);
+                (i.max(1), o.max(1))
+            }
+            LengthProfile::Qa => {
+                let i = self.rng.range(self.input_len / 2, self.input_len.max(2));
+                let o = self.rng.range(1, (self.output_len / 4).max(2));
+                let i = i.min(self.max_seq - 1);
+                (i.max(1), o.min(self.max_seq - i).max(1))
+            }
+        }
+    }
+
+    pub fn request(&mut self) -> Request {
+        let (i, o) = self.sample_lens();
+        let prompt = (0..i).map(|_| self.rng.below(self.vocab) as i32).collect();
+        let id = self.next_id;
+        self.next_id += 1;
+        Request { id, prompt, max_new_tokens: o }
+    }
+
+    pub fn batch(&mut self, n: usize) -> Vec<Request> {
+        (0..n).map(|_| self.request()).collect()
+    }
+}
+
+/// Synthetic attention statistics for the Fig. 11 accuracy study: K rows
+/// with planted heavy hitters (a few history tokens strongly aligned with
+/// q) over a diffuse background — the structure sparse attention exploits,
+/// with `hitters` controlling how concentrated the mass is.
+pub struct AttnStatsGen {
+    pub s: usize,
+    pub d: usize,
+    pub hitters: usize,
+    pub hitter_gain: f32,
+}
+
+impl AttnStatsGen {
+    pub fn paper_like(s: usize, d: usize) -> Self {
+        AttnStatsGen { s, d, hitters: (s / 32).max(2), hitter_gain: 2.0 }
+    }
+
+    /// One head's (q, K, V) sample.
+    pub fn sample(&self, rng: &mut Rng) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let (s, d) = (self.s, self.d);
+        let q: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+        let mut k: Vec<f32> = (0..s * d).map(|_| rng.normal_f32()).collect();
+        let v: Vec<f32> = (0..s * d).map(|_| rng.normal_f32()).collect();
+        for _ in 0..self.hitters {
+            // zipf-distributed positions: recent tokens slightly favoured
+            let t = s - 1 - rng.zipf(s, 1.1);
+            for c in 0..d {
+                k[t * d + c] += q[c] * self.hitter_gain;
+            }
+        }
+        (q, k, v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_profile_is_fixed() {
+        let mut g = WorkloadGen::new(1, 512, 2048, LengthProfile::Fixed, 1024, 1024);
+        for _ in 0..10 {
+            let r = g.request();
+            assert_eq!(r.prompt.len(), 1024);
+            assert_eq!(r.max_new_tokens, 1024);
+        }
+    }
+
+    #[test]
+    fn chat_profile_varies_within_context() {
+        let mut g = WorkloadGen::new(2, 512, 256, LengthProfile::Chat, 64, 64);
+        let mut lens = std::collections::HashSet::new();
+        for _ in 0..50 {
+            let r = g.request();
+            assert!(r.prompt.len() + r.max_new_tokens <= 256);
+            assert!(!r.prompt.is_empty() && r.max_new_tokens >= 1);
+            lens.insert(r.prompt.len());
+        }
+        assert!(lens.len() > 5, "chat lengths should vary: {lens:?}");
+    }
+
+    #[test]
+    fn request_ids_unique_and_tokens_in_vocab() {
+        let mut g = WorkloadGen::new(3, 100, 256, LengthProfile::Qa, 64, 32);
+        let rs = g.batch(20);
+        let ids: std::collections::HashSet<u64> = rs.iter().map(|r| r.id).collect();
+        assert_eq!(ids.len(), 20);
+        for r in &rs {
+            assert!(r.prompt.iter().all(|&t| (0..100).contains(&t)));
+        }
+    }
+
+    #[test]
+    fn attn_stats_concentrate_mass() {
+        // planted hitters must make top-k coverage far better than uniform
+        let gen = AttnStatsGen::paper_like(128, 32);
+        let mut rng = Rng::new(4);
+        let mut cover = 0.0f64;
+        for _ in 0..20 {
+            let (q, k, _) = gen.sample(&mut rng);
+            let scale = 1.0 / (32.0f32).sqrt();
+            let logits: Vec<f32> = (0..128)
+                .map(|t| crate::sparse::select::dot(&q, &k[t * 32..(t + 1) * 32]) * scale)
+                .collect();
+            let mask = vec![true; 128];
+            let sm = crate::sparse::select::softmax_masked(&logits, &mask);
+            let top = crate::sparse::select::topk_mask_heap(&sm, 16);
+            cover += sm
+                .iter()
+                .zip(&top)
+                .filter(|(_, &m)| m)
+                .map(|(s, _)| *s as f64)
+                .sum::<f64>();
+        }
+        cover /= 20.0;
+        assert!(cover > 0.5, "top-16/128 coverage {cover} too low");
+    }
+}

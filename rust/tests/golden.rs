@@ -1,0 +1,62 @@
+//! Integration: rust PJRT execution of every AOT artifact reproduces the
+//! jax outputs recorded in golden.bin (the python<->rust seam).
+//!
+//! Requires `make artifacts` to have populated ../artifacts.
+
+use instinfer::runtime::{golden, Runtime};
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../artifacts")
+}
+
+fn runtime() -> Runtime {
+    Runtime::open(artifacts_dir()).expect("run `make artifacts` before cargo test")
+}
+
+#[test]
+fn golden_all_executables() {
+    let rt = runtime();
+    let reports = golden::check_all(&rt, 2e-4).expect("golden mismatch");
+    assert_eq!(reports.len(), rt.manifest.golden.len());
+    assert!(reports.len() >= 8, "expected >= 8 golden records");
+    for r in &reports {
+        println!("golden {}: max_abs_err={:.2e} ({} outputs)", r.exe, r.max_abs_err, r.outputs);
+    }
+}
+
+#[test]
+fn manifest_shape_sanity() {
+    let rt = runtime();
+    let m = &rt.manifest.model;
+    assert_eq!(m.d_model, m.n_heads * m.d_head);
+    assert_eq!(rt.manifest.bucket_for(1), 1);
+    assert_eq!(rt.manifest.bucket_for(3), 4);
+    assert_eq!(rt.manifest.bucket_for(100), *rt.manifest.batch_buckets.last().unwrap());
+    // every executable has every bucket
+    for (name, exe) in &rt.manifest.executables {
+        for b in &rt.manifest.batch_buckets {
+            assert!(exe.buckets.contains_key(b), "{name} missing bucket {b}");
+        }
+    }
+}
+
+#[test]
+fn call_shape_validation_errors() {
+    let rt = runtime();
+    // wrong input shape must be rejected with a useful message
+    let bad = instinfer::runtime::HostTensor::zeros_f32(vec![1, 3]);
+    let err = rt.call("qkv_proj", 1, 0, &[bad]).unwrap_err().to_string();
+    assert!(err.contains("shape"), "{err}");
+    // too few inputs
+    let err = rt.call("attn_dense", 1, 0, &[]).unwrap_err().to_string();
+    assert!(err.contains("missing input"), "{err}");
+}
+
+#[test]
+fn weight_host_roundtrip() {
+    let rt = runtime();
+    let w = rt.weight_host("ln_f_g").unwrap();
+    assert_eq!(w.dims, vec![rt.manifest.model.d_model]);
+    // ln gains initialise to 1.0
+    assert!(w.as_f32().unwrap().iter().all(|&x| x == 1.0));
+}
