@@ -24,7 +24,12 @@ pub struct AccuracyPoint {
 }
 
 /// Mean relative L2 error of each method vs dense over `trials` heads.
-pub fn sweep(gen: &AttnStatsGen, compressions: &[usize], trials: usize, seed: u64) -> Vec<AccuracyPoint> {
+pub fn sweep(
+    gen: &AttnStatsGen,
+    compressions: &[usize],
+    trials: usize,
+    seed: u64,
+) -> Vec<AccuracyPoint> {
     let (s, d) = (gen.s, gen.d);
     let mut out = Vec::new();
     for &c in compressions {

@@ -293,7 +293,13 @@ pub fn table1() -> Table {
         ]);
     }
     let a = resources::AVAILABLE;
-    t.row(vec!["Available".into(), eng(a.lut_k), eng(a.ff_k), eng(a.bram_tiles), a.dsp.to_string()]);
+    t.row(vec![
+        "Available".into(),
+        eng(a.lut_k),
+        eng(a.ff_k),
+        eng(a.bram_tiles),
+        a.dsp.to_string(),
+    ]);
     let (lut, ff, bram, dsp) = resources::utilisation();
     t.row(vec![
         "Percent(%)".into(),

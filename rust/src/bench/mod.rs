@@ -10,14 +10,19 @@ use crate::util::table::Table;
 
 /// All paper targets in order; returns rendered tables.
 pub fn run_all() -> Vec<String> {
-    let mut out = Vec::new();
-    for (name, f) in registry() {
-        let t = f();
-        println!();
-        t.print();
-        out.push(format!("[{name}]\n{}", t.render()));
-    }
-    out
+    run_all_tables()
+        .into_iter()
+        .map(|(name, t)| {
+            println!();
+            t.print();
+            format!("[{name}]\n{}", t.render())
+        })
+        .collect()
+}
+
+/// All paper targets in order as structured tables (JSON dumps, CI).
+pub fn run_all_tables() -> Vec<(&'static str, Table)> {
+    registry().into_iter().map(|(n, f)| (n, f())).collect()
 }
 
 type BenchFn = fn() -> Table;

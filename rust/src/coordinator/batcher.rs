@@ -1,6 +1,10 @@
 //! Offline batch former: groups queued requests into decode batches sized
 //! to the AOT batch buckets (the throughput-oriented policy of the paper's
 //! offline setting — fill the largest bucket that has work).
+//!
+//! This is the drain-the-queue baseline: a batch, once formed, runs to
+//! completion.  Online serving goes through [`super::scheduler`] instead,
+//! where batch membership is revisited every engine step.
 
 use crate::workload::Request;
 use std::collections::VecDeque;

@@ -287,7 +287,8 @@ impl InferenceEngine {
             let attn = match self.cfg.backend {
                 AttnBackend::Csd(mode) => {
                     let t1 = Instant::now();
-                    let a = self.csd_attention(seqs, layer as u16, &q, &k, &v, mode, bucket, &mut step_done)?;
+                    let lw = layer as u16;
+                    let a = self.csd_attention(seqs, lw, &q, &k, &v, mode, bucket, &mut step_done)?;
                     self.metrics.csd_wall_s += t1.elapsed().as_secs_f64();
                     a
                 }
@@ -309,8 +310,19 @@ impl InferenceEngine {
             self.metrics.tokens_generated += 1;
         }
         self.metrics.decode_steps += 1;
+        self.metrics.step_occupancy.push(b as u32);
         self.metrics.gpu_wall_s += t0.elapsed().as_secs_f64();
         Ok(())
+    }
+
+    /// Smallest AOT batch bucket that fits `n` live sequences.
+    pub fn bucket_for(&self, n: usize) -> usize {
+        self.rt.manifest.bucket_for(n)
+    }
+
+    /// Largest AOT batch bucket — the hard cap on per-step batch size.
+    pub fn max_bucket(&self) -> usize {
+        self.rt.manifest.batch_buckets.last().copied().unwrap_or(1)
     }
 
     /// In-storage attention: write this token's k/v, then attend (the new
@@ -428,7 +440,8 @@ impl InferenceEngine {
     pub fn free_sequence(&mut self, seq: &Sequence) -> Result<()> {
         if matches!(self.cfg.backend, AttnBackend::Csd(_)) {
             for c in 0..self.csds.len() {
-                let comp = self.csds[c].submit(CsdCommand::FreeSlot { slot: seq.slot }, self.sim_now)?;
+                let comp =
+                    self.csds[c].submit(CsdCommand::FreeSlot { slot: seq.slot }, self.sim_now)?;
                 self.sim_now = self.sim_now.max(comp.done);
             }
         }

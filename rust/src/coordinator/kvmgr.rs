@@ -1,14 +1,40 @@
 //! Sequence-slot management: allocates KV slots (the unit the FTL maps),
 //! enforces a capacity bound, and reclaims on completion.
+//!
+//! The continuous-batching scheduler adds two lifecycle refinements:
+//!
+//! * **reservation** — a slot can be held (`reserve`) before the owning
+//!   request is actually prefilled, then bound (`commit`) or returned
+//!   (`cancel`).  Admission control reserves during the planning half of
+//!   a step so concurrent decisions never hand one slot to two requests.
+//! * **suspension** — a preempted sequence keeps its slot (its KV pages
+//!   stay resident on flash) but leaves the live set; `resume` brings it
+//!   back without re-prefilling.  `release` works from either state.
+//!
+//! Accounting (`SlotStats`) feeds the serve-loop occupancy report.
 
 use anyhow::{bail, Result};
 use std::collections::BTreeSet;
+
+/// Monotone lifecycle counters.
+#[derive(Debug, Default, Clone)]
+pub struct SlotStats {
+    pub allocs: u64,
+    pub releases: u64,
+    pub preemptions: u64,
+    pub resumes: u64,
+    /// max simultaneously held (live + suspended + reserved) slots
+    pub peak_held: usize,
+}
 
 #[derive(Debug)]
 pub struct SlotManager {
     capacity: usize,
     free: BTreeSet<u32>,
+    reserved: BTreeSet<u32>,
     live: BTreeSet<u32>,
+    suspended: BTreeSet<u32>,
+    pub stats: SlotStats,
 }
 
 impl SlotManager {
@@ -16,25 +42,91 @@ impl SlotManager {
         SlotManager {
             capacity,
             free: (0..capacity as u32).collect(),
+            reserved: BTreeSet::new(),
             live: BTreeSet::new(),
+            suspended: BTreeSet::new(),
+            stats: SlotStats::default(),
         }
     }
 
+    fn note_held(&mut self) {
+        let held = self.capacity - self.free.len();
+        self.stats.peak_held = self.stats.peak_held.max(held);
+    }
+
+    /// Take a free slot straight to the live set.
     pub fn alloc(&mut self) -> Result<u32> {
         match self.free.pop_first() {
             Some(s) => {
                 self.live.insert(s);
+                self.stats.allocs += 1;
+                self.note_held();
                 Ok(s)
             }
             None => bail!("no free KV slots (capacity {})", self.capacity),
         }
     }
 
-    pub fn release(&mut self, slot: u32) -> Result<()> {
+    /// Hold a free slot for a request that has not been prefilled yet.
+    pub fn reserve(&mut self) -> Result<u32> {
+        match self.free.pop_first() {
+            Some(s) => {
+                self.reserved.insert(s);
+                self.note_held();
+                Ok(s)
+            }
+            None => bail!("no free KV slots (capacity {})", self.capacity),
+        }
+    }
+
+    /// Bind a reserved slot to an admitted (prefilling) sequence.
+    pub fn commit(&mut self, slot: u32) -> Result<()> {
+        if !self.reserved.remove(&slot) {
+            bail!("commit of non-reserved slot {slot}");
+        }
+        self.live.insert(slot);
+        self.stats.allocs += 1;
+        Ok(())
+    }
+
+    /// Return a reserved slot that was never bound.
+    pub fn cancel(&mut self, slot: u32) -> Result<()> {
+        if !self.reserved.remove(&slot) {
+            bail!("cancel of non-reserved slot {slot}");
+        }
+        self.free.insert(slot);
+        Ok(())
+    }
+
+    /// Preempt: the sequence leaves the live set but keeps its slot (KV
+    /// pages stay on flash for a later `resume`).
+    pub fn suspend(&mut self, slot: u32) -> Result<()> {
         if !self.live.remove(&slot) {
+            bail!("suspend of non-live slot {slot}");
+        }
+        self.suspended.insert(slot);
+        self.stats.preemptions += 1;
+        Ok(())
+    }
+
+    /// Bring a preempted sequence's slot back to the live set.
+    pub fn resume(&mut self, slot: u32) -> Result<()> {
+        if !self.suspended.remove(&slot) {
+            bail!("resume of non-suspended slot {slot}");
+        }
+        self.live.insert(slot);
+        self.stats.resumes += 1;
+        Ok(())
+    }
+
+    /// Free a slot from the live or suspended set (retirement — the
+    /// engine has already issued `FreeSlot` to the CSDs).
+    pub fn release(&mut self, slot: u32) -> Result<()> {
+        if !self.live.remove(&slot) && !self.suspended.remove(&slot) {
             bail!("release of non-live slot {slot}");
         }
         self.free.insert(slot);
+        self.stats.releases += 1;
         Ok(())
     }
 
@@ -42,8 +134,20 @@ impl SlotManager {
         self.live.len()
     }
 
+    pub fn suspended_count(&self) -> usize {
+        self.suspended.len()
+    }
+
+    pub fn reserved_count(&self) -> usize {
+        self.reserved.len()
+    }
+
     pub fn free_count(&self) -> usize {
         self.free.len()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
     }
 }
 
@@ -71,5 +175,42 @@ mod tests {
         let a = m.alloc().unwrap();
         m.release(a).unwrap();
         assert!(m.release(a).is_err());
+    }
+
+    #[test]
+    fn reserve_commit_cancel() {
+        let mut m = SlotManager::new(2);
+        let r = m.reserve().unwrap();
+        assert_eq!(m.reserved_count(), 1);
+        assert_eq!(m.live_count(), 0);
+        // a reserved slot is not live: release/suspend reject it
+        assert!(m.release(r).is_err());
+        assert!(m.suspend(r).is_err());
+        m.commit(r).unwrap();
+        assert_eq!((m.reserved_count(), m.live_count()), (0, 1));
+        let r2 = m.reserve().unwrap();
+        m.cancel(r2).unwrap();
+        assert_eq!(m.free_count(), 1);
+        assert!(m.commit(r2).is_err());
+    }
+
+    #[test]
+    fn suspend_resume_release_accounting() {
+        let mut m = SlotManager::new(2);
+        let a = m.alloc().unwrap();
+        m.suspend(a).unwrap();
+        assert_eq!((m.live_count(), m.suspended_count()), (0, 1));
+        // a suspended slot still occupies capacity
+        let _b = m.alloc().unwrap();
+        assert!(m.alloc().is_err());
+        m.resume(a).unwrap();
+        assert_eq!(m.live_count(), 2);
+        m.suspend(a).unwrap();
+        // retirement straight out of suspension is legal
+        m.release(a).unwrap();
+        assert_eq!(m.free_count(), 1);
+        assert_eq!(m.stats.preemptions, 2);
+        assert_eq!(m.stats.resumes, 1);
+        assert_eq!(m.stats.peak_held, 2);
     }
 }

@@ -3,6 +3,11 @@
 //! The functional plane runs the micro model for real, so the interesting
 //! numbers are split: PJRT wall time (the "GPU"), simulated CSD time (the
 //! DES), and the per-unit breakdown the CSD engines report.
+//!
+//! Continuous batching adds per-step occupancy and request-churn counters
+//! (admissions / retirements / preemptions / resumes) — batch membership
+//! is a per-step decision, so "how full was each step" becomes a
+//! first-class serving metric.
 
 use crate::csd::UnitBreakdown;
 use crate::sim::Time;
@@ -23,6 +28,17 @@ pub struct EngineMetrics {
     pub units: UnitBreakdown,
     /// per-batch latencies (seconds, wall)
     pub batch_latencies: Vec<f64>,
+    // ---- continuous-batching churn ------------------------------------
+    /// sequences admitted into the running batch (chunked prefill done)
+    pub admissions: u64,
+    /// sequences retired mid-flight (finished or context-exhausted)
+    pub retirements: u64,
+    /// sequences preempted to flash (slot kept, seat yielded)
+    pub preemptions: u64,
+    /// preempted sequences brought back into the batch
+    pub resumes: u64,
+    /// batch occupancy of every decode step, in step order
+    pub step_occupancy: Vec<u32>,
 }
 
 impl EngineMetrics {
@@ -32,6 +48,16 @@ impl EngineMetrics {
             0.0
         } else {
             self.tokens_generated as f64 / wall
+        }
+    }
+
+    /// Mean decode-batch occupancy across all steps (0 when no steps ran).
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.step_occupancy.is_empty() {
+            0.0
+        } else {
+            self.step_occupancy.iter().map(|&o| o as f64).sum::<f64>()
+                / self.step_occupancy.len() as f64
         }
     }
 
@@ -49,6 +75,18 @@ impl EngineMetrics {
             self.throughput_tok_per_wall_s(),
         )
     }
+
+    /// One-line serving-churn summary (continuous-batching runs).
+    pub fn churn_report(&self) -> String {
+        format!(
+            "admitted={} retired={} preempted={} resumed={} mean_occupancy={:.2}",
+            self.admissions,
+            self.retirements,
+            self.preemptions,
+            self.resumes,
+            self.mean_occupancy(),
+        )
+    }
 }
 
 #[cfg(test)]
@@ -62,5 +100,14 @@ mod tests {
         let m = EngineMetrics { tokens_generated: 10, gpu_wall_s: 2.0, ..Default::default() };
         assert_eq!(m.throughput_tok_per_wall_s(), 5.0);
         assert!(m.report().contains("tokens=10"));
+    }
+
+    #[test]
+    fn occupancy_mean_over_steps() {
+        let m = EngineMetrics::default();
+        assert_eq!(m.mean_occupancy(), 0.0);
+        let m = EngineMetrics { step_occupancy: vec![2, 4, 6], ..Default::default() };
+        assert!((m.mean_occupancy() - 4.0).abs() < 1e-12);
+        assert!(m.churn_report().contains("mean_occupancy"));
     }
 }

@@ -1,15 +1,18 @@
 //! L3 host control plane (paper Fig. 7, "InstHost"): the rust coordinator
-//! that owns the request lifecycle, batches offline work, schedules the
-//! prefill/decode phases, routes attention heads across CSDs, and manages
-//! KV slots — while the GPU (PJRT artifacts) and the CSDs (in-storage
-//! engines) do all the heavy lifting.  Python never runs here.
+//! that owns the request lifecycle, schedules the prefill/decode phases,
+//! routes attention heads across CSDs, and manages KV slots — while the
+//! GPU (PJRT/native artifacts) and the CSDs (in-storage engines) do all
+//! the heavy lifting.  Python never runs here.
 //!
-//! * [`request`] — request/sequence state machine
-//! * [`batcher`] — offline batch former (bucketed to the AOT batch sizes)
-//! * [`router`]  — attention-head -> CSD assignment (Fig. 17a scaling)
-//! * [`kvmgr`]   — sequence-slot allocation and reclamation
-//! * [`engine`]  — the inference engine gluing PJRT + CSDs per §IV-D
-//! * [`metrics`] — throughput/latency/breakdown accounting
+//! * [`request`]   — request/sequence state machine
+//! * [`batcher`]   — offline batch former (bucketed to the AOT batch
+//!   sizes; the paper's drain-the-queue throughput policy)
+//! * [`scheduler`] — continuous-batching scheduler: per-step admission,
+//!   chunked prefill, mid-flight retirement, priority preemption to flash
+//! * [`router`]    — attention-head -> CSD assignment (Fig. 17a scaling)
+//! * [`kvmgr`]     — sequence-slot allocation, reservation, suspension
+//! * [`engine`]    — the inference engine gluing PJRT + CSDs per §IV-D
+//! * [`metrics`]   — throughput/latency/occupancy/churn accounting
 
 pub mod batcher;
 pub mod engine;
@@ -17,6 +20,7 @@ pub mod kvmgr;
 pub mod metrics;
 pub mod request;
 pub mod router;
+pub mod scheduler;
 
 pub use batcher::OfflineBatcher;
 pub use engine::{EngineConfig, InferenceEngine};
@@ -24,3 +28,7 @@ pub use kvmgr::SlotManager;
 pub use metrics::EngineMetrics;
 pub use request::{Request, RequestPhase, Sequence};
 pub use router::HeadRouter;
+pub use scheduler::{
+    run_closed_loop, run_open_loop, RequestRecord, SchedConfig, Scheduler, ServeReport,
+    StepReport,
+};

@@ -7,6 +7,9 @@ pub enum RequestPhase {
     Queued,
     Prefilling,
     Decoding,
+    /// Preempted out of the running batch; KV stays resident on flash
+    /// under the sequence's slot, so resuming needs no re-prefill.
+    Preempted,
     Finished,
 }
 

@@ -1,0 +1,597 @@
+//! Continuous-batching scheduler: batch membership is a per-step decision.
+//!
+//! The offline flow (`OfflineBatcher` + `InferenceEngine::generate`) forms
+//! a batch once and drains it to completion — stragglers hold the bucket
+//! hostage and arrivals wait for the whole batch.  This scheduler instead
+//! runs an *engine step loop* where every step:
+//!
+//! 1. **retires** finished sequences mid-flight (KV slot + FTL streams
+//!    reclaimed immediately via `FreeSlot`),
+//! 2. **admits** queued requests into free KV slots — new arrivals get a
+//!    chunked prefill (at most `prefill_chunk` per step) interleaved with
+//!    the decode of running sequences,
+//! 3. **preempts** the lowest-priority running sequence when seats are
+//!    exhausted and a strictly higher-priority request waits.  The victim
+//!    parks on flash: its slot and KV pages stay resident, so a later
+//!    `resume` continues decoding with no re-prefill — the payoff of
+//!    flash-resident KV (paper §IV-C),
+//! 4. **decodes** one token for every running sequence.
+//!
+//! Time is the simulated CSD device clock (`engine.sim_now`): arrivals are
+//! stamped on it, admission is gated on it, and the open-loop driver
+//! fast-forwards it across idle gaps — so serving runs are deterministic.
+
+use crate::coordinator::engine::{AttnBackend, InferenceEngine};
+use crate::coordinator::kvmgr::SlotManager;
+use crate::coordinator::metrics::EngineMetrics;
+use crate::coordinator::request::{RequestPhase, Sequence};
+use crate::sim::Time;
+use crate::util::stats::percentile;
+use crate::workload::{Arrival, Request};
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+#[derive(Debug, Clone)]
+pub struct SchedConfig {
+    /// decode seats: max sequences per engine step (clamped to the
+    /// largest AOT batch bucket at runtime)
+    pub max_batch: usize,
+    /// chunked prefill: max new admissions prefilled per step, so a
+    /// burst of arrivals cannot starve running decodes
+    pub prefill_chunk: usize,
+    /// KV slot capacity handed to the [`SlotManager`]
+    pub slots: usize,
+}
+
+impl Default for SchedConfig {
+    fn default() -> Self {
+        SchedConfig { max_batch: 8, prefill_chunk: 4, slots: 64 }
+    }
+}
+
+/// Per-request bookkeeping kept while a request is in flight.
+#[derive(Debug, Clone)]
+struct ReqMeta {
+    priority: u8,
+    arrived_at: Time,
+    admitted_at: Time,
+    first_token_at: Time,
+    preemptions: u32,
+}
+
+/// Lifecycle record of one completed request.
+#[derive(Debug, Clone)]
+pub struct RequestRecord {
+    pub id: u64,
+    pub priority: u8,
+    pub arrived_at: Time,
+    pub admitted_at: Time,
+    pub first_token_at: Time,
+    pub finished_at: Time,
+    pub prompt_len: usize,
+    pub generated: Vec<i32>,
+    pub preemptions: u32,
+    /// admission rejected the request (empty or over-long prompt); no
+    /// tokens were generated and no slot was ever held
+    pub rejected: bool,
+}
+
+/// What one engine step did (for logs and tests).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StepReport {
+    pub admitted: usize,
+    pub resumed: usize,
+    pub preempted: usize,
+    pub retired: usize,
+    /// requests bounced at admission (invalid prompt)
+    pub rejected: usize,
+    /// running sequences decoded this step
+    pub occupancy: usize,
+}
+
+#[derive(Debug, Clone, Copy)]
+enum Cand {
+    /// index into `suspended`
+    Resume(usize),
+    /// index into `queue`
+    Admit(usize),
+}
+
+pub struct Scheduler {
+    cfg: SchedConfig,
+    pub slots: SlotManager,
+    queue: Vec<Arrival>,
+    running: Vec<Sequence>,
+    suspended: Vec<Sequence>,
+    meta: HashMap<u64, ReqMeta>,
+    /// every id ever enqueued (duplicates are rejected even after the
+    /// original retires — records must stay unambiguous)
+    seen_ids: std::collections::BTreeSet<u64>,
+    pub finished: Vec<RequestRecord>,
+    pub steps: u64,
+}
+
+/// Admission order: priority desc, then arrival asc, then id asc.
+fn beats(a: (u8, Time, u64), b: (u8, Time, u64)) -> bool {
+    if a.0 != b.0 {
+        return a.0 > b.0;
+    }
+    if a.1 != b.1 {
+        return a.1 < b.1;
+    }
+    a.2 < b.2
+}
+
+impl Scheduler {
+    pub fn new(cfg: SchedConfig) -> Self {
+        let cfg = SchedConfig {
+            max_batch: cfg.max_batch.max(1),
+            prefill_chunk: cfg.prefill_chunk.max(1),
+            slots: cfg.slots.max(1),
+        };
+        let slots = SlotManager::new(cfg.slots);
+        Scheduler {
+            cfg,
+            slots,
+            queue: Vec::new(),
+            running: Vec::new(),
+            suspended: Vec::new(),
+            meta: HashMap::new(),
+            seen_ids: std::collections::BTreeSet::new(),
+            finished: Vec::new(),
+            steps: 0,
+        }
+    }
+
+    /// Hand a request to the scheduler; it becomes admissible once the
+    /// device clock reaches `a.at`.  Duplicate ids are rejected (records
+    /// are keyed by id).
+    pub fn enqueue(&mut self, a: Arrival) -> Result<()> {
+        if !self.seen_ids.insert(a.req.id) {
+            bail!("duplicate request id {}", a.req.id);
+        }
+        self.meta.insert(
+            a.req.id,
+            ReqMeta {
+                priority: a.priority,
+                arrived_at: a.at,
+                admitted_at: 0.0,
+                first_token_at: 0.0,
+                preemptions: 0,
+            },
+        );
+        self.queue.push(a);
+        Ok(())
+    }
+
+    pub fn queued_count(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn running_count(&self) -> usize {
+        self.running.len()
+    }
+
+    pub fn suspended_count(&self) -> usize {
+        self.suspended.len()
+    }
+
+    /// Nothing queued, running, or parked.
+    pub fn is_idle(&self) -> bool {
+        self.queue.is_empty() && self.running.is_empty() && self.suspended.is_empty()
+    }
+
+    /// Earliest arrival time still waiting in the queue.
+    pub fn earliest_pending(&self) -> Option<Time> {
+        self.queue.iter().map(|a| a.at).fold(None, |acc, t| match acc {
+            Some(b) if b <= t => Some(b),
+            _ => Some(t),
+        })
+    }
+
+    /// Best eligible waiting candidate: parked (resume) and — when a new
+    /// admission is currently possible — arrived queue entries.
+    fn best_eligible(&self, now: Time, can_admit_new: bool) -> Option<(u8, Cand)> {
+        let mut best: Option<((u8, Time, u64), Cand)> = None;
+        for (i, s) in self.suspended.iter().enumerate() {
+            let m = &self.meta[&s.req.id];
+            let key = (m.priority, m.arrived_at, s.req.id);
+            if best.is_none() || beats(key, best.as_ref().unwrap().0) {
+                best = Some((key, Cand::Resume(i)));
+            }
+        }
+        if can_admit_new {
+            for (i, a) in self.queue.iter().enumerate() {
+                if a.at > now {
+                    continue;
+                }
+                let key = (a.priority, a.at, a.req.id);
+                if best.is_none() || beats(key, best.as_ref().unwrap().0) {
+                    best = Some((key, Cand::Admit(i)));
+                }
+            }
+        }
+        best.map(|(key, c)| (key.0, c))
+    }
+
+    /// Weakest running sequence — the preemption victim — but only if it
+    /// is strictly weaker than `than_priority`.  Lowest priority loses;
+    /// among equals the youngest (latest arrival) yields first.  "a is
+    /// weaker than b" is exactly `beats(b, a)`, so the admission order
+    /// and the victim order can never diverge.
+    fn weakest_running(&self, than_priority: u8) -> Option<usize> {
+        let mut worst: Option<((u8, Time, u64), usize)> = None;
+        for (i, s) in self.running.iter().enumerate() {
+            let m = &self.meta[&s.req.id];
+            let key = (m.priority, m.arrived_at, s.req.id);
+            if worst.is_none() || beats(worst.as_ref().unwrap().0, key) {
+                worst = Some((key, i));
+            }
+        }
+        match worst {
+            Some(((p, _, _), i)) if p < than_priority => Some(i),
+            _ => None,
+        }
+    }
+
+    /// One engine step: retire, (resume | admit | preempt), chunked
+    /// prefill for the admitted cohort, then one decode step.
+    pub fn step(&mut self, engine: &mut InferenceEngine) -> Result<StepReport> {
+        // The GpuArtifact ablation keeps its host KV cache indexed by
+        // batch position, which cannot survive per-step membership
+        // changes (retire/admit reorder the batch); the CSD backend keys
+        // KV streams by slot and is membership-agnostic.
+        if matches!(engine.cfg.backend, AttnBackend::GpuArtifact { .. }) {
+            bail!("continuous batching requires the in-storage (Csd) attention backend");
+        }
+        let mut rep = StepReport::default();
+        self.steps += 1;
+        rep.retired += self.retire(engine)?;
+
+        let now = engine.sim_now;
+        let seats = self.cfg.max_batch.min(engine.max_bucket());
+        let mut cohort: Vec<Sequence> = Vec::new();
+
+        // ---- planning: place candidates best-first --------------------
+        // Terminates: every iteration either consumes a waiting candidate
+        // or replaces a strictly lower-priority runner (bounded).
+        loop {
+            let can_admit_new =
+                cohort.len() < self.cfg.prefill_chunk && self.slots.free_count() > 0;
+            let Some((prio, cand)) = self.best_eligible(now, can_admit_new) else {
+                break;
+            };
+            // reject invalid requests before they can cost a victim its
+            // seat (and instead of letting engine.prefill abort the run);
+            // max_new_tokens == 0 is invalid because prefill always emits
+            // one token
+            if let Cand::Admit(i) = cand {
+                let sp = engine.rt.manifest.model.prefill_seq;
+                let bad = {
+                    let a = &self.queue[i];
+                    a.req.prompt.is_empty()
+                        || a.req.prompt.len() > sp
+                        || a.req.max_new_tokens == 0
+                };
+                if bad {
+                    let a = self.queue.remove(i);
+                    self.meta.remove(&a.req.id);
+                    self.finished.push(RequestRecord {
+                        id: a.req.id,
+                        priority: a.priority,
+                        arrived_at: a.at,
+                        admitted_at: 0.0,
+                        first_token_at: 0.0,
+                        finished_at: now,
+                        prompt_len: a.req.prompt.len(),
+                        generated: Vec::new(),
+                        preemptions: 0,
+                        rejected: true,
+                    });
+                    rep.rejected += 1;
+                    continue;
+                }
+            }
+            if self.running.len() + cohort.len() >= seats {
+                let Some(vi) = self.weakest_running(prio) else {
+                    break;
+                };
+                let mut victim = self.running.swap_remove(vi);
+                victim.phase = RequestPhase::Preempted;
+                self.slots.suspend(victim.slot)?;
+                if let Some(m) = self.meta.get_mut(&victim.req.id) {
+                    m.preemptions += 1;
+                }
+                engine.metrics.preemptions += 1;
+                rep.preempted += 1;
+                self.suspended.push(victim);
+            }
+            match cand {
+                Cand::Resume(i) => {
+                    let mut s = self.suspended.remove(i);
+                    self.slots.resume(s.slot)?;
+                    s.phase = RequestPhase::Decoding;
+                    engine.metrics.resumes += 1;
+                    rep.resumed += 1;
+                    self.running.push(s);
+                }
+                Cand::Admit(i) => {
+                    let a = self.queue.remove(i);
+                    let slot = self.slots.reserve()?;
+                    let mut s = Sequence::new(a.req, slot);
+                    s.phase = RequestPhase::Prefilling;
+                    cohort.push(s);
+                }
+            }
+        }
+
+        // ---- chunked prefill for the admitted cohort ------------------
+        if !cohort.is_empty() {
+            for s in &cohort {
+                self.slots.commit(s.slot)?;
+            }
+            let bucket = engine.bucket_for(cohort.len());
+            engine.prefill(&mut cohort, bucket)?;
+            let first_token_at = engine.sim_now;
+            for s in &cohort {
+                if let Some(m) = self.meta.get_mut(&s.req.id) {
+                    m.admitted_at = now;
+                    m.first_token_at = first_token_at;
+                }
+            }
+            engine.metrics.admissions += cohort.len() as u64;
+            rep.admitted = cohort.len();
+            self.running.append(&mut cohort);
+        }
+
+        // prefill alone can finish a request (max_new_tokens == 1):
+        // retire before decoding so it never gets an extra token
+        rep.retired += self.retire(engine)?;
+
+        // ---- one decode step over the live batch ----------------------
+        if !self.running.is_empty() {
+            let bucket = engine.bucket_for(self.running.len());
+            engine.decode_step(&mut self.running, bucket)?;
+        }
+        rep.occupancy = self.running.len();
+        rep.retired += self.retire(engine)?;
+        Ok(rep)
+    }
+
+    /// Drop finished (or context-exhausted) sequences from the batch,
+    /// freeing their KV slot and FTL streams immediately.
+    fn retire(&mut self, engine: &mut InferenceEngine) -> Result<usize> {
+        let max_seq = engine.rt.manifest.model.max_seq;
+        let mut retired = 0;
+        let mut i = 0;
+        while i < self.running.len() {
+            let done = {
+                let s = &self.running[i];
+                s.is_done() || s.next_pos() >= max_seq
+            };
+            if !done {
+                i += 1;
+                continue;
+            }
+            let mut s = self.running.swap_remove(i);
+            s.finish();
+            engine.free_sequence(&s)?;
+            self.slots.release(s.slot)?;
+            engine.metrics.requests_done += 1;
+            engine.metrics.retirements += 1;
+            let m = self.meta.remove(&s.req.id).unwrap_or_else(|| ReqMeta {
+                priority: 0,
+                arrived_at: 0.0,
+                admitted_at: 0.0,
+                first_token_at: 0.0,
+                preemptions: 0,
+            });
+            self.finished.push(RequestRecord {
+                id: s.req.id,
+                priority: m.priority,
+                arrived_at: m.arrived_at,
+                admitted_at: m.admitted_at,
+                first_token_at: m.first_token_at,
+                finished_at: engine.sim_now,
+                prompt_len: s.req.prompt.len(),
+                generated: s.generated,
+                preemptions: m.preemptions,
+                rejected: false,
+            });
+            retired += 1;
+        }
+        Ok(retired)
+    }
+}
+
+/// Summary of a full serving run.
+#[derive(Debug)]
+pub struct ServeReport {
+    pub records: Vec<RequestRecord>,
+    pub steps: u64,
+    pub preemptions: u64,
+    /// simulated device time at the end of the run
+    pub sim_end: Time,
+}
+
+impl ServeReport {
+    fn percentiles(samples: Vec<f64>) -> Option<[f64; 3]> {
+        if samples.is_empty() {
+            return None;
+        }
+        let mut s = samples;
+        Some([
+            percentile(&mut s, 50.0),
+            percentile(&mut s, 95.0),
+            percentile(&mut s, 99.0),
+        ])
+    }
+
+    /// Records of requests that were actually served (not rejected).
+    fn served(&self) -> impl Iterator<Item = &RequestRecord> {
+        self.records.iter().filter(|r| !r.rejected)
+    }
+
+    /// p50/p95/p99 of request latency (arrival -> retirement, sim time).
+    /// Rejected requests are excluded — they never held a seat.
+    pub fn latency_percentiles(&self) -> Option<[f64; 3]> {
+        Self::percentiles(
+            self.served()
+                .map(|r| (r.finished_at - r.arrived_at).max(0.0))
+                .collect(),
+        )
+    }
+
+    /// p50/p95/p99 of time-to-first-token (arrival -> prefill done),
+    /// over served requests only.
+    pub fn ttft_percentiles(&self) -> Option<[f64; 3]> {
+        Self::percentiles(
+            self.served()
+                .map(|r| (r.first_token_at - r.arrived_at).max(0.0))
+                .collect(),
+        )
+    }
+
+    pub fn total_generated(&self) -> u64 {
+        self.records.iter().map(|r| r.generated.len() as u64).sum()
+    }
+
+    pub fn rejected_count(&self) -> usize {
+        self.records.iter().filter(|r| r.rejected).count()
+    }
+
+    pub fn summary(&self, metrics: &EngineMetrics) -> String {
+        let rejected = self.rejected_count();
+        let mut out = format!(
+            "served {} requests in {} steps — {} tokens, sim_end {:.4}s, {}",
+            self.records.len() - rejected,
+            self.steps,
+            self.total_generated(),
+            self.sim_end,
+            metrics.churn_report(),
+        );
+        if rejected > 0 {
+            out.push_str(&format!("\nrejected {rejected} invalid requests at admission"));
+        }
+        if let Some([p50, p95, p99]) = self.latency_percentiles() {
+            out.push_str(&format!(
+                "\nlatency  (sim) p50 {p50:.4}s  p95 {p95:.4}s  p99 {p99:.4}s"
+            ));
+        }
+        if let Some([p50, p95, p99]) = self.ttft_percentiles() {
+            out.push_str(&format!(
+                "\nTTFT     (sim) p50 {p50:.4}s  p95 {p95:.4}s  p99 {p99:.4}s"
+            ));
+        }
+        out
+    }
+}
+
+/// Drive the scheduler open-loop until every enqueued arrival retires.
+/// Fast-forwards the simulated clock across idle gaps; fully
+/// deterministic for a fixed arrival trace.
+pub fn run_open_loop(
+    engine: &mut InferenceEngine,
+    arrivals: Vec<Arrival>,
+    cfg: SchedConfig,
+) -> Result<ServeReport> {
+    let mut sched = Scheduler::new(cfg);
+    for a in arrivals {
+        sched.enqueue(a)?;
+    }
+    let mut stalled_steps = 0u64;
+    while !sched.is_idle() {
+        if sched.running.is_empty() && sched.suspended.is_empty() {
+            if let Some(t) = sched.earliest_pending() {
+                if t > engine.sim_now {
+                    engine.sim_now = t;
+                }
+            }
+        }
+        let rep = sched.step(engine)?;
+        let progressed = rep.occupancy > 0
+            || rep.admitted > 0
+            || rep.resumed > 0
+            || rep.retired > 0
+            || rep.rejected > 0;
+        if !progressed {
+            stalled_steps += 1;
+            if stalled_steps > 3 {
+                bail!(
+                    "scheduler stalled: {} queued, {} suspended, {} free slots",
+                    sched.queued_count(),
+                    sched.suspended_count(),
+                    sched.slots.free_count()
+                );
+            }
+        } else {
+            stalled_steps = 0;
+        }
+    }
+    Ok(ServeReport {
+        records: std::mem::take(&mut sched.finished),
+        steps: sched.steps,
+        preemptions: sched.slots.stats.preemptions,
+        sim_end: engine.sim_now,
+    })
+}
+
+/// Closed-loop convenience: every request is present at t=0 (the
+/// continuous analogue of the offline drain).
+pub fn run_closed_loop(
+    engine: &mut InferenceEngine,
+    reqs: Vec<Request>,
+    cfg: SchedConfig,
+) -> Result<ServeReport> {
+    let at = engine.sim_now;
+    let arrivals = reqs
+        .into_iter()
+        .map(|req| Arrival { req, at, priority: 0 })
+        .collect();
+    run_open_loop(engine, arrivals, cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admission_order_is_priority_then_fifo() {
+        assert!(beats((1, 5.0, 9), (0, 1.0, 1)), "higher priority wins");
+        assert!(beats((0, 1.0, 9), (0, 2.0, 1)), "earlier arrival wins");
+        assert!(beats((0, 1.0, 1), (0, 1.0, 2)), "lower id breaks ties");
+        assert!(!beats((0, 1.0, 2), (0, 1.0, 1)));
+    }
+
+    #[test]
+    fn scheduler_starts_idle_and_tracks_queue() {
+        let mut s = Scheduler::new(SchedConfig::default());
+        assert!(s.is_idle());
+        s.enqueue(Arrival {
+            req: Request { id: 1, prompt: vec![1, 2], max_new_tokens: 2 },
+            at: 0.5,
+            priority: 1,
+        })
+        .unwrap();
+        assert!(!s.is_idle());
+        assert_eq!(s.queued_count(), 1);
+        assert_eq!(s.earliest_pending(), Some(0.5));
+        // not yet arrived at t=0, so nothing is eligible
+        assert!(s.best_eligible(0.0, true).is_none());
+        let got = s.best_eligible(1.0, true);
+        assert!(matches!(got, Some((1, Cand::Admit(0)))));
+    }
+
+    #[test]
+    fn duplicate_ids_rejected() {
+        let mut s = Scheduler::new(SchedConfig::default());
+        let a = Arrival {
+            req: Request { id: 7, prompt: vec![1], max_new_tokens: 1 },
+            at: 0.0,
+            priority: 0,
+        };
+        s.enqueue(a.clone()).unwrap();
+        let err = s.enqueue(a).unwrap_err().to_string();
+        assert!(err.contains("duplicate request id"), "{err}");
+    }
+}

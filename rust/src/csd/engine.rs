@@ -259,7 +259,8 @@ impl InstCsd {
         // NFC filter pass over the fetched pages
         let egroups: std::collections::BTreeSet<usize> =
             channels.iter().map(|c| c / self.ftl.cfg.m).collect();
-        let fetched_bytes = egroups.len() * len.div_ceil(self.ftl.tokens_per_emb_page()) * page_bytes;
+        let t_emb = self.ftl.tokens_per_emb_page();
+        let fetched_bytes = egroups.len() * len.div_ceil(t_emb) * page_bytes;
         let t_filt1 = self.filter_time(fetched_bytes);
         bd.nfc_filter += t_filt1;
 

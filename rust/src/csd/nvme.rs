@@ -17,7 +17,14 @@ pub enum CsdCommand {
     /// store one decode token's K/V rows for this CSD's heads
     WriteToken { slot: u32, layer: u16, heads: Vec<u16>, k: Vec<f32>, v: Vec<f32> },
     /// store a prefill layer for this CSD's heads (layer-wise shipping)
-    WritePrefillLayer { slot: u32, layer: u16, heads: Vec<u16>, s_len: usize, k: Vec<f32>, v: Vec<f32> },
+    WritePrefillLayer {
+        slot: u32,
+        layer: u16,
+        heads: Vec<u16>,
+        s_len: usize,
+        k: Vec<f32>,
+        v: Vec<f32>,
+    },
     /// compute decode attention for this CSD's heads of a layer
     Attention { slot: u32, layer: u16, heads: Vec<u16>, q: Vec<f32>, len: usize, mode: AttnMode },
     /// drop a finished sequence

@@ -16,7 +16,13 @@ pub struct UnitResources {
 
 /// Table I rows (paper §V-B).
 pub const UNITS: &[UnitResources] = &[
-    UnitResources { name: "Attention Kernel", lut_k: 99.2, ff_k: 207.3, bram_tiles: 96.0, dsp: 768 },
+    UnitResources {
+        name: "Attention Kernel",
+        lut_k: 99.2,
+        ff_k: 207.3,
+        bram_tiles: 96.0,
+        dsp: 768,
+    },
     UnitResources { name: "Argtopk", lut_k: 5.83, ff_k: 3.87, bram_tiles: 24.0, dsp: 0 },
     UnitResources { name: "NFC", lut_k: 58.332, ff_k: 27.8, bram_tiles: 96.0, dsp: 0 },
     UnitResources { name: "NVMe Controller", lut_k: 7.99, ff_k: 12.45, bram_tiles: 27.5, dsp: 0 },

@@ -125,7 +125,8 @@ impl KvFtl {
         cfg.validate(&spec)?;
         let array = FlashArray::new(spec);
         let geo = array.geo;
-        let mut free: Vec<VecDeque<BlockAddr>> = (0..spec.channels).map(|_| VecDeque::new()).collect();
+        let mut free: Vec<VecDeque<BlockAddr>> =
+            (0..spec.channels).map(|_| VecDeque::new()).collect();
         for b in 0..geo.total_blocks() {
             let ba = BlockAddr(b);
             free[geo.block_channel(ba)].push_back(ba);
@@ -307,8 +308,10 @@ impl KvFtl {
             // group land on different channels so they can stream in parallel
             let ch_k = (key.head as usize + group as usize) % chans;
             let ch_v = (key.head as usize + group as usize + 1) % chans;
-            let t1 = self.stage_page(PageTag::Token { key, kind: KvKind::K, group }, ch_k, &kpage, at)?;
-            let t2 = self.stage_page(PageTag::Token { key, kind: KvKind::V, group }, ch_v, &vpage, at)?;
+            let tag_k = PageTag::Token { key, kind: KvKind::K, group };
+            let t1 = self.stage_page(tag_k, ch_k, &kpage, at)?;
+            let tag_v = PageTag::Token { key, kind: KvKind::V, group };
+            let t2 = self.stage_page(tag_v, ch_v, &vpage, at)?;
             done = done.max(t1).max(t2);
             let buf = self.streams.get_mut(&key).unwrap();
             buf.k_tail.clear();
@@ -341,7 +344,9 @@ impl KvFtl {
         let s = k_rows.len() / d;
         let mut t = at;
         for i in 0..s {
-            t = t.max(self.append_token(key, &k_rows[i * d..(i + 1) * d], &v_rows[i * d..(i + 1) * d], at)?);
+            let kr = &k_rows[i * d..(i + 1) * d];
+            let vr = &v_rows[i * d..(i + 1) * d];
+            t = t.max(self.append_token(key, kr, vr, at)?);
         }
         Ok(t)
     }

@@ -1,9 +1,11 @@
 //! InstInfer CLI — the leader entrypoint.
 //!
 //! Subcommands (hand-rolled arg parsing; no clap in the offline crate set):
-//!   serve    run the functional engine on a synthetic offline workload
+//!   serve    run the functional engine through the continuous-batching
+//!            scheduler — closed-loop by default, open-loop Poisson
+//!            arrivals with --arrival-rate
 //!   bench    regenerate paper figures/tables (fig4..fig17b, table1,
-//!            ablate-*, or `all`)
+//!            ablate-*, or `all`); --json FILE dumps machine-readable rows
 //!   golden   validate every AOT artifact against the jax golden record
 //!   inspect  dump the artifact manifest summary
 
@@ -11,10 +13,12 @@ use anyhow::{bail, Context, Result};
 use instinfer::bench;
 use instinfer::config::model::SparsityParams;
 use instinfer::coordinator::{
-    EngineConfig, InferenceEngine, OfflineBatcher, Sequence, SlotManager,
+    run_closed_loop, run_open_loop, EngineConfig, InferenceEngine, SchedConfig,
 };
 use instinfer::runtime::{golden, Runtime};
-use instinfer::workload::{LengthProfile, WorkloadGen};
+use instinfer::util::json::Json;
+use instinfer::util::table::Table;
+use instinfer::workload::{ArrivalGen, LengthProfile, Request, WorkloadGen};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -31,10 +35,15 @@ fn usage() -> ! {
          commands:\n\
          \x20 serve [--requests N] [--batch B] [--gen T] [--csds K] [--sparse]\n\
          \x20       [--profile fixed|chat|qa] [--artifacts DIR]\n\
-         \x20 bench <target|all>      regenerate paper figures (fig4 fig5 fig6\n\
-         \x20       fig11 fig12 fig13 fig14 fig15 fig16 fig17a fig17b table1\n\
-         \x20       ablate-group ablate-dualk ablate-pipeline ablate-p2p\n\
-         \x20       ablate-placement)\n\
+         \x20       [--arrival-rate R] [--prefill-chunk C] [--slots S]\n\
+         \x20       [--hi-frac F]\n\
+         \x20       continuous batching; --arrival-rate R runs open-loop\n\
+         \x20       Poisson arrivals (R req/s on the simulated clock),\n\
+         \x20       otherwise all requests are present at t=0\n\
+         \x20 bench <target|all> [--json FILE]   regenerate paper figures\n\
+         \x20       (fig4 fig5 fig6 fig11 fig12 fig13 fig14 fig15 fig16\n\
+         \x20       fig17a fig17b table1 ablate-group ablate-dualk\n\
+         \x20       ablate-pipeline ablate-p2p ablate-placement)\n\
          \x20 golden [--artifacts DIR] [--tol T]\n\
          \x20 inspect [--artifacts DIR]"
     );
@@ -71,6 +80,13 @@ fn serve(args: &[String]) -> Result<()> {
     let batch: usize = flag_value(args, "--batch").unwrap_or("4").parse()?;
     let gen_toks: usize = flag_value(args, "--gen").unwrap_or("8").parse()?;
     let n_csds: usize = flag_value(args, "--csds").unwrap_or("2").parse()?;
+    let prefill_chunk: usize = flag_value(args, "--prefill-chunk").unwrap_or("4").parse()?;
+    let slot_cap: usize = flag_value(args, "--slots").unwrap_or("64").parse()?;
+    let hi_frac: f64 = flag_value(args, "--hi-frac").unwrap_or("0").parse()?;
+    let arrival_rate: Option<f64> = match flag_value(args, "--arrival-rate") {
+        Some(v) => Some(v.parse().context("--arrival-rate")?),
+        None => None,
+    };
     let profile = match flag_value(args, "--profile").unwrap_or("fixed") {
         "fixed" => LengthProfile::Fixed,
         "chat" => LengthProfile::Chat,
@@ -81,47 +97,68 @@ fn serve(args: &[String]) -> Result<()> {
     let rt = Runtime::open(artifacts_dir(args)).context("opening artifacts")?;
     println!("platform: {}", rt.platform());
     let compiled = rt.warmup()?;
-    println!("compiled {compiled} executables");
+    println!("prepared {compiled} executables");
     let meta = rt.manifest.model.clone();
     let mut cfg = EngineConfig::micro(n_csds);
     if has_flag(args, "--sparse") {
         cfg = cfg.sparse(SparsityParams { r: meta.r, k: meta.k, m: meta.m, n: meta.n });
     }
-    let buckets = rt.manifest.batch_buckets.clone();
     let mut engine = InferenceEngine::new(rt, cfg)?;
 
     let mut wg = WorkloadGen::new(42, meta.vocab, meta.max_seq, profile,
                                   meta.prefill_seq / 2, gen_toks);
-    let mut batcher = OfflineBatcher::new(buckets, batch);
-    for r in wg.batch(n_req) {
-        let mut r = r;
+    let sanitize = |mut r: Request| -> Request {
         r.prompt.truncate(meta.prefill_seq);
-        r.max_new_tokens = r.max_new_tokens.min(gen_toks);
-        batcher.push(r);
-    }
-    let mut slots = SlotManager::new(64);
+        r.max_new_tokens = r.max_new_tokens.min(gen_toks).max(1);
+        r
+    };
+    let scfg = SchedConfig { max_batch: batch, prefill_chunk, slots: slot_cap };
     let t0 = std::time::Instant::now();
-    while let Some((reqs, bucket)) = batcher.next_batch() {
-        let seqs: Vec<Sequence> = reqs
-            .into_iter()
-            .map(|r| Ok(Sequence::new(r, slots.alloc()?)))
-            .collect::<Result<_>>()?;
-        let done = engine.generate(seqs, bucket)?;
-        for s in &done {
-            println!(
-                "req {:>3} slot {:>2} prompt {:>3} -> {:?}",
-                s.req.id, s.slot, s.req.prompt.len(), s.generated
-            );
-            slots.release(s.slot)?;
+    let report = match arrival_rate {
+        Some(rate) => {
+            if rate <= 0.0 {
+                bail!("--arrival-rate must be > 0");
+            }
+            let mut ag = ArrivalGen::new(wg, 43, rate).with_high_priority_fraction(hi_frac);
+            let mut arrivals = ag.take(n_req);
+            for a in arrivals.iter_mut() {
+                a.req = sanitize(a.req.clone());
+            }
+            println!("open loop: {n_req} requests at {rate} req/s (sim clock)\n");
+            run_open_loop(&mut engine, arrivals, scfg)?
         }
-    }
+        None => {
+            let reqs: Vec<Request> = wg.batch(n_req).into_iter().map(sanitize).collect();
+            println!("closed loop: {n_req} requests at t=0\n");
+            run_closed_loop(&mut engine, reqs, scfg)?
+        }
+    };
     let wall = t0.elapsed().as_secs_f64();
-    println!("\n{}", engine.metrics.report());
+
+    let mut records = report.records.clone();
+    records.sort_by_key(|r| r.id);
+    for r in &records {
+        println!(
+            "req {:>3} prio {} prompt {:>3} gen {:>3} preempt {} \
+             arrive {:.4}s first-tok {:.4}s done {:.4}s{}",
+            r.id,
+            r.priority,
+            r.prompt_len,
+            r.generated.len(),
+            r.preemptions,
+            r.arrived_at,
+            r.first_token_at,
+            r.finished_at,
+            if r.rejected { "  REJECTED (invalid prompt)" } else { "" },
+        );
+    }
+    println!("\n{}", report.summary(&engine.metrics));
+    println!("{}", engine.metrics.report());
     println!(
         "wall {:.2}s | simulated CSD device time {:.4}s | e2e {:.1} tok/s",
         wall,
         engine.sim_now,
-        engine.metrics.tokens_generated as f64 / wall
+        engine.metrics.tokens_generated as f64 / wall.max(1e-9)
     );
     let u = &engine.metrics.units;
     if u.total() > 0.0 {
@@ -139,13 +176,58 @@ fn serve(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+fn write_bench_json(path: &str, tables: &[(&str, Table)]) -> Result<()> {
+    let mut items = Vec::new();
+    for (name, t) in tables {
+        if let Json::Obj(mut m) = t.to_json() {
+            m.insert("target".to_string(), Json::Str(name.to_string()));
+            items.push(Json::Obj(m));
+        }
+    }
+    let doc = Json::Arr(items);
+    std::fs::write(path, format!("{doc}\n")).with_context(|| format!("writing {path}"))?;
+    println!("wrote {path}");
+    Ok(())
+}
+
 fn bench_cmd(args: &[String]) -> Result<()> {
-    match args.first().map(|s| s.as_str()) {
+    let mut target: Option<&str> = None;
+    let mut json_path: Option<&str> = None;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--json" => {
+                json_path = args.get(i + 1).map(|s| s.as_str());
+                if json_path.is_none() {
+                    bail!("--json needs a file path");
+                }
+                i += 2;
+            }
+            t if target.is_none() => {
+                target = Some(t);
+                i += 1;
+            }
+            other => bail!("unexpected bench argument {other:?}"),
+        }
+    }
+    match target {
         None | Some("all") => {
-            bench::run_all();
+            let tables = bench::run_all_tables();
+            for (_, t) in &tables {
+                println!();
+                t.print();
+            }
+            if let Some(p) = json_path {
+                write_bench_json(p, &tables)?;
+            }
         }
         Some(name) => match bench::run_one(name) {
-            Some(t) => t.print(),
+            Some(t) => {
+                t.print();
+                if let Some(p) = json_path {
+                    write_bench_json(p, &[(name, t)])?;
+                }
+            }
             None => bail!(
                 "unknown bench target {name:?}; known: {:?}",
                 bench::registry().iter().map(|(n, _)| *n).collect::<Vec<_>>()
@@ -158,6 +240,13 @@ fn bench_cmd(args: &[String]) -> Result<()> {
 fn golden_cmd(args: &[String]) -> Result<()> {
     let tol: f32 = flag_value(args, "--tol").unwrap_or("2e-4").parse()?;
     let rt = Runtime::open(artifacts_dir(args))?;
+    if rt.manifest.golden.is_empty() {
+        println!(
+            "no golden records in this manifest (native synthesized model) — \
+             run `make artifacts` to record jax outputs"
+        );
+        return Ok(());
+    }
     for r in golden::check_all(&rt, tol)? {
         println!("golden {:<16} max_abs_err {:.3e} ({} outputs)", r.exe, r.max_abs_err, r.outputs);
     }
@@ -167,6 +256,7 @@ fn golden_cmd(args: &[String]) -> Result<()> {
 
 fn inspect(args: &[String]) -> Result<()> {
     let rt = Runtime::open(artifacts_dir(args))?;
+    println!("backend: {}", rt.platform());
     let m = &rt.manifest.model;
     println!(
         "model {} — vocab {} d_model {} heads {}x{} ffn {} layers {} ctx {} \

@@ -1,145 +1,117 @@
-//! PJRT CPU client wrapper: compile HLO-text artifacts once, keep weights
-//! device-resident, execute from the decode hot loop with buffer reuse.
+//! The runtime facade: a manifest-typed call interface over whichever
+//! execution backend is available.
 //!
-//! Pattern from /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
-//! -> `XlaComputation::from_proto` -> `client.compile` -> `execute_b`.
-//! Artifacts are lowered with `return_tuple=True`, so every executable
-//! returns a single tuple literal that we decompose.
+//! * **native** (always built) — [`super::native::NativeModel`], the
+//!   rust reference implementation of the operator set.  Used with real
+//!   artifact weights when `manifest.json`/`weights.bin` exist, or with
+//!   a deterministically synthesized opt-micro model when they don't —
+//!   so the full stack runs without the python/jax toolchain.
+//! * **pjrt** (`--features pjrt`) — [`super::pjrt::PjrtBackend`], the
+//!   AOT-compiled HLO artifacts through the PJRT C API.
+//!
+//! Input validation (arity + shapes against the manifest) happens here,
+//! so both backends reject malformed calls identically.
 
-use super::manifest::{ArgKind, BucketSpec, DType, Manifest};
-use super::tensor::{HostTensor, TensorData};
-use anyhow::{anyhow, bail, Context, Result};
+use super::manifest::{ArgKind, Manifest};
+use super::native::{self, NativeModel};
+use super::tensor::HostTensor;
+use anyhow::{anyhow, bail, Result};
 use std::cell::RefCell;
-use std::collections::HashMap;
-use std::fs::File;
 use std::path::Path;
 
-/// Timing counters for the §Perf pass (nanoseconds, monotone totals).
+/// Timing counters for the §Perf pass (nanoseconds, monotone totals);
+/// `execute_ns` covers the whole backend call including host<->device
+/// transfers.
 #[derive(Debug, Default, Clone)]
 pub struct RuntimeStats {
     pub calls: u64,
-    pub upload_ns: u64,
     pub execute_ns: u64,
-    pub download_ns: u64,
 }
 
-struct CompiledExe {
-    exe: xla::PjRtLoadedExecutable,
-    out_dtypes: Vec<DType>,
-    out_shapes: Vec<Vec<usize>>,
+enum Backend {
+    Native(NativeModel),
+    #[cfg(feature = "pjrt")]
+    Pjrt(super::pjrt::PjrtBackend),
 }
 
-/// The functional-plane runtime: one per process; not Sync (PJRT handles
-/// are raw pointers) — the coordinator pins it to the executor thread.
+/// The functional-plane runtime: one per process; not Sync — the
+/// coordinator pins it to the executor thread.
 pub struct Runtime {
-    client: xla::PjRtClient,
     pub manifest: Manifest,
-    exes: RefCell<HashMap<(String, usize), std::rc::Rc<CompiledExe>>>,
-    weight_bufs: RefCell<HashMap<String, std::rc::Rc<xla::PjRtBuffer>>>,
-    weights_file: RefCell<File>,
+    backend: Backend,
     pub stats: RefCell<RuntimeStats>,
 }
 
 impl Runtime {
-    /// Open the artifact directory (after `make artifacts`).
+    /// Open an artifact directory.  If `manifest.json` is present the
+    /// recorded model is used (PJRT execution with `--features pjrt`,
+    /// native execution of the recorded weights otherwise); if absent, a
+    /// deterministic synthesized opt-micro model stands in so the stack
+    /// runs without `make artifacts`.
     pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
-        let manifest = Manifest::load(&dir)?;
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
-        let wpath = manifest.dir.join("weights.bin");
-        let weights_file = File::open(&wpath)
-            .with_context(|| format!("opening {wpath:?}"))?;
+        let dir = dir.as_ref();
+        if dir.join("manifest.json").exists() {
+            let manifest = Manifest::load(dir)?;
+            #[cfg(feature = "pjrt")]
+            {
+                let backend = Backend::Pjrt(super::pjrt::PjrtBackend::open(&manifest)?);
+                return Ok(Runtime {
+                    manifest,
+                    backend,
+                    stats: RefCell::new(RuntimeStats::default()),
+                });
+            }
+            #[cfg(not(feature = "pjrt"))]
+            {
+                let model = NativeModel::from_manifest(&manifest)?;
+                return Ok(Runtime {
+                    manifest,
+                    backend: Backend::Native(model),
+                    stats: RefCell::new(RuntimeStats::default()),
+                });
+            }
+        }
+        // Make the substitution loud: a mistyped --artifacts path should
+        // not silently produce synthetic-model numbers.
+        eprintln!(
+            "note: no manifest.json under {dir:?} — running the synthesized \
+             native opt-micro model (run `make artifacts` for the recorded one)"
+        );
+        let model = NativeModel::synthesize(native::DEFAULT_SEED);
+        let manifest = native::synthetic_manifest(dir.to_path_buf(), &model.meta);
         Ok(Runtime {
-            client,
             manifest,
-            exes: RefCell::new(HashMap::new()),
-            weight_bufs: RefCell::new(HashMap::new()),
-            weights_file: RefCell::new(weights_file),
+            backend: Backend::Native(model),
             stats: RefCell::new(RuntimeStats::default()),
         })
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Compile (or fetch cached) executable `name` at batch bucket `b`.
-    fn compiled(&self, name: &str, b: usize) -> Result<std::rc::Rc<CompiledExe>> {
-        let key = (name.to_string(), b);
-        if let Some(e) = self.exes.borrow().get(&key) {
-            return Ok(e.clone());
+        match &self.backend {
+            Backend::Native(_) => "native-rust".to_string(),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(p) => p.platform(),
         }
-        let spec = self.manifest.exe(name)?;
-        let bucket: &BucketSpec = spec
-            .buckets
-            .get(&b)
-            .ok_or_else(|| anyhow!("{name}: no bucket for batch {b}"))?;
-        let path = self.manifest.dir.join(&bucket.file);
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .map_err(|e| anyhow!("loading {path:?}: {e:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {name} b{b}: {e:?}"))?;
-        let ce = std::rc::Rc::new(CompiledExe {
-            exe,
-            out_dtypes: bucket.outputs.iter().map(|o| o.dtype).collect(),
-            out_shapes: bucket.outputs.iter().map(|o| o.shape.clone()).collect(),
-        });
-        self.exes.borrow_mut().insert(key, ce.clone());
-        Ok(ce)
     }
 
-    /// Eagerly compile every executable at every bucket (startup warmup so
-    /// the request path never pays compile latency).
+    /// True when running the synthesized/loaded rust reference backend.
+    pub fn is_native(&self) -> bool {
+        matches!(self.backend, Backend::Native(_))
+    }
+
+    /// Eagerly prepare every executable at every bucket (startup warmup
+    /// so the request path never pays compile latency).  Returns the
+    /// number of (executable, bucket) pairs.
     pub fn warmup(&self) -> Result<usize> {
-        let names: Vec<(String, usize)> = self
-            .manifest
-            .executables
-            .iter()
-            .flat_map(|(n, e)| e.buckets.keys().map(move |b| (n.clone(), *b)))
-            .collect();
-        for (n, b) in &names {
-            self.compiled(n, *b)?;
-        }
-        Ok(names.len())
-    }
-
-    /// Device-resident weight buffer (uploaded once, then reused).
-    fn weight_buffer(&self, pname: &str) -> Result<std::rc::Rc<xla::PjRtBuffer>> {
-        if let Some(b) = self.weight_bufs.borrow().get(pname) {
-            return Ok(b.clone());
-        }
-        let rec = self
-            .manifest
-            .weights
-            .get(pname)
-            .ok_or_else(|| anyhow!("weight {pname:?} not in manifest"))?;
-        let data = super::tensor::read_f32_at(
-            &mut self.weights_file.borrow_mut(),
-            rec.offset,
-            rec.len(),
-        )?;
-        let buf = self
-            .client
-            .buffer_from_host_buffer(&data, &rec.shape, None)
-            .map_err(|e| anyhow!("uploading {pname}: {e:?}"))?;
-        let rc = std::rc::Rc::new(buf);
-        self.weight_bufs.borrow_mut().insert(pname.to_string(), rc.clone());
-        Ok(rc)
-    }
-
-    fn upload(&self, t: &HostTensor) -> Result<xla::PjRtBuffer> {
-        match &t.data {
-            TensorData::F32(v) => self
-                .client
-                .buffer_from_host_buffer(v, &t.dims, None)
-                .map_err(|e| anyhow!("upload f32: {e:?}")),
-            TensorData::I32(v) => self
-                .client
-                .buffer_from_host_buffer(v, &t.dims, None)
-                .map_err(|e| anyhow!("upload i32: {e:?}")),
+        match &self.backend {
+            Backend::Native(_) => Ok(self
+                .manifest
+                .executables
+                .values()
+                .map(|e| e.buckets.len())
+                .sum()),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(p) => p.warmup(),
         }
     }
 
@@ -153,99 +125,112 @@ impl Runtime {
         layer: usize,
         inputs: &[HostTensor],
     ) -> Result<Vec<HostTensor>> {
-        let ce = self.compiled(name, b)?;
-        let spec = self.manifest.exe(name)?;
-
+        self.validate(name, b, inputs)?;
         let t0 = std::time::Instant::now();
-        let mut args: Vec<std::rc::Rc<xla::PjRtBuffer>> = Vec::with_capacity(spec.args.len());
+        let outs = match &self.backend {
+            Backend::Native(m) => m.call(name, b, layer, inputs)?,
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(p) => p.call(name, b, layer, inputs)?,
+        };
+        let mut st = self.stats.borrow_mut();
+        st.calls += 1;
+        st.execute_ns += t0.elapsed().as_nanos() as u64;
+        Ok(outs)
+    }
+
+    /// Check arity and shapes against the manifest's signature.
+    fn validate(&self, name: &str, b: usize, inputs: &[HostTensor]) -> Result<()> {
+        let spec = self.manifest.exe(name)?;
+        if !spec.buckets.contains_key(&b) {
+            bail!("{name}: no bucket for batch {b}");
+        }
         let mut in_iter = inputs.iter();
         for a in &spec.args {
-            match a.kind {
-                ArgKind::Input => {
-                    let t = in_iter
-                        .next()
-                        .ok_or_else(|| anyhow!("{name}: missing input {:?}", a.name))?;
-                    let want = a.concrete_shape(b);
-                    if t.dims != want {
-                        bail!(
-                            "{name}: input {:?} shape {:?} != expected {:?}",
-                            a.name, t.dims, want
-                        );
-                    }
-                    args.push(std::rc::Rc::new(self.upload(t)?));
-                }
-                ArgKind::Weight => {
-                    let pname = self.manifest.weight_name(a, layer);
-                    args.push(self.weight_buffer(&pname)?);
-                }
+            if a.kind != ArgKind::Input {
+                continue;
+            }
+            let t = in_iter
+                .next()
+                .ok_or_else(|| anyhow!("{name}: missing input {:?}", a.name))?;
+            let want = a.concrete_shape(b);
+            if t.dims != want {
+                bail!(
+                    "{name}: input {:?} shape {:?} != expected {:?}",
+                    a.name, t.dims, want
+                );
             }
         }
         if in_iter.next().is_some() {
             bail!("{name}: too many inputs supplied");
         }
-        let t1 = std::time::Instant::now();
-
-        let borrowed: Vec<&xla::PjRtBuffer> = args.iter().map(|r| r.as_ref()).collect();
-        let result = ce
-            .exe
-            .execute_b(&borrowed)
-            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
-        let t2 = std::time::Instant::now();
-
-        // return_tuple=True => single tuple output buffer
-        let lit = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("download {name}: {e:?}"))?;
-        let parts = lit
-            .to_tuple()
-            .map_err(|e| anyhow!("untuple {name}: {e:?}"))?;
-        if parts.len() != ce.out_dtypes.len() {
-            bail!(
-                "{name}: got {} outputs, manifest says {}",
-                parts.len(),
-                ce.out_dtypes.len()
-            );
-        }
-        let mut outs = Vec::with_capacity(parts.len());
-        for (i, part) in parts.into_iter().enumerate() {
-            let dims = ce.out_shapes[i].clone();
-            let t = match ce.out_dtypes[i] {
-                DType::F32 => HostTensor::f32(
-                    dims,
-                    part.to_vec::<f32>()
-                        .map_err(|e| anyhow!("{name} out{i} as f32: {e:?}"))?,
-                ),
-                DType::I32 => HostTensor::i32(
-                    dims,
-                    part.to_vec::<i32>()
-                        .map_err(|e| anyhow!("{name} out{i} as i32: {e:?}"))?,
-                ),
-            };
-            outs.push(t);
-        }
-        let t3 = std::time::Instant::now();
-
-        let mut st = self.stats.borrow_mut();
-        st.calls += 1;
-        st.upload_ns += (t1 - t0).as_nanos() as u64;
-        st.execute_ns += (t2 - t1).as_nanos() as u64;
-        st.download_ns += (t3 - t2).as_nanos() as u64;
-        Ok(outs)
+        Ok(())
     }
 
     /// Read a weight tensor back to the host (for the rust-native CSD
     /// engine, which needs raw K/V projection weights — and for tests).
     pub fn weight_host(&self, pname: &str) -> Result<HostTensor> {
-        let rec = self
-            .manifest
-            .weights
-            .get(pname)
-            .ok_or_else(|| anyhow!("weight {pname:?} not in manifest"))?;
-        let data = super::tensor::read_f32_at(
-            &mut self.weights_file.borrow_mut(),
-            rec.offset,
-            rec.len(),
-        )?;
-        Ok(HostTensor::f32(rec.shape.clone(), data))
+        match &self.backend {
+            Backend::Native(m) => m.weight_host(pname),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(p) => p.weight_host(pname),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn nonexistent_dir() -> std::path::PathBuf {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("no-such-artifacts-dir")
+    }
+
+    #[test]
+    fn open_without_artifacts_synthesizes_native_model() {
+        let rt = Runtime::open(nonexistent_dir()).unwrap();
+        assert!(rt.is_native());
+        assert_eq!(rt.platform(), "native-rust");
+        assert_eq!(rt.manifest.model.d_model, 256);
+        assert!(rt.manifest.golden.is_empty());
+        assert!(rt.warmup().unwrap() >= 8 * 3);
+    }
+
+    #[test]
+    fn call_validates_like_the_manifest_says() {
+        let rt = Runtime::open(nonexistent_dir()).unwrap();
+        let bad = HostTensor::zeros_f32(vec![1, 3]);
+        let err = rt.call("qkv_proj", 1, 0, &[bad]).unwrap_err().to_string();
+        assert!(err.contains("shape"), "{err}");
+        let err = rt.call("attn_dense", 1, 0, &[]).unwrap_err().to_string();
+        assert!(err.contains("missing input"), "{err}");
+        let err = rt
+            .call("qkv_proj", 3, 0, &[HostTensor::zeros_f32(vec![3, 256])])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("bucket"), "{err}");
+    }
+
+    #[test]
+    fn native_decode_roundtrip_generates_in_vocab() {
+        let rt = Runtime::open(nonexistent_dir()).unwrap();
+        let m = rt.manifest.model.clone();
+        let b = 1usize;
+        let ids = HostTensor::i32(vec![b], vec![42]);
+        let pos = HostTensor::i32(vec![b], vec![0]);
+        let mut x = rt.call("embed_decode", b, 0, &[ids, pos]).unwrap().remove(0);
+        for layer in 0..m.n_layers {
+            let qkv = rt.call("qkv_proj", b, layer, &[x.clone()]).unwrap();
+            let kc = HostTensor::zeros_f32(vec![b, m.n_heads, m.max_seq, m.d_head]);
+            let lens = HostTensor::f32(vec![b], vec![1.0]);
+            let a = rt
+                .call("attn_dense", b, 0, &[qkv[0].clone(), kc.clone(), kc, lens])
+                .unwrap()
+                .remove(0);
+            x = rt.call("post_attn", b, layer, &[x, a]).unwrap().remove(0);
+        }
+        let out = rt.call("logits", b, 0, &[x]).unwrap();
+        let id = out[1].as_i32().unwrap()[0];
+        assert!((0..m.vocab as i32).contains(&id));
+        assert!(rt.stats.borrow().calls >= 10);
     }
 }

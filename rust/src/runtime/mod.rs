@@ -1,17 +1,24 @@
-//! PJRT runtime: load the AOT artifacts produced by `python/compile/aot.py`
-//! and execute them from the rust request path (python is build-time only).
+//! Runtime: execute the model operator set from the rust request path.
 //!
 //! * [`tensor`]   — host-side tensors + raw .bin readers
-//! * [`manifest`] — typed view of `artifacts/manifest.json`
-//! * [`client`]   — PJRT CPU client, executable cache, device-resident
-//!                  weights, typed call interface
+//! * [`manifest`] — typed view of `artifacts/manifest.json` (or the
+//!                  synthetic manifest when no artifacts exist)
+//! * [`native`]   — rust reference backend (always built; synthesizes a
+//!                  deterministic opt-micro model without artifacts)
+//! * [`client`]   — the `Runtime` facade: validation, stats, backend
+//!                  dispatch
+//! * [`pjrt`]     — PJRT CPU backend over the AOT HLO artifacts
+//!                  (`--features pjrt`; needs the `xla` bindings)
 //! * [`golden`]   — cross-language checks against `golden.bin`
 
 pub mod client;
 pub mod golden;
 pub mod manifest;
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 pub mod tensor;
 
-pub use client::Runtime;
+pub use client::{Runtime, RuntimeStats};
 pub use manifest::{ArgKind, DType, Dim, Manifest};
 pub use tensor::HostTensor;

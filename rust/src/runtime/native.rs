@@ -1,0 +1,721 @@
+//! Rust-native reference backend: executes the same operator set the AOT
+//! artifacts implement (`python/compile/model.py`), mirrored op-for-op in
+//! plain rust over `HostTensor`s.
+//!
+//! Two ways to get a model:
+//! * [`NativeModel::from_manifest`] — load the real weights from an
+//!   artifact directory's `weights.bin` (numerically interchangeable with
+//!   the PJRT backend up to summation order);
+//! * [`NativeModel::synthesize`] — deterministic OPT-style random init of
+//!   the opt-micro architecture, used when no artifacts are present so the
+//!   functional plane (engine, scheduler, tests, examples) runs
+//!   everywhere without the python/jax toolchain.
+//!
+//! The decode attention ops reuse [`crate::sparse`] — the same arithmetic
+//! the in-storage CSD engine executes — so the `GpuArtifact` ablation
+//! backend and the CSD backend agree through this path exactly as they do
+//! through the PJRT artifacts.
+
+use super::manifest::{
+    ArgKind, ArgSpec, BucketSpec, DType, Dim, ExeSpec, Manifest, ModelMeta, OutSpec, TensorRec,
+    WeightScope,
+};
+use super::tensor::HostTensor;
+use crate::config::model::SparsityParams;
+use crate::sparse;
+use crate::sparse::select::dot;
+use crate::util::rng::Rng;
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+/// Seed for the synthesized functional-plane model (no artifacts case).
+pub const DEFAULT_SEED: u64 = 0x1a57_15f3;
+
+/// Batch buckets baked by `python/compile/aot.py`; the synthetic manifest
+/// mirrors them so bucket-selection logic behaves identically.
+pub const BATCH_BUCKETS: [usize; 3] = [1, 4, 8];
+
+/// Per-layer weight slots in positional order (mirrors `model.LAYER_SLOTS`).
+const LAYER_SLOTS: [&str; 16] = [
+    "ln1_g", "ln1_b", "wq", "bq", "wk", "bk", "wv", "bv",
+    "wo", "bo", "ln2_g", "ln2_b", "w1", "b1", "w2", "b2",
+];
+
+/// The opt-micro functional-plane architecture (`model.SMALL`).
+pub fn micro_meta() -> ModelMeta {
+    ModelMeta {
+        name: "opt-micro-14m".to_string(),
+        vocab: 512,
+        d_model: 256,
+        n_heads: 8,
+        d_head: 32,
+        d_ffn: 1024,
+        n_layers: 4,
+        max_seq: 128,
+        prefill_seq: 64,
+        r: 8,
+        k: 16,
+        m: 4,
+        n: 8,
+    }
+}
+
+pub struct NativeModel {
+    pub meta: ModelMeta,
+    weights: BTreeMap<String, HostTensor>,
+}
+
+fn slot_shape(meta: &ModelMeta, slot: &str) -> Vec<usize> {
+    let (d, f) = (meta.d_model, meta.d_ffn);
+    match slot {
+        "ln1_g" | "ln1_b" | "bq" | "bk" | "bv" | "bo" | "ln2_g" | "ln2_b" | "b2" => vec![d],
+        "wq" | "wk" | "wv" | "wo" => vec![d, d],
+        "w1" => vec![d, f],
+        "b1" => vec![f],
+        "w2" => vec![f, d],
+        other => unreachable!("unknown layer slot {other}"),
+    }
+}
+
+impl NativeModel {
+    /// Deterministic OPT-style init of the opt-micro model (same shapes
+    /// and scales as `model.init_params`; different PRNG, so tokens are
+    /// not bit-identical to the jax-seeded weights — everything else is).
+    pub fn synthesize(seed: u64) -> NativeModel {
+        let meta = micro_meta();
+        let mut rng = Rng::new(seed);
+        let mut weights: BTreeMap<String, HostTensor> = BTreeMap::new();
+
+        let dense = |rng: &mut Rng, shape: Vec<usize>, fan_in: usize| -> HostTensor {
+            let n: usize = shape.iter().product();
+            let s = (fan_in as f32).powf(-0.5);
+            HostTensor::f32(shape, (0..n).map(|_| rng.normal_f32() * s).collect())
+        };
+        let ones = |shape: Vec<usize>| -> HostTensor {
+            let n: usize = shape.iter().product();
+            HostTensor::f32(shape, vec![1.0; n])
+        };
+        let zeros = HostTensor::zeros_f32;
+
+        let d = meta.d_model;
+        weights.insert("tok_emb".into(), dense(&mut rng, vec![meta.vocab, d], d));
+        weights.insert("pos_emb".into(), dense(&mut rng, vec![meta.max_seq, d], d));
+        for layer in 0..meta.n_layers {
+            for slot in LAYER_SLOTS {
+                let shape = slot_shape(&meta, slot);
+                let name = format!("layers.{layer}.{slot}");
+                let t = if slot.starts_with("ln") && slot.ends_with("_g") {
+                    ones(shape)
+                } else if shape.len() == 1 {
+                    zeros(shape)
+                } else {
+                    let fan_in = shape[0];
+                    dense(&mut rng, shape, fan_in)
+                };
+                weights.insert(name, t);
+            }
+        }
+        weights.insert("ln_f_g".into(), ones(vec![d]));
+        weights.insert("ln_f_b".into(), zeros(vec![d]));
+        NativeModel { meta, weights }
+    }
+
+    /// Load the real artifact weights for native execution.
+    pub fn from_manifest(manifest: &Manifest) -> Result<NativeModel> {
+        let wpath = manifest.dir.join("weights.bin");
+        let mut f = std::fs::File::open(&wpath)
+            .map_err(|e| anyhow!("opening {wpath:?}: {e}"))?;
+        let mut weights = BTreeMap::new();
+        for (name, rec) in &manifest.weights {
+            let data = super::tensor::read_f32_at(&mut f, rec.offset, rec.len())?;
+            weights.insert(name.clone(), HostTensor::f32(rec.shape.clone(), data));
+        }
+        Ok(NativeModel { meta: manifest.model.clone(), weights })
+    }
+
+    pub fn weight_host(&self, pname: &str) -> Result<HostTensor> {
+        self.weights
+            .get(pname)
+            .cloned()
+            .ok_or_else(|| anyhow!("weight {pname:?} not in model"))
+    }
+
+    fn w(&self, name: &str) -> Result<&[f32]> {
+        self.weights
+            .get(name)
+            .ok_or_else(|| anyhow!("weight {name:?} not in model"))?
+            .as_f32()
+    }
+
+    fn lw(&self, layer: usize, slot: &str) -> Result<&[f32]> {
+        self.w(&format!("layers.{layer}.{slot}"))
+    }
+
+    /// Execute one operator group (same names/signatures as the AOT
+    /// artifacts).  Inputs are already shape-validated by the facade.
+    pub fn call(
+        &self,
+        name: &str,
+        b: usize,
+        layer: usize,
+        inputs: &[HostTensor],
+    ) -> Result<Vec<HostTensor>> {
+        match name {
+            "embed_decode" => self.embed_decode(b, inputs),
+            "embed_prefill" => self.embed_prefill(b, inputs),
+            "qkv_proj" => self.qkv_proj(b, layer, inputs),
+            "attn_dense" => self.attn(b, inputs, false),
+            "attn_sparf" => self.attn(b, inputs, true),
+            "post_attn" => self.post_attn(b, layer, inputs),
+            "logits" => self.logits(b, inputs),
+            "prefill_block" => self.prefill_block(b, layer, inputs),
+            other => bail!("native backend: unknown executable {other:?}"),
+        }
+    }
+
+    fn embed_decode(&self, b: usize, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let ids = inputs[0].as_i32()?;
+        let pos = inputs[1].as_i32()?;
+        let te = self.w("tok_emb")?;
+        let pe = self.w("pos_emb")?;
+        let d = self.meta.d_model;
+        let mut x = vec![0.0f32; b * d];
+        for r in 0..b {
+            // XLA gather clamps out-of-range indices; mirror that.
+            let ti = (ids[r].max(0) as usize).min(self.meta.vocab - 1);
+            let pi = (pos[r].max(0) as usize).min(self.meta.max_seq - 1);
+            let row = &mut x[r * d..(r + 1) * d];
+            let trow = &te[ti * d..(ti + 1) * d];
+            let prow = &pe[pi * d..(pi + 1) * d];
+            for ((o, &t), &p) in row.iter_mut().zip(trow).zip(prow) {
+                *o = t + p;
+            }
+        }
+        Ok(vec![HostTensor::f32(vec![b, d], x)])
+    }
+
+    fn embed_prefill(&self, b: usize, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let ids = inputs[0].as_i32()?;
+        let te = self.w("tok_emb")?;
+        let pe = self.w("pos_emb")?;
+        let (d, sp) = (self.meta.d_model, self.meta.prefill_seq);
+        let mut x = vec![0.0f32; b * sp * d];
+        for r in 0..b {
+            for t in 0..sp {
+                let ti = (ids[r * sp + t].max(0) as usize).min(self.meta.vocab - 1);
+                let row = &mut x[(r * sp + t) * d..(r * sp + t + 1) * d];
+                let trow = &te[ti * d..(ti + 1) * d];
+                let prow = &pe[t * d..(t + 1) * d];
+                for ((o, &tv), &pv) in row.iter_mut().zip(trow).zip(prow) {
+                    *o = tv + pv;
+                }
+            }
+        }
+        Ok(vec![HostTensor::f32(vec![b, sp, d], x)])
+    }
+
+    fn qkv_proj(&self, b: usize, layer: usize, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let x = inputs[0].as_f32()?;
+        let (d, h, dh) = (self.meta.d_model, self.meta.n_heads, self.meta.d_head);
+        let hx = layer_norm_rows(x, self.lw(layer, "ln1_g")?, self.lw(layer, "ln1_b")?, d);
+        let q = matmul_bias(&hx, self.lw(layer, "wq")?, self.lw(layer, "bq")?, b, d, d);
+        let k = matmul_bias(&hx, self.lw(layer, "wk")?, self.lw(layer, "bk")?, b, d, d);
+        let v = matmul_bias(&hx, self.lw(layer, "wv")?, self.lw(layer, "bv")?, b, d, d);
+        // (B, D) rows are already (B, H, dh) in row-major memory
+        Ok(vec![
+            HostTensor::f32(vec![b, h, dh], q),
+            HostTensor::f32(vec![b, h, dh], k),
+            HostTensor::f32(vec![b, h, dh], v),
+        ])
+    }
+
+    fn attn(&self, b: usize, inputs: &[HostTensor], sparf: bool) -> Result<Vec<HostTensor>> {
+        let q = inputs[0].as_f32()?;
+        let kc = inputs[1].as_f32()?;
+        let vc = inputs[2].as_f32()?;
+        let lens = inputs[3].as_f32()?;
+        let (h, dh, smax) = (self.meta.n_heads, self.meta.d_head, self.meta.max_seq);
+        let sp = SparsityParams {
+            r: self.meta.r,
+            k: self.meta.k,
+            m: self.meta.m,
+            n: self.meta.n,
+        };
+        let mut out = vec![0.0f32; b * h * dh];
+        for r in 0..b {
+            let len = (lens[r] as usize).clamp(1, smax);
+            for hh in 0..h {
+                let qrow = &q[(r * h + hh) * dh..(r * h + hh + 1) * dh];
+                let base = (r * h + hh) * smax * dh;
+                let krows = &kc[base..base + smax * dh];
+                let vrows = &vc[base..base + smax * dh];
+                let o = if sparf {
+                    let vbar = sparse::v_mean(vrows, dh, len);
+                    sparse::sparf_attention(qrow, krows, vrows, &vbar, len, &sp).out
+                } else {
+                    sparse::dense_attention(qrow, krows, vrows, len)
+                };
+                out[(r * h + hh) * dh..(r * h + hh + 1) * dh].copy_from_slice(&o);
+            }
+        }
+        Ok(vec![HostTensor::f32(vec![b, h, dh], out)])
+    }
+
+    fn post_attn(&self, b: usize, layer: usize, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let x = inputs[0].as_f32()?;
+        let attn = inputs[1].as_f32()?;
+        let (d, dff) = (self.meta.d_model, self.meta.d_ffn);
+        let o = matmul_bias(attn, self.lw(layer, "wo")?, self.lw(layer, "bo")?, b, d, d);
+        let x1: Vec<f32> = x.iter().zip(&o).map(|(a, c)| a + c).collect();
+        let h2 = layer_norm_rows(&x1, self.lw(layer, "ln2_g")?, self.lw(layer, "ln2_b")?, d);
+        let mut f1 = matmul_bias(&h2, self.lw(layer, "w1")?, self.lw(layer, "b1")?, b, d, dff);
+        for v in f1.iter_mut() {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+        let f2 = matmul_bias(&f1, self.lw(layer, "w2")?, self.lw(layer, "b2")?, b, dff, d);
+        let x2: Vec<f32> = x1.iter().zip(&f2).map(|(a, c)| a + c).collect();
+        Ok(vec![HostTensor::f32(vec![b, d], x2)])
+    }
+
+    fn logits(&self, b: usize, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let x = inputs[0].as_f32()?;
+        let (d, vocab) = (self.meta.d_model, self.meta.vocab);
+        let h = layer_norm_rows(x, self.w("ln_f_g")?, self.w("ln_f_b")?, d);
+        let te = self.w("tok_emb")?;
+        let mut lg = vec![0.0f32; b * vocab];
+        let mut ids = vec![0i32; b];
+        for r in 0..b {
+            let hr = &h[r * d..(r + 1) * d];
+            let row = &mut lg[r * vocab..(r + 1) * vocab];
+            for (v, o) in row.iter_mut().enumerate() {
+                *o = dot(hr, &te[v * d..(v + 1) * d]);
+            }
+            // first-occurrence argmax, like jnp.argmax
+            let mut best = f32::NEG_INFINITY;
+            for (v, &o) in row.iter().enumerate() {
+                if o > best {
+                    best = o;
+                    ids[r] = v as i32;
+                }
+            }
+        }
+        Ok(vec![
+            HostTensor::f32(vec![b, vocab], lg),
+            HostTensor::i32(vec![b], ids),
+        ])
+    }
+
+    fn prefill_block(
+        &self,
+        b: usize,
+        layer: usize,
+        inputs: &[HostTensor],
+    ) -> Result<Vec<HostTensor>> {
+        let x = inputs[0].as_f32()?;
+        let (d, dff, h, dh, sp) = (
+            self.meta.d_model,
+            self.meta.d_ffn,
+            self.meta.n_heads,
+            self.meta.d_head,
+            self.meta.prefill_seq,
+        );
+        let rows = b * sp;
+        let h1 = layer_norm_rows(x, self.lw(layer, "ln1_g")?, self.lw(layer, "ln1_b")?, d);
+        let q = matmul_bias(&h1, self.lw(layer, "wq")?, self.lw(layer, "bq")?, rows, d, d);
+        let k = matmul_bias(&h1, self.lw(layer, "wk")?, self.lw(layer, "bk")?, rows, d, d);
+        let v = matmul_bias(&h1, self.lw(layer, "wv")?, self.lw(layer, "bv")?, rows, d, d);
+
+        // causal self-attention per (batch row, head)
+        let scale = 1.0 / (dh as f32).sqrt();
+        let mut ar = vec![0.0f32; rows * d];
+        let mut lg = vec![0.0f32; sp];
+        for bb in 0..b {
+            for hh in 0..h {
+                for t in 0..sp {
+                    let qoff = (bb * sp + t) * d + hh * dh;
+                    let qrow = &q[qoff..qoff + dh];
+                    let mut mx = f32::NEG_INFINITY;
+                    for (u, l) in lg.iter_mut().enumerate().take(t + 1) {
+                        let koff = (bb * sp + u) * d + hh * dh;
+                        *l = dot(qrow, &k[koff..koff + dh]) * scale;
+                        mx = mx.max(*l);
+                    }
+                    let mut den = 0.0f32;
+                    for l in lg.iter_mut().take(t + 1) {
+                        *l = (*l - mx).exp();
+                        den += *l;
+                    }
+                    let inv = 1.0 / den;
+                    let aoff = (bb * sp + t) * d + hh * dh;
+                    for (u, &l) in lg.iter().enumerate().take(t + 1) {
+                        let s = l * inv;
+                        let voff = (bb * sp + u) * d + hh * dh;
+                        for (acc, &vv) in
+                            ar[aoff..aoff + dh].iter_mut().zip(&v[voff..voff + dh])
+                        {
+                            *acc += s * vv;
+                        }
+                    }
+                }
+            }
+        }
+
+        let o = matmul_bias(&ar, self.lw(layer, "wo")?, self.lw(layer, "bo")?, rows, d, d);
+        let x1: Vec<f32> = x.iter().zip(&o).map(|(a, c)| a + c).collect();
+        let h2 = layer_norm_rows(&x1, self.lw(layer, "ln2_g")?, self.lw(layer, "ln2_b")?, d);
+        let mut f1 = matmul_bias(&h2, self.lw(layer, "w1")?, self.lw(layer, "b1")?, rows, d, dff);
+        for fv in f1.iter_mut() {
+            if *fv < 0.0 {
+                *fv = 0.0;
+            }
+        }
+        let f2 = matmul_bias(&f1, self.lw(layer, "w2")?, self.lw(layer, "b2")?, rows, dff, d);
+        let x2: Vec<f32> = x1.iter().zip(&f2).map(|(a, c)| a + c).collect();
+
+        // (B, SP, H, dh) -> (B, H, SP, dh) for the KV-cache consumers
+        let mut kk = vec![0.0f32; b * h * sp * dh];
+        let mut vv = vec![0.0f32; b * h * sp * dh];
+        for bb in 0..b {
+            for t in 0..sp {
+                for hh in 0..h {
+                    let src = (bb * sp + t) * d + hh * dh;
+                    let dst = ((bb * h + hh) * sp + t) * dh;
+                    kk[dst..dst + dh].copy_from_slice(&k[src..src + dh]);
+                    vv[dst..dst + dh].copy_from_slice(&v[src..src + dh]);
+                }
+            }
+        }
+        Ok(vec![
+            HostTensor::f32(vec![b, sp, d], x2),
+            HostTensor::f32(vec![b, h, sp, dh], kk),
+            HostTensor::f32(vec![b, h, sp, dh], vv),
+        ])
+    }
+}
+
+/// Pre-LN layer norm over rows of width `d` (population variance + 1e-5,
+/// matching `model.layer_norm`).
+fn layer_norm_rows(x: &[f32], g: &[f32], b: &[f32], d: usize) -> Vec<f32> {
+    let rows = x.len() / d;
+    let mut out = vec![0.0f32; x.len()];
+    for r in 0..rows {
+        let xr = &x[r * d..(r + 1) * d];
+        let mu = xr.iter().sum::<f32>() / d as f32;
+        let var = xr.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
+        let inv = 1.0 / (var + 1e-5).sqrt();
+        let or = &mut out[r * d..(r + 1) * d];
+        for (((o, &xv), &gv), &bv) in or.iter_mut().zip(xr).zip(g).zip(b) {
+            *o = (xv - mu) * inv * gv + bv;
+        }
+    }
+    out
+}
+
+/// `out = x @ w + bias` with `x` (rows, din), `w` (din, dout) row-major.
+fn matmul_bias(
+    x: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    rows: usize,
+    din: usize,
+    dout: usize,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; rows * dout];
+    for r in 0..rows {
+        let xr = &x[r * din..(r + 1) * din];
+        let or = &mut out[r * dout..(r + 1) * dout];
+        or.copy_from_slice(bias);
+        for (i, &xv) in xr.iter().enumerate() {
+            let wr = &w[i * dout..(i + 1) * dout];
+            for (o, &wv) in or.iter_mut().zip(wr) {
+                *o += xv * wv;
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Synthetic manifest (mirrors aot.py's registry so bucket/shape validation
+// and `inspect` behave identically without artifacts on disk)
+// ---------------------------------------------------------------------------
+
+fn arg_in(name: &str, shape: Vec<Dim>, dtype: DType) -> ArgSpec {
+    ArgSpec {
+        name: name.to_string(),
+        kind: ArgKind::Input,
+        scope: WeightScope::Global,
+        shape,
+        dtype,
+    }
+}
+
+fn arg_w(name: &str, shape: Vec<Dim>, scope: WeightScope) -> ArgSpec {
+    ArgSpec {
+        name: name.to_string(),
+        kind: ArgKind::Weight,
+        scope,
+        shape,
+        dtype: DType::F32,
+    }
+}
+
+fn layer_args(meta: &ModelMeta, slots: &[&str]) -> Vec<ArgSpec> {
+    slots
+        .iter()
+        .map(|s| {
+            let shape = slot_shape(meta, s).into_iter().map(Dim::Fixed).collect();
+            arg_w(s, shape, WeightScope::Layer)
+        })
+        .collect()
+}
+
+fn buckets_for(outputs: impl Fn(usize) -> Vec<OutSpec>, exe: &str) -> BTreeMap<usize, BucketSpec> {
+    BATCH_BUCKETS
+        .iter()
+        .map(|&b| {
+            (
+                b,
+                BucketSpec {
+                    file: format!("native://{exe}__b{b}"),
+                    outputs: outputs(b),
+                },
+            )
+        })
+        .collect()
+}
+
+/// Build an in-memory manifest describing the native executables — the
+/// same signatures `aot.py` records, with no files behind them.
+pub fn synthetic_manifest(dir: PathBuf, meta: &ModelMeta) -> Manifest {
+    use Dim::{Batch as B, Fixed as F};
+    let (d, h, dh, dff, s, sp, v) = (
+        meta.d_model,
+        meta.n_heads,
+        meta.d_head,
+        meta.d_ffn,
+        meta.max_seq,
+        meta.prefill_seq,
+        meta.vocab,
+    );
+    let f32o = |shape: Vec<usize>| OutSpec { shape, dtype: DType::F32 };
+    let i32o = |shape: Vec<usize>| OutSpec { shape, dtype: DType::I32 };
+
+    let mut executables = BTreeMap::new();
+    executables.insert(
+        "embed_decode".to_string(),
+        ExeSpec {
+            args: vec![
+                arg_in("ids", vec![B], DType::I32),
+                arg_in("pos", vec![B], DType::I32),
+                arg_w("tok_emb", vec![F(v), F(d)], WeightScope::Global),
+                arg_w("pos_emb", vec![F(s), F(d)], WeightScope::Global),
+            ],
+            buckets: buckets_for(|b| vec![f32o(vec![b, d])], "embed_decode"),
+        },
+    );
+    executables.insert(
+        "qkv_proj".to_string(),
+        ExeSpec {
+            args: {
+                let mut a = vec![arg_in("x", vec![B, F(d)], DType::F32)];
+                a.extend(layer_args(meta, &["ln1_g", "ln1_b", "wq", "bq", "wk", "bk", "wv", "bv"]));
+                a
+            },
+            buckets: buckets_for(|b| vec![f32o(vec![b, h, dh]); 3], "qkv_proj"),
+        },
+    );
+    for exe in ["attn_dense", "attn_sparf"] {
+        executables.insert(
+            exe.to_string(),
+            ExeSpec {
+                args: vec![
+                    arg_in("q", vec![B, F(h), F(dh)], DType::F32),
+                    arg_in("K", vec![B, F(h), F(s), F(dh)], DType::F32),
+                    arg_in("V", vec![B, F(h), F(s), F(dh)], DType::F32),
+                    arg_in("lens", vec![B], DType::F32),
+                ],
+                buckets: buckets_for(|b| vec![f32o(vec![b, h, dh])], exe),
+            },
+        );
+    }
+    executables.insert(
+        "post_attn".to_string(),
+        ExeSpec {
+            args: {
+                let mut a = vec![
+                    arg_in("x", vec![B, F(d)], DType::F32),
+                    arg_in("attn", vec![B, F(h), F(dh)], DType::F32),
+                ];
+                a.extend(layer_args(meta, &["wo", "bo", "ln2_g", "ln2_b", "w1", "b1", "w2", "b2"]));
+                a
+            },
+            buckets: buckets_for(|b| vec![f32o(vec![b, d])], "post_attn"),
+        },
+    );
+    executables.insert(
+        "logits".to_string(),
+        ExeSpec {
+            args: vec![
+                arg_in("x", vec![B, F(d)], DType::F32),
+                arg_w("ln_f_g", vec![F(d)], WeightScope::Global),
+                arg_w("ln_f_b", vec![F(d)], WeightScope::Global),
+                arg_w("tok_emb", vec![F(v), F(d)], WeightScope::Global),
+            ],
+            buckets: buckets_for(|b| vec![f32o(vec![b, v]), i32o(vec![b])], "logits"),
+        },
+    );
+    executables.insert(
+        "embed_prefill".to_string(),
+        ExeSpec {
+            args: vec![
+                arg_in("ids", vec![B, F(sp)], DType::I32),
+                arg_w("tok_emb", vec![F(v), F(d)], WeightScope::Global),
+                arg_w("pos_emb", vec![F(s), F(d)], WeightScope::Global),
+            ],
+            buckets: buckets_for(|b| vec![f32o(vec![b, sp, d])], "embed_prefill"),
+        },
+    );
+    executables.insert(
+        "prefill_block".to_string(),
+        ExeSpec {
+            args: {
+                let mut a = vec![arg_in("x", vec![B, F(sp), F(d)], DType::F32)];
+                a.extend(layer_args(meta, &LAYER_SLOTS));
+                a
+            },
+            buckets: buckets_for(
+                |b| {
+                    vec![
+                        f32o(vec![b, sp, d]),
+                        f32o(vec![b, h, sp, dh]),
+                        f32o(vec![b, h, sp, dh]),
+                    ]
+                },
+                "prefill_block",
+            ),
+        },
+    );
+
+    // weight records with as-if-packed offsets (native keeps them in
+    // memory; offsets exist so `inspect` and tooling see a real layout)
+    let mut weights = BTreeMap::new();
+    let mut offset = 0u64;
+    let mut push = |weights: &mut BTreeMap<String, TensorRec>, name: String, shape: Vec<usize>| {
+        let len: usize = shape.iter().product();
+        weights.insert(
+            name.clone(),
+            TensorRec { name, offset, shape, dtype: DType::F32 },
+        );
+        offset += (len * 4) as u64;
+    };
+    push(&mut weights, "tok_emb".into(), vec![v, d]);
+    push(&mut weights, "pos_emb".into(), vec![s, d]);
+    for layer in 0..meta.n_layers {
+        for slot in LAYER_SLOTS {
+            push(&mut weights, format!("layers.{layer}.{slot}"), slot_shape(meta, slot));
+        }
+    }
+    push(&mut weights, "ln_f_g".into(), vec![d]);
+    push(&mut weights, "ln_f_b".into(), vec![d]);
+
+    Manifest {
+        dir,
+        model: meta.clone(),
+        batch_buckets: BATCH_BUCKETS.to_vec(),
+        executables,
+        weights,
+        golden: BTreeMap::new(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthesize_is_deterministic() {
+        let a = NativeModel::synthesize(7);
+        let b = NativeModel::synthesize(7);
+        let wa = a.weight_host("layers.0.wq").unwrap();
+        let wb = b.weight_host("layers.0.wq").unwrap();
+        assert_eq!(wa, wb);
+        let c = NativeModel::synthesize(8);
+        let wc = c.weight_host("layers.0.wq").unwrap();
+        assert_ne!(wa, wc);
+    }
+
+    #[test]
+    fn op_shapes_match_manifest() {
+        let model = NativeModel::synthesize(1);
+        let meta = model.meta.clone();
+        let man = synthetic_manifest(PathBuf::from("."), &meta);
+        let b = 4usize;
+        let ids = HostTensor::i32(vec![b], vec![1, 2, 3, 4]);
+        let pos = HostTensor::i32(vec![b], vec![0, 1, 2, 3]);
+        let x = model.call("embed_decode", b, 0, &[ids, pos]).unwrap().remove(0);
+        assert_eq!(x.dims, vec![b, meta.d_model]);
+        let qkv = model.call("qkv_proj", b, 0, &[x.clone()]).unwrap();
+        assert_eq!(qkv.len(), 3);
+        assert_eq!(qkv[0].dims, vec![b, meta.n_heads, meta.d_head]);
+        let kc = HostTensor::zeros_f32(vec![b, meta.n_heads, meta.max_seq, meta.d_head]);
+        let lens = HostTensor::f32(vec![b], vec![4.0; b]);
+        let a = model
+            .call("attn_dense", b, 0, &[qkv[0].clone(), kc.clone(), kc.clone(), lens])
+            .unwrap()
+            .remove(0);
+        assert_eq!(a.dims, vec![b, meta.n_heads, meta.d_head]);
+        let x2 = model.call("post_attn", b, 0, &[x, a]).unwrap().remove(0);
+        let lg = model.call("logits", b, 0, &[x2]).unwrap();
+        assert_eq!(lg[0].dims, vec![b, meta.vocab]);
+        assert_eq!(lg[1].dims, vec![b]);
+        // every executable in the synthetic manifest has every bucket
+        for (name, exe) in &man.executables {
+            for bb in &man.batch_buckets {
+                assert!(exe.buckets.contains_key(bb), "{name} missing bucket {bb}");
+            }
+        }
+    }
+
+    #[test]
+    fn layer_norm_normalizes() {
+        let d = 8;
+        let x: Vec<f32> = (0..d).map(|i| i as f32).collect();
+        let g = vec![1.0f32; d];
+        let b = vec![0.0f32; d];
+        let y = layer_norm_rows(&x, &g, &b, d);
+        let mu: f32 = y.iter().sum::<f32>() / d as f32;
+        let var: f32 = y.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
+        assert!(mu.abs() < 1e-5, "mean {mu}");
+        assert!((var - 1.0).abs() < 1e-2, "var {var}");
+    }
+
+    #[test]
+    fn prefill_block_causal_first_row_ignores_future() {
+        // Row 0 of the prefill attention must not depend on later tokens:
+        // changing token t>0 must leave x'[0]'s attention contribution
+        // unchanged up to the (token-independent) LN/FFN path.
+        let model = NativeModel::synthesize(2);
+        let meta = model.meta.clone();
+        let sp = meta.prefill_seq;
+        let mk = |second: i32| {
+            let mut ids = vec![0i32; sp];
+            ids[0] = 5;
+            ids[1] = second;
+            let t = HostTensor::i32(vec![1, sp], ids);
+            let x = model.call("embed_prefill", 1, 0, &[t]).unwrap().remove(0);
+            model.call("prefill_block", 1, 0, &[x]).unwrap().remove(0)
+        };
+        let a = mk(7);
+        let b = mk(400);
+        let d = meta.d_model;
+        let ra = &a.as_f32().unwrap()[0..d];
+        let rb = &b.as_f32().unwrap()[0..d];
+        for (x, y) in ra.iter().zip(rb) {
+            assert!((x - y).abs() < 1e-5, "row 0 changed: {x} vs {y}");
+        }
+    }
+}

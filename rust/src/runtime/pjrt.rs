@@ -1,0 +1,231 @@
+//! PJRT CPU backend: compile HLO-text artifacts once, keep weights
+//! device-resident, execute from the decode hot loop with buffer reuse.
+//!
+//! Pattern from /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
+//! -> `XlaComputation::from_proto` -> `client.compile` -> `execute_b`.
+//! Artifacts are lowered with `return_tuple=True`, so every executable
+//! returns a single tuple literal that we decompose.
+//!
+//! Only compiled with `--features pjrt`: the `xla` bindings are not part
+//! of the offline crate set.  The default build executes the same
+//! operator set through [`super::native`].
+
+use super::manifest::{ArgKind, BucketSpec, DType, Manifest};
+use super::tensor::{HostTensor, TensorData};
+use anyhow::{anyhow, bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::fs::File;
+
+struct CompiledExe {
+    exe: xla::PjRtLoadedExecutable,
+    out_dtypes: Vec<DType>,
+    out_shapes: Vec<Vec<usize>>,
+}
+
+/// The PJRT execution backend: one per process; not Sync (PJRT handles
+/// are raw pointers) — the coordinator pins it to the executor thread.
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    exes: RefCell<HashMap<(String, usize), std::rc::Rc<CompiledExe>>>,
+    weight_bufs: RefCell<HashMap<String, std::rc::Rc<xla::PjRtBuffer>>>,
+    weights_file: RefCell<File>,
+}
+
+impl PjrtBackend {
+    /// Open the artifact directory's PJRT side (after `make artifacts`).
+    pub fn open(manifest: &Manifest) -> Result<PjrtBackend> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        let wpath = manifest.dir.join("weights.bin");
+        let weights_file = File::open(&wpath)
+            .with_context(|| format!("opening {wpath:?}"))?;
+        Ok(PjrtBackend {
+            client,
+            manifest: manifest.clone(),
+            exes: RefCell::new(HashMap::new()),
+            weight_bufs: RefCell::new(HashMap::new()),
+            weights_file: RefCell::new(weights_file),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch cached) executable `name` at batch bucket `b`.
+    fn compiled(&self, name: &str, b: usize) -> Result<std::rc::Rc<CompiledExe>> {
+        let key = (name.to_string(), b);
+        if let Some(e) = self.exes.borrow().get(&key) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.exe(name)?;
+        let bucket: &BucketSpec = spec
+            .buckets
+            .get(&b)
+            .ok_or_else(|| anyhow!("{name}: no bucket for batch {b}"))?;
+        let path = self.manifest.dir.join(&bucket.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("loading {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name} b{b}: {e:?}"))?;
+        let ce = std::rc::Rc::new(CompiledExe {
+            exe,
+            out_dtypes: bucket.outputs.iter().map(|o| o.dtype).collect(),
+            out_shapes: bucket.outputs.iter().map(|o| o.shape.clone()).collect(),
+        });
+        self.exes.borrow_mut().insert(key, ce.clone());
+        Ok(ce)
+    }
+
+    /// Eagerly compile every executable at every bucket (startup warmup so
+    /// the request path never pays compile latency).
+    pub fn warmup(&self) -> Result<usize> {
+        let names: Vec<(String, usize)> = self
+            .manifest
+            .executables
+            .iter()
+            .flat_map(|(n, e)| e.buckets.keys().map(move |b| (n.clone(), *b)))
+            .collect();
+        for (n, b) in &names {
+            self.compiled(n, *b)?;
+        }
+        Ok(names.len())
+    }
+
+    /// Device-resident weight buffer (uploaded once, then reused).
+    fn weight_buffer(&self, pname: &str) -> Result<std::rc::Rc<xla::PjRtBuffer>> {
+        if let Some(b) = self.weight_bufs.borrow().get(pname) {
+            return Ok(b.clone());
+        }
+        let rec = self
+            .manifest
+            .weights
+            .get(pname)
+            .ok_or_else(|| anyhow!("weight {pname:?} not in manifest"))?;
+        let data = super::tensor::read_f32_at(
+            &mut self.weights_file.borrow_mut(),
+            rec.offset,
+            rec.len(),
+        )?;
+        let buf = self
+            .client
+            .buffer_from_host_buffer(&data, &rec.shape, None)
+            .map_err(|e| anyhow!("uploading {pname}: {e:?}"))?;
+        let rc = std::rc::Rc::new(buf);
+        self.weight_bufs.borrow_mut().insert(pname.to_string(), rc.clone());
+        Ok(rc)
+    }
+
+    fn upload(&self, t: &HostTensor) -> Result<xla::PjRtBuffer> {
+        match &t.data {
+            TensorData::F32(v) => self
+                .client
+                .buffer_from_host_buffer(v, &t.dims, None)
+                .map_err(|e| anyhow!("upload f32: {e:?}")),
+            TensorData::I32(v) => self
+                .client
+                .buffer_from_host_buffer(v, &t.dims, None)
+                .map_err(|e| anyhow!("upload i32: {e:?}")),
+        }
+    }
+
+    /// Execute `name` at bucket `b`, binding layer-scoped weights for
+    /// `layer`.  `inputs` must match the manifest's input args in order;
+    /// batch dims must already equal `b` (use `HostTensor::pad_batch`).
+    pub fn call(
+        &self,
+        name: &str,
+        b: usize,
+        layer: usize,
+        inputs: &[HostTensor],
+    ) -> Result<Vec<HostTensor>> {
+        let ce = self.compiled(name, b)?;
+        let spec = self.manifest.exe(name)?;
+
+        let mut args: Vec<std::rc::Rc<xla::PjRtBuffer>> = Vec::with_capacity(spec.args.len());
+        let mut in_iter = inputs.iter();
+        for a in &spec.args {
+            match a.kind {
+                ArgKind::Input => {
+                    let t = in_iter
+                        .next()
+                        .ok_or_else(|| anyhow!("{name}: missing input {:?}", a.name))?;
+                    let want = a.concrete_shape(b);
+                    if t.dims != want {
+                        bail!(
+                            "{name}: input {:?} shape {:?} != expected {:?}",
+                            a.name, t.dims, want
+                        );
+                    }
+                    args.push(std::rc::Rc::new(self.upload(t)?));
+                }
+                ArgKind::Weight => {
+                    let pname = self.manifest.weight_name(a, layer);
+                    args.push(self.weight_buffer(&pname)?);
+                }
+            }
+        }
+        if in_iter.next().is_some() {
+            bail!("{name}: too many inputs supplied");
+        }
+
+        let borrowed: Vec<&xla::PjRtBuffer> = args.iter().map(|r| r.as_ref()).collect();
+        let result = ce
+            .exe
+            .execute_b(&borrowed)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+
+        // return_tuple=True => single tuple output buffer
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("download {name}: {e:?}"))?;
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple {name}: {e:?}"))?;
+        if parts.len() != ce.out_dtypes.len() {
+            bail!(
+                "{name}: got {} outputs, manifest says {}",
+                parts.len(),
+                ce.out_dtypes.len()
+            );
+        }
+        let mut outs = Vec::with_capacity(parts.len());
+        for (i, part) in parts.into_iter().enumerate() {
+            let dims = ce.out_shapes[i].clone();
+            let t = match ce.out_dtypes[i] {
+                DType::F32 => HostTensor::f32(
+                    dims,
+                    part.to_vec::<f32>()
+                        .map_err(|e| anyhow!("{name} out{i} as f32: {e:?}"))?,
+                ),
+                DType::I32 => HostTensor::i32(
+                    dims,
+                    part.to_vec::<i32>()
+                        .map_err(|e| anyhow!("{name} out{i} as i32: {e:?}"))?,
+                ),
+            };
+            outs.push(t);
+        }
+        Ok(outs)
+    }
+
+    /// Read a weight tensor back to the host.
+    pub fn weight_host(&self, pname: &str) -> Result<HostTensor> {
+        let rec = self
+            .manifest
+            .weights
+            .get(pname)
+            .ok_or_else(|| anyhow!("weight {pname:?} not in manifest"))?;
+        let data = super::tensor::read_f32_at(
+            &mut self.weights_file.borrow_mut(),
+            rec.offset,
+            rec.len(),
+        )?;
+        Ok(HostTensor::f32(rec.shape.clone(), data))
+    }
+}

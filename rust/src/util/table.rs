@@ -53,6 +53,21 @@ impl Table {
     pub fn print(&self) {
         print!("{}", self.render());
     }
+
+    /// JSON view (`{"title", "header", "rows"}`) for machine-readable
+    /// bench output (`instinfer bench <target> --json FILE`).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let strs = |xs: &[String]| Json::Arr(xs.iter().map(|s| Json::Str(s.clone())).collect());
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert("title".to_string(), Json::Str(self.title.clone()));
+        obj.insert("header".to_string(), strs(&self.header));
+        obj.insert(
+            "rows".to_string(),
+            Json::Arr(self.rows.iter().map(|r| strs(r)).collect()),
+        );
+        Json::Obj(obj)
+    }
 }
 
 /// Format a float with engineering-style precision (3 significant-ish).
@@ -91,6 +106,16 @@ mod tests {
     fn arity_checked() {
         let mut t = Table::new("x", &["a", "b"]);
         t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        let mut t = Table::new("demo", &["bs", "tput"]);
+        t.row(vec!["4".into(), "12.5".into()]);
+        let j = t.to_json();
+        let parsed = crate::util::json::Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("title").unwrap().as_str(), Some("demo"));
+        assert_eq!(parsed.get("rows").unwrap().as_arr().unwrap().len(), 1);
     }
 
     #[test]

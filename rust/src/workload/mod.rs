@@ -44,7 +44,15 @@ impl WorkloadGen {
         input_len: usize,
         output_len: usize,
     ) -> Self {
-        WorkloadGen { rng: Rng::new(seed), vocab, max_seq, profile, input_len, output_len, next_id: 0 }
+        WorkloadGen {
+            rng: Rng::new(seed),
+            vocab,
+            max_seq,
+            profile,
+            input_len,
+            output_len,
+            next_id: 0,
+        }
     }
 
     fn sample_lens(&mut self) -> (usize, usize) {
@@ -82,6 +90,55 @@ impl WorkloadGen {
 
     pub fn batch(&mut self, n: usize) -> Vec<Request> {
         (0..n).map(|_| self.request()).collect()
+    }
+}
+
+/// One open-loop request: a [`Request`] stamped with its (simulated)
+/// arrival time and a scheduling priority (higher = more urgent).
+#[derive(Debug, Clone)]
+pub struct Arrival {
+    pub req: Request,
+    /// arrival timestamp on the simulated device clock, seconds
+    pub at: f64,
+    pub priority: u8,
+}
+
+/// Open-loop arrival process: Poisson arrivals at `rate` requests per
+/// simulated second over a [`WorkloadGen`] length profile, with an
+/// optional fraction of high-priority requests (priority 1 vs 0) to
+/// exercise preemption.  Deterministic per seed.
+#[derive(Debug, Clone)]
+pub struct ArrivalGen {
+    lengths: WorkloadGen,
+    rng: Rng,
+    rate: f64,
+    hi_frac: f64,
+    clock: f64,
+}
+
+impl ArrivalGen {
+    /// `rate` must be > 0 (requests per simulated second).
+    pub fn new(lengths: WorkloadGen, seed: u64, rate: f64) -> Self {
+        assert!(rate > 0.0, "arrival rate must be positive");
+        ArrivalGen { lengths, rng: Rng::new(seed), rate, hi_frac: 0.0, clock: 0.0 }
+    }
+
+    /// Mark roughly `frac` of requests as high priority.
+    pub fn with_high_priority_fraction(mut self, frac: f64) -> Self {
+        self.hi_frac = frac.clamp(0.0, 1.0);
+        self
+    }
+
+    /// Next arrival; the exponential gap advances the internal clock.
+    pub fn next_arrival(&mut self) -> Arrival {
+        self.clock += self.rng.exp(1.0 / self.rate);
+        let priority = if self.rng.bool(self.hi_frac) { 1 } else { 0 };
+        Arrival { req: self.lengths.request(), at: self.clock, priority }
+    }
+
+    /// The next `n` arrivals in time order.
+    pub fn take(&mut self, n: usize) -> Vec<Arrival> {
+        (0..n).map(|_| self.next_arrival()).collect()
     }
 }
 
@@ -154,6 +211,29 @@ mod tests {
         for r in &rs {
             assert!(r.prompt.iter().all(|&t| (0..100).contains(&t)));
         }
+    }
+
+    #[test]
+    fn arrivals_are_ordered_and_poisson_ish() {
+        let wg = WorkloadGen::new(1, 128, 256, LengthProfile::Qa, 32, 16);
+        let mut ag = ArrivalGen::new(wg, 9, 100.0).with_high_priority_fraction(0.25);
+        let arrivals = ag.take(200);
+        let mut prev = 0.0;
+        let mut hi = 0usize;
+        for a in &arrivals {
+            assert!(a.at > prev, "arrival times must strictly increase");
+            prev = a.at;
+            hi += a.priority as usize;
+        }
+        // mean gap ~ 1/rate = 10ms: the 200th arrival lands around 2s
+        assert!((0.5..8.0).contains(&prev), "total span {prev}");
+        assert!(hi > 10 && hi < 100, "high-priority count {hi}");
+        // determinism
+        let wg2 = WorkloadGen::new(1, 128, 256, LengthProfile::Qa, 32, 16);
+        let mut ag2 = ArrivalGen::new(wg2, 9, 100.0).with_high_priority_fraction(0.25);
+        let b = ag2.take(200);
+        assert_eq!(arrivals[50].req.prompt, b[50].req.prompt);
+        assert_eq!(arrivals[50].at, b[50].at);
     }
 
     #[test]

@@ -1,0 +1,307 @@
+//! Continuous-batching integration: batch churn (mid-decode admission,
+//! mid-flight retirement, priority preemption to flash) must leave the
+//! functional plane untouched — every sequence generates exactly the
+//! tokens it would generate running alone — and must conserve KV slots.
+
+use instinfer::coordinator::{
+    run_closed_loop, EngineConfig, InferenceEngine, OfflineBatcher, SchedConfig, Scheduler,
+    Sequence, SlotManager,
+};
+use instinfer::runtime::Runtime;
+use instinfer::util::prop::check;
+use instinfer::util::rng::Rng;
+use instinfer::workload::{Arrival, LengthProfile, Request, WorkloadGen};
+use std::collections::BTreeSet;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../artifacts")
+}
+
+fn engine() -> InferenceEngine {
+    let rt = Runtime::open(artifacts_dir()).expect("runtime");
+    InferenceEngine::new(rt, EngineConfig::micro(2)).unwrap()
+}
+
+fn req(id: u64, prompt_len: usize, gen: usize) -> Request {
+    Request {
+        id,
+        prompt: (0..prompt_len as i64)
+            .map(|t| ((t * 31 + id as i64 * 7) % 512) as i32)
+            .collect(),
+        max_new_tokens: gen,
+    }
+}
+
+/// Ground truth: the request decoded alone on a fresh engine.
+fn solo(r: &Request) -> Vec<i32> {
+    let mut eng = engine();
+    let mut slots = SlotManager::new(4);
+    let seqs = vec![Sequence::new(r.clone(), slots.alloc().unwrap())];
+    let done = eng.generate(seqs, 1).unwrap();
+    done[0].generated.clone()
+}
+
+fn drain(sched: &mut Scheduler, eng: &mut InferenceEngine) {
+    let mut guard = 0;
+    while !sched.is_idle() {
+        sched.step(eng).unwrap();
+        guard += 1;
+        assert!(guard < 500, "scheduler failed to drain");
+    }
+}
+
+#[test]
+fn mid_decode_admission_matches_solo_runs() {
+    let r1 = req(1, 20, 10);
+    let r2 = req(2, 16, 6);
+    let solo1 = solo(&r1);
+    let solo2 = solo(&r2);
+    assert_eq!(solo1.len(), 10);
+    assert_eq!(solo2.len(), 6);
+
+    let mut eng = engine();
+    let mut sched = Scheduler::new(SchedConfig { max_batch: 4, prefill_chunk: 2, slots: 8 });
+    sched.enqueue(Arrival { req: r1, at: 0.0, priority: 0 }).unwrap();
+    // decode r1 for a few steps before r2 shows up
+    let mut steps = 0;
+    while eng.metrics.decode_steps < 3 {
+        sched.step(&mut eng).unwrap();
+        steps += 1;
+        assert!(steps < 50);
+    }
+    assert_eq!(sched.running_count(), 1, "r1 must still be decoding");
+    sched.enqueue(Arrival { req: r2, at: eng.sim_now, priority: 0 }).unwrap();
+    drain(&mut sched, &mut eng);
+
+    let g1 = sched.finished.iter().find(|r| r.id == 1).unwrap();
+    let g2 = sched.finished.iter().find(|r| r.id == 2).unwrap();
+    // (a) batch churn leaves the functional plane untouched
+    assert_eq!(g1.generated, solo1, "r1 diverged from its solo run");
+    assert_eq!(g2.generated, solo2, "r2 diverged from its solo run");
+    // r2 joined while r1 was mid-flight
+    assert!(g2.admitted_at > 0.0);
+    assert!(g2.admitted_at < g1.finished_at, "admission was not mid-decode");
+    assert_eq!(eng.metrics.admissions, 2);
+    assert_eq!(eng.metrics.retirements, 2);
+    // (b) all KV slots reclaimed
+    assert_eq!(sched.slots.free_count(), 8);
+    assert_eq!(sched.slots.live_count(), 0);
+    assert_eq!(sched.slots.suspended_count(), 0);
+}
+
+#[test]
+fn preempted_sequence_resumes_from_flash_and_matches_solo() {
+    let low_a = req(10, 12, 14);
+    let low_b = req(11, 12, 14);
+    let high = req(12, 8, 4);
+    let solo_a = solo(&low_a);
+    let solo_b = solo(&low_b);
+    let solo_h = solo(&high);
+
+    let mut eng = engine();
+    // two seats only: the high-priority arrival must preempt
+    let mut sched = Scheduler::new(SchedConfig { max_batch: 2, prefill_chunk: 2, slots: 8 });
+    sched.enqueue(Arrival { req: low_a, at: 0.0, priority: 0 }).unwrap();
+    sched.enqueue(Arrival { req: low_b, at: 0.0, priority: 0 }).unwrap();
+    let mut steps = 0;
+    while eng.metrics.decode_steps < 2 {
+        sched.step(&mut eng).unwrap();
+        steps += 1;
+        assert!(steps < 50);
+    }
+    assert_eq!(sched.running_count(), 2);
+    sched.enqueue(Arrival { req: high, at: eng.sim_now, priority: 1 }).unwrap();
+    sched.step(&mut eng).unwrap();
+    // the youngest low-priority runner (id 11) yielded its seat
+    assert_eq!(sched.suspended_count(), 1);
+    assert_eq!(eng.metrics.preemptions, 1);
+    drain(&mut sched, &mut eng);
+
+    let ga = sched.finished.iter().find(|r| r.id == 10).unwrap();
+    let gb = sched.finished.iter().find(|r| r.id == 11).unwrap();
+    let gh = sched.finished.iter().find(|r| r.id == 12).unwrap();
+    assert_eq!(gb.preemptions, 1, "victim must record its preemption");
+    assert!(eng.metrics.resumes >= 1);
+    // resume continues from flash-resident KV: tokens still match solo
+    assert_eq!(ga.generated, solo_a);
+    assert_eq!(gb.generated, solo_b, "preempt/resume corrupted the victim");
+    assert_eq!(gh.generated, solo_h);
+    // high priority got served before the victim finished
+    assert!(gh.finished_at <= gb.finished_at);
+    assert_eq!(sched.slots.free_count(), 8);
+}
+
+#[test]
+fn invalid_prompt_is_rejected_without_killing_the_run() {
+    let mut eng = engine();
+    let sp = eng.rt.manifest.model.prefill_seq;
+    let mut sched = Scheduler::new(SchedConfig { max_batch: 4, prefill_chunk: 2, slots: 8 });
+    // over-long prompt arrives alongside a valid request
+    sched.enqueue(Arrival { req: req(1, sp + 1, 4), at: 0.0, priority: 0 }).unwrap();
+    sched.enqueue(Arrival { req: req(2, 8, 4), at: 0.0, priority: 0 }).unwrap();
+    drain(&mut sched, &mut eng);
+    let bad = sched.finished.iter().find(|r| r.id == 1).unwrap();
+    let good = sched.finished.iter().find(|r| r.id == 2).unwrap();
+    assert!(bad.rejected);
+    assert!(bad.generated.is_empty());
+    assert!(!good.rejected);
+    assert_eq!(good.generated.len(), 4, "valid request must still be served");
+    assert_eq!(sched.slots.free_count(), 8, "rejection must not leak a slot");
+}
+
+#[test]
+fn closed_loop_continuous_no_slower_than_offline_drain() {
+    // Same Chat workload through both paths; the continuous scheduler
+    // retires stragglers mid-flight, so its simulated completion time
+    // must not exceed the drain-the-queue baseline (small tolerance for
+    // chunked-prefill scheduling differences).
+    let mk_reqs = || {
+        let mut wg = WorkloadGen::new(99, 512, 128, LengthProfile::Chat, 24, 16);
+        wg.batch(12)
+            .into_iter()
+            .map(|mut r| {
+                r.prompt.truncate(64);
+                r.max_new_tokens = r.max_new_tokens.clamp(2, 16);
+                r
+            })
+            .collect::<Vec<Request>>()
+    };
+
+    // offline drain baseline
+    let mut off = engine();
+    let mut batcher = OfflineBatcher::new(vec![1, 4, 8], 8);
+    for r in mk_reqs() {
+        batcher.push(r);
+    }
+    let mut slots = SlotManager::new(64);
+    while let Some((reqs, bucket)) = batcher.next_batch() {
+        let seqs: Vec<Sequence> = reqs
+            .into_iter()
+            .map(|r| Sequence::new(r, slots.alloc().unwrap()))
+            .collect();
+        for s in off.generate(seqs, bucket).unwrap() {
+            slots.release(s.slot).unwrap();
+        }
+    }
+    let off_sim = off.sim_now;
+
+    // continuous path
+    let mut cont = engine();
+    let report = run_closed_loop(
+        &mut cont,
+        mk_reqs(),
+        SchedConfig { max_batch: 8, prefill_chunk: 4, slots: 64 },
+    )
+    .unwrap();
+    let want: u64 = mk_reqs().iter().map(|r| r.max_new_tokens as u64).sum();
+    assert_eq!(report.total_generated(), want, "continuous path lost tokens");
+    assert!(
+        cont.sim_now <= off_sim * 1.05,
+        "continuous {:.6}s slower than offline drain {:.6}s",
+        cont.sim_now,
+        off_sim
+    );
+}
+
+#[test]
+fn prop_slot_churn_never_double_assigns() {
+    // alloc/reserve/commit/cancel/suspend/resume/release churn: a slot is
+    // never handed to two owners, and held+free always equals capacity.
+    check(
+        "slot_churn",
+        60,
+        |r| (r.next_u64(), r.range(1, 12)),
+        |&(seed, cap)| {
+            let mut rng = Rng::new(seed);
+            let mut m = SlotManager::new(cap);
+            let mut live: BTreeSet<u32> = BTreeSet::new();
+            let mut reserved: BTreeSet<u32> = BTreeSet::new();
+            let mut suspended: BTreeSet<u32> = BTreeSet::new();
+            for step in 0..300 {
+                match rng.below(7) {
+                    0 => match m.alloc() {
+                        Ok(s) => {
+                            if live.contains(&s) || reserved.contains(&s) || suspended.contains(&s)
+                            {
+                                return Err(format!("step {step}: slot {s} double-assigned"));
+                            }
+                            live.insert(s);
+                        }
+                        Err(_) => {
+                            if live.len() + reserved.len() + suspended.len() != cap {
+                                return Err(format!("step {step}: alloc failed below capacity"));
+                            }
+                        }
+                    },
+                    1 => match m.reserve() {
+                        Ok(s) => {
+                            if live.contains(&s) || reserved.contains(&s) || suspended.contains(&s)
+                            {
+                                return Err(format!("step {step}: slot {s} double-reserved"));
+                            }
+                            reserved.insert(s);
+                        }
+                        Err(_) => {
+                            if live.len() + reserved.len() + suspended.len() != cap {
+                                return Err(format!("step {step}: reserve failed below capacity"));
+                            }
+                        }
+                    },
+                    2 => {
+                        if let Some(&s) = reserved.iter().next() {
+                            reserved.remove(&s);
+                            m.commit(s).map_err(|e| e.to_string())?;
+                            live.insert(s);
+                        }
+                    }
+                    3 => {
+                        if let Some(&s) = reserved.iter().next() {
+                            reserved.remove(&s);
+                            m.cancel(s).map_err(|e| e.to_string())?;
+                        }
+                    }
+                    4 => {
+                        if let Some(&s) = live.iter().next() {
+                            live.remove(&s);
+                            m.suspend(s).map_err(|e| e.to_string())?;
+                            suspended.insert(s);
+                        }
+                    }
+                    5 => {
+                        if let Some(&s) = suspended.iter().next() {
+                            suspended.remove(&s);
+                            m.resume(s).map_err(|e| e.to_string())?;
+                            live.insert(s);
+                        }
+                    }
+                    _ => {
+                        let pick = if rng.bool(0.5) {
+                            live.iter().next().copied()
+                        } else {
+                            suspended.iter().next().copied()
+                        };
+                        if let Some(s) = pick {
+                            live.remove(&s);
+                            suspended.remove(&s);
+                            m.release(s).map_err(|e| e.to_string())?;
+                        }
+                    }
+                }
+                let held = live.len() + reserved.len() + suspended.len();
+                if held + m.free_count() != cap {
+                    return Err(format!(
+                        "step {step}: held {held} + free {} != capacity {cap}",
+                        m.free_count()
+                    ));
+                }
+                if m.live_count() != live.len()
+                    || m.reserved_count() != reserved.len()
+                    || m.suspended_count() != suspended.len()
+                {
+                    return Err(format!("step {step}: manager counts diverged from model"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
