@@ -36,6 +36,8 @@ fn explore(channels: usize, n_group: usize, sparse: bool) -> anyhow::Result<Vec<
         attn_kernels: 2,
         argtopk_elems_per_s: 285e6,
         filter_bw_per_channel: flash.channel_bw,
+        dram_bw: 4.2e9,
+        hot_tier_bytes: 0, // the explorer measures raw flash behaviour
         kv_capacity_bytes: flash.capacity_bytes() as u64,
     };
     let mut csd = InstCsd::new(spec, FtlConfig { d_head: d, m: 4, n: n_group })?;

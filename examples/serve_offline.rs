@@ -9,7 +9,6 @@
 //!
 //!     cargo run --release --example serve_offline -- --batch 8 --steps 16
 
-use instinfer::config::model::SparsityParams;
 use instinfer::coordinator::{
     run_closed_loop, EngineConfig, InferenceEngine, OfflineBatcher, SchedConfig, Sequence,
     SlotManager,
@@ -31,10 +30,7 @@ fn run_mode(dir: &str, sparse: bool, n_req: usize, batch: usize, gen: usize) -> 
     let meta = rt.manifest.model.clone();
     let buckets = rt.manifest.batch_buckets.clone();
     rt.warmup()?;
-    let mut cfg = EngineConfig::micro(2);
-    if sparse {
-        cfg = cfg.sparse(SparsityParams { r: meta.r, k: meta.k, m: meta.m, n: meta.n });
-    }
+    let cfg = EngineConfig::micro_for(&meta, 2, sparse);
     let mut engine = InferenceEngine::new(rt, cfg)?;
     let mut wg = WorkloadGen::new(
         1234, meta.vocab, meta.max_seq, LengthProfile::Chat, meta.prefill_seq / 2, gen,
@@ -132,7 +128,7 @@ fn run_continuous(dir: &str, n_req: usize, batch: usize, gen: usize) -> anyhow::
     let report = run_closed_loop(
         &mut engine,
         reqs,
-        SchedConfig { max_batch: batch, prefill_chunk: 4, slots: 64 },
+        SchedConfig { max_batch: batch, prefill_chunk: 4, slots: 64, ..Default::default() },
     )?;
     let tput = report.total_generated() as f64 / report.sim_end.max(1e-12);
     println!("== InstI-Dense, continuous batching (same closed-loop Chat workload) ==");

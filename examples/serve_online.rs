@@ -14,7 +14,6 @@
 //! Runs with or without AOT artifacts (native backend synthesizes the
 //! opt-micro model when `artifacts/` is absent).
 
-use instinfer::config::model::SparsityParams;
 use instinfer::coordinator::{run_open_loop, EngineConfig, InferenceEngine, SchedConfig};
 use instinfer::runtime::Runtime;
 use instinfer::workload::{ArrivalGen, LengthProfile, WorkloadGen};
@@ -40,10 +39,7 @@ fn main() -> anyhow::Result<()> {
     println!("serve_online: backend {}", rt.platform());
     rt.warmup()?;
     let meta = rt.manifest.model.clone();
-    let mut cfg = EngineConfig::micro(2);
-    if sparse {
-        cfg = cfg.sparse(SparsityParams { r: meta.r, k: meta.k, m: meta.m, n: meta.n });
-    }
+    let cfg = EngineConfig::micro_for(&meta, 2, sparse);
     let mut engine = InferenceEngine::new(rt, cfg)?;
 
     let wg = WorkloadGen::new(
@@ -64,7 +60,7 @@ fn main() -> anyhow::Result<()> {
     let report = run_open_loop(
         &mut engine,
         arrivals,
-        SchedConfig { max_batch: batch, prefill_chunk: 2, slots: 32 },
+        SchedConfig { max_batch: batch, prefill_chunk: 2, slots: 32, ..Default::default() },
     )?;
     let wall = t0.elapsed().as_secs_f64();
 

@@ -5,6 +5,7 @@
 
 pub mod accuracy;
 pub mod figures;
+pub mod tier;
 
 use crate::util::table::Table;
 
@@ -42,6 +43,7 @@ pub fn registry() -> Vec<(&'static str, BenchFn)> {
         ("fig17a", figures::fig17a),
         ("fig17b", figures::fig17b),
         ("table1", figures::table1),
+        ("tier", tier::tier),
         ("ablate-group", figures::ablate_group),
         ("ablate-dualk", figures::ablate_dualk),
         ("ablate-pipeline", figures::ablate_pipeline),

@@ -138,6 +138,15 @@ pub struct CsdSpec {
     pub argtopk_elems_per_s: f64,
     /// NFC filter throughput per channel, bytes/s (filters at line rate)
     pub filter_bw_per_channel: f64,
+    /// on-device DRAM bandwidth, bytes/s — what a hot-tier page hit
+    /// costs instead of a flash die read + channel transfer
+    pub dram_bw: f64,
+    /// bytes of `dram_bytes` reserved as the KV hot tier (group buffers
+    /// in front of the flash array; 0 = flash-only dataflow).  The
+    /// functional-plane test specs default to 0 so the paper's baseline
+    /// timing is preserved unless tiering is opted in via
+    /// `EngineConfig`/CLI/bench.
+    pub hot_tier_bytes: usize,
     /// KV capacity of the backing store, bytes.  The functional flash
     /// array models the OpenSSD-like 68 GB geometry; the paper's
     /// software-defined InstCSD is backed by a 2 TB 980pro (§V-B, §VI-A),
@@ -161,6 +170,8 @@ impl CsdSpec {
             attn_kernels: 2,
             argtopk_elems_per_s: 285e6, // 1 element/cycle streaming topk
             filter_bw_per_channel: flash.channel_bw, // line-rate filtering
+            dram_bw: 4.2e9, // Zynq PS-side DDR3 (~4.2 GB/s effective)
+            hot_tier_bytes: 1 << 30, // half the 2 GB DRAM as KV hot tier
             kv_capacity_bytes: 2_000_000_000_000, // 2 TB 980pro backing
         }
     }
@@ -176,6 +187,8 @@ impl CsdSpec {
             attn_kernels: 2,
             argtopk_elems_per_s: 100e6,
             filter_bw_per_channel: 1.0e9,
+            dram_bw: 1.0e9,
+            hot_tier_bytes: 0, // unit tests opt in explicitly
             kv_capacity_bytes: FlashSpec::tiny().capacity_bytes() as u64,
         }
     }

@@ -20,6 +20,8 @@ use crate::coordinator::metrics::EngineMetrics;
 use crate::coordinator::request::{RequestPhase, Sequence};
 use crate::coordinator::router::HeadRouter;
 use crate::ftl::FtlConfig;
+use crate::kvtier::{TierConfig, TierStats};
+use crate::runtime::manifest::ModelMeta;
 use crate::runtime::{HostTensor, Runtime};
 use crate::sim::Time;
 use anyhow::{bail, Context, Result};
@@ -40,22 +42,46 @@ pub struct EngineConfig {
     /// peer-to-peer command path to the CSDs (vs host-FS)
     pub p2p: bool,
     pub csd_spec: CsdSpec,
+    /// per-CSD hot-tier shape (capacity + eviction policy)
+    pub tier: TierConfig,
 }
 
 impl EngineConfig {
     /// Functional-plane default: micro flash geometry sized for the
     /// opt-micro model, in-storage dense attention, P2P on.
     pub fn micro(n_csds: usize) -> Self {
+        let csd_spec = CsdSpec::micro();
         EngineConfig {
             n_csds,
             backend: AttnBackend::Csd(AttnMode::Dense),
             p2p: true,
-            csd_spec: CsdSpec::micro(),
+            tier: TierConfig::for_spec(&csd_spec),
+            csd_spec,
+        }
+    }
+
+    /// The one shared functional-plane constructor for the CLI, the
+    /// examples and the integration tests: micro CSD spec, `n_csds`
+    /// devices, and the model's default SparF parameters when `sparse`.
+    /// (Call sites used to hand-roll this; one helper keeps tier and
+    /// sparsity defaults from drifting between tests and examples.)
+    pub fn micro_for(meta: &ModelMeta, n_csds: usize, sparse: bool) -> Self {
+        let cfg = EngineConfig::micro(n_csds);
+        if sparse {
+            cfg.sparse(meta.sparsity())
+        } else {
+            cfg
         }
     }
 
     pub fn sparse(mut self, sp: crate::config::model::SparsityParams) -> Self {
         self.backend = AttnBackend::Csd(AttnMode::SparF(sp));
+        self
+    }
+
+    /// Enable the CSD-DRAM hot tier with an explicit capacity/policy.
+    pub fn tiered(mut self, tier: TierConfig) -> Self {
+        self.tier = tier;
         self
     }
 }
@@ -80,7 +106,7 @@ impl InferenceEngine {
         let mut csds = Vec::with_capacity(cfg.n_csds);
         let pcie = PcieSpec::paper();
         for _ in 0..cfg.n_csds {
-            let csd = InstCsd::new(cfg.csd_spec, ftl_cfg)
+            let csd = InstCsd::with_tier(cfg.csd_spec, ftl_cfg, cfg.tier)
                 .context("constructing InstCSD")?;
             csds.push(NvmeQueue::new(csd, &pcie, cfg.p2p));
         }
@@ -301,6 +327,7 @@ impl InferenceEngine {
         }
         // advance the device clock past this step's CSD work
         self.sim_now = self.sim_now.max(step_done);
+        self.metrics.decode_sim_s += self.sim_now - step_start;
 
         let lg = self.rt.call("logits", bucket, 0, &[x])?;
         let next = lg[1].as_i32()?;
@@ -448,6 +475,65 @@ impl InferenceEngine {
         Ok(())
     }
 
+    /// Cumulative per-token attention mass for `slot`, summed across the
+    /// CSD array (each CSD accumulates its own heads' Logit passes).
+    pub fn token_importance(&self, slot: u32) -> Vec<f32> {
+        let mut out: Vec<f32> = Vec::new();
+        for q in &self.csds {
+            if let Some(s) = q.csd.tier.importance.scores(slot) {
+                if s.len() > out.len() {
+                    out.resize(s.len(), 0.0);
+                }
+                for (o, &v) in out.iter_mut().zip(s) {
+                    *o += v;
+                }
+            }
+        }
+        out
+    }
+
+    /// Drop token positions of `slot` on every CSD: future attention
+    /// masks them out, and fully-dropped token groups free their flash
+    /// pages (the scheduler's H2O-style drop-on-resume).
+    pub fn drop_tokens(&mut self, slot: u32, tokens: &[u32]) -> Result<()> {
+        if tokens.is_empty() || !matches!(self.cfg.backend, AttnBackend::Csd(_)) {
+            return Ok(());
+        }
+        for c in 0..self.csds.len() {
+            let comp = self.csds[c].submit(
+                CsdCommand::DropTokens { slot, tokens: tokens.to_vec() },
+                self.sim_now,
+            )?;
+            self.sim_now = self.sim_now.max(comp.done);
+        }
+        self.metrics.dropped_tokens += tokens.len() as u64;
+        Ok(())
+    }
+
+    /// Aggregate hot-tier statistics across the CSD array.
+    pub fn tier_stats(&self) -> TierStats {
+        let mut s = TierStats::default();
+        for q in &self.csds {
+            s.merge(&q.csd.tier.stats);
+        }
+        s
+    }
+
+    /// Bytes currently resident in the hot tiers of all CSDs.
+    pub fn tier_hot_bytes(&self) -> usize {
+        self.csds.iter().map(|q| q.csd.tier.hot.bytes()).sum()
+    }
+
+    /// Configured hot-tier capacity across all CSDs.
+    pub fn tier_capacity_bytes(&self) -> usize {
+        self.csds.iter().map(|q| q.csd.tier.cfg.hot_bytes).sum()
+    }
+
+    /// Flash KV capacity across all CSDs (the cold tier's bound).
+    pub fn kv_capacity_bytes(&self) -> u64 {
+        self.csds.len() as u64 * self.cfg.csd_spec.kv_capacity_bytes
+    }
+
     /// Run a whole batch to completion: prefill, then decode until every
     /// sequence hits its token budget.  Returns the finished sequences.
     pub fn generate(&mut self, mut seqs: Vec<Sequence>, bucket: usize) -> Result<Vec<Sequence>> {
@@ -503,6 +589,11 @@ impl CsdSpec {
             attn_kernels: 2,
             argtopk_elems_per_s: 285e6,
             filter_bw_per_channel: flash.channel_bw,
+            // group buffers are an order of magnitude faster than the
+            // aggregate flash channels; tiering is opted in per engine
+            // (hot_tier_bytes 0 keeps the paper's flash-only baseline)
+            dram_bw: 8e9,
+            hot_tier_bytes: 0,
             kv_capacity_bytes: flash.capacity_bytes() as u64,
         }
     }

@@ -14,7 +14,7 @@
 //! Accounting (`SlotStats`) feeds the serve-loop occupancy report.
 
 use anyhow::{bail, Result};
-use std::collections::BTreeSet;
+use std::collections::{BTreeMap, BTreeSet};
 
 /// Monotone lifecycle counters.
 #[derive(Debug, Default, Clone)]
@@ -34,6 +34,8 @@ pub struct SlotManager {
     reserved: BTreeSet<u32>,
     live: BTreeSet<u32>,
     suspended: BTreeSet<u32>,
+    /// flash-resident KV bytes per held slot (scheduler-refreshed)
+    kv_bytes: BTreeMap<u32, u64>,
     pub stats: SlotStats,
 }
 
@@ -45,6 +47,7 @@ impl SlotManager {
             reserved: BTreeSet::new(),
             live: BTreeSet::new(),
             suspended: BTreeSet::new(),
+            kv_bytes: BTreeMap::new(),
             stats: SlotStats::default(),
         }
     }
@@ -125,9 +128,35 @@ impl SlotManager {
         if !self.live.remove(&slot) && !self.suspended.remove(&slot) {
             bail!("release of non-live slot {slot}");
         }
+        self.kv_bytes.remove(&slot);
         self.free.insert(slot);
         self.stats.releases += 1;
         Ok(())
+    }
+
+    /// Record the flash-resident KV bytes of a held slot.  The scheduler
+    /// refreshes this every step (drop-on-resume shrinks it); writes for
+    /// slots that are neither live nor suspended are ignored.
+    pub fn set_kv_bytes(&mut self, slot: u32, bytes: u64) {
+        if self.live.contains(&slot) || self.suspended.contains(&slot) {
+            self.kv_bytes.insert(slot, bytes);
+        }
+    }
+
+    /// Flash-resident KV bytes across held slots.  A preempted
+    /// sequence's pages stay resident but its slot moves from `live` to
+    /// `suspended` — each held slot is counted exactly once here, and
+    /// the DRAM hot tier accounts its (cache-copy) bytes separately, so
+    /// the capacity invariant is `resident_kv_bytes() + tier bytes <=
+    /// flash + hot-tier capacity` with no double counting.
+    pub fn resident_kv_bytes(&self) -> u64 {
+        // every kv_bytes key is a held slot: set_kv_bytes only accepts
+        // live/suspended slots and release() removes the entry
+        debug_assert!(self
+            .kv_bytes
+            .keys()
+            .all(|s| self.live.contains(s) || self.suspended.contains(s)));
+        self.kv_bytes.values().sum()
     }
 
     pub fn live_count(&self) -> usize {
@@ -192,6 +221,25 @@ mod tests {
         m.cancel(r2).unwrap();
         assert_eq!(m.free_count(), 1);
         assert!(m.commit(r2).is_err());
+    }
+
+    #[test]
+    fn kv_byte_accounting_counts_held_slots_once() {
+        let mut m = SlotManager::new(2);
+        let a = m.alloc().unwrap();
+        m.set_kv_bytes(a, 100);
+        assert_eq!(m.resident_kv_bytes(), 100);
+        // a preempted slot's pages stay resident — counted once, not twice
+        m.suspend(a).unwrap();
+        assert_eq!(m.resident_kv_bytes(), 100);
+        m.resume(a).unwrap();
+        m.set_kv_bytes(a, 150);
+        assert_eq!(m.resident_kv_bytes(), 150);
+        m.release(a).unwrap();
+        assert_eq!(m.resident_kv_bytes(), 0);
+        // bytes for unheld slots are ignored
+        m.set_kv_bytes(7, 999);
+        assert_eq!(m.resident_kv_bytes(), 0);
     }
 
     #[test]

@@ -24,6 +24,11 @@ pub struct EngineMetrics {
     pub csd_wall_s: f64,
     /// simulated device-time accumulated on the CSDs
     pub csd_sim_s: Time,
+    /// simulated device-time spent inside decode steps (clock delta per
+    /// step; the tier bench's denominator)
+    pub decode_sim_s: Time,
+    /// token positions dropped by H2O-style drop-on-resume
+    pub dropped_tokens: u64,
     /// per-unit simulated breakdown (Fig. 16 numerator)
     pub units: UnitBreakdown,
     /// per-batch latencies (seconds, wall)

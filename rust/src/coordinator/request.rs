@@ -21,12 +21,22 @@ pub struct Sequence {
     pub phase: RequestPhase,
     /// tokens currently represented in the KV cache
     pub kv_len: usize,
+    /// positions < kv_len masked out by drop-on-resume (their KV pages
+    /// are freed group-wise; positions themselves are preserved)
+    pub dropped: std::collections::BTreeSet<u32>,
     pub generated: Vec<i32>,
 }
 
 impl Sequence {
     pub fn new(req: Request, slot: u32) -> Self {
-        Sequence { req, slot, phase: RequestPhase::Queued, kv_len: 0, generated: Vec::new() }
+        Sequence {
+            req,
+            slot,
+            phase: RequestPhase::Queued,
+            kv_len: 0,
+            dropped: std::collections::BTreeSet::new(),
+            generated: Vec::new(),
+        }
     }
 
     /// Absolute position of the next token to be decoded.

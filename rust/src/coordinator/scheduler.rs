@@ -41,13 +41,31 @@ pub struct SchedConfig {
     pub prefill_chunk: usize,
     /// KV slot capacity handed to the [`SlotManager`]
     pub slots: usize,
+    /// on resume from preemption, drop low-importance token positions
+    /// (H2O-style, via the tier's importance tracker) instead of
+    /// bringing the full cache back into the working set
+    pub drop_on_resume: bool,
+    /// token budget kept per sequence on resume (0 = keep everything);
+    /// only effective with `drop_on_resume`
+    pub resume_keep: usize,
 }
 
 impl Default for SchedConfig {
     fn default() -> Self {
-        SchedConfig { max_batch: 8, prefill_chunk: 4, slots: 64 }
+        SchedConfig {
+            max_batch: 8,
+            prefill_chunk: 4,
+            slots: 64,
+            drop_on_resume: false,
+            resume_keep: 0,
+        }
     }
 }
+
+/// Drop-on-resume always preserves this many of the most recent token
+/// positions (the DRAM tail groups and the decode neighbourhood), on top
+/// of the importance-ranked keep set.
+const RESUME_RECENT_WINDOW: usize = 16;
 
 /// Per-request bookkeeping kept while a request is in flight.
 #[derive(Debug, Clone)]
@@ -128,6 +146,7 @@ impl Scheduler {
             max_batch: cfg.max_batch.max(1),
             prefill_chunk: cfg.prefill_chunk.max(1),
             slots: cfg.slots.max(1),
+            ..cfg
         };
         let slots = SlotManager::new(cfg.slots);
         Scheduler {
@@ -310,6 +329,9 @@ impl Scheduler {
                 Cand::Resume(i) => {
                     let mut s = self.suspended.remove(i);
                     self.slots.resume(s.slot)?;
+                    if self.cfg.drop_on_resume {
+                        self.drop_low_importance(engine, &mut s)?;
+                    }
                     s.phase = RequestPhase::Decoding;
                     engine.metrics.resumes += 1;
                     rep.resumed += 1;
@@ -355,7 +377,73 @@ impl Scheduler {
         }
         rep.occupancy = self.running.len();
         rep.retired += self.retire(engine)?;
+
+        // ---- KV byte accounting + capacity invariants -----------------
+        // Flash-resident bytes are tracked once per held slot (live or
+        // suspended — no double counting of preempted sequences), and
+        // the DRAM hot tier is bounded separately: slot bytes + tier
+        // bytes can never exceed flash capacity + tier capacity.
+        let m = &engine.rt.manifest.model;
+        let per_tok =
+            (2 * m.n_heads * m.d_head * crate::config::model::FP16_BYTES * m.n_layers) as u64;
+        for s in &self.running {
+            let resident_toks = s.kv_len.saturating_sub(s.dropped.len());
+            self.slots.set_kv_bytes(s.slot, resident_toks as u64 * per_tok);
+        }
+        let resident = self.slots.resident_kv_bytes();
+        anyhow::ensure!(
+            resident <= engine.kv_capacity_bytes(),
+            "resident KV ({resident} B) exceeds flash capacity ({} B)",
+            engine.kv_capacity_bytes()
+        );
+        anyhow::ensure!(
+            engine.tier_hot_bytes() <= engine.tier_capacity_bytes(),
+            "hot tier ({} B) exceeds its configured capacity ({} B)",
+            engine.tier_hot_bytes(),
+            engine.tier_capacity_bytes()
+        );
         Ok(rep)
+    }
+
+    /// H2O-style drop-on-resume: keep the `resume_keep` most important
+    /// token positions (by cumulative attention mass from the engine's
+    /// Logit passes) plus a recent window, and drop the rest.  Dropped
+    /// positions are masked out of future attention and fully-dropped
+    /// token groups free their flash pages — the resumed sequence comes
+    /// back with a smaller cache instead of re-materializing all of it.
+    fn drop_low_importance(
+        &mut self,
+        engine: &mut InferenceEngine,
+        s: &mut Sequence,
+    ) -> Result<()> {
+        let keep = self.cfg.resume_keep;
+        if keep == 0 {
+            return Ok(());
+        }
+        let resident = s.kv_len.saturating_sub(s.dropped.len());
+        if resident <= keep {
+            return Ok(());
+        }
+        let n_drop = resident - keep;
+        let recent = RESUME_RECENT_WINDOW.min(keep);
+        let protect_from = s.kv_len.saturating_sub(recent);
+        let imp = engine.token_importance(s.slot);
+        let mut cand: Vec<(f32, usize)> = (0..protect_from)
+            .filter(|t| !s.dropped.contains(&(*t as u32)))
+            .map(|t| (imp.get(t).copied().unwrap_or(0.0), t))
+            .collect();
+        cand.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        cand.truncate(n_drop);
+        let mut drop: Vec<u32> = cand.into_iter().map(|(_, t)| t as u32).collect();
+        drop.sort_unstable();
+        if drop.is_empty() {
+            return Ok(());
+        }
+        engine.drop_tokens(s.slot, &drop)?;
+        for &t in &drop {
+            s.dropped.insert(t);
+        }
+        Ok(())
     }
 
     /// Drop finished (or context-exhausted) sequences from the batch,

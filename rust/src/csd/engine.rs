@@ -23,9 +23,11 @@
 use crate::config::hw::CsdSpec;
 use crate::config::model::SparsityParams;
 use crate::ftl::{FtlConfig, KvFtl, KvKind, StreamKey};
-use crate::sim::{BusyLedger, MultiServer, Time};
+use crate::kvtier::{PageId, TierConfig, TieredKv};
+use crate::sim::{BusyLedger, FifoResource, MultiServer, Time};
 use crate::sparse;
 use anyhow::{anyhow, Result};
+use std::collections::{BTreeMap, BTreeSet};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum AttnMode {
@@ -38,6 +40,8 @@ pub enum AttnMode {
 pub struct UnitBreakdown {
     pub argtopk: Time,
     pub flash_read: Time,
+    /// KV pages served by the CSD-DRAM hot tier instead of flash
+    pub dram_hit: Time,
     pub nfc_filter: Time,
     pub logit0: Time,
     pub logit: Time,
@@ -47,13 +51,14 @@ pub struct UnitBreakdown {
 
 impl UnitBreakdown {
     pub fn total(&self) -> Time {
-        self.argtopk + self.flash_read + self.nfc_filter + self.logit0 + self.logit
-            + self.attend + self.writeback
+        self.argtopk + self.flash_read + self.dram_hit + self.nfc_filter + self.logit0
+            + self.logit + self.attend + self.writeback
     }
 
     pub fn merge(&mut self, o: &UnitBreakdown) {
         self.argtopk += o.argtopk;
         self.flash_read += o.flash_read;
+        self.dram_hit += o.dram_hit;
         self.nfc_filter += o.nfc_filter;
         self.logit0 += o.logit0;
         self.logit += o.logit;
@@ -62,23 +67,50 @@ impl UnitBreakdown {
     }
 }
 
+/// Result of a tier-aware token-group fetch.
+struct TieredFetch {
+    rows: Vec<(usize, Vec<f32>)>,
+    done: Time,
+    /// DRAM group-buffer service time consumed by hot-tier hits
+    dram_busy: Time,
+    /// wait attributable to flash (misses), relative to issue time
+    flash_wait: Time,
+}
+
 pub struct InstCsd {
     pub spec: CsdSpec,
     pub ftl: KvFtl,
+    /// CSD-DRAM hot tier + importance tracker fronting the FTL
+    pub tier: TieredKv,
     kernels: MultiServer,
+    /// DRAM group-buffer port serving hot-tier hits
+    dram: FifoResource,
     pub ledger: BusyLedger,
     d_head: usize,
+    /// per-slot token positions masked out by drop-on-resume
+    dropped: BTreeMap<u32, BTreeSet<u32>>,
 }
 
 impl InstCsd {
+    /// Construct with the spec's default tier shape (`hot_tier_bytes`
+    /// under LRU; the unit-test specs default to flash-only).
     pub fn new(spec: CsdSpec, ftl_cfg: FtlConfig) -> Result<Self> {
+        let tier = TierConfig::for_spec(&spec);
+        Self::with_tier(spec, ftl_cfg, tier)
+    }
+
+    /// Construct with an explicit hot-tier capacity and policy.
+    pub fn with_tier(spec: CsdSpec, ftl_cfg: FtlConfig, tier: TierConfig) -> Result<Self> {
         let ftl = KvFtl::new(spec.flash, ftl_cfg)?;
         Ok(InstCsd {
             kernels: MultiServer::new(spec.attn_kernels),
+            tier: TieredKv::new(tier, spec.flash.page_bytes, ftl_cfg.n),
             spec,
             ftl,
+            dram: FifoResource::new(),
             ledger: BusyLedger::default(),
             d_head: ftl_cfg.d_head,
+            dropped: BTreeMap::new(),
         })
     }
 
@@ -96,6 +128,109 @@ impl InstCsd {
         // NFC filters run at line rate per channel; aggregate across
         // channels since pages arrive distributed
         bytes as f64 / (self.spec.filter_bw_per_channel * self.spec.flash.channels as f64)
+    }
+
+    /// Tier-aware token-group fetch: hot-tier hits are served by the
+    /// DRAM group-buffer port and never touch the flash die/channel
+    /// FIFOs; misses stream from flash and are read-allocated into the
+    /// tier (evicting per the configured policy).  Tail groups pass
+    /// through to the FTL, which serves them from its stream buffer.
+    fn fetch_token_groups_tiered(
+        &mut self,
+        key: StreamKey,
+        kind: KvKind,
+        groups: &[usize],
+        at: Time,
+    ) -> Result<TieredFetch> {
+        let n = self.ftl.cfg.n;
+        let page_bytes = self.spec.flash.page_bytes;
+        let sealed = self.ftl.sealed_groups(key);
+        let mut rows: Vec<(usize, Vec<f32>)> = Vec::with_capacity(groups.len());
+        let mut misses: Vec<usize> = Vec::new();
+        let mut done = at;
+        let mut dram_busy = 0.0;
+        let mut flash_wait = 0.0;
+        for &g in groups {
+            if g >= sealed {
+                misses.push(g); // tail group: FTL DRAM stream buffer
+                continue;
+            }
+            let id = PageId { key, kind, group: g as u32 };
+            match self.tier.lookup(id) {
+                Some(data) => {
+                    let svc = page_bytes as f64 / self.spec.dram_bw;
+                    let (_, t) = self.dram.schedule(at, svc);
+                    dram_busy += svc;
+                    done = done.max(t);
+                    rows.push((g * n, data));
+                }
+                None => misses.push(g),
+            }
+        }
+        if !misses.is_empty() {
+            let (fetched, t) = self.ftl.fetch_token_groups(key, kind, &misses, at)?;
+            flash_wait = t - at;
+            done = done.max(t);
+            let stream_len = self.ftl.tokens_appended(key);
+            for (base, data) in &fetched {
+                let g = *base / n;
+                if g < sealed {
+                    let id = PageId { key, kind, group: g as u32 };
+                    let (resident, evicted) = self.tier.admit(id, data.clone(), stream_len);
+                    if resident {
+                        self.ftl.counters.promotions += 1;
+                    }
+                    for ev in evicted {
+                        self.ftl.demote_group(ev.key, ev.kind, ev.group as usize);
+                    }
+                }
+            }
+            rows.extend(fetched);
+        }
+        rows.sort_by_key(|&(base, _)| base);
+        Ok(TieredFetch { rows, done, dram_busy, flash_wait })
+    }
+
+    /// Mask token positions of `slot` out of all future attention
+    /// (H2O-style drop-on-resume).  Sealed groups whose tokens are all
+    /// dropped are demoted from the hot tier and their flash pages
+    /// freed; partially-dropped groups keep their pages and are masked
+    /// per token.  Positions are preserved, so nothing is re-indexed.
+    pub fn drop_tokens(&mut self, slot: u32, tokens: &[u32]) -> Result<()> {
+        if tokens.is_empty() {
+            return Ok(());
+        }
+        let set = self.dropped.entry(slot).or_default();
+        for &t in tokens {
+            set.insert(t);
+        }
+        let set = set.clone();
+        let n = self.ftl.cfg.n;
+        for key in self.ftl.stream_keys(slot) {
+            let sealed = self.ftl.sealed_groups(key);
+            for g in 0..sealed {
+                let all_dropped = (g * n..(g + 1) * n).all(|t| set.contains(&(t as u32)));
+                if !all_dropped {
+                    continue;
+                }
+                for kind in [KvKind::K, KvKind::V] {
+                    let id = PageId { key, kind, group: g as u32 };
+                    if self.tier.drop_page(id) {
+                        self.ftl.demote_group(key, kind, g);
+                    }
+                }
+                self.ftl.free_token_group(key, g);
+            }
+        }
+        Ok(())
+    }
+
+    /// Release a finished sequence everywhere: hot-tier pages,
+    /// importance statistics, drop masks, then the FTL mappings.
+    pub fn free_slot(&mut self, slot: u32, at: Time) -> Result<Time> {
+        self.tier.free_slot(slot);
+        self.dropped.remove(&slot);
+        self.ftl.free_slot(slot, at)
     }
 
     /// Store one token's K/V rows for every head of a layer (decode write).
@@ -207,17 +342,51 @@ impl InstCsd {
         let n = self.ftl.cfg.n;
         let mut bd = UnitBreakdown::default();
         let n_groups = len.div_ceil(n);
-        let groups: Vec<usize> = (0..n_groups).collect();
+        let dropped = self.dropped.get(&key.slot).cloned().unwrap_or_default();
+        // fully-dropped groups were freed on flash: skip them at the source
+        let groups: Vec<usize> = (0..n_groups)
+            .filter(|&g| {
+                let hi = ((g + 1) * n).min(len);
+                (g * n..hi).any(|t| !dropped.contains(&(t as u32)))
+            })
+            .collect();
 
         let t0 = at;
-        let (k_rows, tk) = self.ftl.fetch_token_groups(key, KvKind::K, &groups, t0)?;
-        let (v_rows, tv) = self.ftl.fetch_token_groups(key, KvKind::V, &groups, t0)?;
-        let t_read = tk.max(tv);
-        bd.flash_read = t_read - t0;
+        let fk = self.fetch_token_groups_tiered(key, KvKind::K, &groups, t0)?;
+        let fv = self.fetch_token_groups_tiered(key, KvKind::V, &groups, t0)?;
+        let t_read = fk.done.max(fv.done);
+        bd.flash_read = fk.flash_wait.max(fv.flash_wait);
+        bd.dram_hit = fk.dram_busy + fv.dram_busy;
 
-        let kmat = assemble_rows(&k_rows, n_groups * n, d);
-        let vmat = assemble_rows(&v_rows, n_groups * n, d);
-        let out = sparse::dense_attention(q, &kmat, &vmat, len);
+        let rows = n_groups * n;
+        let kmat = assemble_rows(&fk.rows, rows, d);
+        let vmat = assemble_rows(&fv.rows, rows, d);
+
+        // exact attention over the non-dropped prefix; arithmetic is
+        // identical to sparse::dense_attention when nothing is dropped,
+        // and the softmax weights feed the H2O importance tracker
+        let scale = 1.0 / (d as f32).sqrt();
+        let mask: Vec<bool> =
+            (0..rows).map(|t| t < len && !dropped.contains(&(t as u32))).collect();
+        let mut logits = vec![sparse::select::NEG_INF; rows];
+        for t in 0..rows {
+            if mask[t] {
+                logits[t] = sparse::select::dot(q, &kmat[t * d..(t + 1) * d]) * scale;
+            }
+        }
+        let s = sparse::select::softmax_masked(&logits, &mask);
+        let mut out = vec![0.0f32; d];
+        for t in 0..rows {
+            let wt = s[t];
+            if wt == 0.0 {
+                continue;
+            }
+            let row = &vmat[t * d..(t + 1) * d];
+            for c in 0..d {
+                out[c] += wt * row[c];
+            }
+        }
+        self.tier.importance.accumulate(key.slot, &s[..len]);
 
         // Logit GeMV (2*len*d) + softmax + Attend GeMV (2*len*d)
         let logit_t = self.kernel_time(2.0 * len as f64 * d as f64);
@@ -227,6 +396,9 @@ impl InstCsd {
         bd.logit = logit_t;
         bd.attend = attend_t;
         self.ledger.add("flash_read", bd.flash_read);
+        if bd.dram_hit > 0.0 {
+            self.ledger.add("dram_hit", bd.dram_hit);
+        }
         self.ledger.add("kernel", logit_t + attend_t);
         Ok((out, t2, bd))
     }
@@ -243,6 +415,7 @@ impl InstCsd {
         let n = self.ftl.cfg.n;
         let mut bd = UnitBreakdown::default();
         let page_bytes = self.spec.flash.page_bytes;
+        let dropped = self.dropped.get(&key.slot).cloned().unwrap_or_default();
 
         // ---- step 1: argtopk over |q| (d elements)
         let t_top1 = self.argtopk_time(d);
@@ -276,7 +449,9 @@ impl InstCsd {
             }
             logits_hat[t] = acc / scale_hat;
         }
-        let valid: Vec<bool> = (0..logits_hat.len()).map(|t| t < len).collect();
+        let valid: Vec<bool> = (0..logits_hat.len())
+            .map(|t| t < len && !dropped.contains(&(t as u32)))
+            .collect();
         let s_hat = sparse::select::softmax_masked(&logits_hat, &valid);
         let k1_flops = 2.0 * len as f64 * sp.r as f64;
         let k1_t = self.kernel_time(k1_flops);
@@ -293,7 +468,7 @@ impl InstCsd {
             .collect();
         let mut tok_mask = sparse::select::topk_mask_select(&pool, sp.k.min(len));
         for (t, tm) in tok_mask.iter_mut().enumerate() {
-            *tm &= t < len;
+            *tm &= valid[t];
         }
         let alpha: f32 = s_hat
             .iter()
@@ -308,17 +483,18 @@ impl InstCsd {
             .filter(|&g| tok_mask[g * n..((g + 1) * n).min(tok_mask.len())].iter().any(|&b| b))
             .collect();
         let t2 = t_k1 + t_top2;
-        let (k_rows, tk) = self.ftl.fetch_token_groups(key, KvKind::K, &groups, t2)?;
-        let (v_rows, tv) = self.ftl.fetch_token_groups(key, KvKind::V, &groups, t2)?;
-        let t_fetch2 = tk.max(tv);
-        bd.flash_read += t_fetch2 - t2;
+        let fk = self.fetch_token_groups_tiered(key, KvKind::K, &groups, t2)?;
+        let fv = self.fetch_token_groups_tiered(key, KvKind::V, &groups, t2)?;
+        let t_fetch2 = fk.done.max(fv.done);
+        bd.flash_read += fk.flash_wait.max(fv.flash_wait);
+        bd.dram_hit += fk.dram_busy + fv.dram_busy;
         let t_filt2 = self.filter_time(2 * groups.len() * page_bytes);
         bd.nfc_filter += t_filt2;
 
         // ---- steps 9-11: Kernel #2 — exact attention over kept tokens
         let rows = pad_to(len, n);
-        let kmat = assemble_rows(&k_rows, rows, d);
-        let vmat = assemble_rows(&v_rows, rows, d);
+        let kmat = assemble_rows(&fk.rows, rows, d);
+        let vmat = assemble_rows(&fv.rows, rows, d);
         let scale = 1.0 / (d as f32).sqrt();
         let mut logits = vec![sparse::select::NEG_INF; rows];
         for t in 0..rows {
@@ -348,9 +524,13 @@ impl InstCsd {
         let (_, _, t_k2) = self.kernels.schedule(t_fetch2 + t_filt2, k2_t);
         bd.logit = k2_t / 2.0;
         bd.attend = k2_t / 2.0;
+        self.tier.importance.accumulate(key.slot, &s[..len]);
 
         self.ledger.add("argtopk", bd.argtopk);
         self.ledger.add("flash_read", bd.flash_read);
+        if bd.dram_hit > 0.0 {
+            self.ledger.add("dram_hit", bd.dram_hit);
+        }
         self.ledger.add("nfc_filter", bd.nfc_filter);
         self.ledger.add("kernel", bd.logit0 + bd.logit + bd.attend);
         Ok((out, t_k2, bd))
@@ -548,5 +728,81 @@ mod tests {
         assert_eq!(bdd.logit0, 0.0);
         assert!(bds.logit0 > 0.0);
         assert!(bds.flash_read < bdd.flash_read);
+    }
+
+    #[test]
+    fn hot_tier_hits_skip_flash_and_match_flash_bytes() {
+        use crate::kvtier::{TierConfig, TierPolicy};
+        let tier = TierConfig { hot_bytes: 1 << 20, policy: TierPolicy::Lru };
+        let mut csd =
+            InstCsd::with_tier(CsdSpec::tiny(), FtlConfig { d_head: 32, m: 4, n: 8 }, tier)
+                .unwrap();
+        let mut rng = Rng::new(7);
+        fill(&mut csd, 0, 0, 1, 40, &mut rng);
+        let q: Vec<f32> = (0..32).map(|_| rng.normal_f32()).collect();
+        let key = StreamKey { slot: 0, layer: 0, head: 0 };
+        let (cold, _, _) = csd.attention_head(key, &q, 40, AttnMode::Dense, 0.0).unwrap();
+        let reads_after_cold = csd.ftl.array.counters.page_reads;
+        let (warm, _, bd) = csd.attention_head(key, &q, 40, AttnMode::Dense, 0.0).unwrap();
+        // second pass: every sealed page is served by the DRAM tier
+        assert_eq!(csd.ftl.array.counters.page_reads, reads_after_cold);
+        assert_eq!(cold, warm, "tier hits must return the flash bytes");
+        assert!(bd.dram_hit > 0.0 && bd.flash_read == 0.0);
+        assert!(csd.ledger.get("dram_hit") > 0.0);
+        assert!(csd.tier.stats.hits > 0 && csd.tier.stats.misses > 0);
+        assert!(csd.ftl.counters.promotions > 0);
+    }
+
+    #[test]
+    fn importance_accumulates_softmax_mass() {
+        let mut csd = mk();
+        let mut rng = Rng::new(8);
+        fill(&mut csd, 0, 0, 2, 24, &mut rng);
+        let q: Vec<f32> = (0..2 * 32).map(|_| rng.normal_f32()).collect();
+        csd.attention_layer(0, 0, &q, 24, AttnMode::Dense, 0.0).unwrap();
+        let s = csd.tier.importance.scores(0).unwrap();
+        assert_eq!(s.len(), 24);
+        let total: f32 = s.iter().sum();
+        // two heads, one softmax each: total mass == 2
+        assert!((total - 2.0).abs() < 1e-3, "mass {total}");
+    }
+
+    #[test]
+    fn drop_tokens_masks_attention_and_frees_groups() {
+        let mut csd = mk();
+        let mut rng = Rng::new(9);
+        let (ks, vs) = fill(&mut csd, 0, 0, 1, 32, &mut rng);
+        let q: Vec<f32> = (0..32).map(|_| rng.normal_f32()).collect();
+        let key = StreamKey { slot: 0, layer: 0, head: 0 };
+        let before = csd.ftl.mapped_token_pages(0);
+        let drop: Vec<u32> = (0..8).collect();
+        csd.drop_tokens(0, &drop).unwrap();
+        // group 0 fully dropped: its K and V pages are freed
+        assert_eq!(csd.ftl.mapped_token_pages(0), before - 2);
+        assert_eq!(csd.ftl.counters.dropped_groups, 1);
+        let (out, _, _) = csd.attention_head(key, &q, 32, AttnMode::Dense, 0.0).unwrap();
+        // reference: masked dense attention over tokens 8..32 of the
+        // same fp16-quantised data
+        let kq: Vec<f32> = ks[0].iter().map(|&x| crate::ftl::layout::q16(x)).collect();
+        let vq: Vec<f32> = vs[0].iter().map(|&x| crate::ftl::layout::q16(x)).collect();
+        let scale = 1.0 / (32.0f32).sqrt();
+        let mask: Vec<bool> = (0..32).map(|t| t >= 8).collect();
+        let mut logits = vec![sparse::select::NEG_INF; 32];
+        for t in 8..32 {
+            logits[t] = sparse::select::dot(&q, &kq[t * 32..(t + 1) * 32]) * scale;
+        }
+        let s = sparse::select::softmax_masked(&logits, &mask);
+        let mut want = vec![0.0f32; 32];
+        for t in 8..32 {
+            for c in 0..32 {
+                want[c] += s[t] * vq[t * 32 + c];
+            }
+        }
+        for (a, b) in out.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+        // idempotent: dropping the same tokens again changes nothing
+        csd.drop_tokens(0, &[0, 1]).unwrap();
+        assert_eq!(csd.ftl.counters.dropped_groups, 1);
     }
 }

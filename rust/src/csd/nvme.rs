@@ -27,6 +27,9 @@ pub enum CsdCommand {
     },
     /// compute decode attention for this CSD's heads of a layer
     Attention { slot: u32, layer: u16, heads: Vec<u16>, q: Vec<f32>, len: usize, mode: AttnMode },
+    /// mask token positions of a live sequence out of future attention
+    /// (H2O-style drop-on-resume; fully-dropped groups free flash pages)
+    DropTokens { slot: u32, tokens: Vec<u32> },
     /// drop a finished sequence
     FreeSlot { slot: u32 },
 }
@@ -76,8 +79,12 @@ impl NvmeQueue {
                     self.csd.attention_heads(slot, layer, &heads, &q, len, mode, dispatched)?;
                 Ok(CsdCompletion { data: out, done, breakdown: Some(bd) })
             }
+            CsdCommand::DropTokens { slot, tokens } => {
+                self.csd.drop_tokens(slot, &tokens)?;
+                Ok(CsdCompletion { data: vec![], done: dispatched, breakdown: None })
+            }
             CsdCommand::FreeSlot { slot } => {
-                let done = self.csd.ftl.free_slot(slot, dispatched)?;
+                let done = self.csd.free_slot(slot, dispatched)?;
                 Ok(CsdCompletion { data: vec![], done, breakdown: None })
             }
         }

@@ -31,7 +31,7 @@ pub struct StreamKey {
     pub head: u16,
 }
 
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum KvKind {
     K,
     V,
@@ -97,6 +97,13 @@ pub struct FtlCounters {
     pub host_bytes: u64,
     pub tail_hits: u64,
     pub page_fetches: u64,
+    /// token-group pages copied up into a DRAM tier (reads stay timed)
+    pub promotions: u64,
+    /// DRAM-tier copies dropped again (flash remains the home copy)
+    pub demotions: u64,
+    /// sealed token groups whose flash pages were freed outright
+    /// (drop-on-resume reclaim)
+    pub dropped_groups: u64,
 }
 
 pub struct KvFtl {
@@ -492,6 +499,86 @@ impl KvFtl {
             out.push(vals);
         }
         Ok((out, done))
+    }
+
+    // ---- tier interface (page-granularity promote/demote) ------------------
+    //
+    // The kvtier hot tier fronts this FTL: `promote_group` is the timed
+    // page read that fills a DRAM-tier copy, `demote_group` logs the
+    // copy's drop (flash stays the home — eviction is metadata-only),
+    // and `free_token_group` reclaims a sealed group outright when the
+    // scheduler's drop-on-resume path decides its tokens are dead.
+
+    /// Sealed token groups currently appended for a stream (the tail
+    /// group beyond this is served from the DRAM stream buffer).
+    pub fn sealed_groups(&self, key: StreamKey) -> usize {
+        self.tokens_appended(key) / self.cfg.n
+    }
+
+    /// Every stream of a sequence slot, in deterministic order.
+    pub fn stream_keys(&self, slot: u32) -> Vec<StreamKey> {
+        let mut keys: Vec<StreamKey> =
+            self.streams.keys().filter(|k| k.slot == slot).copied().collect();
+        keys.sort();
+        keys
+    }
+
+    /// Token-indexed pages currently mapped for a slot (tests use this
+    /// to check that promote/demote churn conserves page counts).
+    pub fn mapped_token_pages(&self, slot: u32) -> usize {
+        self.token_map.keys().filter(|(k, _, _)| k.slot == slot).count()
+    }
+
+    /// Promote one sealed token group into a DRAM tier: a timed page
+    /// read returning the decoded rows.  The mapping is untouched —
+    /// flash remains the home copy.
+    pub fn promote_group(
+        &mut self,
+        key: StreamKey,
+        kind: KvKind,
+        group: usize,
+        at: Time,
+    ) -> Result<(Vec<f32>, Time)> {
+        let ppa = *self
+            .token_map
+            .get(&(key, kind, group as u32))
+            .ok_or_else(|| anyhow!("promote of unmapped group {group} for {key:?}"))?;
+        let want = self.cfg.n * self.cfg.d_head;
+        let (rows, t) = {
+            let (data, t) = self.array.read(ppa, at)?;
+            (decode_rows(data, want), t)
+        };
+        self.counters.page_fetches += 1;
+        self.counters.promotions += 1;
+        Ok((rows, t))
+    }
+
+    /// Record that a DRAM-tier copy of this group was dropped.  No flash
+    /// activity: the home copy stays mapped.
+    pub fn demote_group(&mut self, key: StreamKey, kind: KvKind, group: usize) {
+        if self.token_map.contains_key(&(key, kind, group as u32)) {
+            self.counters.demotions += 1;
+        }
+    }
+
+    /// Free both K and V pages of one sealed token group (the sequence
+    /// dropped these tokens for good — H2O-style drop-on-resume).  The
+    /// embedding-indexed K copy stays mapped: it packs many tokens per
+    /// page and is reclaimed wholesale at `free_slot`.  Idempotent.
+    pub fn free_token_group(&mut self, key: StreamKey, group: usize) {
+        let mut freed = false;
+        for kind in [KvKind::K, KvKind::V] {
+            if let Some(ppa) = self.token_map.remove(&(key, kind, group as u32)) {
+                self.rev.remove(&ppa);
+                self.array.invalidate(ppa);
+                let b = self.array.geo.block_of(ppa).0;
+                self.block_valid[b] = self.block_valid[b].saturating_sub(1);
+                freed = true;
+            }
+        }
+        if freed {
+            self.counters.dropped_groups += 1;
+        }
     }
 
     // ---- lifecycle ---------------------------------------------------------

@@ -1,0 +1,144 @@
+//! The CSD-DRAM hot tier proper: a capacity-bounded cache of sealed KV
+//! pages (token groups) sitting in the device's group buffers, directly
+//! in front of the flash array.
+//!
+//! The tier is a *cache*, never the home: every page it holds is also
+//! mapped on flash by the FTL, so eviction is metadata-only (a demote
+//! notification) and crash-consistency is trivial.  Entries are whole
+//! pages — the same granularity the FTL maps and the flash array
+//! transfers — so hit accounting translates 1:1 into saved page reads.
+//!
+//! Determinism: the map is a `BTreeMap` and every policy breaks ties on
+//! `(last_use, PageId)`, so victim selection never depends on hash-seed
+//! iteration order (the serving plane is deterministic per trace).
+
+use crate::ftl::{KvKind, StreamKey};
+use std::collections::BTreeMap;
+
+/// Identity of one cached page: one token group of one KV stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct PageId {
+    pub key: StreamKey,
+    pub kind: KvKind,
+    pub group: u32,
+}
+
+/// One resident page: the decoded (FP16-quantised) rows plus recency.
+#[derive(Debug)]
+pub struct Entry {
+    pub rows: Vec<f32>,
+    pub last_use: u64,
+}
+
+#[derive(Debug, Default)]
+pub struct HotTier {
+    page_bytes: usize,
+    clock: u64,
+    map: BTreeMap<PageId, Entry>,
+    /// tokens appended per stream at the last admission touching it —
+    /// what `PinRecentWindow` measures recency against
+    stream_len: BTreeMap<StreamKey, usize>,
+}
+
+impl HotTier {
+    pub fn new(page_bytes: usize) -> Self {
+        HotTier { page_bytes, ..Default::default() }
+    }
+
+    pub fn page_bytes(&self) -> usize {
+        self.page_bytes
+    }
+
+    /// Bytes currently resident (pages are cached whole).
+    pub fn bytes(&self) -> usize {
+        self.map.len() * self.page_bytes
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn contains(&self, id: &PageId) -> bool {
+        self.map.contains_key(id)
+    }
+
+    /// Look a page up, refreshing its recency on hit.
+    pub fn get(&mut self, id: &PageId) -> Option<&Vec<f32>> {
+        self.clock += 1;
+        let clock = self.clock;
+        match self.map.get_mut(id) {
+            Some(e) => {
+                e.last_use = clock;
+                Some(&e.rows)
+            }
+            None => None,
+        }
+    }
+
+    pub fn insert(&mut self, id: PageId, rows: Vec<f32>) {
+        self.clock += 1;
+        self.map.insert(id, Entry { rows, last_use: self.clock });
+    }
+
+    pub fn remove(&mut self, id: &PageId) -> bool {
+        self.map.remove(id).is_some()
+    }
+
+    /// Drop every page of a retired sequence; returns how many.
+    pub fn remove_slot(&mut self, slot: u32) -> usize {
+        let before = self.map.len();
+        self.map.retain(|id, _| id.key.slot != slot);
+        self.stream_len.retain(|k, _| k.slot != slot);
+        before - self.map.len()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&PageId, &Entry)> {
+        self.map.iter()
+    }
+
+    pub fn note_stream_len(&mut self, key: StreamKey, len: usize) {
+        let e = self.stream_len.entry(key).or_insert(0);
+        *e = (*e).max(len);
+    }
+
+    pub fn stream_len(&self, key: &StreamKey) -> usize {
+        self.stream_len.get(key).copied().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn id(slot: u32, group: u32) -> PageId {
+        PageId { key: StreamKey { slot, layer: 0, head: 0 }, kind: KvKind::K, group }
+    }
+
+    #[test]
+    fn get_refreshes_recency() {
+        let mut h = HotTier::new(512);
+        h.insert(id(0, 0), vec![1.0]);
+        h.insert(id(0, 1), vec![2.0]);
+        let t0 = h.iter().find(|(i, _)| **i == id(0, 0)).unwrap().1.last_use;
+        assert!(h.get(&id(0, 0)).is_some());
+        let t1 = h.iter().find(|(i, _)| **i == id(0, 0)).unwrap().1.last_use;
+        assert!(t1 > t0, "hit must refresh last_use");
+        assert_eq!(h.bytes(), 2 * 512);
+    }
+
+    #[test]
+    fn remove_slot_drops_only_that_slot() {
+        let mut h = HotTier::new(512);
+        h.insert(id(0, 0), vec![]);
+        h.insert(id(1, 0), vec![]);
+        h.note_stream_len(id(0, 0).key, 8);
+        assert_eq!(h.remove_slot(0), 1);
+        assert_eq!(h.len(), 1);
+        assert!(h.contains(&id(1, 0)));
+        assert_eq!(h.stream_len(&id(0, 0).key), 0);
+    }
+}

@@ -1,0 +1,104 @@
+//! H2O-style token-importance statistics.
+//!
+//! Every Logit pass of the in-storage engine produces a softmax over the
+//! context; accumulating those per-position weights across heads, layers
+//! and steps yields the "heavy hitter" signal of H2O [Zhang et al.]: a
+//! small set of tokens carries most of the attention mass.  The tracker
+//! stores that cumulative mass per (slot, position) and serves two
+//! consumers:
+//!
+//! * the `H2oScore` eviction policy (which token groups deserve the DRAM
+//!   hot tier), and
+//! * the scheduler's drop-on-resume path (which positions can be dropped
+//!   outright when a preempted sequence returns).
+//!
+//! Scores are aggregated over heads and layers (the per-CSD view); the
+//! coordinator sums the trackers of all CSDs for sequence-level
+//! decisions.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct ImportanceTracker {
+    /// slot -> cumulative attention mass per token position
+    scores: BTreeMap<u32, Vec<f32>>,
+}
+
+impl ImportanceTracker {
+    /// Fold one softmax row (position-indexed weights) into the slot's
+    /// running totals.  Shorter/longer rows than seen before are fine —
+    /// the vector grows as the context does.
+    pub fn accumulate(&mut self, slot: u32, weights: &[f32]) {
+        let v = self.scores.entry(slot).or_default();
+        if v.len() < weights.len() {
+            v.resize(weights.len(), 0.0);
+        }
+        for (a, &w) in v.iter_mut().zip(weights) {
+            *a += w;
+        }
+    }
+
+    pub fn scores(&self, slot: u32) -> Option<&[f32]> {
+        self.scores.get(&slot).map(|v| v.as_slice())
+    }
+
+    /// Cumulative mass of one token group (`n` tokens starting at
+    /// `group * n`); unseen slots/positions score zero.
+    pub fn group_score(&self, slot: u32, group: u32, n: usize) -> f32 {
+        match self.scores.get(&slot) {
+            None => 0.0,
+            Some(v) => {
+                let lo = (group as usize) * n;
+                if lo >= v.len() {
+                    return 0.0;
+                }
+                let hi = (lo + n).min(v.len());
+                v[lo..hi].iter().sum()
+            }
+        }
+    }
+
+    /// Token positions of `slot` sorted least-important first
+    /// (deterministic: ties break on position).
+    pub fn ranked_ascending(&self, slot: u32) -> Vec<usize> {
+        let mut idx: Vec<usize> = match self.scores.get(&slot) {
+            None => return Vec::new(),
+            Some(v) => (0..v.len()).collect(),
+        };
+        let v = &self.scores[&slot];
+        idx.sort_by(|&a, &b| v[a].total_cmp(&v[b]).then(a.cmp(&b)));
+        idx
+    }
+
+    pub fn forget(&mut self, slot: u32) {
+        self.scores.remove(&slot);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_and_ranks() {
+        let mut t = ImportanceTracker::default();
+        t.accumulate(3, &[0.1, 0.7, 0.2]);
+        t.accumulate(3, &[0.1, 0.6, 0.3, 0.9]);
+        let s = t.scores(3).unwrap();
+        assert_eq!(s.len(), 4);
+        assert!((s[1] - 1.3).abs() < 1e-6);
+        assert_eq!(t.ranked_ascending(3), vec![0, 2, 3, 1]);
+        t.forget(3);
+        assert!(t.scores(3).is_none());
+    }
+
+    #[test]
+    fn group_score_sums_token_range() {
+        let mut t = ImportanceTracker::default();
+        t.accumulate(0, &[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert!((t.group_score(0, 0, 2) - 3.0).abs() < 1e-6);
+        assert!((t.group_score(0, 2, 2) - 5.0).abs() < 1e-6); // clipped tail
+        assert_eq!(t.group_score(0, 9, 2), 0.0);
+        assert_eq!(t.group_score(7, 0, 2), 0.0);
+    }
+}

@@ -1,0 +1,308 @@
+//! Multi-tier KV cache: a CSD-DRAM hot tier in front of the flash cold
+//! tier, with importance-driven admission/eviction (ISSUE 2 tentpole;
+//! cf. KVDrive's multi-tier KV management and HillInfer's hierarchical
+//! eviction on SmartSSDs).
+//!
+//! InstInfer's engine reads every KV page at the flash internal-channel
+//! rate; the CSD's DRAM group buffers are an untapped hot tier sitting
+//! directly in front of the array.  This subsystem fronts the FTL with:
+//!
+//! * [`hot`]        — the capacity-bounded page cache (per-CSD group
+//!   buffers; deterministic victim selection);
+//! * [`importance`] — H2O-style cumulative attention-mass statistics
+//!   collected from the engine's Logit passes;
+//! * [`policy`]     — the pluggable eviction policies (`Lru`,
+//!   `H2oScore`, `PinRecentWindow`).
+//!
+//! The engine consults [`TieredKv`] on every token-group fetch: hits are
+//! served at DRAM bandwidth and skip the flash die/channel FIFOs in the
+//! DES timing (the `dram_hit` breakdown row); misses stream from flash
+//! and are read-allocated into the tier, evicting per policy.  The same
+//! importance signal drives the scheduler's drop-on-resume path (keep
+//! heavy hitters, drop the long tail when a preempted sequence returns).
+
+pub mod hot;
+pub mod importance;
+pub mod policy;
+
+pub use hot::{HotTier, PageId};
+pub use importance::ImportanceTracker;
+pub use policy::TierPolicy;
+
+use crate::config::hw::CsdSpec;
+
+/// Hot-tier shape: capacity carved out of the CSD DRAM plus the policy.
+#[derive(Debug, Clone, Copy)]
+pub struct TierConfig {
+    /// bytes of CSD DRAM used as the hot tier (0 = flash-only)
+    pub hot_bytes: usize,
+    pub policy: TierPolicy,
+}
+
+impl TierConfig {
+    /// Default for a hardware spec: the spec's reserved group-buffer
+    /// bytes under LRU.
+    pub fn for_spec(spec: &CsdSpec) -> Self {
+        TierConfig { hot_bytes: spec.hot_tier_bytes, policy: TierPolicy::Lru }
+    }
+
+    /// No hot tier: every read streams from flash (the paper's baseline
+    /// dataflow, and the default for the unit-test specs).
+    pub fn flash_only() -> Self {
+        TierConfig { hot_bytes: 0, policy: TierPolicy::Lru }
+    }
+}
+
+/// Monotone tier counters (sealed-group fetches only; the FTL's DRAM
+/// tail buffer is accounted separately as `tail_hits`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TierStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub admissions: u64,
+    pub evictions: u64,
+    /// admissions skipped because the tier cannot hold even one page
+    pub rejected: u64,
+}
+
+impl TierStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    pub fn merge(&mut self, o: &TierStats) {
+        self.hits += o.hits;
+        self.misses += o.misses;
+        self.admissions += o.admissions;
+        self.evictions += o.evictions;
+        self.rejected += o.rejected;
+    }
+}
+
+/// Per-CSD tier state: the hot page cache, the importance tracker that
+/// feeds `H2oScore` decisions, and the configured policy.
+#[derive(Debug)]
+pub struct TieredKv {
+    pub cfg: TierConfig,
+    pub hot: HotTier,
+    pub importance: ImportanceTracker,
+    pub stats: TierStats,
+    /// tokens per token-group page (the FTL's `n`)
+    tokens_per_group: usize,
+}
+
+impl TieredKv {
+    pub fn new(cfg: TierConfig, page_bytes: usize, tokens_per_group: usize) -> Self {
+        TieredKv {
+            cfg,
+            hot: HotTier::new(page_bytes),
+            importance: ImportanceTracker::default(),
+            stats: TierStats::default(),
+            tokens_per_group,
+        }
+    }
+
+    /// Look up a page; a hit refreshes recency and clones the rows (the
+    /// DRAM copy the engine computes over).  A disabled tier
+    /// (`hot_bytes == 0`) counts nothing — flash-only engines must not
+    /// accumulate phantom tier traffic.
+    pub fn lookup(&mut self, id: PageId) -> Option<Vec<f32>> {
+        if self.cfg.hot_bytes == 0 {
+            return None;
+        }
+        match self.hot.get(&id) {
+            Some(rows) => {
+                let rows = rows.clone();
+                self.stats.hits += 1;
+                Some(rows)
+            }
+            None => {
+                self.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Admit a page read from flash, evicting per policy until the tier
+    /// fits its capacity again.  Returns `(resident, evicted)`: whether
+    /// the page survived its own admission (under `H2oScore` a zero-mass
+    /// newcomer can be its own victim) and which pages left (so the FTL
+    /// can log demotions).
+    pub fn admit(&mut self, id: PageId, rows: Vec<f32>, stream_len: usize) -> (bool, Vec<PageId>) {
+        if self.cfg.hot_bytes < self.hot.page_bytes() {
+            self.stats.rejected += 1;
+            return (false, Vec::new());
+        }
+        self.hot.note_stream_len(id.key, stream_len);
+        self.hot.insert(id, rows);
+        self.stats.admissions += 1;
+        let mut evicted = Vec::new();
+        let mut resident = true;
+        while self.hot.bytes() > self.cfg.hot_bytes {
+            let Some(v) = self.victim() else { break };
+            self.hot.remove(&v);
+            self.stats.evictions += 1;
+            if v == id {
+                resident = false;
+            } else {
+                evicted.push(v);
+            }
+        }
+        (resident, evicted)
+    }
+
+    /// Forcibly drop one page (drop-on-resume freed its flash home).
+    pub fn drop_page(&mut self, id: PageId) -> bool {
+        if self.hot.remove(&id) {
+            self.stats.evictions += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Retire a sequence: its pages, stream lengths and importance go.
+    pub fn free_slot(&mut self, slot: u32) {
+        self.hot.remove_slot(slot);
+        self.importance.forget(slot);
+    }
+
+    /// Policy victim: minimum `(rank, last_use, id)` — rank is 0 for
+    /// LRU, cumulative attention mass for `H2oScore`, and a pin bit for
+    /// `PinRecentWindow` (pinned pages only lose to other pinned pages).
+    /// Fully deterministic: ties break on recency then page identity.
+    /// O(resident pages) per eviction — fine at the functional plane's
+    /// scale (thousands of pages); a production-sized tier (the zynq
+    /// spec's 1 GiB) would want an ordered victim index instead.
+    fn victim(&self) -> Option<PageId> {
+        let n = self.tokens_per_group;
+        let mut best: Option<(f32, u64, PageId)> = None;
+        for (id, e) in self.hot.iter() {
+            let rank = match self.cfg.policy {
+                TierPolicy::Lru => 0.0,
+                TierPolicy::H2oScore => self.importance.group_score(id.key.slot, id.group, n),
+                TierPolicy::PinRecentWindow { window } => {
+                    let len = self.hot.stream_len(&id.key);
+                    let pinned = (id.group as usize + 1) * n > len.saturating_sub(window);
+                    if pinned {
+                        1.0
+                    } else {
+                        0.0
+                    }
+                }
+            };
+            let cand = (rank, e.last_use, *id);
+            let better = match &best {
+                None => true,
+                Some(b) => {
+                    cand.0
+                        .total_cmp(&b.0)
+                        .then(cand.1.cmp(&b.1))
+                        .then(cand.2.cmp(&b.2))
+                        == std::cmp::Ordering::Less
+                }
+            };
+            if better {
+                best = Some(cand);
+            }
+        }
+        best.map(|(_, _, id)| id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ftl::{KvKind, StreamKey};
+
+    fn id(slot: u32, group: u32) -> PageId {
+        PageId { key: StreamKey { slot, layer: 0, head: 0 }, kind: KvKind::K, group }
+    }
+
+    fn tier(policy: TierPolicy, pages: usize) -> TieredKv {
+        TieredKv::new(TierConfig { hot_bytes: pages * 512, policy }, 512, 8)
+    }
+
+    #[test]
+    fn zero_capacity_rejects_and_counts_no_traffic() {
+        let mut t = tier(TierPolicy::Lru, 0);
+        assert!(t.lookup(id(0, 0)).is_none());
+        let (resident, ev) = t.admit(id(0, 0), vec![1.0], 8);
+        assert!(!resident && ev.is_empty());
+        // a disabled tier records rejections but no phantom misses
+        assert_eq!((t.stats.misses, t.stats.rejected), (0, 1));
+    }
+
+    #[test]
+    fn lru_evicts_least_recent() {
+        let mut t = tier(TierPolicy::Lru, 2);
+        t.admit(id(0, 0), vec![0.0], 8);
+        t.admit(id(0, 1), vec![1.0], 16);
+        assert!(t.lookup(id(0, 0)).is_some()); // refresh group 0
+        let (resident, ev) = t.admit(id(0, 2), vec![2.0], 24);
+        assert!(resident);
+        assert_eq!(ev, vec![id(0, 1)]); // group 1 was least recent
+        assert!(t.hot.contains(&id(0, 0)) && t.hot.contains(&id(0, 2)));
+    }
+
+    #[test]
+    fn h2o_keeps_heavy_hitters() {
+        let mut t = tier(TierPolicy::H2oScore, 2);
+        // group 0 (tokens 0..8) is heavy, group 1 (8..16) is light but
+        // non-zero (ties fall back to recency, which would let a fresh
+        // zero-mass page displace an equally-zero old one)
+        let mut w = vec![0.0f32; 16];
+        w[0] = 5.0;
+        w[1] = 5.0;
+        w[8] = 0.1;
+        t.importance.accumulate(0, &w);
+        t.admit(id(0, 0), vec![0.0], 8);
+        t.admit(id(0, 1), vec![1.0], 16);
+        // newcomer group 2 has zero mass: it is its own victim
+        let (resident, ev) = t.admit(id(0, 2), vec![2.0], 24);
+        assert!(!resident, "zero-mass newcomer must not displace hitters");
+        assert!(ev.is_empty());
+        assert!(t.hot.contains(&id(0, 0)) && t.hot.contains(&id(0, 1)));
+        // once group 2 outweighs group 1, it displaces it
+        let mut w = vec![0.0f32; 24];
+        w[16] = 1.0;
+        t.importance.accumulate(0, &w);
+        let (resident, ev) = t.admit(id(0, 2), vec![2.0], 24);
+        assert!(resident);
+        assert_eq!(ev, vec![id(0, 1)]);
+    }
+
+    #[test]
+    fn pin_recent_window_protects_tail() {
+        let mut t = tier(TierPolicy::PinRecentWindow { window: 8 }, 2);
+        // stream at 24 tokens: group 2 (tokens 16..24) is in the window
+        t.admit(id(0, 2), vec![2.0], 24);
+        t.admit(id(0, 0), vec![0.0], 24);
+        assert!(t.lookup(id(0, 0)).is_some()); // group 0 most recent now
+        let (resident, ev) = t.admit(id(0, 1), vec![1.0], 24);
+        assert!(resident);
+        // LRU alone would evict group 2; the pin deflects it to group 0
+        assert_eq!(ev, vec![id(0, 0)]);
+        assert!(t.hot.contains(&id(0, 2)));
+    }
+
+    #[test]
+    fn free_slot_clears_state_and_stats_merge() {
+        let mut t = tier(TierPolicy::Lru, 4);
+        t.admit(id(3, 0), vec![0.0], 8);
+        t.importance.accumulate(3, &[1.0]);
+        t.free_slot(3);
+        assert!(t.hot.is_empty());
+        assert!(t.importance.scores(3).is_none());
+        let mut a = TierStats { hits: 1, misses: 2, ..Default::default() };
+        a.merge(&TierStats { hits: 3, evictions: 4, ..Default::default() });
+        assert_eq!((a.hits, a.misses, a.evictions), (4, 2, 4));
+        assert!((a.hit_rate() - 4.0 / 6.0).abs() < 1e-12);
+        assert_eq!(TierStats::default().hit_rate(), 0.0);
+    }
+}

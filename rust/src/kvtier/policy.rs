@@ -1,0 +1,71 @@
+//! Pluggable admission/eviction policies for the hot tier.
+//!
+//! Admission is uniform (read-allocate: a page admitted on its first
+//! flash fetch — the `KvFtl::promote_group` API exists for explicit
+//! warm-up); policies differ in *who leaves* when the tier is full:
+//!
+//! * `Lru` — classic recency.  Has the inclusion property, so hit rate
+//!   is monotone in capacity, but the dense decode loop's cyclic scan
+//!   over all groups thrashes it when the working set exceeds capacity.
+//! * `H2oScore` — evict the group with the least cumulative attention
+//!   mass (H2O heavy hitters stay resident).  Scan-resistant: the same
+//!   high-mass pages stay hot across steps.
+//! * `PinRecentWindow` — LRU, but groups covering the most recent
+//!   `window` tokens of their stream are pinned (streaming/locality
+//!   prior); pinned pages are evicted only when nothing else is left.
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TierPolicy {
+    Lru,
+    H2oScore,
+    PinRecentWindow { window: usize },
+}
+
+impl TierPolicy {
+    /// Parse a CLI spelling: `lru`, `h2o`, `pin` or `pin:<window>`.
+    pub fn parse(s: &str) -> Result<TierPolicy> {
+        match s {
+            "lru" => Ok(TierPolicy::Lru),
+            "h2o" => Ok(TierPolicy::H2oScore),
+            "pin" => Ok(TierPolicy::PinRecentWindow { window: 16 }),
+            other => {
+                if let Some(w) = other.strip_prefix("pin:") {
+                    let window: usize = w
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad pin window {w:?}"))?;
+                    return Ok(TierPolicy::PinRecentWindow { window });
+                }
+                bail!("unknown tier policy {other:?} (want lru | h2o | pin[:WINDOW])")
+            }
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            TierPolicy::Lru => "lru".to_string(),
+            TierPolicy::H2oScore => "h2o".to_string(),
+            TierPolicy::PinRecentWindow { window } => format!("pin{window}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrips() {
+        assert_eq!(TierPolicy::parse("lru").unwrap(), TierPolicy::Lru);
+        assert_eq!(TierPolicy::parse("h2o").unwrap(), TierPolicy::H2oScore);
+        assert_eq!(TierPolicy::parse("pin").unwrap(), TierPolicy::PinRecentWindow { window: 16 });
+        assert_eq!(
+            TierPolicy::parse("pin:32").unwrap(),
+            TierPolicy::PinRecentWindow { window: 32 }
+        );
+        assert!(TierPolicy::parse("mru").is_err());
+        assert!(TierPolicy::parse("pin:x").is_err());
+        assert_eq!(TierPolicy::parse("pin:4").unwrap().label(), "pin4");
+    }
+}

@@ -8,6 +8,8 @@
 //!   substrate the paper runs on (timing plane + page-accurate KV storage).
 //! * [`sparse`] is the rust-native attention family (dense/SparQ/SparF/H2O/
 //!   local) that the in-storage engine executes and Fig. 11 evaluates.
+//! * [`kvtier`] fronts the FTL with a CSD-DRAM hot tier + flash cold tier:
+//!   H2O-style importance tracking and pluggable admission/eviction.
 //! * [`systems`] and [`baselines`] are the InstInfer dataflows and the
 //!   FlexGen/DeepSpeed-style comparators, all on the same DES substrate.
 //! * [`coordinator`] is the L3 host control plane: request batching,
@@ -22,6 +24,7 @@ pub mod csd;
 pub mod flash;
 pub mod ftl;
 pub mod gpu;
+pub mod kvtier;
 pub mod pcie;
 pub mod runtime;
 pub mod sim;

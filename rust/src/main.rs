@@ -11,10 +11,10 @@
 
 use anyhow::{bail, Context, Result};
 use instinfer::bench;
-use instinfer::config::model::SparsityParams;
 use instinfer::coordinator::{
     run_closed_loop, run_open_loop, EngineConfig, InferenceEngine, SchedConfig,
 };
+use instinfer::kvtier::{TierConfig, TierPolicy};
 use instinfer::runtime::{golden, Runtime};
 use instinfer::util::json::Json;
 use instinfer::util::table::Table;
@@ -37,12 +37,17 @@ fn usage() -> ! {
          \x20       [--profile fixed|chat|qa] [--artifacts DIR]\n\
          \x20       [--arrival-rate R] [--prefill-chunk C] [--slots S]\n\
          \x20       [--hi-frac F]\n\
+         \x20       [--hot-kib N] [--tier-policy lru|h2o|pin[:W]]\n\
+         \x20       [--drop-on-resume] [--resume-keep K]\n\
          \x20       continuous batching; --arrival-rate R runs open-loop\n\
          \x20       Poisson arrivals (R req/s on the simulated clock),\n\
-         \x20       otherwise all requests are present at t=0\n\
+         \x20       otherwise all requests are present at t=0.\n\
+         \x20       --hot-kib enables the per-CSD DRAM hot tier;\n\
+         \x20       --drop-on-resume keeps only the --resume-keep most\n\
+         \x20       important tokens when a preempted sequence returns\n\
          \x20 bench <target|all> [--json FILE]   regenerate paper figures\n\
          \x20       (fig4 fig5 fig6 fig11 fig12 fig13 fig14 fig15 fig16\n\
-         \x20       fig17a fig17b table1 ablate-group ablate-dualk\n\
+         \x20       fig17a fig17b table1 tier ablate-group ablate-dualk\n\
          \x20       ablate-pipeline ablate-p2p ablate-placement)\n\
          \x20 golden [--artifacts DIR] [--tol T]\n\
          \x20 inspect [--artifacts DIR]"
@@ -83,6 +88,10 @@ fn serve(args: &[String]) -> Result<()> {
     let prefill_chunk: usize = flag_value(args, "--prefill-chunk").unwrap_or("4").parse()?;
     let slot_cap: usize = flag_value(args, "--slots").unwrap_or("64").parse()?;
     let hi_frac: f64 = flag_value(args, "--hi-frac").unwrap_or("0").parse()?;
+    let hot_kib: usize = flag_value(args, "--hot-kib").unwrap_or("0").parse()?;
+    let tier_policy = TierPolicy::parse(flag_value(args, "--tier-policy").unwrap_or("lru"))?;
+    let drop_on_resume = has_flag(args, "--drop-on-resume");
+    let resume_keep: usize = flag_value(args, "--resume-keep").unwrap_or("0").parse()?;
     let arrival_rate: Option<f64> = match flag_value(args, "--arrival-rate") {
         Some(v) => Some(v.parse().context("--arrival-rate")?),
         None => None,
@@ -99,10 +108,8 @@ fn serve(args: &[String]) -> Result<()> {
     let compiled = rt.warmup()?;
     println!("prepared {compiled} executables");
     let meta = rt.manifest.model.clone();
-    let mut cfg = EngineConfig::micro(n_csds);
-    if has_flag(args, "--sparse") {
-        cfg = cfg.sparse(SparsityParams { r: meta.r, k: meta.k, m: meta.m, n: meta.n });
-    }
+    let cfg = EngineConfig::micro_for(&meta, n_csds, has_flag(args, "--sparse"))
+        .tiered(TierConfig { hot_bytes: hot_kib * 1024, policy: tier_policy });
     let mut engine = InferenceEngine::new(rt, cfg)?;
 
     let mut wg = WorkloadGen::new(42, meta.vocab, meta.max_seq, profile,
@@ -112,7 +119,13 @@ fn serve(args: &[String]) -> Result<()> {
         r.max_new_tokens = r.max_new_tokens.min(gen_toks).max(1);
         r
     };
-    let scfg = SchedConfig { max_batch: batch, prefill_chunk, slots: slot_cap };
+    let scfg = SchedConfig {
+        max_batch: batch,
+        prefill_chunk,
+        slots: slot_cap,
+        drop_on_resume,
+        resume_keep,
+    };
     let t0 = std::time::Instant::now();
     let report = match arrival_rate {
         Some(rate) => {
@@ -163,14 +176,30 @@ fn serve(args: &[String]) -> Result<()> {
     let u = &engine.metrics.units;
     if u.total() > 0.0 {
         println!(
-            "CSD units: argtopk {:.1}% flash {:.1}% filter {:.1}% logit0 {:.1}% \
-             logit {:.1}% attend {:.1}%",
+            "CSD units: argtopk {:.1}% flash {:.1}% dram {:.1}% filter {:.1}% \
+             logit0 {:.1}% logit {:.1}% attend {:.1}%",
             100.0 * u.argtopk / u.total(),
             100.0 * u.flash_read / u.total(),
+            100.0 * u.dram_hit / u.total(),
             100.0 * u.nfc_filter / u.total(),
             100.0 * u.logit0 / u.total(),
             100.0 * u.logit / u.total(),
             100.0 * u.attend / u.total(),
+        );
+    }
+    let st = engine.tier_stats();
+    if st.hits + st.misses > 0 {
+        println!(
+            "KV tier ({}, {} KiB/CSD): {} hits / {} misses ({:.1}% hit rate), \
+             {} admissions, {} evictions, {} tokens dropped on resume",
+            tier_policy.label(),
+            hot_kib,
+            st.hits,
+            st.misses,
+            100.0 * st.hit_rate(),
+            st.admissions,
+            st.evictions,
+            engine.metrics.dropped_tokens,
         );
     }
     Ok(())

@@ -133,6 +133,15 @@ pub struct ModelMeta {
     pub n: usize,
 }
 
+impl ModelMeta {
+    /// The model's default SparF parameters — the single source for
+    /// every call site that used to hand-roll
+    /// `SparsityParams { r, k, m, n }` from these fields.
+    pub fn sparsity(&self) -> crate::config::model::SparsityParams {
+        crate::config::model::SparsityParams { r: self.r, k: self.k, m: self.m, n: self.n }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct Manifest {
     pub dir: PathBuf,

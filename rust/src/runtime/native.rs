@@ -21,7 +21,6 @@ use super::manifest::{
     WeightScope,
 };
 use super::tensor::HostTensor;
-use crate::config::model::SparsityParams;
 use crate::sparse;
 use crate::sparse::select::dot;
 use crate::util::rng::Rng;
@@ -236,12 +235,7 @@ impl NativeModel {
         let vc = inputs[2].as_f32()?;
         let lens = inputs[3].as_f32()?;
         let (h, dh, smax) = (self.meta.n_heads, self.meta.d_head, self.meta.max_seq);
-        let sp = SparsityParams {
-            r: self.meta.r,
-            k: self.meta.k,
-            m: self.meta.m,
-            n: self.meta.n,
-        };
+        let sp = self.meta.sparsity();
         let mut out = vec![0.0f32; b * h * dh];
         for r in 0..b {
             let len = (lens[r] as usize).clamp(1, smax);

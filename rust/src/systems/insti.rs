@@ -127,6 +127,8 @@ pub fn csd_layer_step(cfg: &SystemConfig, b: usize, s: usize, heads: usize) -> C
         units: UnitBreakdown {
             argtopk: t_argtopk,
             flash_read: t_flash,
+            // the analytic OPT-13B plane models the flash-only dataflow
+            dram_hit: 0.0,
             nfc_filter: t_filter,
             logit0,
             logit,

@@ -8,7 +8,6 @@
 //! the rust-native attention (what the CSD engine computes) on the exact
 //! golden inputs and comparing against the recorded jax outputs.
 
-use instinfer::config::model::SparsityParams;
 use instinfer::runtime::golden::read_golden_tensor;
 use instinfer::runtime::Runtime;
 use instinfer::sparse;
@@ -79,7 +78,7 @@ fn rust_dense_attention_matches_jax_golden() {
 fn rust_sparf_attention_matches_jax_golden() {
     let rt = Runtime::open(artifacts_dir()).unwrap();
     let m = rt.manifest.model.clone();
-    let sp = SparsityParams { r: m.r, k: m.k, m: m.m, n: m.n };
+    let sp = m.sparsity();
     let Some(c) = load_case("attn_sparf") else {
         return;
     };

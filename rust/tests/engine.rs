@@ -2,7 +2,6 @@
 //! PJRT artifacts and the in-storage CSD engines through real prefill +
 //! decode, and the two attention backends agree.
 
-use instinfer::config::model::SparsityParams;
 use instinfer::coordinator::{EngineConfig, InferenceEngine, Sequence, SlotManager};
 use instinfer::coordinator::engine::AttnBackend;
 use instinfer::csd::AttnMode;
@@ -78,9 +77,8 @@ fn csd_backend_matches_gpu_artifact_backend() {
 #[test]
 fn sparf_backend_generates_and_reads_fewer_pages() {
     let m = Runtime::open(artifacts_dir()).unwrap().manifest.model.clone();
-    let sp = SparsityParams { r: m.r, k: m.k, m: m.m, n: m.n };
-    let mut dense = engine(EngineConfig::micro(1));
-    let mut sparse = engine(EngineConfig::micro(1).sparse(sp));
+    let mut dense = engine(EngineConfig::micro_for(&m, 1, false));
+    let mut sparse = engine(EngineConfig::micro_for(&m, 1, true));
     let mut s1 = SlotManager::new(8);
     let mut s2 = SlotManager::new(8);
     let d1 = dense.generate(mk_seqs(2, 24, 6, &mut s1), 4).unwrap();

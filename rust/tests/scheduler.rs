@@ -60,7 +60,12 @@ fn mid_decode_admission_matches_solo_runs() {
     assert_eq!(solo2.len(), 6);
 
     let mut eng = engine();
-    let mut sched = Scheduler::new(SchedConfig { max_batch: 4, prefill_chunk: 2, slots: 8 });
+    let mut sched = Scheduler::new(SchedConfig {
+        max_batch: 4,
+        prefill_chunk: 2,
+        slots: 8,
+        ..Default::default()
+    });
     sched.enqueue(Arrival { req: r1, at: 0.0, priority: 0 }).unwrap();
     // decode r1 for a few steps before r2 shows up
     let mut steps = 0;
@@ -100,7 +105,12 @@ fn preempted_sequence_resumes_from_flash_and_matches_solo() {
 
     let mut eng = engine();
     // two seats only: the high-priority arrival must preempt
-    let mut sched = Scheduler::new(SchedConfig { max_batch: 2, prefill_chunk: 2, slots: 8 });
+    let mut sched = Scheduler::new(SchedConfig {
+        max_batch: 2,
+        prefill_chunk: 2,
+        slots: 8,
+        ..Default::default()
+    });
     sched.enqueue(Arrival { req: low_a, at: 0.0, priority: 0 }).unwrap();
     sched.enqueue(Arrival { req: low_b, at: 0.0, priority: 0 }).unwrap();
     let mut steps = 0;
@@ -135,7 +145,12 @@ fn preempted_sequence_resumes_from_flash_and_matches_solo() {
 fn invalid_prompt_is_rejected_without_killing_the_run() {
     let mut eng = engine();
     let sp = eng.rt.manifest.model.prefill_seq;
-    let mut sched = Scheduler::new(SchedConfig { max_batch: 4, prefill_chunk: 2, slots: 8 });
+    let mut sched = Scheduler::new(SchedConfig {
+        max_batch: 4,
+        prefill_chunk: 2,
+        slots: 8,
+        ..Default::default()
+    });
     // over-long prompt arrives alongside a valid request
     sched.enqueue(Arrival { req: req(1, sp + 1, 4), at: 0.0, priority: 0 }).unwrap();
     sched.enqueue(Arrival { req: req(2, 8, 4), at: 0.0, priority: 0 }).unwrap();
@@ -190,7 +205,7 @@ fn closed_loop_continuous_no_slower_than_offline_drain() {
     let report = run_closed_loop(
         &mut cont,
         mk_reqs(),
-        SchedConfig { max_batch: 8, prefill_chunk: 4, slots: 64 },
+        SchedConfig { max_batch: 8, prefill_chunk: 4, slots: 64, ..Default::default() },
     )
     .unwrap();
     let want: u64 = mk_reqs().iter().map(|r| r.max_new_tokens as u64).sum();

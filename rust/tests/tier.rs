@@ -1,0 +1,206 @@
+//! KV-tiering integration: the hot tier must never change the numerics
+//! (only where bytes are served from), hit rate must be monotone in
+//! capacity, drop-on-resume must be exact when nothing needs dropping,
+//! and the FTL must conserve its mappings under promote/demote churn
+//! interleaved with GC.
+
+use instinfer::bench::tier::{run_config, working_set_bytes};
+use instinfer::config::hw::FlashSpec;
+use instinfer::coordinator::{
+    run_closed_loop, EngineConfig, InferenceEngine, SchedConfig, Scheduler, Sequence,
+    SlotManager,
+};
+use instinfer::ftl::{FtlConfig, KvFtl, KvKind, StreamKey};
+use instinfer::kvtier::{TierConfig, TierPolicy};
+use instinfer::runtime::Runtime;
+use instinfer::util::rng::Rng;
+use instinfer::workload::{Arrival, LengthProfile, Request, WorkloadGen};
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../artifacts")
+}
+
+fn engine(cfg: EngineConfig) -> InferenceEngine {
+    let rt = Runtime::open(artifacts_dir()).expect("runtime");
+    InferenceEngine::new(rt, cfg).unwrap()
+}
+
+fn req(id: u64, prompt_len: usize, gen: usize) -> Request {
+    Request {
+        id,
+        prompt: (0..prompt_len as i64)
+            .map(|t| ((t * 31 + id as i64 * 7) % 512) as i32)
+            .collect(),
+        max_new_tokens: gen,
+    }
+}
+
+/// Ground truth: the request decoded alone on a flash-only engine.
+fn solo(r: &Request) -> Vec<i32> {
+    let mut eng = engine(EngineConfig::micro(2));
+    let mut slots = SlotManager::new(4);
+    let seqs = vec![Sequence::new(r.clone(), slots.alloc().unwrap())];
+    let done = eng.generate(seqs, 1).unwrap();
+    done[0].generated.clone()
+}
+
+fn drain(sched: &mut Scheduler, eng: &mut InferenceEngine) {
+    let mut guard = 0;
+    while !sched.is_idle() {
+        sched.step(eng).unwrap();
+        guard += 1;
+        assert!(guard < 500, "scheduler failed to drain");
+    }
+}
+
+/// Run r1 through a forced preempt-resume cycle under the given tier
+/// and drop settings; returns (r1 tokens, total dropped, records).
+fn preempt_resume_run(tier: TierConfig, resume_keep: usize) -> (Vec<i32>, u64, usize) {
+    let r1 = req(1, 24, 10);
+    let r2 = req(2, 8, 3);
+    let mut eng = engine(EngineConfig::micro(2).tiered(tier));
+    let mut sched = Scheduler::new(SchedConfig {
+        max_batch: 1,
+        prefill_chunk: 1,
+        slots: 4,
+        drop_on_resume: true,
+        resume_keep,
+    });
+    sched.enqueue(Arrival { req: r1, at: 0.0, priority: 0 }).unwrap();
+    let mut steps = 0;
+    while eng.metrics.decode_steps < 3 {
+        sched.step(&mut eng).unwrap();
+        steps += 1;
+        assert!(steps < 50);
+    }
+    // a high-priority arrival with one seat forces r1 to flash
+    sched.enqueue(Arrival { req: r2, at: eng.sim_now, priority: 1 }).unwrap();
+    drain(&mut sched, &mut eng);
+    assert!(eng.metrics.preemptions >= 1, "r1 must have been preempted");
+    assert!(eng.metrics.resumes >= 1, "r1 must have resumed");
+    let g1 = sched.finished.iter().find(|r| r.id == 1).unwrap().generated.clone();
+    (g1, eng.metrics.dropped_tokens, sched.finished.len())
+}
+
+#[test]
+fn h2o_drop_on_resume_is_exact_when_capacity_covers_cache() {
+    // Satellite (a): H2oScore eviction + drop-on-resume with a hot tier
+    // larger than the whole cache and a keep budget larger than the
+    // sequence must reproduce the dense flash-only tokens exactly.
+    let solo1 = solo(&req(1, 24, 10));
+    assert_eq!(solo1.len(), 10);
+    let tier = TierConfig { hot_bytes: 1 << 20, policy: TierPolicy::H2oScore };
+    let (g1, dropped, finished) = preempt_resume_run(tier, 128);
+    assert_eq!(finished, 2);
+    assert_eq!(dropped, 0, "keep budget covers the cache: nothing drops");
+    assert_eq!(g1, solo1, "tier + resume must not perturb the tokens");
+}
+
+#[test]
+fn h2o_drop_on_resume_small_budget_drops_and_completes() {
+    let tier = TierConfig { hot_bytes: 1 << 20, policy: TierPolicy::H2oScore };
+    let (g1, dropped, finished) = preempt_resume_run(tier, 8);
+    assert_eq!(finished, 2);
+    assert!(dropped > 0, "a small keep budget must drop tokens");
+    assert_eq!(g1.len(), 10, "the sequence still decodes its full budget");
+}
+
+#[test]
+fn hit_rate_is_monotone_in_hot_tier_capacity() {
+    // Satellite (b): identical workload (the tier never changes the
+    // numerics, so the page access stream is identical) under LRU at
+    // growing capacities — the stack property makes hit rate monotone.
+    let hit_rate = |hot_bytes: usize| -> f64 {
+        let rt = Runtime::open(artifacts_dir()).unwrap();
+        let meta = rt.manifest.model.clone();
+        let mut eng = engine(
+            EngineConfig::micro(1)
+                .tiered(TierConfig { hot_bytes, policy: TierPolicy::Lru }),
+        );
+        let mut wg = WorkloadGen::new(77, meta.vocab, meta.max_seq, LengthProfile::Fixed, 24, 10);
+        let reqs = wg.batch(4);
+        run_closed_loop(
+            &mut eng,
+            reqs,
+            SchedConfig { max_batch: 4, prefill_chunk: 2, slots: 8, ..Default::default() },
+        )
+        .unwrap();
+        eng.tier_stats().hit_rate()
+    };
+    let small = hit_rate(64 << 10);
+    let mid = hit_rate(256 << 10);
+    let large = hit_rate(1 << 20);
+    assert!(small <= mid, "hit rate dropped with capacity: {small} > {mid}");
+    assert!(mid <= large, "hit rate dropped with capacity: {mid} > {large}");
+    assert!(large > 0.3, "a full-working-set tier must mostly hit: {large}");
+}
+
+#[test]
+fn h2o_tier_beats_flash_only_decode_time() {
+    // The bench's acceptance shape: H2oScore at 50% of the working set
+    // strictly beats the flash-only baseline's mean decode step time.
+    let base = run_config(TierConfig::flash_only()).unwrap();
+    let h2o = run_config(TierConfig {
+        hot_bytes: working_set_bytes() / 2,
+        policy: TierPolicy::H2oScore,
+    })
+    .unwrap();
+    assert!(h2o.hit_rate > 0.0, "half-capacity H2O must hit");
+    assert!(
+        h2o.decode_s_per_step < base.decode_s_per_step,
+        "H2O @50% ({}s/step) must beat flash-only ({}s/step)",
+        h2o.decode_s_per_step,
+        base.decode_s_per_step
+    );
+}
+
+#[test]
+fn gc_with_promote_demote_churn_conserves_pages() {
+    // Satellite (c): promote/demote churn on a surviving stream while
+    // scratch streams force GC — mappings, page counts and data must
+    // all survive.
+    let mut ftl = KvFtl::new(FlashSpec::tiny(), FtlConfig { d_head: 32, m: 4, n: 8 }).unwrap();
+    let mut rng = Rng::new(5);
+    let row = |rng: &mut Rng| -> Vec<f32> { (0..32).map(|_| rng.normal_f32()).collect() };
+    let keep = StreamKey { slot: 0, layer: 0, head: 0 };
+    for _ in 0..64 {
+        let (k, v) = (row(&mut rng), row(&mut rng));
+        ftl.append_token(keep, &k, &v, 0.0).unwrap();
+    }
+    let groups: Vec<usize> = (0..8).collect();
+    let (want, _) = ftl.fetch_token_groups(keep, KvKind::K, &groups, 0.0).unwrap();
+    let mapped_before = ftl.mapped_token_pages(0);
+    assert_eq!(mapped_before, 16); // 8 K + 8 V pages
+
+    for round in 1..=8u32 {
+        for head in 1..=2u16 {
+            let scratch = StreamKey { slot: round, layer: 0, head };
+            for _ in 0..64 {
+                let (k, v) = (row(&mut rng), row(&mut rng));
+                ftl.append_token(scratch, &k, &v, 0.0).expect("device must not fill");
+            }
+        }
+        for g in 0..8usize {
+            let (rows, t) = ftl.promote_group(keep, KvKind::K, g, 0.0).unwrap();
+            assert_eq!(rows.len(), 8 * 32);
+            assert!(t > 0.0);
+            ftl.demote_group(keep, KvKind::K, g);
+        }
+        ftl.free_slot(round, 0.0).unwrap();
+    }
+
+    assert!(
+        ftl.counters.gc_relocations > 0 || ftl.array.counters.block_erases > 0,
+        "churn must have exercised reclamation"
+    );
+    assert_eq!(ftl.counters.promotions, 64);
+    assert_eq!(ftl.counters.demotions, 64);
+    // conservation: the surviving stream's mappings and bytes are intact
+    assert_eq!(ftl.mapped_token_pages(0), mapped_before);
+    let (got, _) = ftl.fetch_token_groups(keep, KvKind::K, &groups, 0.0).unwrap();
+    for ((b0, d0), (b1, d1)) in want.iter().zip(&got) {
+        assert_eq!(b0, b1);
+        assert_eq!(d0, d1, "group at token {b0} corrupted by churn");
+    }
+    assert!(ftl.free_blocks() > 0);
+}
