@@ -77,7 +77,7 @@ fn run_mode(dir: &str, sparse: bool, n_req: usize, batch: usize, gen: usize) -> 
     let mut reads = 0u64;
     let mut programs = 0u64;
     let mut wa = 0.0;
-    for q in &engine.csds {
+    for q in engine.csds() {
         reads += q.csd.ftl.array.counters.page_reads;
         programs += q.csd.ftl.array.counters.page_programs;
         wa += q.csd.ftl.write_amplification();
@@ -86,7 +86,7 @@ fn run_mode(dir: &str, sparse: bool, n_req: usize, batch: usize, gen: usize) -> 
         "flash: {} page reads, {} programs, write amplification {:.2}",
         reads,
         programs,
-        wa / engine.csds.len() as f64
+        wa / engine.csds().len() as f64
     );
     let u = &engine.metrics.units;
     if u.total() > 0.0 {

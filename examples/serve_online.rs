@@ -16,6 +16,7 @@
 
 use instinfer::coordinator::{run_open_loop, EngineConfig, InferenceEngine, SchedConfig};
 use instinfer::runtime::Runtime;
+use instinfer::shard::ShardPolicy;
 use instinfer::workload::{ArrivalGen, LengthProfile, WorkloadGen};
 
 fn flag(args: &[String], name: &str, default: f64) -> f64 {
@@ -33,13 +34,27 @@ fn main() -> anyhow::Result<()> {
     let batch = flag(&args, "--batch", 8.0) as usize;
     let gen = (flag(&args, "--steps", 12.0) as usize).max(2);
     let sparse = args.iter().any(|a| a == "--sparse");
+    let n_csds = flag(&args, "--n-csds", 2.0) as usize;
+    let shard_policy = ShardPolicy::parse(
+        args.iter()
+            .position(|a| a == "--shard-policy")
+            .and_then(|i| args.get(i + 1))
+            .map(|s| s.as_str())
+            .unwrap_or("stripe"),
+    )?;
+    if sparse && shard_policy == ShardPolicy::Context {
+        anyhow::bail!("--shard-policy context supports dense attention only (drop --sparse)");
+    }
+    if n_csds == 0 {
+        anyhow::bail!("--n-csds must be >= 1");
+    }
     let dir = std::env::var("INSTINFER_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
 
     let rt = Runtime::open(&dir)?;
     println!("serve_online: backend {}", rt.platform());
     rt.warmup()?;
     let meta = rt.manifest.model.clone();
-    let cfg = EngineConfig::micro_for(&meta, 2, sparse);
+    let cfg = EngineConfig::micro_for(&meta, n_csds, sparse).sharded(shard_policy);
     let mut engine = InferenceEngine::new(rt, cfg)?;
 
     let wg = WorkloadGen::new(
@@ -106,5 +121,18 @@ fn main() -> anyhow::Result<()> {
         report.total_generated() as f64 / report.sim_end.max(1e-12),
         report.preemptions,
     );
+    if engine.shards.n_csds() > 1 {
+        let st = &engine.shards.stats;
+        println!(
+            "shards ({} x {}): attn {:.6}s | all-reduce {:.6}s | mean barrier \
+             skew {:.2}us | stragglers {:?}",
+            engine.shards.n_csds(),
+            shard_policy.label(),
+            st.attn_span_s,
+            st.merge_span_s,
+            engine.shards.clock.mean_skew_s() * 1e6,
+            engine.shards.clock.straggler,
+        );
+    }
     Ok(())
 }

@@ -10,7 +10,6 @@
 //!   pjrt-decode   one PJRT decode-layer round trip (qkv+attn+post)
 //!   e2e-step      full coordinator decode step, batch of 4
 
-use instinfer::config::hw::CsdSpec;
 use instinfer::config::model::SparsityParams;
 use instinfer::coordinator::{EngineConfig, InferenceEngine, Sequence, SlotManager};
 use instinfer::csd::{AttnMode, InstCsd};
@@ -76,7 +75,7 @@ fn main() {
     if want("ftl") {
         let mut ftl = KvFtl::new(
             instinfer::config::hw::FlashSpec::tiny(),
-            FtlConfig { d_head: 32, m: 4, n: 8 },
+            FtlConfig::micro_head(),
         )
         .unwrap();
         let key = StreamKey { slot: 0, layer: 0, head: 0 };
@@ -97,8 +96,7 @@ fn main() {
 
     // ---- full CSD attention step -------------------------------------------
     if want("csd") {
-        let mut csd =
-            InstCsd::new(CsdSpec::micro(), FtlConfig { d_head: 32, m: 4, n: 8 }).unwrap();
+        let mut csd = InstCsd::micro_test();
         for t in 0..96 {
             let kr: Vec<f32> = (0..8 * 32).map(|_| rng.normal_f32()).collect();
             let vr: Vec<f32> = (0..8 * 32).map(|_| rng.normal_f32()).collect();

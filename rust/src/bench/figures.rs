@@ -325,8 +325,7 @@ pub fn ablate_group() -> Table {
     let mut rng = Rng::new(11);
     for s in [32usize, 64, 96] {
         let mut ftl =
-            KvFtl::new(crate::config::hw::FlashSpec::tiny(), FtlConfig { d_head: 32, m: 4, n: 8 })
-                .unwrap();
+            KvFtl::new(crate::config::hw::FlashSpec::tiny(), FtlConfig::micro_head()).unwrap();
         let key = StreamKey { slot: 0, layer: 0, head: 0 };
         for _ in 0..s {
             let kr: Vec<f32> = (0..32).map(|_| rng.normal_f32()).collect();
@@ -423,8 +422,7 @@ pub fn ablate_placement() -> Table {
     );
     let mut rng = Rng::new(13);
     let mut ftl =
-        KvFtl::new(crate::config::hw::FlashSpec::tiny(), FtlConfig { d_head: 32, m: 4, n: 8 })
-            .unwrap();
+        KvFtl::new(crate::config::hw::FlashSpec::tiny(), FtlConfig::micro_head()).unwrap();
     for head in 0..2u16 {
         let key = StreamKey { slot: 0, layer: 0, head };
         for _ in 0..64 {

@@ -5,6 +5,8 @@
 
 pub mod accuracy;
 pub mod figures;
+pub mod serve;
+pub mod shard;
 pub mod tier;
 
 use crate::util::table::Table;
@@ -44,6 +46,8 @@ pub fn registry() -> Vec<(&'static str, BenchFn)> {
         ("fig17b", figures::fig17b),
         ("table1", figures::table1),
         ("tier", tier::tier),
+        ("shard", shard::shard),
+        ("serve", serve::serve),
         ("ablate-group", figures::ablate_group),
         ("ablate-dualk", figures::ablate_dualk),
         ("ablate-pipeline", figures::ablate_pipeline),

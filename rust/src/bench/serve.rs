@@ -1,0 +1,159 @@
+//! `bench serve` — the open-loop arrival-rate sweep: continuous
+//! batching (admit-on-arrival, per-step membership) against the offline
+//! drain (wait for the whole cohort, then batch it) at the same offered
+//! load.  Closes the ROADMAP "continuous vs offline throughput across
+//! arrival rates" dashboard item.
+//!
+//! Both modes serve the identical Poisson arrival trace on the simulated
+//! device clock, so every row is deterministic.  Expected shape: at low
+//! rates the offline drain wastes most of its makespan waiting for the
+//! cohort to assemble (continuous wins on latency *and* throughput); as
+//! the rate grows the two converge, with continuous keeping the TTFT
+//! advantage.
+
+use crate::coordinator::{
+    run_closed_loop, run_open_loop, EngineConfig, InferenceEngine, SchedConfig,
+};
+use crate::runtime::Runtime;
+use crate::util::table::{eng, Table};
+use crate::workload::{ArrivalGen, LengthProfile, WorkloadGen};
+
+const PROMPT: usize = 16;
+const GEN: usize = 8;
+const REQUESTS: usize = 8;
+const SEATS: usize = 4;
+
+struct ServeRun {
+    tput_tok_s: f64,
+    p50_latency_s: f64,
+    p95_latency_s: f64,
+    p50_ttft_s: f64,
+    mean_occupancy: f64,
+}
+
+fn engine() -> anyhow::Result<InferenceEngine> {
+    let rt = Runtime::open("artifacts")?;
+    let meta = rt.manifest.model.clone();
+    InferenceEngine::new(rt, EngineConfig::micro_for(&meta, 2, false))
+}
+
+fn arrivals(engine: &InferenceEngine, rate: f64) -> Vec<crate::workload::Arrival> {
+    let m = &engine.rt.manifest.model;
+    let wg = WorkloadGen::new(777, m.vocab, m.max_seq, LengthProfile::Fixed, PROMPT, GEN);
+    ArrivalGen::new(wg, 778, rate).take(REQUESTS)
+}
+
+fn sched() -> SchedConfig {
+    SchedConfig { max_batch: SEATS, prefill_chunk: 2, slots: 16, ..Default::default() }
+}
+
+/// Continuous: requests admitted the step they arrive.
+fn run_continuous(rate: f64) -> anyhow::Result<ServeRun> {
+    let mut engine = engine()?;
+    let arr = arrivals(&engine, rate);
+    let report = run_open_loop(&mut engine, arr, sched())?;
+    let [p50, p95, _] = report.latency_percentiles().unwrap_or([0.0; 3]);
+    let [t50, _, _] = report.ttft_percentiles().unwrap_or([0.0; 3]);
+    Ok(ServeRun {
+        tput_tok_s: report.total_generated() as f64 / report.sim_end.max(1e-12),
+        p50_latency_s: p50,
+        p95_latency_s: p95,
+        p50_ttft_s: t50,
+        mean_occupancy: engine.metrics.mean_occupancy(),
+    })
+}
+
+/// Offline drain: the batch only forms once the whole cohort has
+/// arrived (the paper's throughput-oriented policy under online load).
+fn run_offline(rate: f64) -> anyhow::Result<ServeRun> {
+    let mut engine = engine()?;
+    let arr = arrivals(&engine, rate);
+    let last_at = arr.iter().map(|a| a.at).fold(0.0f64, f64::max);
+    // each request's wait for the cohort to assemble, keyed by id (the
+    // closed loop stamps everyone's arrival at the drain start)
+    let waited: std::collections::HashMap<u64, f64> =
+        arr.iter().map(|a| (a.req.id, last_at - a.at)).collect();
+    engine.sim_now = last_at;
+    let reqs = arr.into_iter().map(|a| a.req).collect();
+    let report = run_closed_loop(&mut engine, reqs, sched())?;
+    // latency measured from each request's TRUE arrival, not the drain
+    // start
+    let mut lats: Vec<f64> = report
+        .records
+        .iter()
+        .filter(|r| !r.rejected)
+        .map(|r| {
+            (r.finished_at - r.arrived_at).max(0.0) + waited.get(&r.id).copied().unwrap_or(0.0)
+        })
+        .collect();
+    let mut ttfts: Vec<f64> = report
+        .records
+        .iter()
+        .filter(|r| !r.rejected)
+        .map(|r| {
+            (r.first_token_at - r.arrived_at).max(0.0) + waited.get(&r.id).copied().unwrap_or(0.0)
+        })
+        .collect();
+    use crate::util::stats::percentile;
+    Ok(ServeRun {
+        tput_tok_s: report.total_generated() as f64 / report.sim_end.max(1e-12),
+        p50_latency_s: percentile(&mut lats, 50.0),
+        p95_latency_s: percentile(&mut lats, 95.0),
+        p50_ttft_s: percentile(&mut ttfts, 50.0),
+        mean_occupancy: engine.metrics.mean_occupancy(),
+    })
+}
+
+fn err_row(t: &mut Table, rate: f64, mode: &str, e: &anyhow::Error) {
+    t.row(vec![
+        format!("{rate}"),
+        mode.into(),
+        "ERR".into(),
+        format!("{e:#}"),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+    ]);
+}
+
+pub fn serve() -> Table {
+    let mut t = Table::new(
+        "Serving — continuous batching vs offline drain across arrival rates (sim)",
+        &[
+            "rate_req_s",
+            "mode",
+            "tput_tok_s",
+            "p50_latency_s",
+            "p95_latency_s",
+            "p50_ttft_s",
+            "mean_occupancy",
+        ],
+    );
+    for rate in [25.0f64, 100.0, 400.0] {
+        match run_continuous(rate) {
+            Ok(r) => t.row(vec![
+                format!("{rate}"),
+                "continuous".into(),
+                eng(r.tput_tok_s),
+                eng(r.p50_latency_s),
+                eng(r.p95_latency_s),
+                eng(r.p50_ttft_s),
+                eng(r.mean_occupancy),
+            ]),
+            Err(e) => err_row(&mut t, rate, "continuous", &e),
+        }
+        match run_offline(rate) {
+            Ok(r) => t.row(vec![
+                format!("{rate}"),
+                "offline".into(),
+                eng(r.tput_tok_s),
+                eng(r.p50_latency_s),
+                eng(r.p95_latency_s),
+                eng(r.p50_ttft_s),
+                eng(r.mean_occupancy),
+            ]),
+            Err(e) => err_row(&mut t, rate, "offline", &e),
+        }
+    }
+    t
+}

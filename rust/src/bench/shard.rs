@@ -1,0 +1,120 @@
+//! `bench shard` — the multi-CSD scaling evidence run: sweep the shard
+//! count (and partition policy) on the functional engine and report the
+//! per-step decode-attention time against the all-reduce (fair-share
+//! PCIe + GPU merge) overhead.
+//!
+//! Runs on the native backend with no artifacts present (the runtime
+//! synthesizes the opt-micro model), a fixed closed-loop workload, and
+//! the flash-only tier — so every row decodes identical tokens and the
+//! only difference between rows is how the heads/context stripe across
+//! engine instances.  Expected shape (paper Fig. 17a): decode attention
+//! shrinks near-linearly in the shard count — each device serves 1/N of
+//! the flash traffic from its own channels — while the merge column
+//! grows with N until the PCIe all-reduce dominates.
+
+use crate::coordinator::{run_closed_loop, EngineConfig, InferenceEngine, SchedConfig};
+use crate::runtime::Runtime;
+use crate::shard::ShardPolicy;
+use crate::util::table::{eng, Table};
+use crate::workload::{LengthProfile, WorkloadGen};
+
+const PROMPT: usize = 24;
+const GEN: usize = 10;
+const REQUESTS: usize = 4;
+const SEATS: usize = 4;
+
+pub struct ShardRun {
+    /// mean per-step attention span (slowest shard), seconds
+    pub attn_s_per_step: f64,
+    /// mean per-step all-reduce span (transfers + merge), seconds
+    pub merge_s_per_step: f64,
+    /// mean per-step decode time (write + attention + all-reduce)
+    pub decode_s_per_step: f64,
+    /// mean per-barrier clock skew across shards, seconds
+    pub skew_s: f64,
+}
+
+/// One full serving run under a shard topology; deterministic per config.
+pub fn run_config(n_csds: usize, policy: ShardPolicy) -> anyhow::Result<ShardRun> {
+    let rt = Runtime::open("artifacts")?;
+    let meta = rt.manifest.model.clone();
+    let cfg = EngineConfig::micro_for(&meta, n_csds, false).sharded(policy);
+    let mut engine = InferenceEngine::new(rt, cfg)?;
+    let mut wg =
+        WorkloadGen::new(4242, meta.vocab, meta.max_seq, LengthProfile::Fixed, PROMPT, GEN);
+    let reqs = wg.batch(REQUESTS);
+    run_closed_loop(
+        &mut engine,
+        reqs,
+        SchedConfig { max_batch: SEATS, prefill_chunk: 2, slots: 8, ..Default::default() },
+    )?;
+    let steps = engine.metrics.decode_steps.max(1) as f64;
+    let st = &engine.shards.stats;
+    Ok(ShardRun {
+        attn_s_per_step: st.attn_span_s / steps,
+        merge_s_per_step: st.merge_span_s / steps,
+        decode_s_per_step: engine.metrics.decode_sim_s / steps,
+        skew_s: engine.shards.clock.mean_skew_s(),
+    })
+}
+
+fn err_row(t: &mut Table, policy: &str, n: usize, e: &anyhow::Error) {
+    t.row(vec![
+        policy.into(),
+        n.to_string(),
+        "ERR".into(),
+        format!("{e:#}"),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+    ]);
+}
+
+pub fn shard() -> Table {
+    let mut t = Table::new(
+        "Head sharding — decode attention vs CSD count (opt-micro, sim)",
+        &[
+            "policy",
+            "csds",
+            "attn_ms_per_step",
+            "attn_speedup",
+            "merge_us_per_step",
+            "decode_ms_per_step",
+            "skew_us",
+        ],
+    );
+    let base = match run_config(1, ShardPolicy::HeadStripe) {
+        Ok(r) => r,
+        Err(e) => {
+            err_row(&mut t, "stripe", 1, &e);
+            return t;
+        }
+    };
+    let row = |r: &ShardRun, policy: ShardPolicy, n: usize, base: &ShardRun| {
+        vec![
+            policy.label().into(),
+            n.to_string(),
+            eng(r.attn_s_per_step * 1e3),
+            eng(base.attn_s_per_step / r.attn_s_per_step.max(1e-30)),
+            eng(r.merge_s_per_step * 1e6),
+            eng(r.decode_s_per_step * 1e3),
+            eng(r.skew_s * 1e6),
+        ]
+    };
+    t.row(row(&base, ShardPolicy::HeadStripe, 1, &base));
+    let mut sweep: Vec<(ShardPolicy, usize)> = vec![];
+    for n in [2usize, 4, 8] {
+        sweep.push((ShardPolicy::HeadStripe, n));
+    }
+    sweep.push((ShardPolicy::HeadBlock, 4));
+    for n in [2usize, 4] {
+        sweep.push((ShardPolicy::Context, n));
+    }
+    for (policy, n) in sweep {
+        match run_config(n, policy) {
+            Ok(r) => t.row(row(&r, policy, n, &base)),
+            Err(e) => err_row(&mut t, policy.label(), n, &e),
+        }
+    }
+    t
+}

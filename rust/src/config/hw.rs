@@ -215,6 +215,10 @@ pub struct PcieSpec {
     pub host_fs_io_us: f64,
     /// per-IO latency of the P2P/NVMe-command path (no FS), s
     pub p2p_io_us: f64,
+    /// GPU-side ingress ceiling shared by concurrent P2P streams (the
+    /// GPU sits on one Gen4 x16 slot, so N CSDs shipping results at
+    /// once fair-share this link even though each has its own x4 lane)
+    pub gpu_p2p_ingress_bw: f64,
 }
 
 impl PcieSpec {
@@ -229,6 +233,7 @@ impl PcieSpec {
             p2p_efficiency: 0.9,
             host_fs_io_us: 15.0,
             p2p_io_us: 3.0,
+            gpu_p2p_ingress_bw: 32e9,
         }
     }
 }

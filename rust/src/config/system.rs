@@ -4,6 +4,7 @@
 
 use super::hw::{CsdSpec, GpuSpec, HostSpec, PcieSpec};
 use super::model::{ModelShape, SparsityParams};
+use crate::shard::ShardPolicy;
 
 /// Where the KV cache lives and who computes decode attention.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -41,6 +42,9 @@ pub struct SystemConfig {
     pub policy: OffloadPolicy,
     /// number of SSDs/CSDs attached (Figs. 12/13/17a)
     pub n_devices: usize,
+    /// how a sequence's KV is partitioned across the CSD array (head
+    /// subsets vs context stripes; shapes the all-reduce comm term)
+    pub shard_policy: ShardPolicy,
     /// None = dense attention; Some = SparQ/SparF parameters
     pub sparsity: Option<SparsityParams>,
     /// prompt and generation lengths (paper: 1024/1024)
@@ -69,6 +73,7 @@ impl SystemConfig {
             csd: CsdSpec::zynq7045(),
             policy,
             n_devices: 1,
+            shard_policy: ShardPolicy::HeadStripe,
             sparsity: None,
             input_len: 1024,
             output_len: 1024,
@@ -85,6 +90,12 @@ impl SystemConfig {
 
     pub fn with_devices(mut self, n: usize) -> Self {
         self.n_devices = n;
+        self
+    }
+
+    /// Pick how heads/context stripe across the CSD array.
+    pub fn with_shard_policy(mut self, p: ShardPolicy) -> Self {
+        self.shard_policy = p;
         self
     }
 

@@ -14,17 +14,17 @@
 //!   PJRT artifacts over host-resident padded caches (what a
 //!   FlexGen-style system computes), used for cross-validation.
 
-use crate::config::hw::{CsdSpec, FlashSpec, PcieSpec};
-use crate::csd::{AttnMode, CsdCommand, InstCsd, NvmeQueue};
+use crate::config::hw::{CsdSpec, FlashSpec, GpuSpec, PcieSpec};
 use crate::coordinator::metrics::EngineMetrics;
 use crate::coordinator::request::{RequestPhase, Sequence};
-use crate::coordinator::router::HeadRouter;
+use crate::csd::{AttnMode, NvmeQueue};
 use crate::ftl::FtlConfig;
 use crate::kvtier::{TierConfig, TierStats};
 use crate::runtime::manifest::ModelMeta;
 use crate::runtime::{HostTensor, Runtime};
+use crate::shard::{ShardCoordinator, ShardPolicy, ShardTopology};
 use crate::sim::Time;
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 use std::time::Instant;
 
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -44,6 +44,8 @@ pub struct EngineConfig {
     pub csd_spec: CsdSpec,
     /// per-CSD hot-tier shape (capacity + eviction policy)
     pub tier: TierConfig,
+    /// how a sequence's KV is partitioned across the CSD array
+    pub shard_policy: ShardPolicy,
 }
 
 impl EngineConfig {
@@ -57,6 +59,7 @@ impl EngineConfig {
             p2p: true,
             tier: TierConfig::for_spec(&csd_spec),
             csd_spec,
+            shard_policy: ShardPolicy::HeadStripe,
         }
     }
 
@@ -84,13 +87,20 @@ impl EngineConfig {
         self.tier = tier;
         self
     }
+
+    /// Pick the shard partition policy (head stripe by default).
+    pub fn sharded(mut self, policy: ShardPolicy) -> Self {
+        self.shard_policy = policy;
+        self
+    }
 }
 
 pub struct InferenceEngine {
     pub rt: Runtime,
     pub cfg: EngineConfig,
-    pub csds: Vec<NvmeQueue>,
-    pub router: HeadRouter,
+    /// the CSD array behind its shard coordinator: per-device engine
+    /// instances, local clocks, fair-share PCIe all-reduce
+    pub shards: ShardCoordinator,
     pub metrics: EngineMetrics,
     /// simulated device clock
     pub sim_now: Time,
@@ -103,24 +113,31 @@ impl InferenceEngine {
     pub fn new(rt: Runtime, cfg: EngineConfig) -> Result<Self> {
         let m = &rt.manifest.model;
         let ftl_cfg = FtlConfig { d_head: m.d_head, m: m.m, n: m.n };
-        let mut csds = Vec::with_capacity(cfg.n_csds);
-        let pcie = PcieSpec::paper();
-        for _ in 0..cfg.n_csds {
-            let csd = InstCsd::with_tier(cfg.csd_spec, ftl_cfg, cfg.tier)
-                .context("constructing InstCSD")?;
-            csds.push(NvmeQueue::new(csd, &pcie, cfg.p2p));
-        }
-        let router = HeadRouter::new(m.n_heads, cfg.n_csds);
+        let topology = ShardTopology::new(cfg.n_csds, cfg.shard_policy, m.n_heads, m.n);
+        let shards = ShardCoordinator::new(
+            topology,
+            cfg.csd_spec,
+            ftl_cfg,
+            cfg.tier,
+            PcieSpec::paper(),
+            cfg.p2p,
+            GpuSpec::a6000(),
+        )?;
         Ok(InferenceEngine {
             rt,
             cfg,
-            csds,
-            router,
+            shards,
             metrics: EngineMetrics::default(),
             sim_now: 0.0,
             host_kv: Vec::new(),
             host_kv_bucket: 0,
         })
+    }
+
+    /// The per-device NVMe queues behind the shard coordinator (flash
+    /// counters, FTL statistics, tier state).
+    pub fn csds(&self) -> &[NvmeQueue] {
+        &self.shards.queues
     }
 
     fn model(&self) -> crate::runtime::manifest::ModelMeta {
@@ -249,28 +266,17 @@ impl InferenceEngine {
                 let mut done = self.sim_now;
                 for (i, s) in seqs.iter().enumerate() {
                     let len = s.req.prompt.len();
-                    for c in 0..self.router.n_csds() {
-                        let heads = self.router.heads_of(c).to_vec();
-                        let mut kp = Vec::with_capacity(heads.len() * len * dh);
-                        let mut vp = Vec::with_capacity(heads.len() * len * dh);
-                        for &hh in &heads {
-                            let base = (i * h + hh as usize) * sp * dh;
-                            kp.extend_from_slice(&kd[base..base + len * dh]);
-                            vp.extend_from_slice(&vd[base..base + len * dh]);
-                        }
-                        let comp = self.csds[c].submit(
-                            CsdCommand::WritePrefillLayer {
-                                slot: s.slot,
-                                layer,
-                                heads,
-                                s_len: len,
-                                k: kp,
-                                v: vp,
-                            },
-                            self.sim_now,
-                        )?;
-                        done = done.max(comp.done);
-                    }
+                    let base = i * h * sp * dh;
+                    let t = self.shards.prefill_layer(
+                        s.slot,
+                        layer,
+                        sp,
+                        len,
+                        &kd[base..base + h * sp * dh],
+                        &vd[base..base + h * sp * dh],
+                        self.sim_now,
+                    )?;
+                    done = done.max(t);
                 }
                 self.metrics.csd_wall_s += t0.elapsed().as_secs_f64();
                 Ok(done)
@@ -373,43 +379,19 @@ impl InferenceEngine {
         let vd = v.as_f32()?;
         let mut out = vec![0.0f32; bucket * h * dh];
         for (i, s) in seqs.iter().enumerate() {
-            let row = &kd[i * h * dh..(i + 1) * h * dh];
-            let vrow = &vd[i * h * dh..(i + 1) * h * dh];
-            let kparts = self.router.scatter(row, dh);
-            let vparts = self.router.scatter(vrow, dh);
-            let qparts = self.router.scatter(&qd[i * h * dh..(i + 1) * h * dh], dh);
-            let mut parts: Vec<Vec<f32>> = Vec::with_capacity(self.router.n_csds());
-            for c in 0..self.router.n_csds() {
-                let heads = self.router.heads_of(c).to_vec();
-                let wr = self.csds[c].submit(
-                    CsdCommand::WriteToken {
-                        slot: s.slot,
-                        layer,
-                        heads: heads.clone(),
-                        k: kparts[c].clone(),
-                        v: vparts[c].clone(),
-                    },
-                    self.sim_now,
-                )?;
-                let comp = self.csds[c].submit(
-                    CsdCommand::Attention {
-                        slot: s.slot,
-                        layer,
-                        heads,
-                        q: qparts[c].clone(),
-                        len: s.kv_len + 1,
-                        mode,
-                    },
-                    wr.done,
-                )?;
-                *step_done = step_done.max(comp.done);
-                if let Some(bd) = &comp.breakdown {
-                    self.metrics.units.merge(bd);
-                    self.metrics.csd_sim_s += bd.total();
-                }
-                parts.push(comp.data);
-            }
-            let gathered = self.router.gather(&parts, dh);
+            let (gathered, done, bd) = self.shards.decode_token(
+                s.slot,
+                layer,
+                &qd[i * h * dh..(i + 1) * h * dh],
+                &kd[i * h * dh..(i + 1) * h * dh],
+                &vd[i * h * dh..(i + 1) * h * dh],
+                s.kv_len + 1,
+                mode,
+                self.sim_now,
+            )?;
+            *step_done = step_done.max(done);
+            self.metrics.units.merge(&bd);
+            self.metrics.csd_sim_s += bd.total();
             out[i * h * dh..(i + 1) * h * dh].copy_from_slice(&gathered);
         }
         Ok(HostTensor::f32(vec![bucket, h, dh], out))
@@ -466,72 +448,55 @@ impl InferenceEngine {
     /// Release a finished sequence's KV on every CSD.
     pub fn free_sequence(&mut self, seq: &Sequence) -> Result<()> {
         if matches!(self.cfg.backend, AttnBackend::Csd(_)) {
-            for c in 0..self.csds.len() {
-                let comp =
-                    self.csds[c].submit(CsdCommand::FreeSlot { slot: seq.slot }, self.sim_now)?;
-                self.sim_now = self.sim_now.max(comp.done);
-            }
+            self.sim_now = self.shards.free_slot(seq.slot, self.sim_now)?;
         }
         Ok(())
     }
 
-    /// Cumulative per-token attention mass for `slot`, summed across the
-    /// CSD array (each CSD accumulates its own heads' Logit passes).
+    /// Cumulative per-token attention mass for `slot` in global token
+    /// positions, summed across the CSD array (context shards report
+    /// local indices, which the coordinator maps back).
     pub fn token_importance(&self, slot: u32) -> Vec<f32> {
-        let mut out: Vec<f32> = Vec::new();
-        for q in &self.csds {
-            if let Some(s) = q.csd.tier.importance.scores(slot) {
-                if s.len() > out.len() {
-                    out.resize(s.len(), 0.0);
-                }
-                for (o, &v) in out.iter_mut().zip(s) {
-                    *o += v;
-                }
-            }
-        }
-        out
+        self.shards.token_importance(slot)
     }
 
-    /// Drop token positions of `slot` on every CSD: future attention
-    /// masks them out, and fully-dropped token groups free their flash
-    /// pages (the scheduler's H2O-style drop-on-resume).
+    /// Drop token positions of `slot` on the owning CSDs: future
+    /// attention masks them out, and fully-dropped token groups free
+    /// their flash pages (the scheduler's H2O-style drop-on-resume).
     pub fn drop_tokens(&mut self, slot: u32, tokens: &[u32]) -> Result<()> {
         if tokens.is_empty() || !matches!(self.cfg.backend, AttnBackend::Csd(_)) {
             return Ok(());
         }
-        for c in 0..self.csds.len() {
-            let comp = self.csds[c].submit(
-                CsdCommand::DropTokens { slot, tokens: tokens.to_vec() },
-                self.sim_now,
-            )?;
-            self.sim_now = self.sim_now.max(comp.done);
-        }
+        self.sim_now = self.shards.drop_tokens(slot, tokens, self.sim_now)?;
         self.metrics.dropped_tokens += tokens.len() as u64;
         Ok(())
     }
 
     /// Aggregate hot-tier statistics across the CSD array.
     pub fn tier_stats(&self) -> TierStats {
-        let mut s = TierStats::default();
-        for q in &self.csds {
-            s.merge(&q.csd.tier.stats);
-        }
-        s
+        self.shards.tier_stats()
     }
 
     /// Bytes currently resident in the hot tiers of all CSDs.
     pub fn tier_hot_bytes(&self) -> usize {
-        self.csds.iter().map(|q| q.csd.tier.hot.bytes()).sum()
+        self.shards.tier_hot_bytes()
     }
 
     /// Configured hot-tier capacity across all CSDs.
     pub fn tier_capacity_bytes(&self) -> usize {
-        self.csds.iter().map(|q| q.csd.tier.cfg.hot_bytes).sum()
+        self.shards.tier_capacity_bytes()
     }
 
     /// Flash KV capacity across all CSDs (the cold tier's bound).
     pub fn kv_capacity_bytes(&self) -> u64 {
-        self.csds.len() as u64 * self.cfg.csd_spec.kv_capacity_bytes
+        self.shards.n_csds() as u64 * self.cfg.csd_spec.kv_capacity_bytes
+    }
+
+    /// Flash KV capacity of ONE CSD (each shard must individually fit
+    /// its stripe — the aggregate bound alone can hide an overflowing
+    /// device).
+    pub fn kv_capacity_bytes_per_csd(&self) -> u64 {
+        self.cfg.csd_spec.kv_capacity_bytes
     }
 
     /// Run a whole batch to completion: prefill, then decode until every

@@ -25,6 +25,10 @@ pub struct SlotStats {
     pub resumes: u64,
     /// max simultaneously held (live + suspended + reserved) slots
     pub peak_held: usize,
+    /// max flash-resident KV bytes observed on any single shard (the
+    /// capacity-planning signal for a striped array: the aggregate can
+    /// look fine while one device overflows)
+    pub peak_shard_kv_bytes: u64,
 }
 
 #[derive(Debug)]
@@ -36,6 +40,9 @@ pub struct SlotManager {
     suspended: BTreeSet<u32>,
     /// flash-resident KV bytes per held slot (scheduler-refreshed)
     kv_bytes: BTreeMap<u32, u64>,
+    /// flash-resident KV bytes per shard (scheduler-refreshed from the
+    /// shard coordinator's per-device FTL maps)
+    shard_kv_bytes: Vec<u64>,
     pub stats: SlotStats,
 }
 
@@ -48,6 +55,7 @@ impl SlotManager {
             live: BTreeSet::new(),
             suspended: BTreeSet::new(),
             kv_bytes: BTreeMap::new(),
+            shard_kv_bytes: Vec::new(),
             stats: SlotStats::default(),
         }
     }
@@ -157,6 +165,21 @@ impl SlotManager {
             .keys()
             .all(|s| self.live.contains(s) || self.suspended.contains(s)));
         self.kv_bytes.values().sum()
+    }
+
+    /// Refresh the per-shard flash-resident footprint (shard-aware
+    /// accounting: under head or context striping every *individual*
+    /// device must fit its stripe, not just the array in aggregate).
+    pub fn set_shard_kv_bytes(&mut self, per_shard: Vec<u64>) {
+        if let Some(&m) = per_shard.iter().max() {
+            self.stats.peak_shard_kv_bytes = self.stats.peak_shard_kv_bytes.max(m);
+        }
+        self.shard_kv_bytes = per_shard;
+    }
+
+    /// Latest per-shard flash-resident KV bytes.
+    pub fn shard_kv_bytes(&self) -> &[u64] {
+        &self.shard_kv_bytes
     }
 
     pub fn live_count(&self) -> usize {

@@ -9,9 +9,10 @@
 //!   sizes; the paper's drain-the-queue throughput policy)
 //! * [`scheduler`] — continuous-batching scheduler: per-step admission,
 //!   chunked prefill, mid-flight retirement, priority preemption to flash
-//! * [`router`]    — attention-head -> CSD assignment (Fig. 17a scaling)
-//! * [`kvmgr`]     — sequence-slot allocation, reservation, suspension
-//! * [`engine`]    — the inference engine gluing PJRT + CSDs per §IV-D
+//! * [`kvmgr`]     — sequence-slot allocation, reservation, suspension,
+//!   per-shard KV-footprint accounting
+//! * [`engine`]    — the inference engine gluing PJRT + the sharded CSD
+//!   array ([`crate::shard::ShardCoordinator`]) per §IV-D
 //! * [`metrics`]   — throughput/latency/occupancy/churn accounting
 
 pub mod batcher;
@@ -19,7 +20,6 @@ pub mod engine;
 pub mod kvmgr;
 pub mod metrics;
 pub mod request;
-pub mod router;
 pub mod scheduler;
 
 pub use batcher::OfflineBatcher;
@@ -27,7 +27,6 @@ pub use engine::{EngineConfig, InferenceEngine};
 pub use kvmgr::SlotManager;
 pub use metrics::EngineMetrics;
 pub use request::{Request, RequestPhase, Sequence};
-pub use router::HeadRouter;
 pub use scheduler::{
     run_closed_loop, run_open_loop, RequestRecord, SchedConfig, Scheduler, ServeReport,
     StepReport,

@@ -402,6 +402,22 @@ impl Scheduler {
             engine.tier_hot_bytes(),
             engine.tier_capacity_bytes()
         );
+        // shard-aware accounting: every individual device must fit its
+        // stripe — the aggregate bound can hide one overflowing shard.
+        // Unlike the analytic K+V bound above, this one counts PHYSICAL
+        // mapped pages (dual-K embedding copies and page rounding
+        // included), because stripe imbalance manifests on flash; with
+        // the current specs mapped bytes can never exceed the physical
+        // array, so this is a tripwire for accounting bugs (slot leaks,
+        // broken striping), not an admission-control path.
+        self.slots.set_shard_kv_bytes(engine.shards.mapped_kv_bytes());
+        let per_csd_cap = engine.kv_capacity_bytes_per_csd();
+        for (c, &b) in self.slots.shard_kv_bytes().iter().enumerate() {
+            anyhow::ensure!(
+                b <= per_csd_cap,
+                "shard {c} stripe ({b} B) exceeds its flash capacity ({per_csd_cap} B)"
+            );
+        }
         Ok(rep)
     }
 

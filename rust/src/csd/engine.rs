@@ -47,12 +47,17 @@ pub struct UnitBreakdown {
     pub logit: Time,
     pub attend: Time,
     pub writeback: Time,
+    /// partial-result transfer to the GPU over fair-share P2P (the
+    /// multi-CSD all-reduce tail; zero on a single device)
+    pub pcie_xfer: Time,
+    /// GPU-side merge of per-shard partials (gather or log-sum-exp)
+    pub gpu_merge: Time,
 }
 
 impl UnitBreakdown {
     pub fn total(&self) -> Time {
         self.argtopk + self.flash_read + self.dram_hit + self.nfc_filter + self.logit0
-            + self.logit + self.attend + self.writeback
+            + self.logit + self.attend + self.writeback + self.pcie_xfer + self.gpu_merge
     }
 
     pub fn merge(&mut self, o: &UnitBreakdown) {
@@ -64,8 +69,22 @@ impl UnitBreakdown {
         self.logit += o.logit;
         self.attend += o.attend;
         self.writeback += o.writeback;
+        self.pcie_xfer += o.pcie_xfer;
+        self.gpu_merge += o.gpu_merge;
     }
 }
+
+/// (outputs, per-head `(max_logit, sum_exp)`, per-head local softmax
+/// weights packed `(heads, local_len)`, completion, breakdown) of a
+/// context-shard partial attention.  The weights come back so the GPU
+/// can rescale them by the merge weight before the importance
+/// write-back — locally they sum to 1 per head, which would bias any
+/// cross-shard comparison.
+pub type PartialAttnResult = (Vec<f32>, Vec<(f32, f32)>, Vec<f32>, Time, UnitBreakdown);
+
+/// dense attention + LSE stats:
+/// (out, max_logit, sum_exp, softmax weights over `len`, done, breakdown)
+type DenseStats = (Vec<f32>, f32, f32, Vec<f32>, Time, UnitBreakdown);
 
 /// Result of a tier-aware token-group fetch.
 struct TieredFetch {
@@ -338,6 +357,28 @@ impl InstCsd {
         len: usize,
         at: Time,
     ) -> Result<(Vec<f32>, Time, UnitBreakdown)> {
+        let (out, _, _, _, t, bd) = self.dense_head_stats(key, q, len, at, true)?;
+        Ok((out, t, bd))
+    }
+
+    /// Dense decode attention plus the log-sum-exp statistics (max
+    /// logit, sum of exp over valid tokens) a context-shard merge needs.
+    /// The output is the plain dense path's — the stats are observed,
+    /// never applied — so single-device callers are bit-for-bit
+    /// unchanged.  `feed_importance: true` is the plain path: H2O mass
+    /// accumulates here and the stats/weights come back empty (no extra
+    /// passes on the hot path).  `feed_importance: false` (the partial
+    /// path) skips accumulation — the coordinator writes back
+    /// merge-weight-rescaled mass instead — and returns real stats plus
+    /// the local softmax weights.
+    fn dense_head_stats(
+        &mut self,
+        key: StreamKey,
+        q: &[f32],
+        len: usize,
+        at: Time,
+        feed_importance: bool,
+    ) -> Result<DenseStats> {
         let d = self.d_head;
         let n = self.ftl.cfg.n;
         let mut bd = UnitBreakdown::default();
@@ -375,6 +416,23 @@ impl InstCsd {
             }
         }
         let s = sparse::select::softmax_masked(&logits, &mask);
+        // LSE stats for cross-shard merging (partial path only — the
+        // plain path would drop them), with softmax_masked's exact
+        // reduction order so a lone shard reproduces `s` bit-for-bit
+        let mut mx = sparse::select::NEG_INF;
+        let mut sum_exp = 0.0f32;
+        if !feed_importance {
+            for (l, &mk) in logits.iter().zip(&mask) {
+                if mk && *l > mx {
+                    mx = *l;
+                }
+            }
+            for (l, &mk) in logits.iter().zip(&mask) {
+                if mk {
+                    sum_exp += (*l - mx).exp();
+                }
+            }
+        }
         let mut out = vec![0.0f32; d];
         for t in 0..rows {
             let wt = s[t];
@@ -386,7 +444,12 @@ impl InstCsd {
                 out[c] += wt * row[c];
             }
         }
-        self.tier.importance.accumulate(key.slot, &s[..len]);
+        let weights = if feed_importance {
+            self.tier.importance.accumulate(key.slot, &s[..len]);
+            Vec::new()
+        } else {
+            s[..len].to_vec()
+        };
 
         // Logit GeMV (2*len*d) + softmax + Attend GeMV (2*len*d)
         let logit_t = self.kernel_time(2.0 * len as f64 * d as f64);
@@ -400,7 +463,7 @@ impl InstCsd {
             self.ledger.add("dram_hit", bd.dram_hit);
         }
         self.ledger.add("kernel", logit_t + attend_t);
-        Ok((out, t2, bd))
+        Ok((out, mx, sum_exp, weights, t2, bd))
     }
 
     fn sparf_head(
@@ -578,6 +641,60 @@ impl InstCsd {
         }
         Ok((out, done, bd))
     }
+
+    /// Context-shard decode attention: locally-softmaxed dense attention
+    /// over the `local_len` tokens resident on this device, returning
+    /// each head's `(max_logit, sum_exp)` merge statistics alongside the
+    /// outputs.  Arithmetic and timing are exactly the dense path's — a
+    /// lone shard merged with itself reproduces [`Self::attention_heads`]
+    /// bit-for-bit.
+    pub fn partial_attention_heads(
+        &mut self,
+        slot: u32,
+        layer: u16,
+        heads: &[u16],
+        q: &[f32],
+        local_len: usize,
+        at: Time,
+    ) -> Result<PartialAttnResult> {
+        let d = self.d_head;
+        anyhow::ensure!(q.len() == heads.len() * d, "q rows/heads mismatch");
+        let mut out = vec![0.0f32; q.len()];
+        let mut stats = Vec::with_capacity(heads.len());
+        let mut weights = Vec::with_capacity(heads.len() * local_len);
+        let mut done = at;
+        let mut bd = UnitBreakdown::default();
+        for (i, &h) in heads.iter().enumerate() {
+            let key = StreamKey { slot, layer, head: h };
+            let (o, m, l, w, t, b) =
+                self.dense_head_stats(key, &q[i * d..(i + 1) * d], local_len, at, false)?;
+            out[i * d..(i + 1) * d].copy_from_slice(&o);
+            stats.push((m, l));
+            weights.extend_from_slice(&w);
+            done = done.max(t);
+            bd.merge(&b);
+        }
+        Ok((out, stats, weights, done, bd))
+    }
+
+    /// Fold externally-computed (globally-rescaled) attention mass into
+    /// the H2O importance tracker — the context-shard write-back the
+    /// GPU issues after the log-sum-exp merge.
+    pub fn accumulate_importance(&mut self, slot: u32, weights: &[f32]) {
+        self.tier.importance.accumulate(slot, weights);
+    }
+
+    /// Shared tiny-geometry engine for unit tests and benches (tiny
+    /// flash array, opt-micro head shape).  Call sites used to
+    /// copy-paste the spec + FtlConfig literals.
+    pub fn tiny_test() -> Self {
+        InstCsd::new(CsdSpec::tiny(), FtlConfig::micro_head()).expect("tiny test spec")
+    }
+
+    /// Shared micro-geometry engine (micro flash sized for opt-micro).
+    pub fn micro_test() -> Self {
+        InstCsd::new(CsdSpec::micro(), FtlConfig::micro_head()).expect("micro test spec")
+    }
 }
 
 fn pad_to(x: usize, multiple: usize) -> usize {
@@ -607,7 +724,7 @@ mod tests {
     use crate::util::rng::Rng;
 
     fn mk() -> InstCsd {
-        InstCsd::new(CsdSpec::tiny(), FtlConfig { d_head: 32, m: 4, n: 8 }).unwrap()
+        InstCsd::tiny_test()
     }
 
     fn fill(csd: &mut InstCsd, slot: u32, layer: u16, heads: usize, toks: usize, rng: &mut Rng)
@@ -734,9 +851,7 @@ mod tests {
     fn hot_tier_hits_skip_flash_and_match_flash_bytes() {
         use crate::kvtier::{TierConfig, TierPolicy};
         let tier = TierConfig { hot_bytes: 1 << 20, policy: TierPolicy::Lru };
-        let mut csd =
-            InstCsd::with_tier(CsdSpec::tiny(), FtlConfig { d_head: 32, m: 4, n: 8 }, tier)
-                .unwrap();
+        let mut csd = InstCsd::with_tier(CsdSpec::tiny(), FtlConfig::micro_head(), tier).unwrap();
         let mut rng = Rng::new(7);
         fill(&mut csd, 0, 0, 1, 40, &mut rng);
         let q: Vec<f32> = (0..32).map(|_| rng.normal_f32()).collect();

@@ -27,6 +27,17 @@ pub enum CsdCommand {
     },
     /// compute decode attention for this CSD's heads of a layer
     Attention { slot: u32, layer: u16, heads: Vec<u16>, q: Vec<f32>, len: usize, mode: AttnMode },
+    /// context-shard partial attention over this device's resident token
+    /// prefix (dense only); the completion carries per-head
+    /// (max-logit, sum-exp) statistics for the GPU's log-sum-exp merge
+    PartialAttention { slot: u32, layer: u16, heads: Vec<u16>, q: Vec<f32>, local_len: usize },
+    /// fold globally-rescaled attention mass into the H2O importance
+    /// tracker after a context-shard all-reduce.  On the wire this is
+    /// the GPU returning the per-head merge weights (h fp16 values,
+    /// covered by the command's P2P latency); the scaled per-token
+    /// vector carried here is the result of the multiply the shard
+    /// performs against its DRAM-resident local weights
+    AccumulateImportance { slot: u32, weights: Vec<f32> },
     /// mask token positions of a live sequence out of future attention
     /// (H2O-style drop-on-resume; fully-dropped groups free flash pages)
     DropTokens { slot: u32, tokens: Vec<u32> },
@@ -42,6 +53,17 @@ pub struct CsdCompletion {
     pub done: Time,
     /// per-unit breakdown (attention commands only)
     pub breakdown: Option<UnitBreakdown>,
+    /// per-head (max-logit, sum-exp) merge statistics
+    /// (`PartialAttention` only)
+    pub stats: Vec<(f32, f32)>,
+    /// per-head local softmax weights packed `(heads, local_len)`
+    /// (`PartialAttention` only).  Functional plane only: architecturally
+    /// these stay in CSD DRAM — the GPU ships back the per-head merge
+    /// weights (h tiny floats, folded into the write-back command's P2P
+    /// latency) and the shard rescales locally; the coordinator performs
+    /// that multiply host-side for it, so the all-reduce timing model
+    /// correctly charges only `h*(d+2)` elements per shard
+    pub weights: Vec<f32>,
 }
 
 /// Single-submission-queue model: commands incur the command-path latency
@@ -66,26 +88,72 @@ impl NvmeQueue {
         match cmd {
             CsdCommand::WriteToken { slot, layer, heads, k, v } => {
                 let done = self.csd.write_token_heads(slot, layer, &heads, &k, &v, dispatched)?;
-                Ok(CsdCompletion { data: vec![], done, breakdown: None })
+                Ok(CsdCompletion {
+                    data: vec![],
+                    done,
+                    breakdown: None,
+                    stats: vec![],
+                    weights: vec![],
+                })
             }
             CsdCommand::WritePrefillLayer { slot, layer, heads, s_len, k, v } => {
                 let done = self
                     .csd
                     .write_prefill_heads(slot, layer, &heads, s_len, &k, &v, dispatched)?;
-                Ok(CsdCompletion { data: vec![], done, breakdown: None })
+                Ok(CsdCompletion {
+                    data: vec![],
+                    done,
+                    breakdown: None,
+                    stats: vec![],
+                    weights: vec![],
+                })
             }
             CsdCommand::Attention { slot, layer, heads, q, len, mode } => {
                 let (out, done, bd) =
                     self.csd.attention_heads(slot, layer, &heads, &q, len, mode, dispatched)?;
-                Ok(CsdCompletion { data: out, done, breakdown: Some(bd) })
+                Ok(CsdCompletion {
+                    data: out,
+                    done,
+                    breakdown: Some(bd),
+                    stats: vec![],
+                    weights: vec![],
+                })
+            }
+            CsdCommand::PartialAttention { slot, layer, heads, q, local_len } => {
+                let (out, stats, weights, done, bd) = self
+                    .csd
+                    .partial_attention_heads(slot, layer, &heads, &q, local_len, dispatched)?;
+                Ok(CsdCompletion { data: out, done, breakdown: Some(bd), stats, weights })
+            }
+            CsdCommand::AccumulateImportance { slot, weights } => {
+                self.csd.accumulate_importance(slot, &weights);
+                Ok(CsdCompletion {
+                    data: vec![],
+                    done: dispatched,
+                    breakdown: None,
+                    stats: vec![],
+                    weights: vec![],
+                })
             }
             CsdCommand::DropTokens { slot, tokens } => {
                 self.csd.drop_tokens(slot, &tokens)?;
-                Ok(CsdCompletion { data: vec![], done: dispatched, breakdown: None })
+                Ok(CsdCompletion {
+                    data: vec![],
+                    done: dispatched,
+                    breakdown: None,
+                    stats: vec![],
+                    weights: vec![],
+                })
             }
             CsdCommand::FreeSlot { slot } => {
                 let done = self.csd.free_slot(slot, dispatched)?;
-                Ok(CsdCompletion { data: vec![], done, breakdown: None })
+                Ok(CsdCompletion {
+                    data: vec![],
+                    done,
+                    breakdown: None,
+                    stats: vec![],
+                    weights: vec![],
+                })
             }
         }
     }
@@ -94,13 +162,10 @@ impl NvmeQueue {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::hw::CsdSpec;
-    use crate::ftl::FtlConfig;
     use crate::util::rng::Rng;
 
     fn queue(p2p: bool) -> NvmeQueue {
-        let csd = InstCsd::new(CsdSpec::tiny(), FtlConfig { d_head: 32, m: 4, n: 8 }).unwrap();
-        NvmeQueue::new(csd, &PcieSpec::paper(), p2p)
+        NvmeQueue::new(InstCsd::tiny_test(), &PcieSpec::paper(), p2p)
     }
 
     #[test]

@@ -55,6 +55,14 @@ pub struct FtlConfig {
 }
 
 impl FtlConfig {
+    /// The opt-micro head shape every unit test and bench uses (d_head
+    /// 32, m=4 embedding channels per page, n=8 tokens per group) — the
+    /// one shared constructor call sites used to copy-paste as a
+    /// literal.
+    pub fn micro_head() -> Self {
+        FtlConfig { d_head: 32, m: 4, n: 8 }
+    }
+
     pub fn tokens_per_emb_page(&self, spec: &FlashSpec) -> usize {
         spec.page_bytes / (self.m * 2)
     }
@@ -527,6 +535,15 @@ impl KvFtl {
     /// to check that promote/demote churn conserves page counts).
     pub fn mapped_token_pages(&self, slot: u32) -> usize {
         self.token_map.keys().filter(|(k, _, _)| k.slot == slot).count()
+    }
+
+    /// Total flash-mapped pages across every live stream — token (K/V)
+    /// pages AND the dual-K embedding pages, which are ~half again on
+    /// top of K/V.  This is the per-shard cold-tier footprint the
+    /// scheduler's capacity invariants check under striping; counting
+    /// token pages alone would let a device overflow unnoticed.
+    pub fn mapped_pages_total(&self) -> usize {
+        self.token_map.len() + self.emb_map.len()
     }
 
     /// Promote one sealed token group into a DRAM tier: a timed page

@@ -8,7 +8,7 @@ use crate::util::rng::Rng;
 
 fn mk() -> KvFtl {
     // tiny flash: 512 B pages; d_head=32, n=8 (8*32*2=512 exact fit), m=4
-    KvFtl::new(FlashSpec::tiny(), FtlConfig { d_head: 32, m: 4, n: 8 }).unwrap()
+    KvFtl::new(FlashSpec::tiny(), FtlConfig::micro_head()).unwrap()
 }
 
 fn key(slot: u32, layer: u16, head: u16) -> StreamKey {

@@ -82,6 +82,16 @@ impl TierStats {
         self.evictions += o.evictions;
         self.rejected += o.rejected;
     }
+
+    /// Aggregate an iterator of per-shard stats (the CSD-array rollup
+    /// the engine and dashboards report).
+    pub fn merged<'a, I: IntoIterator<Item = &'a TierStats>>(stats: I) -> TierStats {
+        let mut out = TierStats::default();
+        for s in stats {
+            out.merge(s);
+        }
+        out
+    }
 }
 
 /// Per-CSD tier state: the hot page cache, the importance tracker that

@@ -12,6 +12,9 @@
 //!   H2O-style importance tracking and pluggable admission/eviction.
 //! * [`systems`] and [`baselines`] are the InstInfer dataflows and the
 //!   FlexGen/DeepSpeed-style comparators, all on the same DES substrate.
+//! * [`shard`] turns the CSD array into real per-device engine instances:
+//!   head/context partitioning, per-CSD local clocks, fair-share PCIe
+//!   all-reduce, and the GPU-side partial-attention merge.
 //! * [`coordinator`] is the L3 host control plane: request batching,
 //!   prefill/decode scheduling, head->CSD routing, KV management.
 //! * [`bench`] regenerates every table and figure of the paper's evaluation.
@@ -27,6 +30,7 @@ pub mod gpu;
 pub mod kvtier;
 pub mod pcie;
 pub mod runtime;
+pub mod shard;
 pub mod sim;
 pub mod sparse;
 pub mod systems;

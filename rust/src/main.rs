@@ -16,6 +16,7 @@ use instinfer::coordinator::{
 };
 use instinfer::kvtier::{TierConfig, TierPolicy};
 use instinfer::runtime::{golden, Runtime};
+use instinfer::shard::ShardPolicy;
 use instinfer::util::json::Json;
 use instinfer::util::table::Table;
 use instinfer::workload::{ArrivalGen, LengthProfile, Request, WorkloadGen};
@@ -33,7 +34,8 @@ fn usage() -> ! {
         "usage: instinfer <command> [options]\n\
          \n\
          commands:\n\
-         \x20 serve [--requests N] [--batch B] [--gen T] [--csds K] [--sparse]\n\
+         \x20 serve [--requests N] [--batch B] [--gen T] [--n-csds K] [--sparse]\n\
+         \x20       [--shard-policy stripe|block|context]\n\
          \x20       [--profile fixed|chat|qa] [--artifacts DIR]\n\
          \x20       [--arrival-rate R] [--prefill-chunk C] [--slots S]\n\
          \x20       [--hi-frac F]\n\
@@ -42,13 +44,17 @@ fn usage() -> ! {
          \x20       continuous batching; --arrival-rate R runs open-loop\n\
          \x20       Poisson arrivals (R req/s on the simulated clock),\n\
          \x20       otherwise all requests are present at t=0.\n\
+         \x20       --n-csds shards each sequence across K engine instances\n\
+         \x20       (--csds is an alias); --shard-policy picks head striping,\n\
+         \x20       head blocks, or context (token-group) striping with a\n\
+         \x20       log-sum-exp merge — context implies dense attention.\n\
          \x20       --hot-kib enables the per-CSD DRAM hot tier;\n\
          \x20       --drop-on-resume keeps only the --resume-keep most\n\
          \x20       important tokens when a preempted sequence returns\n\
          \x20 bench <target|all> [--json FILE]   regenerate paper figures\n\
          \x20       (fig4 fig5 fig6 fig11 fig12 fig13 fig14 fig15 fig16\n\
-         \x20       fig17a fig17b table1 tier ablate-group ablate-dualk\n\
-         \x20       ablate-pipeline ablate-p2p ablate-placement)\n\
+         \x20       fig17a fig17b table1 tier shard serve ablate-group\n\
+         \x20       ablate-dualk ablate-pipeline ablate-p2p ablate-placement)\n\
          \x20 golden [--artifacts DIR] [--tol T]\n\
          \x20 inspect [--artifacts DIR]"
     );
@@ -84,7 +90,14 @@ fn serve(args: &[String]) -> Result<()> {
     let n_req: usize = flag_value(args, "--requests").unwrap_or("8").parse()?;
     let batch: usize = flag_value(args, "--batch").unwrap_or("4").parse()?;
     let gen_toks: usize = flag_value(args, "--gen").unwrap_or("8").parse()?;
-    let n_csds: usize = flag_value(args, "--csds").unwrap_or("2").parse()?;
+    let n_csds: usize = flag_value(args, "--n-csds")
+        .or_else(|| flag_value(args, "--csds"))
+        .unwrap_or("2")
+        .parse()?;
+    let shard_policy = ShardPolicy::parse(flag_value(args, "--shard-policy").unwrap_or("stripe"))?;
+    if n_csds == 0 {
+        bail!("--n-csds must be >= 1");
+    }
     let prefill_chunk: usize = flag_value(args, "--prefill-chunk").unwrap_or("4").parse()?;
     let slot_cap: usize = flag_value(args, "--slots").unwrap_or("64").parse()?;
     let hi_frac: f64 = flag_value(args, "--hi-frac").unwrap_or("0").parse()?;
@@ -108,8 +121,13 @@ fn serve(args: &[String]) -> Result<()> {
     let compiled = rt.warmup()?;
     println!("prepared {compiled} executables");
     let meta = rt.manifest.model.clone();
-    let cfg = EngineConfig::micro_for(&meta, n_csds, has_flag(args, "--sparse"))
-        .tiered(TierConfig { hot_bytes: hot_kib * 1024, policy: tier_policy });
+    let sparse = has_flag(args, "--sparse");
+    if sparse && shard_policy == ShardPolicy::Context {
+        bail!("--shard-policy context supports dense attention only (drop --sparse)");
+    }
+    let cfg = EngineConfig::micro_for(&meta, n_csds, sparse)
+        .tiered(TierConfig { hot_bytes: hot_kib * 1024, policy: tier_policy })
+        .sharded(shard_policy);
     let mut engine = InferenceEngine::new(rt, cfg)?;
 
     let mut wg = WorkloadGen::new(42, meta.vocab, meta.max_seq, profile,
@@ -177,7 +195,7 @@ fn serve(args: &[String]) -> Result<()> {
     if u.total() > 0.0 {
         println!(
             "CSD units: argtopk {:.1}% flash {:.1}% dram {:.1}% filter {:.1}% \
-             logit0 {:.1}% logit {:.1}% attend {:.1}%",
+             logit0 {:.1}% logit {:.1}% attend {:.1}% xfer {:.1}% merge {:.1}%",
             100.0 * u.argtopk / u.total(),
             100.0 * u.flash_read / u.total(),
             100.0 * u.dram_hit / u.total(),
@@ -185,6 +203,24 @@ fn serve(args: &[String]) -> Result<()> {
             100.0 * u.logit0 / u.total(),
             100.0 * u.logit / u.total(),
             100.0 * u.attend / u.total(),
+            100.0 * u.pcie_xfer / u.total(),
+            100.0 * u.gpu_merge / u.total(),
+        );
+    }
+    if engine.shards.n_csds() > 1 {
+        let st = &engine.shards.stats;
+        let ck = &engine.shards.clock;
+        println!(
+            "shards ({} x {}): attn {:.6}s, all-reduce {:.6}s ({:.1} KiB shipped), \
+             mean barrier skew {:.2}us over {} barriers, stragglers {:?}",
+            engine.shards.n_csds(),
+            shard_policy.label(),
+            st.attn_span_s,
+            st.merge_span_s,
+            st.xfer_bytes / 1024.0,
+            ck.mean_skew_s() * 1e6,
+            ck.barriers,
+            ck.straggler,
         );
     }
     let st = engine.tier_stats();
@@ -201,6 +237,19 @@ fn serve(args: &[String]) -> Result<()> {
             st.evictions,
             engine.metrics.dropped_tokens,
         );
+        if engine.shards.n_csds() > 1 {
+            for (c, s) in engine.shards.per_shard_tier_stats().iter().enumerate() {
+                if s.hits + s.misses > 0 {
+                    println!(
+                        "  csd{c}: {} hits / {} misses ({:.1}%), {} evictions",
+                        s.hits,
+                        s.misses,
+                        100.0 * s.hit_rate(),
+                        s.evictions,
+                    );
+                }
+            }
+        }
     }
     Ok(())
 }

@@ -43,13 +43,120 @@ pub fn effective_bw(pcie: &PcieSpec, path: Path) -> f64 {
 
 /// Aggregate bandwidth with `n` devices on independent links; the
 /// host-mediated path does NOT scale (the FS/bounce stack serialises —
-/// the paper's Fig. 13 observation), while P2P scales per-device.
+/// the paper's Fig. 13 observation), while P2P scales per-device until
+/// the concurrent streams saturate the GPU-side ingress link.
 pub fn multi_device_bw(pcie: &PcieSpec, path: Path, n: usize) -> f64 {
     match path {
-        Path::P2p => effective_bw(pcie, path) * n as f64,
+        Path::P2p => (effective_bw(pcie, path) * n as f64).min(pcie.gpu_p2p_ingress_bw),
         Path::SsdHostFs | Path::SsdGpuViaHost => effective_bw(pcie, path),
         Path::GpuHost => effective_bw(pcie, path),
     }
+}
+
+/// One P2P transfer contending for a shared ingress link: it may start
+/// moving bytes at `start`, is ceilinged by its own device link
+/// (`dev_bw`), and shares the ingress with every concurrently-active
+/// transfer.
+#[derive(Debug, Clone, Copy)]
+pub struct XferReq {
+    pub start: Time,
+    pub bytes: f64,
+    /// the transfer's own link ceiling, bytes/s
+    pub dev_bw: f64,
+}
+
+/// Max-min fair-share rates for `ceilings` streams over a `cap` link:
+/// progressive filling — every stream gets an equal share of what is
+/// left unless its own ceiling is lower, in which case the slack is
+/// redistributed.  Conservation: the rates sum to
+/// `min(cap, sum(ceilings))`.
+pub fn fair_share_rates(cap: f64, ceilings: &[f64]) -> Vec<f64> {
+    let n = ceilings.len();
+    let mut rates = vec![0.0f64; n];
+    if n == 0 {
+        return rates;
+    }
+    let mut order: Vec<usize> = (0..n).collect();
+    // fill the most-constrained streams first so their slack flows to
+    // the rest (stable: ties keep index order)
+    order.sort_by(|&a, &b| ceilings[a].total_cmp(&ceilings[b]));
+    let mut left = cap.max(0.0);
+    let mut remaining = n;
+    for &i in &order {
+        let fair = left / remaining as f64;
+        let r = ceilings[i].max(0.0).min(fair);
+        rates[i] = r;
+        left -= r;
+        remaining -= 1;
+    }
+    rates
+}
+
+/// Completion times of concurrent transfers converging on one ingress
+/// link of `ingress_bw` bytes/s (the shard all-reduce: every CSD ships
+/// its partial attention result to the GPU at once).  Event-driven
+/// progressive filling: whenever a transfer starts or finishes, the
+/// active set re-shares the link max-min fairly.  Deterministic; a
+/// single transfer degenerates to `bytes / min(dev_bw, ingress_bw)`.
+/// A transfer that can never complete (zero bandwidth everywhere)
+/// reports `f64::INFINITY` so misconfiguration surfaces as an
+/// unbounded step instead of a free transfer.
+pub fn fair_share_finish(ingress_bw: f64, reqs: &[XferReq]) -> Vec<Time> {
+    let n = reqs.len();
+    let mut done = vec![f64::INFINITY; n];
+    if n == 0 {
+        return done;
+    }
+    let mut rem: Vec<f64> = reqs.iter().map(|r| r.bytes.max(0.0)).collect();
+    let mut finished = vec![false; n];
+    let mut now = reqs.iter().map(|r| r.start).fold(f64::INFINITY, f64::min);
+    // each iteration finishes or activates at least one transfer
+    for _guard in 0..(2 * n + 2) * (n + 1) {
+        // retire transfers that have no bytes left the moment they start
+        for i in 0..n {
+            if !finished[i] && reqs[i].start <= now && rem[i] <= 0.0 {
+                finished[i] = true;
+                done[i] = now.max(reqs[i].start);
+            }
+        }
+        let active: Vec<usize> = (0..n).filter(|&i| !finished[i] && reqs[i].start <= now).collect();
+        let next_start = (0..n)
+            .filter(|&i| !finished[i] && reqs[i].start > now)
+            .map(|i| reqs[i].start)
+            .fold(f64::INFINITY, f64::min);
+        if active.is_empty() {
+            if next_start.is_finite() {
+                now = next_start;
+                continue;
+            }
+            break;
+        }
+        let ceilings: Vec<f64> = active.iter().map(|&i| reqs[i].dev_bw).collect();
+        let rates = fair_share_rates(ingress_bw, &ceilings);
+        let mut dt = f64::INFINITY;
+        for (k, &i) in active.iter().enumerate() {
+            if rates[k] > 0.0 {
+                dt = dt.min(rem[i] / rates[k]);
+            }
+        }
+        if next_start.is_finite() {
+            dt = dt.min(next_start - now);
+        }
+        if !dt.is_finite() {
+            // zero-bandwidth stall with nothing else arriving: give up
+            break;
+        }
+        now += dt;
+        for (k, &i) in active.iter().enumerate() {
+            rem[i] -= rates[k] * dt;
+            if rem[i] <= 1e-6 {
+                rem[i] = 0.0;
+                finished[i] = true;
+                done[i] = now;
+            }
+        }
+    }
+    done
 }
 
 #[cfg(test)]
@@ -88,5 +195,113 @@ mod tests {
         let h1 = multi_device_bw(&p, Path::SsdGpuViaHost, 1);
         let h4 = multi_device_bw(&p, Path::SsdGpuViaHost, 4);
         assert_eq!(h1, h4);
+    }
+
+    #[test]
+    fn multi_device_bw_monotone_and_ingress_capped() {
+        let p = PcieSpec::paper();
+        let mut prev = 0.0;
+        for n in 1..=32 {
+            let bw = multi_device_bw(&p, Path::P2p, n);
+            assert!(bw >= prev, "aggregate P2P bw must be monotone in n");
+            assert!(bw <= p.gpu_p2p_ingress_bw + 1e-6, "n={n} exceeds ingress");
+            prev = bw;
+        }
+        // enough devices saturate the GPU-side link exactly
+        assert_eq!(multi_device_bw(&p, Path::P2p, 32), p.gpu_p2p_ingress_bw);
+    }
+
+    #[test]
+    fn fair_share_degenerate_single_transfer_matches_effective_bw() {
+        let p = PcieSpec::paper();
+        let dev = p.ssd_link_bw * p.p2p_efficiency;
+        let done = fair_share_finish(
+            p.gpu_p2p_ingress_bw,
+            &[XferReq { start: 1.0, bytes: 1e9, dev_bw: dev }],
+        );
+        // a lone transfer runs at its device-link ceiling: exactly the
+        // wire component of `effective_bw(P2p)` (per-IO cost excluded —
+        // the arbiter's callers add it before `start`)
+        let want = 1.0 + 1e9 / dev;
+        assert!((done[0] - want).abs() < 1e-9, "{} vs {want}", done[0]);
+    }
+
+    #[test]
+    fn fair_share_conserves_aggregate_bandwidth() {
+        // 4 equal transfers from t=0 whose device links together exceed
+        // the ingress: the link is shared exactly, so the makespan is
+        // total bytes / ingress
+        let reqs: Vec<XferReq> = (0..4)
+            .map(|_| XferReq { start: 0.0, bytes: 1e9, dev_bw: 2e9 })
+            .collect();
+        let done = fair_share_finish(4e9, &reqs);
+        for &d in &done {
+            assert!((d - 1.0).abs() < 1e-6, "equal sharers finish together: {d}");
+        }
+        // below saturation each transfer runs at its own ceiling instead
+        let done = fair_share_finish(100e9, &reqs);
+        for &d in &done {
+            assert!((d - 0.5).abs() < 1e-6, "unsaturated: {d}");
+        }
+    }
+
+    #[test]
+    fn fair_share_monotone_in_contention() {
+        // the same transfer finishes no earlier as more peers join
+        let mk = |n: usize| -> f64 {
+            let reqs: Vec<XferReq> = (0..n)
+                .map(|_| XferReq { start: 0.0, bytes: 1e8, dev_bw: 3e9 })
+                .collect();
+            fair_share_finish(6e9, &reqs)[0]
+        };
+        let mut prev = 0.0;
+        for n in 1..=8 {
+            let d = mk(n);
+            assert!(d >= prev - 1e-12, "n={n}: {d} < {prev}");
+            prev = d;
+        }
+        // and the aggregate never exceeds the ingress
+        let n = 8;
+        let total = n as f64 * 1e8;
+        assert!(total / mk(n) <= 6e9 + 1e-6);
+    }
+
+    #[test]
+    fn fair_share_redistributes_slack_max_min() {
+        // one slow device (1 GB/s) and one fast (8 GB/s) over a 6 GB/s
+        // ingress: max-min gives the slow stream its full 1, the fast
+        // one the remaining 5
+        let reqs = [
+            XferReq { start: 0.0, bytes: 1e9, dev_bw: 1e9 },
+            XferReq { start: 0.0, bytes: 5e9, dev_bw: 8e9 },
+        ];
+        let done = fair_share_finish(6e9, &reqs);
+        assert!((done[0] - 1.0).abs() < 1e-6, "slow: {}", done[0]);
+        assert!((done[1] - 1.0).abs() < 1e-6, "fast: {}", done[1]);
+    }
+
+    #[test]
+    fn fair_share_zero_bandwidth_reports_infinite_finish() {
+        // a dead link must surface as an unbounded transfer, not a free one
+        let done = fair_share_finish(0.0, &[XferReq { start: 1.0, bytes: 64.0, dev_bw: 1e9 }]);
+        assert!(done[0].is_infinite());
+        let done =
+            fair_share_finish(1e9, &[XferReq { start: 0.0, bytes: 64.0, dev_bw: 0.0 }]);
+        assert!(done[0].is_infinite());
+    }
+
+    #[test]
+    fn fair_share_staggered_starts_and_empty_transfers() {
+        let reqs = [
+            XferReq { start: 0.0, bytes: 2e9, dev_bw: 2e9 },
+            XferReq { start: 1.0, bytes: 0.0, dev_bw: 2e9 },
+            XferReq { start: 0.5, bytes: 1e9, dev_bw: 2e9 },
+        ];
+        let done = fair_share_finish(2e9, &reqs);
+        // transfer 0 runs alone at 2 GB/s for 0.5 s (1 GB left), then
+        // shares with transfer 2 at 1 GB/s each
+        assert!((done[0] - 1.5).abs() < 1e-6, "{}", done[0]);
+        assert!((done[1] - 1.0).abs() < 1e-9, "zero-byte finishes at start");
+        assert!((done[2] - 1.5).abs() < 1e-6, "{}", done[2]);
     }
 }

@@ -482,6 +482,71 @@ fn buckets_for(outputs: impl Fn(usize) -> Vec<OutSpec>, exe: &str) -> BTreeMap<u
         .collect()
 }
 
+/// Reference sharded decode attention over host-resident `(H, len, d)`
+/// K/V: partitions the work exactly like the shard coordinator (head
+/// subsets stay whole; context stripes split the token axis per the
+/// topology's group map), computes every partial with the same
+/// `sparse`/`select` arithmetic the CSD engine executes, and merges on
+/// the "GPU" (a single partial per head for head policies — the
+/// log-sum-exp of one partial is itself, bit-exactly — and the
+/// flash-decoding combine for context stripes).  The shard crosscheck
+/// tests pin the functional engine against this.
+pub fn sharded_reference_attention(
+    q_hd: &[f32],
+    k_hsd: &[f32],
+    v_hsd: &[f32],
+    len: usize,
+    d: usize,
+    topology: &crate::shard::ShardTopology,
+) -> Vec<f32> {
+    use crate::shard::merge::{lse_merge, Partial};
+    use crate::sparse::select::{softmax_masked, NEG_INF};
+    let h = topology.n_heads;
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut out = vec![0.0f32; h * d];
+    for hh in 0..h {
+        let q = &q_hd[hh * d..(hh + 1) * d];
+        let base = hh * len * d;
+        let mut parts: Vec<Partial> = Vec::new();
+        for c in 0..topology.n_csds {
+            let llen = topology.local_len(c, len);
+            if llen == 0 {
+                continue;
+            }
+            let mut logits = vec![NEG_INF; llen];
+            for (lt, lg) in logits.iter_mut().enumerate() {
+                let t = topology.to_global(c, lt);
+                *lg = dot(q, &k_hsd[base + t * d..base + (t + 1) * d]) * scale;
+            }
+            let mask = vec![true; llen];
+            let s = softmax_masked(&logits, &mask);
+            let mut m = NEG_INF;
+            for &x in &logits {
+                if x > m {
+                    m = x;
+                }
+            }
+            let mut l = 0.0f32;
+            for &x in &logits {
+                l += (x - m).exp();
+            }
+            let mut po = vec![0.0f32; d];
+            for (lt, &w) in s.iter().enumerate() {
+                if w == 0.0 {
+                    continue;
+                }
+                let t = topology.to_global(c, lt);
+                for cc in 0..d {
+                    po[cc] += w * v_hsd[base + t * d + cc];
+                }
+            }
+            parts.push(Partial { out: po, m, l });
+        }
+        out[hh * d..(hh + 1) * d].copy_from_slice(&lse_merge(&parts, d));
+    }
+    out
+}
+
 /// Build an in-memory manifest describing the native executables — the
 /// same signatures `aot.py` records, with no files behind them.
 pub fn synthetic_manifest(dir: PathBuf, meta: &ModelMeta) -> Manifest {

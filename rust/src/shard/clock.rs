@@ -1,0 +1,136 @@
+//! Per-CSD local clocks.
+//!
+//! Every shard advances its own frontier as its command stream completes;
+//! a decode step only synchronizes at the GPU merge barrier, where the
+//! step waits for the slowest shard.  The clock records how far apart the
+//! shards drifted at each barrier — the straggler effect that head
+//! imbalance, uneven flash layouts and fair-share PCIe induce (and that a
+//! single global engine clock structurally cannot express).
+
+use crate::sim::Time;
+
+#[derive(Debug, Clone)]
+pub struct ShardClock {
+    local: Vec<Time>,
+    /// merge barriers observed
+    pub barriers: u64,
+    /// accumulated (slowest - fastest) across barriers
+    pub skew_s: Time,
+    /// worst single-barrier skew
+    pub max_skew_s: Time,
+    /// how often each shard was the straggler at a barrier
+    pub straggler: Vec<u64>,
+}
+
+impl ShardClock {
+    pub fn new(n: usize) -> Self {
+        assert!(n > 0);
+        ShardClock {
+            local: vec![0.0; n],
+            barriers: 0,
+            skew_s: 0.0,
+            max_skew_s: 0.0,
+            straggler: vec![0; n],
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.local.len()
+    }
+
+    /// Shard `c`'s local frontier.
+    pub fn now(&self, c: usize) -> Time {
+        self.local[c]
+    }
+
+    /// Advance shard `c`'s local frontier (monotone: time never rewinds).
+    pub fn advance(&mut self, c: usize, t: Time) {
+        if t > self.local[c] {
+            self.local[c] = t;
+        }
+    }
+
+    /// Latest local frontier across the array (what a global clock sees).
+    pub fn max(&self) -> Time {
+        self.local.iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// Earliest local frontier (the most idle shard).
+    pub fn min(&self) -> Time {
+        self.local.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    /// Record a merge barrier over the shards that participated in a
+    /// fan-out (`(shard, completion)` pairs; idle shards are simply not
+    /// listed so they never count as "fast").  Returns the barrier time
+    /// (the slowest participant) and accounts skew + the straggler.
+    pub fn note_barrier(&mut self, done: &[(usize, Time)]) -> Time {
+        if done.is_empty() {
+            return 0.0;
+        }
+        self.barriers += 1;
+        let mut hi = f64::NEG_INFINITY;
+        let mut lo = f64::INFINITY;
+        let mut who = 0usize;
+        for &(c, t) in done {
+            if t > hi {
+                hi = t;
+                who = c;
+            }
+            if t < lo {
+                lo = t;
+            }
+        }
+        let skew = (hi - lo).max(0.0);
+        self.skew_s += skew;
+        if skew > self.max_skew_s {
+            self.max_skew_s = skew;
+        }
+        self.straggler[who] += 1;
+        hi
+    }
+
+    /// Mean per-barrier skew (0 when no barrier happened).
+    pub fn mean_skew_s(&self) -> Time {
+        if self.barriers == 0 {
+            0.0
+        } else {
+            self.skew_s / self.barriers as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn advance_is_monotone_per_shard() {
+        let mut c = ShardClock::new(3);
+        c.advance(1, 5.0);
+        c.advance(1, 2.0); // rewind attempt is ignored
+        assert_eq!(c.now(1), 5.0);
+        assert_eq!(c.now(0), 0.0);
+        assert_eq!(c.max(), 5.0);
+        assert_eq!(c.min(), 0.0);
+    }
+
+    #[test]
+    fn barrier_records_skew_and_straggler() {
+        let mut c = ShardClock::new(3);
+        let t = c.note_barrier(&[(0, 1.0), (1, 3.0), (2, 2.0)]);
+        assert_eq!(t, 3.0);
+        assert_eq!(c.barriers, 1);
+        assert_eq!(c.skew_s, 2.0);
+        assert_eq!(c.straggler, vec![0, 1, 0]);
+        let t = c.note_barrier(&[(0, 4.0), (1, 4.0), (2, 4.0)]);
+        assert_eq!(t, 4.0);
+        assert_eq!(c.max_skew_s, 2.0);
+        assert_eq!(c.mean_skew_s(), 1.0);
+        // ties go to the first shard at the max
+        assert_eq!(c.straggler, vec![1, 1, 0]);
+        // an empty barrier (no participants) is a no-op
+        assert_eq!(c.note_barrier(&[]), 0.0);
+        assert_eq!(c.barriers, 2);
+    }
+}

@@ -1,0 +1,652 @@
+//! The shard coordinator: N independent `InstCsd` engine instances —
+//! each with its own flash array, FTL, hot tier, importance tracker and
+//! local clock — driven as one logical attention device.
+//!
+//! A decode step fans out per the topology (head subsets or context
+//! stripes), each shard executes against its own resources at its own
+//! local time, and the partial results converge on the GPU through a
+//! max-min fair-share PCIe model ([`crate::pcie::fair_share_finish`]):
+//! all shards ship at once, so the concurrent streams share the GPU's
+//! ingress link.  The step synchronizes on the slowest shard at the
+//! merge barrier (gather for head shards, log-sum-exp for context
+//! shards).
+//!
+//! With a single CSD there is nothing to transfer or merge and the
+//! coordinator reduces exactly to the plain engine dataflow — the same
+//! commands submitted at the same timestamps.  The shard crosscheck
+//! test pins this bit-for-bit (outputs *and* completion times).
+
+use super::clock::ShardClock;
+use super::merge;
+use super::ShardTopology;
+use crate::config::hw::{CsdSpec, GpuSpec, PcieSpec};
+use crate::config::model::FP16_BYTES;
+use crate::csd::{AttnMode, CsdCommand, InstCsd, NvmeQueue, UnitBreakdown};
+use crate::ftl::FtlConfig;
+use crate::kvtier::{TierConfig, TierStats};
+use crate::pcie::{self, XferReq};
+use crate::sim::Time;
+use anyhow::{Context, Result};
+
+/// Aggregate shard-execution statistics (simulated seconds).
+#[derive(Debug, Clone, Default)]
+pub struct ShardStats {
+    /// per-dispatch attention span (slowest shard's attention completion
+    /// minus dispatch time), accumulated over sequence-layer dispatches
+    pub attn_span_s: Time,
+    /// all-reduce span (fair-share transfers + GPU merge), accumulated
+    pub merge_span_s: Time,
+    /// bytes shipped GPU-ward by partial-result transfers
+    pub xfer_bytes: f64,
+    /// merge barriers executed (0 on a single device)
+    pub merges: u64,
+}
+
+pub struct ShardCoordinator {
+    pub topology: ShardTopology,
+    pub queues: Vec<NvmeQueue>,
+    pub clock: ShardClock,
+    pub stats: ShardStats,
+    pcie: PcieSpec,
+    gpu: GpuSpec,
+    d_head: usize,
+}
+
+impl ShardCoordinator {
+    pub fn new(
+        topology: ShardTopology,
+        spec: CsdSpec,
+        ftl_cfg: FtlConfig,
+        tier: TierConfig,
+        pcie: PcieSpec,
+        p2p: bool,
+        gpu: GpuSpec,
+    ) -> Result<Self> {
+        let mut queues = Vec::with_capacity(topology.n_csds);
+        for _ in 0..topology.n_csds {
+            let csd = InstCsd::with_tier(spec, ftl_cfg, tier).context("constructing InstCSD")?;
+            queues.push(NvmeQueue::new(csd, &pcie, p2p));
+        }
+        Ok(ShardCoordinator {
+            clock: ShardClock::new(topology.n_csds),
+            topology,
+            queues,
+            stats: ShardStats::default(),
+            pcie,
+            gpu,
+            d_head: ftl_cfg.d_head,
+        })
+    }
+
+    pub fn n_csds(&self) -> usize {
+        self.topology.n_csds
+    }
+
+    fn dev_bw(&self) -> f64 {
+        self.pcie.ssd_link_bw * self.pcie.p2p_efficiency
+    }
+
+    fn io_lat(&self) -> Time {
+        self.pcie.p2p_io_us * 1e-6
+    }
+
+    /// One sequence-layer decode on the array: ship this token's K/V,
+    /// run attention on every shard, then the all-reduce back to the
+    /// GPU.  `len` is the post-write context length (`kv_len + 1`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn decode_token(
+        &mut self,
+        slot: u32,
+        layer: u16,
+        q_hd: &[f32],
+        k_hd: &[f32],
+        v_hd: &[f32],
+        len: usize,
+        mode: AttnMode,
+        at: Time,
+    ) -> Result<(Vec<f32>, Time, UnitBreakdown)> {
+        if self.topology.splits_context() {
+            self.decode_token_context(slot, layer, q_hd, k_hd, v_hd, len, mode, at)
+        } else {
+            self.decode_token_heads(slot, layer, q_hd, k_hd, v_hd, len, mode, at)
+        }
+    }
+
+    /// Head-sharded dispatch (also the single-CSD path): each shard
+    /// stores and attends its own head subset over the full context.
+    #[allow(clippy::too_many_arguments)]
+    fn decode_token_heads(
+        &mut self,
+        slot: u32,
+        layer: u16,
+        q_hd: &[f32],
+        k_hd: &[f32],
+        v_hd: &[f32],
+        len: usize,
+        mode: AttnMode,
+        at: Time,
+    ) -> Result<(Vec<f32>, Time, UnitBreakdown)> {
+        let n = self.topology.n_csds;
+        let d = self.d_head;
+        let mut bd = UnitBreakdown::default();
+        let kparts = self.topology.scatter(k_hd, d);
+        let vparts = self.topology.scatter(v_hd, d);
+        let qparts = self.topology.scatter(q_hd, d);
+        let mut parts: Vec<Vec<f32>> = vec![Vec::new(); n];
+        let mut attn_done = vec![at; n];
+        for c in 0..n {
+            let heads = self.topology.heads_of(c).to_vec();
+            if heads.is_empty() {
+                // more devices than heads: nothing lives here, so no
+                // commands, no clock advance, no share of the all-reduce
+                continue;
+            }
+            let wr = self.queues[c].submit(
+                CsdCommand::WriteToken {
+                    slot,
+                    layer,
+                    heads: heads.clone(),
+                    k: kparts[c].clone(),
+                    v: vparts[c].clone(),
+                },
+                at,
+            )?;
+            let comp = self.queues[c].submit(
+                CsdCommand::Attention { slot, layer, heads, q: qparts[c].clone(), len, mode },
+                wr.done,
+            )?;
+            attn_done[c] = comp.done;
+            self.clock.advance(c, comp.done);
+            if let Some(b) = &comp.breakdown {
+                bd.merge(b);
+            }
+            parts[c] = comp.data;
+        }
+        let t_attn = attn_done.iter().cloned().fold(at, f64::max);
+        self.stats.attn_span_s += t_attn - at;
+        let mut done = t_attn;
+        if n > 1 {
+            // all-reduce: every head-bearing shard ships its partial
+            // output at once; the streams fair-share the GPU ingress
+            let active: Vec<usize> =
+                (0..n).filter(|&c| !self.topology.heads_of(c).is_empty()).collect();
+            let reqs: Vec<XferReq> = active
+                .iter()
+                .map(|&c| XferReq {
+                    start: attn_done[c] + self.io_lat(),
+                    bytes: (self.topology.heads_of(c).len() * d * FP16_BYTES) as f64,
+                    dev_bw: self.dev_bw(),
+                })
+                .collect();
+            let fin = pcie::fair_share_finish(self.pcie.gpu_p2p_ingress_bw, &reqs);
+            let arrived = fin.iter().cloned().fold(t_attn, f64::max);
+            let merge_t = merge::gather_time(&self.gpu, self.topology.n_heads, d);
+            done = arrived + merge_t;
+            bd.pcie_xfer += arrived - t_attn;
+            bd.gpu_merge += merge_t;
+            self.stats.merge_span_s += done - t_attn;
+            self.stats.xfer_bytes += reqs.iter().map(|r| r.bytes).sum::<f64>();
+            self.stats.merges += 1;
+            let pairs: Vec<(usize, Time)> = active.iter().map(|&c| (c, attn_done[c])).collect();
+            self.clock.note_barrier(&pairs);
+        }
+        Ok((self.topology.gather(&parts, d), done, bd))
+    }
+
+    /// Context-sharded dispatch: the new token's K/V land on the owning
+    /// stripe, every resident shard computes a locally-softmaxed partial
+    /// over its tokens, and the GPU log-sum-exp-merges the partials.
+    #[allow(clippy::too_many_arguments)]
+    fn decode_token_context(
+        &mut self,
+        slot: u32,
+        layer: u16,
+        q_hd: &[f32],
+        k_hd: &[f32],
+        v_hd: &[f32],
+        len: usize,
+        mode: AttnMode,
+        at: Time,
+    ) -> Result<(Vec<f32>, Time, UnitBreakdown)> {
+        anyhow::ensure!(
+            mode == AttnMode::Dense,
+            "context sharding supports dense attention only (SparF's token top-k is global)"
+        );
+        let n = self.topology.n_csds;
+        let d = self.d_head;
+        let h = self.topology.n_heads;
+        let mut bd = UnitBreakdown::default();
+        let all_heads: Vec<u16> = (0..h as u16).collect();
+        let owner = self.topology.token_shard(len - 1);
+        let wr = self.queues[owner].submit(
+            CsdCommand::WriteToken {
+                slot,
+                layer,
+                heads: all_heads.clone(),
+                k: k_hd.to_vec(),
+                v: v_hd.to_vec(),
+            },
+            at,
+        )?;
+        let mut attn_done = vec![at; n];
+        let mut pdata: Vec<Vec<f32>> = vec![Vec::new(); n];
+        let mut pstats: Vec<Vec<(f32, f32)>> = vec![Vec::new(); n];
+        let mut pweights: Vec<Vec<f32>> = vec![Vec::new(); n];
+        for c in 0..n {
+            let llen = self.topology.local_len(c, len);
+            if llen == 0 {
+                continue;
+            }
+            let start = if c == owner { wr.done } else { at };
+            let comp = self.queues[c].submit(
+                CsdCommand::PartialAttention {
+                    slot,
+                    layer,
+                    heads: all_heads.clone(),
+                    q: q_hd.to_vec(),
+                    local_len: llen,
+                },
+                start,
+            )?;
+            attn_done[c] = comp.done;
+            self.clock.advance(c, comp.done);
+            if let Some(b) = &comp.breakdown {
+                bd.merge(b);
+            }
+            pdata[c] = comp.data;
+            pstats[c] = comp.stats;
+            pweights[c] = comp.weights;
+        }
+        let t_attn = attn_done.iter().cloned().fold(at, f64::max);
+        self.stats.attn_span_s += t_attn - at;
+        let joined: Vec<usize> = (0..n).filter(|&c| !pstats[c].is_empty()).collect();
+        // all-reduce: every participant ships outputs + LSE stats
+        let bytes = (h * (d + 2) * FP16_BYTES) as f64;
+        let reqs: Vec<XferReq> = joined
+            .iter()
+            .map(|&c| XferReq {
+                start: attn_done[c] + self.io_lat(),
+                bytes,
+                dev_bw: self.dev_bw(),
+            })
+            .collect();
+        let fin = pcie::fair_share_finish(self.pcie.gpu_p2p_ingress_bw, &reqs);
+        let arrived = fin.iter().cloned().fold(t_attn, f64::max);
+        let merge_t = merge::lse_merge_time(&self.gpu, h, d, joined.len());
+        let done = arrived + merge_t;
+        bd.pcie_xfer += arrived - t_attn;
+        bd.gpu_merge += merge_t;
+        self.stats.merge_span_s += done - t_attn;
+        self.stats.xfer_bytes += bytes * joined.len() as f64;
+        self.stats.merges += 1;
+        let pairs: Vec<(usize, Time)> = joined.iter().map(|&c| (c, attn_done[c])).collect();
+        self.clock.note_barrier(&pairs);
+        // functional merge, head by head, over the shared merge weights
+        let head_w: Vec<Vec<f32>> = (0..h)
+            .map(|head| {
+                let stats_h: Vec<(f32, f32)> = joined.iter().map(|&c| pstats[c][head]).collect();
+                merge::merge_weights(&stats_h)
+            })
+            .collect();
+        let mut out = vec![0.0f32; h * d];
+        for head in 0..h {
+            let dst = &mut out[head * d..(head + 1) * d];
+            for (idx, &c) in joined.iter().enumerate() {
+                let wc = head_w[head][idx];
+                if wc == 0.0 {
+                    continue;
+                }
+                let src = &pdata[c][head * d..(head + 1) * d];
+                for (o, &x) in dst.iter_mut().zip(src) {
+                    *o += wc * x;
+                }
+            }
+        }
+        // H2O write-back: the partial path defers importance so the GPU
+        // can rescale each shard's local softmax weights by its merge
+        // weight — w_c * s_local is exactly the token's global softmax
+        // mass, keeping cross-shard drop-on-resume comparisons honest
+        for (idx, &c) in joined.iter().enumerate() {
+            let llen = pweights[c].len() / h;
+            let mut scaled = vec![0.0f32; llen];
+            for head in 0..h {
+                let wc = head_w[head][idx];
+                if wc == 0.0 {
+                    continue;
+                }
+                for (t, s) in scaled.iter_mut().enumerate() {
+                    *s += wc * pweights[c][head * llen + t];
+                }
+            }
+            let comp = self.queues[c]
+                .submit(CsdCommand::AccumulateImportance { slot, weights: scaled }, done)?;
+            self.clock.advance(c, comp.done);
+        }
+        Ok((out, done, bd))
+    }
+
+    /// Ship one sequence's prefill layer.  `k_seq`/`v_seq` are the
+    /// `(H, sp, d)` blocks for this sequence; `len` is the prompt
+    /// length.  Head policies send each shard its heads' rows over the
+    /// whole prompt; context striping sends each shard its token groups
+    /// for every head.
+    #[allow(clippy::too_many_arguments)]
+    pub fn prefill_layer(
+        &mut self,
+        slot: u32,
+        layer: u16,
+        sp: usize,
+        len: usize,
+        k_seq: &[f32],
+        v_seq: &[f32],
+        at: Time,
+    ) -> Result<Time> {
+        let d = self.d_head;
+        let h = self.topology.n_heads;
+        anyhow::ensure!(
+            k_seq.len() == h * sp * d && v_seq.len() == h * sp * d,
+            "prefill rows mismatch"
+        );
+        let mut done = at;
+        if self.topology.splits_context() {
+            for c in 0..self.topology.n_csds {
+                let llen = self.topology.local_len(c, len);
+                if llen == 0 {
+                    continue;
+                }
+                let mut kp = Vec::with_capacity(h * llen * d);
+                let mut vp = Vec::with_capacity(h * llen * d);
+                for hh in 0..h {
+                    for lt in 0..llen {
+                        let t = self.topology.to_global(c, lt);
+                        let base = (hh * sp + t) * d;
+                        kp.extend_from_slice(&k_seq[base..base + d]);
+                        vp.extend_from_slice(&v_seq[base..base + d]);
+                    }
+                }
+                let comp = self.queues[c].submit(
+                    CsdCommand::WritePrefillLayer {
+                        slot,
+                        layer,
+                        heads: (0..h as u16).collect(),
+                        s_len: llen,
+                        k: kp,
+                        v: vp,
+                    },
+                    at,
+                )?;
+                self.clock.advance(c, comp.done);
+                done = done.max(comp.done);
+            }
+        } else {
+            for c in 0..self.topology.n_csds {
+                let heads = self.topology.heads_of(c).to_vec();
+                if heads.is_empty() {
+                    continue; // more devices than heads: nothing lives here
+                }
+                let mut kp = Vec::with_capacity(heads.len() * len * d);
+                let mut vp = Vec::with_capacity(heads.len() * len * d);
+                for &hh in &heads {
+                    let base = hh as usize * sp * d;
+                    kp.extend_from_slice(&k_seq[base..base + len * d]);
+                    vp.extend_from_slice(&v_seq[base..base + len * d]);
+                }
+                let comp = self.queues[c].submit(
+                    CsdCommand::WritePrefillLayer { slot, layer, heads, s_len: len, k: kp, v: vp },
+                    at,
+                )?;
+                self.clock.advance(c, comp.done);
+                done = done.max(comp.done);
+            }
+        }
+        Ok(done)
+    }
+
+    /// Release a finished sequence on every shard (chained completions,
+    /// exactly like the engine's original loop — identical at N=1).
+    pub fn free_slot(&mut self, slot: u32, at: Time) -> Result<Time> {
+        let mut t = at;
+        for c in 0..self.topology.n_csds {
+            let comp = self.queues[c].submit(CsdCommand::FreeSlot { slot }, t)?;
+            self.clock.advance(c, comp.done);
+            t = t.max(comp.done);
+        }
+        Ok(t)
+    }
+
+    /// Mask token positions (GLOBAL coordinates) out of future
+    /// attention.  Head policies broadcast to every shard; context
+    /// striping routes each position to its owner in local coordinates.
+    pub fn drop_tokens(&mut self, slot: u32, tokens: &[u32], at: Time) -> Result<Time> {
+        let mut t = at;
+        if self.topology.splits_context() {
+            let mut per: Vec<Vec<u32>> = vec![Vec::new(); self.topology.n_csds];
+            for &tok in tokens {
+                let (c, lt) = self.topology.to_local(tok as usize);
+                per[c].push(lt as u32);
+            }
+            for (c, local) in per.into_iter().enumerate() {
+                if local.is_empty() {
+                    continue;
+                }
+                let comp =
+                    self.queues[c].submit(CsdCommand::DropTokens { slot, tokens: local }, t)?;
+                self.clock.advance(c, comp.done);
+                t = t.max(comp.done);
+            }
+        } else {
+            for c in 0..self.topology.n_csds {
+                let comp = self.queues[c]
+                    .submit(CsdCommand::DropTokens { slot, tokens: tokens.to_vec() }, t)?;
+                self.clock.advance(c, comp.done);
+                t = t.max(comp.done);
+            }
+        }
+        Ok(t)
+    }
+
+    /// Cumulative per-token attention mass for `slot` in GLOBAL
+    /// positions, summed across the array (context shards report local
+    /// indices, which are mapped back through the stripe).
+    pub fn token_importance(&self, slot: u32) -> Vec<f32> {
+        let mut out: Vec<f32> = Vec::new();
+        for (c, q) in self.queues.iter().enumerate() {
+            let Some(s) = q.csd.tier.importance.scores(slot) else { continue };
+            if self.topology.splits_context() {
+                for (lt, &v) in s.iter().enumerate() {
+                    let g = self.topology.to_global(c, lt);
+                    if g >= out.len() {
+                        out.resize(g + 1, 0.0);
+                    }
+                    out[g] += v;
+                }
+            } else {
+                if s.len() > out.len() {
+                    out.resize(s.len(), 0.0);
+                }
+                for (o, &v) in out.iter_mut().zip(s) {
+                    *o += v;
+                }
+            }
+        }
+        out
+    }
+
+    /// Hot-tier statistics aggregated across the array.
+    pub fn tier_stats(&self) -> TierStats {
+        TierStats::merged(self.queues.iter().map(|q| &q.csd.tier.stats))
+    }
+
+    /// Per-shard hot-tier statistics (the tier dashboard's per-device
+    /// rows).
+    pub fn per_shard_tier_stats(&self) -> Vec<TierStats> {
+        self.queues.iter().map(|q| q.csd.tier.stats).collect()
+    }
+
+    /// Bytes currently resident in the hot tiers of all shards.
+    pub fn tier_hot_bytes(&self) -> usize {
+        self.queues.iter().map(|q| q.csd.tier.hot.bytes()).sum()
+    }
+
+    /// Configured hot-tier capacity across all shards.
+    pub fn tier_capacity_bytes(&self) -> usize {
+        self.queues.iter().map(|q| q.csd.tier.cfg.hot_bytes).sum()
+    }
+
+    /// Flash-mapped KV bytes per shard, token + dual-K embedding pages
+    /// (the cold-tier footprint each device actually carries — balanced
+    /// by construction for head stripes, group-balanced for context
+    /// stripes).
+    pub fn mapped_kv_bytes(&self) -> Vec<u64> {
+        self.queues
+            .iter()
+            .map(|q| (q.csd.ftl.mapped_pages_total() * q.csd.spec.flash.page_bytes) as u64)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::shard::ShardPolicy;
+    use crate::util::rng::Rng;
+
+    fn coord(n: usize, policy: ShardPolicy) -> ShardCoordinator {
+        let topology = ShardTopology::new(n, policy, 4, 8);
+        ShardCoordinator::new(
+            topology,
+            CsdSpec::tiny(),
+            FtlConfig::micro_head(),
+            TierConfig::flash_only(),
+            PcieSpec::paper(),
+            true,
+            GpuSpec::a6000(),
+        )
+        .unwrap()
+    }
+
+    fn decode_some(
+        co: &mut ShardCoordinator,
+        toks: usize,
+        rng: &mut Rng,
+    ) -> (Vec<f32>, Time) {
+        let d = 32;
+        let h = 4;
+        let mut out = Vec::new();
+        let mut done = 0.0;
+        for t in 0..toks {
+            let k: Vec<f32> = (0..h * d).map(|_| rng.normal_f32()).collect();
+            let v: Vec<f32> = (0..h * d).map(|_| rng.normal_f32()).collect();
+            let q: Vec<f32> = (0..h * d).map(|_| rng.normal_f32()).collect();
+            let (o, dn, _) = co
+                .decode_token(0, 0, &q, &k, &v, t + 1, AttnMode::Dense, 0.0)
+                .unwrap();
+            out = o;
+            done = dn;
+        }
+        (out, done)
+    }
+
+    #[test]
+    fn head_outputs_identical_across_shard_counts() {
+        // heads are computed independently over identical data, so the
+        // merged outputs are bit-identical no matter the shard count
+        let mut rng1 = Rng::new(21);
+        let mut rng2 = Rng::new(21);
+        let mut rng4 = Rng::new(21);
+        let mut c1 = coord(1, ShardPolicy::HeadStripe);
+        let mut c2 = coord(2, ShardPolicy::HeadStripe);
+        let mut c4 = coord(4, ShardPolicy::HeadBlock);
+        let (o1, _) = decode_some(&mut c1, 12, &mut rng1);
+        let (o2, _) = decode_some(&mut c2, 12, &mut rng2);
+        let (o4, _) = decode_some(&mut c4, 12, &mut rng4);
+        assert_eq!(o1, o2);
+        assert_eq!(o1, o4);
+        assert_eq!(c1.stats.merges, 0, "single device never merges");
+        assert!(c2.stats.merges > 0 && c2.stats.xfer_bytes > 0.0);
+        assert!(c2.clock.barriers > 0);
+    }
+
+    #[test]
+    fn context_merge_matches_single_device() {
+        let mut rng1 = Rng::new(22);
+        let mut rng2 = Rng::new(22);
+        let mut c1 = coord(1, ShardPolicy::Context);
+        let mut c2 = coord(2, ShardPolicy::Context);
+        // 20 tokens: groups 0,1 on shard 0, group 2 (incl. tail) on 1
+        let (o1, _) = decode_some(&mut c1, 20, &mut rng1);
+        let (o2, _) = decode_some(&mut c2, 20, &mut rng2);
+        assert_eq!(o1.len(), o2.len());
+        for (a, b) in o1.iter().zip(&o2) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+        // both shards actually hold KV
+        let mapped = c2.mapped_kv_bytes();
+        assert!(mapped[0] > 0 && mapped[1] > 0, "{mapped:?}");
+        // the importance write-back reproduces the single device's H2O
+        // signal: w_c-rescaled local weights == global softmax mass
+        let i1 = c1.token_importance(0);
+        let i2 = c2.token_importance(0);
+        assert_eq!(i1.len(), i2.len());
+        for (a, b) in i1.iter().zip(&i2) {
+            assert!((a - b).abs() < 1e-2 * (1.0 + a.abs()), "importance {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn context_rejects_sparf() {
+        let mut co = coord(2, ShardPolicy::Context);
+        let sp = crate::config::model::SparsityParams { r: 8, k: 16, m: 4, n: 8 };
+        let q = vec![0.0f32; 4 * 32];
+        let err = co
+            .decode_token(0, 0, &q, &q, &q, 1, AttnMode::SparF(sp), 0.0)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("dense attention only"), "{err}");
+    }
+
+    #[test]
+    fn sharding_speeds_up_attention_span() {
+        let mut rng1 = Rng::new(23);
+        let mut rng2 = Rng::new(23);
+        let mut c1 = coord(1, ShardPolicy::HeadStripe);
+        let mut c2 = coord(2, ShardPolicy::HeadStripe);
+        decode_some(&mut c1, 24, &mut rng1);
+        decode_some(&mut c2, 24, &mut rng2);
+        assert!(
+            c2.stats.attn_span_s < c1.stats.attn_span_s,
+            "2 shards {} !< 1 shard {}",
+            c2.stats.attn_span_s,
+            c1.stats.attn_span_s
+        );
+    }
+
+    #[test]
+    fn free_slot_clears_every_shard() {
+        let mut rng = Rng::new(24);
+        let mut co = coord(2, ShardPolicy::Context);
+        decode_some(&mut co, 20, &mut rng);
+        let t = co.free_slot(0, 0.0).unwrap();
+        assert!(t > 0.0);
+        for b in co.mapped_kv_bytes() {
+            assert_eq!(b, 0);
+        }
+    }
+
+    #[test]
+    fn drop_tokens_routes_to_owning_stripe() {
+        let mut rng = Rng::new(25);
+        let mut co = coord(2, ShardPolicy::Context);
+        decode_some(&mut co, 32, &mut rng);
+        // drop global group 1 (tokens 8..16) — it lives on shard 1
+        let before = co.mapped_kv_bytes();
+        let drop: Vec<u32> = (8..16).collect();
+        co.drop_tokens(0, &drop, 0.0).unwrap();
+        let after = co.mapped_kv_bytes();
+        assert_eq!(before[0], after[0], "shard 0 untouched");
+        assert!(after[1] < before[1], "shard 1 freed the group");
+        // importance comes back in global coordinates
+        let imp = co.token_importance(0);
+        assert_eq!(imp.len(), 32);
+    }
+}

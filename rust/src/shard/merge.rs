@@ -1,0 +1,194 @@
+//! GPU-side merge of per-shard partial attention.
+//!
+//! Head-sharded results concatenate (each head lives wholly on one CSD,
+//! so the merge is a gather).  Context-sharded results combine with the
+//! flash-decoding log-sum-exp reweighting: every shard returns its
+//! locally-softmaxed output plus the (max logit, sum-of-exp) statistics,
+//! and the GPU rescales each partial by its share of the global softmax
+//! mass.  A single partial merges to itself bit-exactly (`l/l == 1.0`),
+//! which is what keeps the N=1 shard path identical to the plain engine.
+
+use crate::config::hw::GpuSpec;
+use crate::config::model::FP16_BYTES;
+
+/// One shard's partial attention for one head over its resident tokens.
+#[derive(Debug, Clone)]
+pub struct Partial {
+    /// locally-softmaxed weighted V sum, length `d`
+    pub out: Vec<f32>,
+    /// max logit over the shard's valid tokens (`NEG_INF` when none)
+    pub m: f32,
+    /// sum of `exp(logit - m)` over the shard's valid tokens (0 if none)
+    pub l: f32,
+}
+
+/// Per-partial merge weights `w_c = l_c e^{m_c - m*} / Σ_j l_j e^{m_j -
+/// m*}` from the `(max_logit, sum_exp)` statistics (zero for partials
+/// that saw no valid token).  `w_c · s_local` is exactly the global
+/// softmax weight of the shard's tokens, which is why the same weights
+/// also rescale the H2O importance write-back.
+pub fn merge_weights(stats: &[(f32, f32)]) -> Vec<f32> {
+    let mut w = vec![0.0f32; stats.len()];
+    let mut mstar = f32::NEG_INFINITY;
+    for &(m, l) in stats {
+        if l > 0.0 && m > mstar {
+            mstar = m;
+        }
+    }
+    if mstar == f32::NEG_INFINITY {
+        return w; // no shard saw a valid token
+    }
+    let mut denom = 0.0f32;
+    for &(m, l) in stats {
+        if l > 0.0 {
+            denom += l * (m - mstar).exp();
+        }
+    }
+    if denom <= 0.0 {
+        return w;
+    }
+    for (wi, &(m, l)) in w.iter_mut().zip(stats) {
+        if l > 0.0 {
+            *wi = l * (m - mstar).exp() / denom;
+        }
+    }
+    w
+}
+
+/// Exact log-sum-exp combine: `softmax(concat logits) · V` equals
+/// `Σ_c w_c out_c` over [`merge_weights`].
+pub fn lse_merge(parts: &[Partial], d: usize) -> Vec<f32> {
+    let stats: Vec<(f32, f32)> = parts.iter().map(|p| (p.m, p.l)).collect();
+    let w = merge_weights(&stats);
+    let mut out = vec![0.0f32; d];
+    for (p, &wc) in parts.iter().zip(&w) {
+        if wc == 0.0 {
+            continue;
+        }
+        for (o, &x) in out.iter_mut().zip(&p.out) {
+            *o += wc * x;
+        }
+    }
+    out
+}
+
+/// FLOPs of the log-sum-exp combine for `heads` heads over `parts`
+/// partials (per head: a weight per partial, then a weighted d-vector
+/// accumulation).
+pub fn lse_merge_flops(heads: usize, d: usize, parts: usize) -> f64 {
+    (heads * parts * (2 * d + 4)) as f64
+}
+
+/// GPU time of the context-shard merge (roofline over the partial
+/// tensors: `heads x parts x (d + 2)` fp16 elements in, `heads x d` out).
+pub fn lse_merge_time(gpu: &GpuSpec, heads: usize, d: usize, parts: usize) -> f64 {
+    let bytes = ((heads * parts * (d + 2) + heads * d) * FP16_BYTES) as f64;
+    gpu.op_time(lse_merge_flops(heads, d, parts), bytes)
+}
+
+/// GPU time of the head-shard gather (a pure memory move of the
+/// concatenated head outputs).
+pub fn gather_time(gpu: &GpuSpec, heads: usize, d: usize) -> f64 {
+    gpu.op_time(0.0, (2 * heads * d * FP16_BYTES) as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse;
+    use crate::sparse::select::{dot, softmax_masked, NEG_INF};
+    use crate::util::rng::Rng;
+
+    /// Reference partial for tokens `lo..hi` of a (len, d) K/V pair.
+    fn partial(q: &[f32], k: &[f32], v: &[f32], idx: &[usize], d: usize) -> Partial {
+        let mut logits = vec![NEG_INF; idx.len()];
+        let scale = 1.0 / (d as f32).sqrt();
+        for (j, &t) in idx.iter().enumerate() {
+            logits[j] = dot(q, &k[t * d..(t + 1) * d]) * scale;
+        }
+        let mask = vec![true; idx.len()];
+        let s = softmax_masked(&logits, &mask);
+        let mut m = NEG_INF;
+        let mut l = 0.0f32;
+        for &x in &logits {
+            if x > m {
+                m = x;
+            }
+        }
+        for &x in &logits {
+            l += (x - m).exp();
+        }
+        let mut out = vec![0.0f32; d];
+        for (j, &t) in idx.iter().enumerate() {
+            for c in 0..d {
+                out[c] += s[j] * v[t * d + c];
+            }
+        }
+        Partial { out, m, l }
+    }
+
+    #[test]
+    fn single_partial_merges_to_itself_bit_exactly() {
+        let mut rng = Rng::new(11);
+        let d = 16;
+        let p = Partial {
+            out: (0..d).map(|_| rng.normal_f32()).collect(),
+            m: 0.7,
+            l: 3.3,
+        };
+        let merged = lse_merge(std::slice::from_ref(&p), d);
+        assert_eq!(merged, p.out, "w = l/l must be exactly 1.0");
+    }
+
+    #[test]
+    fn lse_merge_matches_dense_attention() {
+        let mut rng = Rng::new(12);
+        let (d, len) = (8, 24);
+        let q: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+        let k: Vec<f32> = (0..len * d).map(|_| rng.normal_f32()).collect();
+        let v: Vec<f32> = (0..len * d).map(|_| rng.normal_f32()).collect();
+        let want = sparse::dense_attention(&q, &k, &v, len);
+        // stripe tokens into 3 shards group-wise (group = 4 tokens)
+        for n in [2usize, 3] {
+            let mut parts = Vec::new();
+            for c in 0..n {
+                let idx: Vec<usize> = (0..len).filter(|t| (t / 4) % n == c).collect();
+                if !idx.is_empty() {
+                    parts.push(partial(&q, &k, &v, &idx, d));
+                }
+            }
+            let got = lse_merge(&parts, d);
+            for (a, b) in got.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-5, "n={n}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_partials_are_ignored() {
+        let d = 4;
+        let real = Partial { out: vec![1.0, 2.0, 3.0, 4.0], m: 0.5, l: 2.0 };
+        let empty = Partial { out: vec![0.0; d], m: NEG_INF, l: 0.0 };
+        let merged = lse_merge(&[empty.clone(), real.clone(), empty], d);
+        assert_eq!(merged, real.out);
+        assert_eq!(lse_merge(&[], d), vec![0.0; d]);
+    }
+
+    #[test]
+    fn merge_weights_normalize_and_skip_empty() {
+        let w = merge_weights(&[(0.0, 2.0), (NEG_INF, 0.0), (1.0, 1.0)]);
+        assert_eq!(w[1], 0.0, "empty partial carries no mass");
+        assert!((w.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(w[2] > w[0], "higher max-logit partial carries more mass");
+        assert_eq!(merge_weights(&[]), Vec::<f32>::new());
+    }
+
+    #[test]
+    fn merge_time_positive_and_grows_with_parts() {
+        let gpu = GpuSpec::a6000();
+        let t2 = lse_merge_time(&gpu, 8, 32, 2);
+        let t8 = lse_merge_time(&gpu, 8, 32, 8);
+        assert!(t2 > 0.0 && t8 > t2);
+        assert!(gather_time(&gpu, 8, 32) > 0.0);
+    }
+}

@@ -1,0 +1,290 @@
+//! Multi-CSD sharded execution (paper §IV-D "Scale To CSD Array",
+//! Fig. 17a; cf. HeadInfer's head-wise offload partitioning).
+//!
+//! InstInfer's throughput scales with the *number* of CSDs: internal
+//! flash bandwidth aggregates across drives while each drive's PCIe
+//! link stays fixed.  This subsystem turns the engine's CSD array into
+//! real per-device instances:
+//!
+//! * [`ShardTopology`] — how a sequence's KV is partitioned: heads
+//!   striped/blocked across shards, or token groups striped with every
+//!   head resident everywhere (`context`);
+//! * [`clock`]   — per-CSD local clocks with barrier-skew accounting;
+//! * [`merge`]   — the GPU-side combine: gather for head shards, the
+//!   flash-decoding log-sum-exp reweighting for context shards;
+//! * [`coordinator`] — [`ShardCoordinator`]: fans a decode step out to
+//!   all shards, advances each shard's local time, ships the partial
+//!   results back over a max-min fair-share PCIe model
+//!   ([`crate::pcie::fair_share_finish`]), and synchronizes the step on
+//!   the slowest shard at the merge barrier.
+//!
+//! With one CSD the coordinator degenerates to the plain single-engine
+//! dataflow — same submissions at the same timestamps, no transfer or
+//! merge stage — which the shard crosscheck test pins bit-exactly.
+
+pub mod clock;
+pub mod coordinator;
+pub mod merge;
+
+pub use clock::ShardClock;
+pub use coordinator::{ShardCoordinator, ShardStats};
+pub use merge::{lse_merge, Partial};
+
+use anyhow::{bail, Result};
+
+/// How a sequence's KV (and therefore its decode attention) is
+/// partitioned across the CSD array.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardPolicy {
+    /// heads striped round-robin across shards; merge is a gather
+    HeadStripe,
+    /// contiguous head blocks per shard (better NUMA/stream locality,
+    /// same balance to within one head)
+    HeadBlock,
+    /// token groups striped across shards, every head on every shard;
+    /// merge is the log-sum-exp combine (flash-decoding style)
+    Context,
+}
+
+impl ShardPolicy {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "stripe" | "head" => ShardPolicy::HeadStripe,
+            "block" => ShardPolicy::HeadBlock,
+            "context" | "ctx" => ShardPolicy::Context,
+            other => bail!("unknown shard policy {other:?} (stripe|block|context)"),
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ShardPolicy::HeadStripe => "stripe",
+            ShardPolicy::HeadBlock => "block",
+            ShardPolicy::Context => "context",
+        }
+    }
+}
+
+/// Shard topology: device count, partition policy, and the derived
+/// head/token-group placement.
+#[derive(Debug, Clone)]
+pub struct ShardTopology {
+    pub n_csds: usize,
+    pub policy: ShardPolicy,
+    pub n_heads: usize,
+    /// tokens per FTL token group (`n`) — the context-striping grain
+    pub group_tokens: usize,
+    /// heads assigned to each shard (every head on every shard for
+    /// `Context`)
+    assignment: Vec<Vec<u16>>,
+}
+
+impl ShardTopology {
+    pub fn new(n_csds: usize, policy: ShardPolicy, n_heads: usize, group_tokens: usize) -> Self {
+        assert!(n_csds > 0 && n_heads > 0 && group_tokens > 0);
+        let assignment: Vec<Vec<u16>> = match policy {
+            ShardPolicy::HeadStripe => {
+                let mut a = vec![Vec::new(); n_csds];
+                for h in 0..n_heads {
+                    a[h % n_csds].push(h as u16);
+                }
+                a
+            }
+            ShardPolicy::HeadBlock => {
+                let mut a = vec![Vec::new(); n_csds];
+                let base = n_heads / n_csds;
+                let extra = n_heads % n_csds;
+                let mut h = 0u16;
+                for (c, out) in a.iter_mut().enumerate() {
+                    let take = base + usize::from(c < extra);
+                    for _ in 0..take {
+                        out.push(h);
+                        h += 1;
+                    }
+                }
+                a
+            }
+            ShardPolicy::Context => vec![(0..n_heads as u16).collect(); n_csds],
+        };
+        ShardTopology { n_csds, policy, n_heads, group_tokens, assignment }
+    }
+
+    /// Heads resident on shard `c`.
+    pub fn heads_of(&self, c: usize) -> &[u16] {
+        &self.assignment[c]
+    }
+
+    /// Max heads on any shard (the head-imbalance bound of Fig. 17a).
+    pub fn max_share(&self) -> usize {
+        self.assignment.iter().map(|a| a.len()).max().unwrap()
+    }
+
+    /// True when the policy partitions the token axis (context striping
+    /// with more than one device).
+    pub fn splits_context(&self) -> bool {
+        self.policy == ShardPolicy::Context && self.n_csds > 1
+    }
+
+    /// Which shard stores global token position `t` (context striping;
+    /// identity on shard 0 for head policies — every shard holds every
+    /// token for its own heads).
+    pub fn token_shard(&self, t: usize) -> usize {
+        if !self.splits_context() {
+            return 0;
+        }
+        (t / self.group_tokens) % self.n_csds
+    }
+
+    /// Global token position -> (owning shard, local position).
+    pub fn to_local(&self, t: usize) -> (usize, usize) {
+        if !self.splits_context() {
+            return (0, t);
+        }
+        let n = self.group_tokens;
+        let g = t / n;
+        (g % self.n_csds, (g / self.n_csds) * n + t % n)
+    }
+
+    /// Inverse of [`Self::to_local`].
+    pub fn to_global(&self, c: usize, lt: usize) -> usize {
+        if !self.splits_context() {
+            return lt;
+        }
+        let n = self.group_tokens;
+        ((lt / n) * self.n_csds + c) * n + lt % n
+    }
+
+    /// Number of token positions resident on shard `c` when the global
+    /// stream holds `len` tokens.
+    pub fn local_len(&self, c: usize, len: usize) -> usize {
+        if !self.splits_context() {
+            return if c == 0 { len } else { 0 };
+        }
+        let n = self.group_tokens;
+        let full = len / n;
+        let tail = len % n;
+        // groups g < full with g % n_csds == c
+        let mine = (full + self.n_csds - 1 - c) / self.n_csds;
+        let mut l = mine * n;
+        if tail > 0 && full % self.n_csds == c {
+            l += tail;
+        }
+        l
+    }
+
+    /// Split a `(H, d)` row-major tensor into per-shard packed
+    /// sub-tensors (rows in each shard's head order; context shards all
+    /// receive the full copy).
+    pub fn scatter(&self, rows: &[f32], d: usize) -> Vec<Vec<f32>> {
+        debug_assert_eq!(rows.len(), self.n_heads * d);
+        self.assignment
+            .iter()
+            .map(|heads| {
+                let mut out = Vec::with_capacity(heads.len() * d);
+                for &h in heads {
+                    out.extend_from_slice(&rows[h as usize * d..(h as usize + 1) * d]);
+                }
+                out
+            })
+            .collect()
+    }
+
+    /// Inverse of [`Self::scatter`] for head policies: reassemble
+    /// per-shard head outputs into `(H, d)`.
+    pub fn gather(&self, parts: &[Vec<f32>], d: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.n_heads * d];
+        for (c, heads) in self.assignment.iter().enumerate() {
+            for (i, &h) in heads.iter().enumerate() {
+                out[h as usize * d..(h as usize + 1) * d]
+                    .copy_from_slice(&parts[c][i * d..(i + 1) * d]);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_parse_and_labels() {
+        assert_eq!(ShardPolicy::parse("stripe").unwrap(), ShardPolicy::HeadStripe);
+        assert_eq!(ShardPolicy::parse("block").unwrap(), ShardPolicy::HeadBlock);
+        assert_eq!(ShardPolicy::parse("context").unwrap(), ShardPolicy::Context);
+        assert!(ShardPolicy::parse("diagonal").is_err());
+        assert_eq!(ShardPolicy::Context.label(), "context");
+    }
+
+    #[test]
+    fn head_assignments_are_balanced_and_cover() {
+        for policy in [ShardPolicy::HeadStripe, ShardPolicy::HeadBlock] {
+            let t = ShardTopology::new(3, policy, 8, 8);
+            let mut seen = vec![false; 8];
+            let mut sizes = Vec::new();
+            for c in 0..3 {
+                sizes.push(t.heads_of(c).len());
+                for &h in t.heads_of(c) {
+                    assert!(!seen[h as usize], "head {h} assigned twice");
+                    seen[h as usize] = true;
+                }
+            }
+            assert!(seen.iter().all(|&s| s), "{policy:?} must cover all heads");
+            assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
+            assert_eq!(t.max_share(), 3);
+        }
+        // block policy keeps heads contiguous
+        let t = ShardTopology::new(2, ShardPolicy::HeadBlock, 8, 8);
+        assert_eq!(t.heads_of(0), &[0, 1, 2, 3]);
+        assert_eq!(t.heads_of(1), &[4, 5, 6, 7]);
+        // context: every head everywhere
+        let t = ShardTopology::new(2, ShardPolicy::Context, 8, 8);
+        assert_eq!(t.heads_of(0).len(), 8);
+        assert_eq!(t.heads_of(1).len(), 8);
+    }
+
+    #[test]
+    fn context_local_global_roundtrip() {
+        let t = ShardTopology::new(3, ShardPolicy::Context, 4, 8);
+        for tok in 0..200 {
+            let (c, lt) = t.to_local(tok);
+            assert_eq!(t.token_shard(tok), c);
+            assert_eq!(t.to_global(c, lt), tok, "roundtrip for {tok}");
+        }
+        // local positions on each shard are dense prefixes
+        for len in [0usize, 1, 7, 8, 9, 24, 25, 100] {
+            let mut counts = vec![0usize; 3];
+            for tok in 0..len {
+                let (c, lt) = t.to_local(tok);
+                assert!(lt < t.local_len(c, len), "tok {tok} len {len}");
+                counts[c] += 1;
+            }
+            for c in 0..3 {
+                assert_eq!(counts[c], t.local_len(c, len), "shard {c} len {len}");
+            }
+        }
+    }
+
+    #[test]
+    fn head_policies_keep_context_whole() {
+        let t = ShardTopology::new(4, ShardPolicy::HeadStripe, 8, 8);
+        assert!(!t.splits_context());
+        assert_eq!(t.to_local(37), (0, 37));
+        assert_eq!(t.local_len(0, 37), 37);
+        assert_eq!(t.local_len(2, 37), 0);
+        // context with a single device is also whole
+        let t1 = ShardTopology::new(1, ShardPolicy::Context, 8, 8);
+        assert!(!t1.splits_context());
+        assert_eq!(t1.local_len(0, 37), 37);
+    }
+
+    #[test]
+    fn scatter_gather_roundtrip() {
+        let t = ShardTopology::new(3, ShardPolicy::HeadStripe, 7, 8);
+        let d = 4;
+        let rows: Vec<f32> = (0..7 * d).map(|x| x as f32).collect();
+        let parts = t.scatter(&rows, d);
+        assert_eq!(parts.iter().map(|p| p.len()).sum::<usize>(), rows.len());
+        assert_eq!(t.gather(&parts, d), rows);
+    }
+}

@@ -134,6 +134,9 @@ pub fn csd_layer_step(cfg: &SystemConfig, b: usize, s: usize, heads: usize) -> C
             logit,
             attend,
             writeback: 0.0,
+            // the all-reduce tail is accounted in the step's comm term
+            pcie_xfer: 0.0,
+            gpu_merge: 0.0,
         },
         flash_bytes,
     }
@@ -145,10 +148,18 @@ pub fn run(cfg: &SystemConfig, b: usize) -> Result<RunSummary, String> {
     // layer-wise pipelined prefill shipping: only ~2 layers of KV buffered
     check_vram(cfg, b, 2)?;
     let n = cfg.n_devices.max(1);
-    let heads_per_csd = m.n_heads.div_ceil(n);
+    // context striping keeps every head on every CSD over 1/n of the
+    // tokens; head policies give each CSD its head subset over all tokens
+    let context_stripe = cfg.shard_policy == crate::shard::ShardPolicy::Context && n > 1;
+    let heads_per_csd = if context_stripe { m.n_heads } else { m.n_heads.div_ceil(n) };
 
-    // capacity: each CSD stores its heads' K (twice) + V
-    let kv_per_csd = cfg.kv_bytes_total(b) as f64 * 1.5 * heads_per_csd as f64 / m.n_heads as f64;
+    // capacity: each CSD stores its stripe's K (twice) + V
+    let stripe_frac = if context_stripe {
+        1.0 / n as f64
+    } else {
+        heads_per_csd as f64 / m.n_heads as f64
+    };
+    let kv_per_csd = cfg.kv_bytes_total(b) as f64 * 1.5 * stripe_frac;
     if kv_per_csd > cfg.csd.kv_capacity_bytes as f64 {
         return Err(format!(
             "CSD capacity: {:.0} GB KV per device > {:.0} GB flash",
@@ -175,19 +186,38 @@ pub fn run(cfg: &SystemConfig, b: usize) -> Result<RunSummary, String> {
     let step = move |s: usize| {
         let (w, c) = gpu_nonattn_step(cfg, b);
         let gpu_t = w + c;
-        let per_csd = csd_layer_step(cfg, b, s, heads_per_csd);
+        let s_eff = if context_stripe { s.div_ceil(n) } else { s };
+        let per_csd = csd_layer_step(cfg, b, s_eff, heads_per_csd);
         let csd_t = per_csd.time * m.n_layers as f64;
         let csd_flash_t = (per_csd.units.flash_read) * m.n_layers as f64;
         let csd_other_t = (csd_t - csd_flash_t).max(0.0);
-        // qkv + attention-output vectors over P2P, per layer
-        let vec_bytes =
-            (b * m.n_layers * 4 * m.d_model * FP16_BYTES) as f64; // q,k,v out + attn in
-        let comm = pcie::transfer_time(
+        // qkv + attention-output vectors over P2P, per layer.  Head
+        // policies move q,k,v out + attn in once; context striping
+        // broadcasts q to every stripe and returns a partial (output +
+        // LSE stats) from each — the all-reduce's extra traffic.
+        let (vec_elems, ret_elems) = if context_stripe {
+            // q broadcast to every stripe + k,v to the owner; every
+            // stripe returns a partial (output + LSE stats)
+            let ret = n * (m.d_model + 2 * m.n_heads);
+            ((n + 2) * m.d_model + ret, ret)
+        } else {
+            // q,k,v out once + the attention output back
+            (4 * m.d_model, m.d_model)
+        };
+        let vec_bytes = (b * m.n_layers * vec_elems * FP16_BYTES) as f64;
+        let mut comm = pcie::transfer_time(
             &cfg.pcie,
             if cfg.p2p_dma { Path::P2p } else { Path::SsdGpuViaHost },
             vec_bytes / n as f64,
             (2 * m.n_layers) as u64,
         );
+        if cfg.p2p_dma {
+            // only the device->GPU return leg converges on the GPU's
+            // ingress; the concurrent streams fair-share it (cf.
+            // pcie::fair_share_finish in the DES plane)
+            let ret_bytes = (b * m.n_layers * ret_elems * FP16_BYTES) as f64;
+            comm = comm.max(ret_bytes / cfg.pcie.gpu_p2p_ingress_bw);
+        }
         // wall time: GPU and CSD overlap; comm + pipeline bubble don't.
         // Attribute components proportionally so the breakdown keeps the
         // paper's percentage semantics while summing to wall time.
@@ -219,6 +249,34 @@ pub fn run(cfg: &SystemConfig, b: usize) -> Result<RunSummary, String> {
 mod tests {
     use super::*;
     use crate::config::system::OffloadPolicy;
+
+    #[test]
+    fn context_stripe_scales_but_pays_the_allreduce() {
+        // the context policy keeps every head on every CSD over 1/n of
+        // the tokens: same per-device flash traffic as head striping,
+        // but the all-reduce ships a partial from every stripe (plus a
+        // q broadcast), so it lands at or just below head striping
+        let base = SystemConfig::paper_base(OffloadPolicy::InStorage);
+        let head = run(&base.clone().with_devices(4), 256).unwrap();
+        let ctx = run(
+            &base.with_devices(4).with_shard_policy(crate::shard::ShardPolicy::Context),
+            256,
+        )
+        .unwrap();
+        assert!(ctx.throughput > 0.0);
+        assert!(
+            ctx.throughput <= head.throughput,
+            "context {} must not beat head striping {} (extra comm)",
+            ctx.throughput,
+            head.throughput
+        );
+        assert!(
+            ctx.throughput > 0.5 * head.throughput,
+            "context {} collapsed vs head {}",
+            ctx.throughput,
+            head.throughput
+        );
+    }
 
     #[test]
     fn expected_groups_limits() {

@@ -32,7 +32,11 @@ fn load_case(exe: &str) -> Option<AttnCase> {
     let g = match rt.manifest.golden.get(exe) {
         Some(g) => g.clone(),
         None => {
-            eprintln!("skipping: no golden record for {exe} (run `make artifacts`)");
+            eprintln!(
+                "skipping: no golden record for {exe} in {} \
+                 (run `make artifacts` in a jax container to record it)",
+                artifacts_dir().display()
+            );
             return None;
         }
     };
@@ -113,7 +117,8 @@ fn analytic_csd_model_tracks_functional_engine() {
     let mut rng = Rng::new(21);
     let d = 32usize;
     let s_len = 96usize;
-    let mut csd = InstCsd::new(CsdSpec::micro(), FtlConfig { d_head: d, m: 4, n: 8 }).unwrap();
+    assert_eq!(d, FtlConfig::micro_head().d_head, "micro model head dim");
+    let mut csd = InstCsd::new(CsdSpec::micro(), FtlConfig::micro_head()).unwrap();
     for t in 0..s_len {
         let kr: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
         let vr: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
@@ -146,7 +151,7 @@ fn ftl_write_amplification_matches_dual_k_model() {
     let mut rng = Rng::new(5);
     let mut ftl = KvFtl::new(
         instinfer::config::hw::FlashSpec::tiny(),
-        FtlConfig { d_head: 32, m: 4, n: 8 },
+        FtlConfig::micro_head(),
     )
     .unwrap();
     let key = StreamKey { slot: 0, layer: 0, head: 0 };

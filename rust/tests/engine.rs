@@ -85,8 +85,8 @@ fn sparf_backend_generates_and_reads_fewer_pages() {
     let d2 = sparse.generate(mk_seqs(2, 24, 6, &mut s2), 4).unwrap();
     assert!(d1.iter().all(|s| s.generated.len() == 6));
     assert!(d2.iter().all(|s| s.generated.len() == 6));
-    let reads_dense = dense.csds[0].csd.ftl.array.counters.page_reads;
-    let reads_sparse = sparse.csds[0].csd.ftl.array.counters.page_reads;
+    let reads_dense = dense.csds()[0].csd.ftl.array.counters.page_reads;
+    let reads_sparse = sparse.csds()[0].csd.ftl.array.counters.page_reads;
     assert!(
         reads_sparse < reads_dense,
         "sparf {reads_sparse} !< dense {reads_dense} page reads"
@@ -131,7 +131,7 @@ fn slot_reuse_after_free() {
         }
     }
     assert_eq!(slots.free_count(), 4);
-    assert!(eng.csds[0].csd.ftl.free_blocks() > 0);
+    assert!(eng.csds()[0].csd.ftl.free_blocks() > 0);
 }
 
 #[test]

@@ -1,7 +1,7 @@
 //! Failure injection and robustness: the coordinator and substrates must
 //! fail loudly and recover cleanly, never corrupt state.
 
-use instinfer::config::hw::{CsdSpec, FlashSpec};
+use instinfer::config::hw::FlashSpec;
 use instinfer::csd::{AttnMode, InstCsd};
 use instinfer::ftl::{FtlConfig, KvFtl, StreamKey};
 use instinfer::util::prop::check;
@@ -26,7 +26,7 @@ fn device_full_is_reported_not_corrupted() {
         program_us: 100.0,
         erase_ms: 1.0,
     };
-    let mut ftl = KvFtl::new(spec, FtlConfig { d_head: 32, m: 4, n: 8 }).unwrap();
+    let mut ftl = KvFtl::new(spec, FtlConfig::micro_head()).unwrap();
     let mut rng = Rng::new(1);
     let key = StreamKey { slot: 0, layer: 0, head: 0 };
     let mut failed = false;
@@ -49,7 +49,7 @@ fn device_full_is_reported_not_corrupted() {
 
 #[test]
 fn attention_on_unknown_stream_errors() {
-    let mut csd = InstCsd::new(CsdSpec::tiny(), FtlConfig { d_head: 32, m: 4, n: 8 }).unwrap();
+    let mut csd = InstCsd::tiny_test();
     let q = vec![0.5f32; 32];
     let key = StreamKey { slot: 9, layer: 0, head: 0 };
     assert!(csd.attention_head(key, &q, 8, AttnMode::Dense, 0.0).is_err());
@@ -57,7 +57,7 @@ fn attention_on_unknown_stream_errors() {
 
 #[test]
 fn mismatched_row_lengths_rejected() {
-    let mut csd = InstCsd::new(CsdSpec::tiny(), FtlConfig { d_head: 32, m: 4, n: 8 }).unwrap();
+    let mut csd = InstCsd::tiny_test();
     let bad = vec![0.0f32; 31];
     let good = vec![0.0f32; 32];
     assert!(csd.write_token_heads(0, 0, &[0], &bad, &good, 0.0).is_err());
@@ -80,7 +80,7 @@ fn prop_interleaved_streams_never_cross_contaminate() {
         |&(seed, n_streams, toks)| {
             let mut ftl = KvFtl::new(
                 FlashSpec::tiny(),
-                FtlConfig { d_head: 32, m: 4, n: 8 },
+                FtlConfig::micro_head(),
             )
             .unwrap();
             let mut rng = Rng::new(seed);

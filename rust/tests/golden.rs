@@ -19,7 +19,11 @@ fn runtime() -> Runtime {
 fn golden_all_executables() {
     let rt = runtime();
     if rt.manifest.golden.is_empty() {
-        eprintln!("skipping golden_all_executables: no golden records (run `make artifacts`)");
+        eprintln!(
+            "skipping golden_all_executables: no golden records in {} \
+             (run `make artifacts` in a jax container to record them)",
+            artifacts_dir().display()
+        );
         return;
     }
     let reports = golden::check_all(&rt, 2e-4).expect("golden mismatch");

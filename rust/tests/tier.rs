@@ -159,7 +159,7 @@ fn gc_with_promote_demote_churn_conserves_pages() {
     // Satellite (c): promote/demote churn on a surviving stream while
     // scratch streams force GC — mappings, page counts and data must
     // all survive.
-    let mut ftl = KvFtl::new(FlashSpec::tiny(), FtlConfig { d_head: 32, m: 4, n: 8 }).unwrap();
+    let mut ftl = KvFtl::new(FlashSpec::tiny(), FtlConfig::micro_head()).unwrap();
     let mut rng = Rng::new(5);
     let row = |rng: &mut Rng| -> Vec<f32> { (0..32).map(|_| rng.normal_f32()).collect() };
     let keep = StreamKey { slot: 0, layer: 0, head: 0 };
