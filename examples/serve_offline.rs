@@ -128,7 +128,7 @@ fn run_continuous(dir: &str, n_req: usize, batch: usize, gen: usize) -> anyhow::
     let report = run_closed_loop(
         &mut engine,
         reqs,
-        SchedConfig { max_batch: batch, prefill_chunk: 4, slots: 64, ..Default::default() },
+        SchedConfig::serving(batch, 4, 64),
     )?;
     let tput = report.total_generated() as f64 / report.sim_end.max(1e-12);
     println!("== InstI-Dense, continuous batching (same closed-loop Chat workload) ==");

@@ -11,6 +11,9 @@
 //!
 //!     cargo run --release --example serve_online -- --requests 24 --rate 2000
 //!
+//! Pass `--overlap` to disaggregate prefill and decode onto the two
+//! pipelined engine streams (same outputs, decoupled TTFT).
+//!
 //! Runs with or without AOT artifacts (native backend synthesizes the
 //! opt-micro model when `artifacts/` is absent).
 
@@ -34,6 +37,7 @@ fn main() -> anyhow::Result<()> {
     let batch = flag(&args, "--batch", 8.0) as usize;
     let gen = (flag(&args, "--steps", 12.0) as usize).max(2);
     let sparse = args.iter().any(|a| a == "--sparse");
+    let overlap = args.iter().any(|a| a == "--overlap");
     let n_csds = flag(&args, "--n-csds", 2.0) as usize;
     let shard_policy = ShardPolicy::parse(
         args.iter()
@@ -68,14 +72,15 @@ fn main() -> anyhow::Result<()> {
     }
     println!(
         "{n_req} requests, Poisson {rate} req/s (sim clock), {batch} seats, \
-         chunked prefill 2/step\n"
+         chunked prefill 2/step{}\n",
+        if overlap { ", overlapped prefill/decode streams" } else { "" }
     );
 
     let t0 = std::time::Instant::now();
     let report = run_open_loop(
         &mut engine,
         arrivals,
-        SchedConfig { max_batch: batch, prefill_chunk: 2, slots: 32, ..Default::default() },
+        SchedConfig::serving(batch, 2, 32).overlapped(overlap),
     )?;
     let wall = t0.elapsed().as_secs_f64();
 

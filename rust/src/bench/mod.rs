@@ -5,11 +5,17 @@
 
 pub mod accuracy;
 pub mod figures;
+pub mod overlap;
 pub mod serve;
 pub mod shard;
 pub mod tier;
 
 use crate::util::table::Table;
+
+/// The serving-dashboard trajectory targets: the subset of `bench all`
+/// that CI stitches across runs (run-numbered artifacts) to track the
+/// system's performance trajectory.
+pub const TRAJECTORY: &[&str] = &["fig16", "tier", "shard", "serve", "overlap"];
 
 /// All paper targets in order; returns rendered tables.
 pub fn run_all() -> Vec<String> {
@@ -48,6 +54,7 @@ pub fn registry() -> Vec<(&'static str, BenchFn)> {
         ("tier", tier::tier),
         ("shard", shard::shard),
         ("serve", serve::serve),
+        ("overlap", overlap::overlap),
         ("ablate-group", figures::ablate_group),
         ("ablate-dualk", figures::ablate_dualk),
         ("ablate-pipeline", figures::ablate_pipeline),

@@ -1,0 +1,161 @@
+//! `bench overlap` — the prefill/decode disaggregation evidence run:
+//! sweep prefill chunk x arrival rate x CSD count and serve the same
+//! open-loop Poisson trace twice, serialized and overlapped.
+//!
+//! The headline column is the steady-state decode step time
+//! ([`crate::coordinator::EngineMetrics::decode_step_time_s`]): the mean
+//! simulated span of decode-carrying scheduler steps, admission stalls
+//! included.  Serialized, every admission's chunked prefill + layer-wise
+//! KV shipping lands inside a decode step and stalls the whole batch;
+//! overlapped, the cohort rides the GPU prefill stream while decode
+//! ticks keep advancing, so under concurrent admissions the overlapped
+//! decode step time must sit strictly below the serialized one (pinned
+//! by `tests/pipeline.rs`).  TTFT drops with it — the cohort's first
+//! token is stamped at the prefill stream's completion, which no longer
+//! queues behind decode.  The overlap/contention columns surface where
+//! the win comes from and what it costs on the shared PCIe links.
+
+use crate::coordinator::{run_open_loop, EngineConfig, InferenceEngine, SchedConfig};
+use crate::runtime::Runtime;
+use crate::util::table::{eng, Table};
+use crate::workload::{ArrivalGen, LengthProfile, WorkloadGen};
+
+const PROMPT: usize = 24;
+const GEN: usize = 12;
+const REQUESTS: usize = 10;
+const SEATS: usize = 4;
+const SLOTS: usize = 16;
+
+/// One serving run's overlap-relevant numbers.
+pub struct OverlapRun {
+    /// mean sim span of decode-carrying steps (admission stalls incl.)
+    pub decode_step_s: f64,
+    pub ttft_p50_s: f64,
+    pub latency_p50_s: f64,
+    pub sim_end_s: f64,
+    /// prefill-stream time shadowed by concurrent decode
+    pub overlapped_s: f64,
+    /// decode-stream time with the prefill stream idle
+    pub gpu_idle_s: f64,
+    /// prefill-stream time with the decode plane idle
+    pub csd_idle_s: f64,
+    /// all-reduces slowed by in-flight prefill KV on the shared links
+    pub contended_merges: u64,
+    pub contention_delay_s: f64,
+}
+
+/// Serve a deterministic Poisson trace once.  Same seed per config, so
+/// the serialized and overlapped rows face the identical workload.
+pub fn run_config(
+    n_csds: usize,
+    prefill_chunk: usize,
+    rate: f64,
+    overlap: bool,
+) -> anyhow::Result<OverlapRun> {
+    let rt = Runtime::open("artifacts")?;
+    let meta = rt.manifest.model.clone();
+    let mut engine = InferenceEngine::new(rt, EngineConfig::micro_for(&meta, n_csds, false))?;
+    let wg = WorkloadGen::new(4711, meta.vocab, meta.max_seq, LengthProfile::Fixed, PROMPT, GEN);
+    let arrivals = ArrivalGen::new(wg, 4712, rate).take(REQUESTS);
+    let cfg = SchedConfig::serving(SEATS, prefill_chunk, SLOTS).overlapped(overlap);
+    let report = run_open_loop(&mut engine, arrivals, cfg)?;
+    let [t50, _, _] = report.ttft_percentiles().unwrap_or([0.0; 3]);
+    let [l50, _, _] = report.latency_percentiles().unwrap_or([0.0; 3]);
+    let st = &engine.shards.stats;
+    Ok(OverlapRun {
+        decode_step_s: engine.metrics.decode_step_time_s(),
+        ttft_p50_s: t50,
+        latency_p50_s: l50,
+        sim_end_s: report.sim_end,
+        overlapped_s: report.overlap.overlapped_s,
+        gpu_idle_s: report.overlap.gpu_idle_during_decode_s,
+        csd_idle_s: report.overlap.csd_idle_during_prefill_s(),
+        contended_merges: st.contended_merges,
+        contention_delay_s: st.contention_delay_s,
+    })
+}
+
+/// The serialized/overlapped pair for one config (test hook).
+pub fn run_pair(
+    n_csds: usize,
+    prefill_chunk: usize,
+    rate: f64,
+) -> anyhow::Result<(OverlapRun, OverlapRun)> {
+    Ok((
+        run_config(n_csds, prefill_chunk, rate, false)?,
+        run_config(n_csds, prefill_chunk, rate, true)?,
+    ))
+}
+
+fn err_row(t: &mut Table, csds: usize, chunk: usize, rate: f64, e: &anyhow::Error) {
+    t.row(vec![
+        csds.to_string(),
+        chunk.to_string(),
+        format!("{rate}"),
+        "ERR".into(),
+        format!("{e:#}"),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+    ]);
+}
+
+pub fn overlap() -> Table {
+    let mut t = Table::new(
+        "Prefill/decode disaggregation — serialized vs overlapped streams (opt-micro, sim)",
+        &[
+            "csds",
+            "prefill_chunk",
+            "rate_req_s",
+            "mode",
+            "decode_step_ms",
+            "step_speedup",
+            "ttft_p50_s",
+            "overlap_ms",
+            "gpu_idle_ms",
+            "contention_us",
+        ],
+    );
+    for n_csds in [1usize, 2, 4] {
+        for chunk in [1usize, 4] {
+            for rate in [100.0f64, 400.0] {
+                let pair = run_pair(n_csds, chunk, rate);
+                let (serial, piped) = match pair {
+                    Ok(p) => p,
+                    Err(e) => {
+                        err_row(&mut t, n_csds, chunk, rate, &e);
+                        continue;
+                    }
+                };
+                let speedup = serial.decode_step_s / piped.decode_step_s.max(1e-30);
+                t.row(vec![
+                    n_csds.to_string(),
+                    chunk.to_string(),
+                    format!("{rate}"),
+                    "serialized".into(),
+                    eng(serial.decode_step_s * 1e3),
+                    "1.0".into(),
+                    eng(serial.ttft_p50_s),
+                    "0".into(),
+                    "-".into(),
+                    "0".into(),
+                ]);
+                t.row(vec![
+                    n_csds.to_string(),
+                    chunk.to_string(),
+                    format!("{rate}"),
+                    "overlapped".into(),
+                    eng(piped.decode_step_s * 1e3),
+                    eng(speedup),
+                    eng(piped.ttft_p50_s),
+                    eng(piped.overlapped_s * 1e3),
+                    eng(piped.gpu_idle_s * 1e3),
+                    eng(piped.contention_delay_s * 1e6),
+                ]);
+            }
+        }
+    }
+    t
+}

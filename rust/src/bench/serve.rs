@@ -44,7 +44,7 @@ fn arrivals(engine: &InferenceEngine, rate: f64) -> Vec<crate::workload::Arrival
 }
 
 fn sched() -> SchedConfig {
-    SchedConfig { max_batch: SEATS, prefill_chunk: 2, slots: 16, ..Default::default() }
+    SchedConfig::serving(SEATS, 2, 16)
 }
 
 /// Continuous: requests admitted the step they arrive.

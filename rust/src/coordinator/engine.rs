@@ -144,8 +144,27 @@ impl InferenceEngine {
         self.rt.manifest.model.clone()
     }
 
-    /// Run prefill for a batch of sequences (prompts <= prefill_seq).
+    /// Run prefill for a batch of sequences (prompts <= prefill_seq),
+    /// advancing the engine clock past the KV shipping — the serialized
+    /// executor's phase coupling.
     pub fn prefill(&mut self, seqs: &mut [Sequence], bucket: usize) -> Result<()> {
+        let done = self.prefill_stage(seqs, bucket, self.sim_now)?;
+        self.sim_now = self.sim_now.max(done);
+        Ok(())
+    }
+
+    /// Stream-resumable prefill stage: GPU prefill blocks + layer-wise
+    /// KV shipping, with all simulated time anchored at `start` and the
+    /// engine clock left untouched — the caller owns the stream
+    /// frontier (the pipelined executor runs this on the GPU prefill
+    /// stream while decode ticks advance `sim_now` independently).
+    /// Returns the ship-completion time.
+    pub fn prefill_stage(
+        &mut self,
+        seqs: &mut [Sequence],
+        bucket: usize,
+        start: Time,
+    ) -> Result<Time> {
         let m = self.model();
         let sp = m.prefill_seq;
         let b = seqs.len();
@@ -172,7 +191,7 @@ impl InferenceEngine {
         if matches!(self.cfg.backend, AttnBackend::GpuArtifact { .. }) {
             self.alloc_host_kv(bucket)?;
         }
-        let mut ship_done = self.sim_now;
+        let mut ship_done = start;
         for layer in 0..m.n_layers {
             let mut outs = self.rt.call("prefill_block", bucket, layer, &[x])?;
             let v = outs.pop().unwrap();
@@ -180,9 +199,8 @@ impl InferenceEngine {
             x = outs.pop().unwrap();
             // layer-wise pipeline: ship layer `layer` while the GPU computes
             // layer+1 — in sim time the ship for this layer starts now
-            ship_done = ship_done.max(self.ship_prefill_kv(seqs, layer as u16, &k, &v, sp)?);
+            ship_done = ship_done.max(self.ship_prefill_kv(seqs, layer as u16, &k, &v, sp, start)?);
         }
-        self.sim_now = self.sim_now.max(ship_done);
 
         // next-token logits from each sequence's last valid row
         let d = m.d_model;
@@ -205,7 +223,7 @@ impl InferenceEngine {
             self.metrics.tokens_generated += 1;
         }
         self.metrics.gpu_wall_s += t0.elapsed().as_secs_f64();
-        Ok(())
+        Ok(ship_done)
     }
 
     fn alloc_host_kv(&mut self, bucket: usize) -> Result<()> {
@@ -223,6 +241,9 @@ impl InferenceEngine {
     }
 
     /// Ship one prefill layer's KV to the CSD array (or host caches).
+    /// `start` anchors the ship in simulated time (the owning stream's
+    /// frontier; equals `sim_now` on the serialized path).
+    #[allow(clippy::too_many_arguments)]
     fn ship_prefill_kv(
         &mut self,
         seqs: &[Sequence],
@@ -230,6 +251,7 @@ impl InferenceEngine {
         k: &HostTensor,
         v: &HostTensor,
         sp: usize,
+        start: Time,
     ) -> Result<Time> {
         let m = self.model();
         let (h, dh) = (m.n_heads, m.d_head);
@@ -259,11 +281,11 @@ impl InferenceEngine {
                         }
                     }
                 }
-                Ok(self.sim_now)
+                Ok(start)
             }
             AttnBackend::Csd(_) => {
                 let t0 = Instant::now();
-                let mut done = self.sim_now;
+                let mut done = start;
                 for (i, s) in seqs.iter().enumerate() {
                     let len = s.req.prompt.len();
                     let base = i * h * sp * dh;
@@ -274,7 +296,7 @@ impl InferenceEngine {
                         len,
                         &kd[base..base + h * sp * dh],
                         &vd[base..base + h * sp * dh],
-                        self.sim_now,
+                        start,
                     )?;
                     done = done.max(t);
                 }
@@ -285,8 +307,26 @@ impl InferenceEngine {
     }
 
     /// One decode step over the batch; appends one token to every live
-    /// sequence.  `bucket` is the padded PJRT batch.
+    /// sequence and advances the engine clock past the step's CSD work.
+    /// `bucket` is the padded PJRT batch.
     pub fn decode_step(&mut self, seqs: &mut [Sequence], bucket: usize) -> Result<()> {
+        let start = self.sim_now;
+        let done = self.decode_stage(seqs, bucket, start)?;
+        // advance the device clock past this step's CSD work
+        self.sim_now = self.sim_now.max(done);
+        self.metrics.decode_sim_s += self.sim_now - start;
+        Ok(())
+    }
+
+    /// Stream-resumable decode stage: one decode tick anchored at
+    /// `start`, engine clock untouched — the caller owns the decode
+    /// stream's frontier.  Returns the step-completion time.
+    pub fn decode_stage(
+        &mut self,
+        seqs: &mut [Sequence],
+        bucket: usize,
+        start: Time,
+    ) -> Result<Time> {
         let m = self.model();
         let b = seqs.len();
         let t0 = Instant::now();
@@ -308,8 +348,7 @@ impl InferenceEngine {
             .remove(0);
 
         let mut x = x;
-        let step_start = self.sim_now;
-        let mut step_done = step_start;
+        let mut step_done = start;
         for layer in 0..m.n_layers {
             let mut qkv = self.rt.call("qkv_proj", bucket, layer, &[x.clone()])?;
             let v = qkv.pop().unwrap();
@@ -320,7 +359,8 @@ impl InferenceEngine {
                 AttnBackend::Csd(mode) => {
                     let t1 = Instant::now();
                     let lw = layer as u16;
-                    let a = self.csd_attention(seqs, lw, &q, &k, &v, mode, bucket, &mut step_done)?;
+                    let a = self
+                        .csd_attention(seqs, lw, &q, &k, &v, mode, bucket, start, &mut step_done)?;
                     self.metrics.csd_wall_s += t1.elapsed().as_secs_f64();
                     a
                 }
@@ -331,9 +371,6 @@ impl InferenceEngine {
             let outs = self.rt.call("post_attn", bucket, layer, &[x, attn])?;
             x = outs.into_iter().next().unwrap();
         }
-        // advance the device clock past this step's CSD work
-        self.sim_now = self.sim_now.max(step_done);
-        self.metrics.decode_sim_s += self.sim_now - step_start;
 
         let lg = self.rt.call("logits", bucket, 0, &[x])?;
         let next = lg[1].as_i32()?;
@@ -345,7 +382,7 @@ impl InferenceEngine {
         self.metrics.decode_steps += 1;
         self.metrics.step_occupancy.push(b as u32);
         self.metrics.gpu_wall_s += t0.elapsed().as_secs_f64();
-        Ok(())
+        Ok(step_done)
     }
 
     /// Smallest AOT batch bucket that fits `n` live sequences.
@@ -359,7 +396,8 @@ impl InferenceEngine {
     }
 
     /// In-storage attention: write this token's k/v, then attend (the new
-    /// token attends to itself, so length = kv_len + 1).
+    /// token attends to itself, so length = kv_len + 1).  `start` is the
+    /// decode stream's frontier for this step.
     #[allow(clippy::too_many_arguments)]
     fn csd_attention(
         &mut self,
@@ -370,6 +408,7 @@ impl InferenceEngine {
         v: &HostTensor,
         mode: AttnMode,
         bucket: usize,
+        start: Time,
         step_done: &mut Time,
     ) -> Result<HostTensor> {
         let m = self.model();
@@ -387,7 +426,7 @@ impl InferenceEngine {
                 &vd[i * h * dh..(i + 1) * h * dh],
                 s.kv_len + 1,
                 mode,
-                self.sim_now,
+                start,
             )?;
             *step_done = step_done.max(done);
             self.metrics.units.merge(&bd);

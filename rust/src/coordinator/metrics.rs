@@ -8,6 +8,16 @@
 //! (admissions / retirements / preemptions / resumes) — batch membership
 //! is a per-step decision, so "how full was each step" becomes a
 //! first-class serving metric.
+//!
+//! The disaggregated executor adds the decode-step-time ledger
+//! (`busy_steps`/`busy_step_sim_s`): the simulated span of every
+//! scheduler step that decoded, admission stalls included.  On the
+//! serialized path that span contains the co-scheduled cohort's prefill
+//! + KV shipping; with `--overlap` it is the decode stream alone — the
+//! decoupling `bench overlap` measures.  TTFT under overlap is stamped
+//! when the prefill STREAM finishes a cohort (`admitted_at` /
+//! `first_token_at` in the scheduler), never at the end of the decode
+//! step that happens to absorb it.
 
 use crate::csd::UnitBreakdown;
 use crate::sim::Time;
@@ -44,6 +54,13 @@ pub struct EngineMetrics {
     pub resumes: u64,
     /// batch occupancy of every decode step, in step order
     pub step_occupancy: Vec<u32>,
+    // ---- prefill/decode disaggregation --------------------------------
+    /// scheduler steps that decoded at least one sequence
+    pub busy_steps: u64,
+    /// simulated span of those steps (serialized: includes any
+    /// co-scheduled admission's prefill + KV ship; overlapped: the
+    /// decode stream only)
+    pub busy_step_sim_s: Time,
 }
 
 impl EngineMetrics {
@@ -53,6 +70,18 @@ impl EngineMetrics {
             0.0
         } else {
             self.tokens_generated as f64 / wall
+        }
+    }
+
+    /// Mean simulated time per decode-carrying scheduler step — the
+    /// serving inter-token latency, admission stalls included.  The
+    /// pipelined executor's headline number: with overlap on, this
+    /// decouples from concurrent prefills.
+    pub fn decode_step_time_s(&self) -> f64 {
+        if self.busy_steps == 0 {
+            0.0
+        } else {
+            self.busy_step_sim_s / self.busy_steps as f64
         }
     }
 
@@ -114,5 +143,13 @@ mod tests {
         let m = EngineMetrics { step_occupancy: vec![2, 4, 6], ..Default::default() };
         assert!((m.mean_occupancy() - 4.0).abs() < 1e-12);
         assert!(m.churn_report().contains("mean_occupancy"));
+    }
+
+    #[test]
+    fn decode_step_time_guarded_against_zero() {
+        let m = EngineMetrics::default();
+        assert_eq!(m.decode_step_time_s(), 0.0);
+        let m = EngineMetrics { busy_steps: 4, busy_step_sim_s: 2.0, ..Default::default() };
+        assert!((m.decode_step_time_s() - 0.5).abs() < 1e-12);
     }
 }

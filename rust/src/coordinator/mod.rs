@@ -8,7 +8,9 @@
 //! * [`batcher`]   — offline batch former (bucketed to the AOT batch
 //!   sizes; the paper's drain-the-queue throughput policy)
 //! * [`scheduler`] — continuous-batching scheduler: per-step admission,
-//!   chunked prefill, mid-flight retirement, priority preemption to flash
+//!   chunked prefill, mid-flight retirement, priority preemption to
+//!   flash; with `overlap` the two-stream pipelined executor
+//!   ([`crate::pipeline`]) disaggregates prefill from decode
 //! * [`kvmgr`]     — sequence-slot allocation, reservation, suspension,
 //!   per-shard KV-footprint accounting
 //! * [`engine`]    — the inference engine gluing PJRT + the sharded CSD

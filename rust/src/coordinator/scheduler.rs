@@ -20,11 +20,21 @@
 //! Time is the simulated CSD device clock (`engine.sim_now`): arrivals are
 //! stamped on it, admission is gated on it, and the open-loop driver
 //! fast-forwards it across idle gaps — so serving runs are deterministic.
+//!
+//! Two executors share the planning logic.  The **serialized** step (the
+//! default) runs the cohort's chunked prefill inside the step, so every
+//! admission stalls the in-flight decodes.  With [`SchedConfig::overlap`]
+//! the **pipelined** executor ([`crate::pipeline`]) disaggregates the
+//! phases: admissions prefill on the GPU stream (own frontier, FIFO
+//! cohorts) while decode ticks keep advancing `sim_now`, and a cohort
+//! joins the batch at the first tick after its prefill + KV ship
+//! completes.  Outputs are identical either way; only timing moves.
 
 use crate::coordinator::engine::{AttnBackend, InferenceEngine};
 use crate::coordinator::kvmgr::SlotManager;
 use crate::coordinator::metrics::EngineMetrics;
 use crate::coordinator::request::{RequestPhase, Sequence};
+use crate::pipeline::{OverlapStats, PipelineState};
 use crate::sim::Time;
 use crate::util::stats::percentile;
 use crate::workload::{Arrival, Request};
@@ -48,6 +58,12 @@ pub struct SchedConfig {
     /// token budget kept per sequence on resume (0 = keep everything);
     /// only effective with `drop_on_resume`
     pub resume_keep: usize,
+    /// disaggregate prefill and decode onto overlapped engine streams:
+    /// admissions prefill on the GPU stream while decode ticks keep
+    /// advancing, and the cohort joins the batch when its prefill
+    /// completes.  Off = the serialized step (bit-identical outputs AND
+    /// timing to the pre-pipeline scheduler).
+    pub overlap: bool,
 }
 
 impl Default for SchedConfig {
@@ -58,7 +74,26 @@ impl Default for SchedConfig {
             slots: 64,
             drop_on_resume: false,
             resume_keep: 0,
+            overlap: false,
         }
+    }
+}
+
+impl SchedConfig {
+    /// The one shared serving-config constructor for the CLI, the
+    /// examples and the benches (mirrors [`super::EngineConfig::micro_for`]
+    /// for engine configs): `max_batch` decode seats, chunked prefill of
+    /// `prefill_chunk` per step, `slots` KV slots, everything else at
+    /// the defaults.  Call sites used to hand-roll this literal; one
+    /// helper keeps the knobs from drifting between examples and benches.
+    pub fn serving(max_batch: usize, prefill_chunk: usize, slots: usize) -> Self {
+        SchedConfig { max_batch, prefill_chunk, slots, ..Default::default() }
+    }
+
+    /// Enable (or disable) the two-stream pipelined executor.
+    pub fn overlapped(mut self, on: bool) -> Self {
+        self.overlap = on;
+        self
     }
 }
 
@@ -97,6 +132,8 @@ pub struct RequestRecord {
 /// What one engine step did (for logs and tests).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct StepReport {
+    /// sequences admitted: serialized = prefilled and decoding this
+    /// step; overlapped = launched on the prefill stream this step
     pub admitted: usize,
     pub resumed: usize,
     pub preempted: usize,
@@ -105,6 +142,12 @@ pub struct StepReport {
     pub rejected: usize,
     /// running sequences decoded this step
     pub occupancy: usize,
+    /// overlap executor: sequences whose finished prefill joined the
+    /// decode stream this step
+    pub joined: usize,
+    /// overlap executor: sequences still mid-prefill on the GPU stream
+    /// at the end of this step
+    pub prefill_inflight: usize,
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -127,6 +170,9 @@ pub struct Scheduler {
     seen_ids: std::collections::BTreeSet<u64>,
     pub finished: Vec<RequestRecord>,
     pub steps: u64,
+    /// two-stream executor state (prefill-stream frontier, parked
+    /// cohorts, overlap ledger); inert when `cfg.overlap` is off
+    pub pipeline: PipelineState,
 }
 
 /// Admission order: priority desc, then arrival asc, then id asc.
@@ -159,6 +205,7 @@ impl Scheduler {
             seen_ids: std::collections::BTreeSet::new(),
             finished: Vec::new(),
             steps: 0,
+            pipeline: PipelineState::new(),
         }
     }
 
@@ -195,9 +242,12 @@ impl Scheduler {
         self.suspended.len()
     }
 
-    /// Nothing queued, running, or parked.
+    /// Nothing queued, running, parked, or mid-prefill on the stream.
     pub fn is_idle(&self) -> bool {
-        self.queue.is_empty() && self.running.is_empty() && self.suspended.is_empty()
+        self.queue.is_empty()
+            && self.running.is_empty()
+            && self.suspended.is_empty()
+            && self.pipeline.pending_cohorts() == 0
     }
 
     /// Earliest arrival time still waiting in the queue.
@@ -253,8 +303,12 @@ impl Scheduler {
         }
     }
 
-    /// One engine step: retire, (resume | admit | preempt), chunked
-    /// prefill for the admitted cohort, then one decode step.
+    /// One engine step.  Serialized (the default): retire, (resume |
+    /// admit | preempt), chunked prefill for the admitted cohort, then
+    /// one decode step — prefill and decode share one clock, so every
+    /// admission stalls the in-flight decodes.  With `cfg.overlap` the
+    /// pipelined two-stream executor runs instead: admissions prefill
+    /// on the GPU stream while the decode tick advances independently.
     pub fn step(&mut self, engine: &mut InferenceEngine) -> Result<StepReport> {
         // The GpuArtifact ablation keeps its host KV cache indexed by
         // batch position, which cannot survive per-step membership
@@ -263,17 +317,177 @@ impl Scheduler {
         if matches!(engine.cfg.backend, AttnBackend::GpuArtifact { .. }) {
             bail!("continuous batching requires the in-storage (Csd) attention backend");
         }
+        if self.cfg.overlap {
+            self.step_overlapped(engine)
+        } else {
+            self.step_serialized(engine)
+        }
+    }
+
+    /// The serialized executor — kept verbatim from the pre-pipeline
+    /// scheduler; `tests/pipeline.rs` pins its outputs AND per-step
+    /// timing against an independent replay.
+    fn step_serialized(&mut self, engine: &mut InferenceEngine) -> Result<StepReport> {
+        engine.shards.set_overlap_tracking(false);
+        let mut rep = StepReport::default();
+        self.steps += 1;
+        rep.retired += self.retire(engine)?;
+        let t_in = engine.sim_now;
+
+        let now = engine.sim_now;
+        let seats = self.cfg.max_batch.min(engine.max_bucket());
+        let mut cohort = self.plan_cohort(engine, now, seats, 0, &mut rep)?;
+
+        // ---- chunked prefill for the admitted cohort ------------------
+        if !cohort.is_empty() {
+            for s in &cohort {
+                self.slots.commit(s.slot)?;
+            }
+            let bucket = engine.bucket_for(cohort.len());
+            engine.prefill(&mut cohort, bucket)?;
+            let first_token_at = engine.sim_now;
+            for s in &cohort {
+                if let Some(m) = self.meta.get_mut(&s.req.id) {
+                    m.admitted_at = now;
+                    m.first_token_at = first_token_at;
+                }
+            }
+            engine.metrics.admissions += cohort.len() as u64;
+            rep.admitted = cohort.len();
+            self.running.append(&mut cohort);
+        }
+
+        // prefill alone can finish a request (max_new_tokens == 1):
+        // retire before decoding so it never gets an extra token
+        rep.retired += self.retire(engine)?;
+
+        // ---- one decode step over the live batch ----------------------
+        if !self.running.is_empty() {
+            let bucket = engine.bucket_for(self.running.len());
+            engine.decode_step(&mut self.running, bucket)?;
+        }
+        rep.occupancy = self.running.len();
+        rep.retired += self.retire(engine)?;
+        if rep.occupancy > 0 {
+            engine.metrics.busy_steps += 1;
+            engine.metrics.busy_step_sim_s += engine.sim_now - t_in;
+        }
+        self.check_capacity(engine)?;
+        Ok(rep)
+    }
+
+    /// The pipelined executor: the decode stream ticks at the engine
+    /// clock while admissions ride the GPU prefill stream, joining the
+    /// batch at the first tick after their prefill (and layer-wise KV
+    /// ship) completes.  Outputs are bit-identical to the serialized
+    /// path — per-sequence generation depends only on the sequence's
+    /// own KV — but TTFT and steady-state decode latency decouple.
+    fn step_overlapped(&mut self, engine: &mut InferenceEngine) -> Result<StepReport> {
+        engine.shards.set_overlap_tracking(true);
         let mut rep = StepReport::default();
         self.steps += 1;
         rep.retired += self.retire(engine)?;
 
-        let now = engine.sim_now;
         let seats = self.cfg.max_batch.min(engine.max_bucket());
-        let mut cohort: Vec<Sequence> = Vec::new();
+        // the decode plane is empty and nothing can resume — either no
+        // suspended sequences, or parked cohorts hold every seat (a
+        // preemption burst can suspend the whole running batch while its
+        // replacement is still mid-prefill): the frontier has nothing to
+        // do before the earliest parked cohort joins
+        let resumable = !self.suspended.is_empty() && self.pipeline.pending_seqs() < seats;
+        if self.running.is_empty() && !resumable {
+            if let Some(t) = self.pipeline.earliest_ready() {
+                if t > engine.sim_now {
+                    engine.sim_now = t;
+                }
+            }
+        }
+        let t_in = engine.sim_now;
 
-        // ---- planning: place candidates best-first --------------------
-        // Terminates: every iteration either consumes a waiting candidate
-        // or replaces a strictly lower-priority runner (bounded).
+        // ---- join: cohorts whose prefill stream completed -------------
+        let joined = self.pipeline.take_ready(engine.sim_now);
+        rep.joined = joined.len();
+        self.running.extend(joined);
+        // prefill alone can finish a request (max_new_tokens == 1):
+        // retire at the join so it never gets an extra token
+        rep.retired += self.retire(engine)?;
+
+        let now = engine.sim_now;
+        // parked cohorts hold seats: admission planning must count them
+        // or a join could overflow the batch bucket
+        let held = self.pipeline.pending_seqs();
+        let mut cohort = self.plan_cohort(engine, now, seats, held, &mut rep)?;
+
+        // ---- decode tick at the decode frontier -----------------------
+        // (never waits on the prefill stream).  The tick runs before the
+        // cohort's prefill is submitted: the prefill stream starts at or
+        // after this frontier, so submitting it first would let its
+        // flash programs queue ahead of this tick's reads on shared dies
+        // — a priority inversion the real pipeline doesn't have.
+        let decode_span = if self.running.is_empty() {
+            None
+        } else {
+            let d0 = engine.sim_now;
+            let bucket = engine.bucket_for(self.running.len());
+            engine.decode_step(&mut self.running, bucket)?;
+            Some((d0, engine.sim_now))
+        };
+        rep.occupancy = self.running.len();
+
+        // ---- launch the cohort on the prefill stream ------------------
+        if !cohort.is_empty() {
+            for s in &cohort {
+                self.slots.commit(s.slot)?;
+            }
+            let bucket = engine.bucket_for(cohort.len());
+            let start = now.max(self.pipeline.prefill_free);
+            let ready = engine.prefill_stage(&mut cohort, bucket, start)?;
+            for s in &cohort {
+                if let Some(m) = self.meta.get_mut(&s.req.id) {
+                    // TTFT is pinned to the prefill STREAM's completion,
+                    // not to the end of the decode step that later
+                    // absorbs the cohort
+                    m.admitted_at = ready;
+                    m.first_token_at = ready;
+                }
+            }
+            engine.metrics.admissions += cohort.len() as u64;
+            rep.admitted = cohort.len();
+            self.pipeline.park(cohort, start, ready);
+        }
+        if let Some((d0, d1)) = decode_span {
+            // accounted after the park so this tick's overlap with the
+            // cohort it launched is counted too
+            self.pipeline.note_decode(d0, d1);
+        }
+        rep.retired += self.retire(engine)?;
+        if rep.occupancy > 0 {
+            engine.metrics.busy_steps += 1;
+            engine.metrics.busy_step_sim_s += engine.sim_now - t_in;
+        }
+        rep.prefill_inflight = self.pipeline.pending_seqs();
+        self.check_capacity(engine)?;
+        Ok(rep)
+    }
+
+    /// Planning half of a step: place the best eligible candidates
+    /// (resume | admit | preempt) best-first until seats, the prefill
+    /// chunk, or the slot pool run out.  `held` counts seats claimed
+    /// outside `running` (the overlap executor's parked cohorts).
+    /// Returns the newly admitted cohort with slots reserved but not
+    /// yet committed.
+    ///
+    /// Terminates: every iteration either consumes a waiting candidate
+    /// or replaces a strictly lower-priority runner (bounded).
+    fn plan_cohort(
+        &mut self,
+        engine: &mut InferenceEngine,
+        now: Time,
+        seats: usize,
+        held: usize,
+        rep: &mut StepReport,
+    ) -> Result<Vec<Sequence>> {
+        let mut cohort: Vec<Sequence> = Vec::new();
         loop {
             let can_admit_new =
                 cohort.len() < self.cfg.prefill_chunk && self.slots.free_count() > 0;
@@ -311,7 +525,7 @@ impl Scheduler {
                     continue;
                 }
             }
-            if self.running.len() + cohort.len() >= seats {
+            if self.running.len() + held + cohort.len() >= seats {
                 let Some(vi) = self.weakest_running(prio) else {
                     break;
                 };
@@ -346,47 +560,21 @@ impl Scheduler {
                 }
             }
         }
+        Ok(cohort)
+    }
 
-        // ---- chunked prefill for the admitted cohort ------------------
-        if !cohort.is_empty() {
-            for s in &cohort {
-                self.slots.commit(s.slot)?;
-            }
-            let bucket = engine.bucket_for(cohort.len());
-            engine.prefill(&mut cohort, bucket)?;
-            let first_token_at = engine.sim_now;
-            for s in &cohort {
-                if let Some(m) = self.meta.get_mut(&s.req.id) {
-                    m.admitted_at = now;
-                    m.first_token_at = first_token_at;
-                }
-            }
-            engine.metrics.admissions += cohort.len() as u64;
-            rep.admitted = cohort.len();
-            self.running.append(&mut cohort);
-        }
-
-        // prefill alone can finish a request (max_new_tokens == 1):
-        // retire before decoding so it never gets an extra token
-        rep.retired += self.retire(engine)?;
-
-        // ---- one decode step over the live batch ----------------------
-        if !self.running.is_empty() {
-            let bucket = engine.bucket_for(self.running.len());
-            engine.decode_step(&mut self.running, bucket)?;
-        }
-        rep.occupancy = self.running.len();
-        rep.retired += self.retire(engine)?;
-
-        // ---- KV byte accounting + capacity invariants -----------------
-        // Flash-resident bytes are tracked once per held slot (live or
-        // suspended — no double counting of preempted sequences), and
-        // the DRAM hot tier is bounded separately: slot bytes + tier
-        // bytes can never exceed flash capacity + tier capacity.
+    /// KV byte accounting + capacity invariants.
+    ///
+    /// Flash-resident bytes are tracked once per held slot (live,
+    /// parked mid-pipeline, or suspended — no double counting of
+    /// preempted sequences), and the DRAM hot tier is bounded
+    /// separately: slot bytes + tier bytes can never exceed flash
+    /// capacity + tier capacity.
+    fn check_capacity(&mut self, engine: &mut InferenceEngine) -> Result<()> {
         let m = &engine.rt.manifest.model;
         let per_tok =
             (2 * m.n_heads * m.d_head * crate::config::model::FP16_BYTES * m.n_layers) as u64;
-        for s in &self.running {
+        for s in self.running.iter().chain(self.pipeline.pending_iter()) {
             let resident_toks = s.kv_len.saturating_sub(s.dropped.len());
             self.slots.set_kv_bytes(s.slot, resident_toks as u64 * per_tok);
         }
@@ -418,7 +606,7 @@ impl Scheduler {
                 "shard {c} stripe ({b} B) exceeds its flash capacity ({per_csd_cap} B)"
             );
         }
-        Ok(rep)
+        Ok(())
     }
 
     /// H2O-style drop-on-resume: keep the `resume_keep` most important
@@ -516,6 +704,8 @@ pub struct ServeReport {
     pub preemptions: u64,
     /// simulated device time at the end of the run
     pub sim_end: Time,
+    /// two-stream overlap ledger (all zero on serialized runs)
+    pub overlap: OverlapStats,
 }
 
 impl ServeReport {
@@ -587,6 +777,21 @@ impl ServeReport {
                 "\nTTFT     (sim) p50 {p50:.4}s  p95 {p95:.4}s  p99 {p99:.4}s"
             ));
         }
+        let ov = &self.overlap;
+        if ov.cohorts > 0 {
+            out.push_str(&format!(
+                "\noverlap  prefill stream busy {:.6}s / decode stream busy {:.6}s, \
+                 {:.6}s shadowed ({:.1}%), GPU idle during decode {:.6}s, CSD idle \
+                 during prefill {:.6}s, {} decode steps with a prefill in flight",
+                ov.prefill_busy_s,
+                ov.decode_busy_s,
+                ov.overlapped_s,
+                100.0 * ov.overlap_frac(),
+                ov.gpu_idle_during_decode_s,
+                ov.csd_idle_during_prefill_s(),
+                ov.steps_with_prefill_inflight,
+            ));
+        }
         out
     }
 }
@@ -605,7 +810,10 @@ pub fn run_open_loop(
     }
     let mut stalled_steps = 0u64;
     while !sched.is_idle() {
-        if sched.running.is_empty() && sched.suspended.is_empty() {
+        if sched.running.is_empty()
+            && sched.suspended.is_empty()
+            && sched.pipeline.pending_cohorts() == 0
+        {
             if let Some(t) = sched.earliest_pending() {
                 if t > engine.sim_now {
                     engine.sim_now = t;
@@ -617,14 +825,16 @@ pub fn run_open_loop(
             || rep.admitted > 0
             || rep.resumed > 0
             || rep.retired > 0
-            || rep.rejected > 0;
+            || rep.rejected > 0
+            || rep.joined > 0;
         if !progressed {
             stalled_steps += 1;
             if stalled_steps > 3 {
                 bail!(
-                    "scheduler stalled: {} queued, {} suspended, {} free slots",
+                    "scheduler stalled: {} queued, {} suspended, {} mid-prefill, {} free slots",
                     sched.queued_count(),
                     sched.suspended_count(),
+                    sched.pipeline.pending_seqs(),
                     sched.slots.free_count()
                 );
             }
@@ -637,6 +847,7 @@ pub fn run_open_loop(
         steps: sched.steps,
         preemptions: sched.slots.stats.preemptions,
         sim_end: engine.sim_now,
+        overlap: sched.pipeline.stats.clone(),
     })
 }
 

@@ -15,6 +15,10 @@
 //! * [`shard`] turns the CSD array into real per-device engine instances:
 //!   head/context partitioning, per-CSD local clocks, fair-share PCIe
 //!   all-reduce, and the GPU-side partial-attention merge.
+//! * [`pipeline`] disaggregates prefill and decode onto two overlapped
+//!   engine streams: the GPU prefill stream (chunked prefill + KV
+//!   shipping) runs concurrently with the CSD decode stream, contending
+//!   for the same PCIe links.
 //! * [`coordinator`] is the L3 host control plane: request batching,
 //!   prefill/decode scheduling, head->CSD routing, KV management.
 //! * [`bench`] regenerates every table and figure of the paper's evaluation.
@@ -29,6 +33,7 @@ pub mod ftl;
 pub mod gpu;
 pub mod kvtier;
 pub mod pcie;
+pub mod pipeline;
 pub mod runtime;
 pub mod shard;
 pub mod sim;

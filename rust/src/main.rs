@@ -35,7 +35,7 @@ fn usage() -> ! {
          \n\
          commands:\n\
          \x20 serve [--requests N] [--batch B] [--gen T] [--n-csds K] [--sparse]\n\
-         \x20       [--shard-policy stripe|block|context]\n\
+         \x20       [--shard-policy stripe|block|context] [--overlap]\n\
          \x20       [--profile fixed|chat|qa] [--artifacts DIR]\n\
          \x20       [--arrival-rate R] [--prefill-chunk C] [--slots S]\n\
          \x20       [--hi-frac F]\n\
@@ -44,6 +44,10 @@ fn usage() -> ! {
          \x20       continuous batching; --arrival-rate R runs open-loop\n\
          \x20       Poisson arrivals (R req/s on the simulated clock),\n\
          \x20       otherwise all requests are present at t=0.\n\
+         \x20       --overlap disaggregates prefill and decode onto two\n\
+         \x20       pipelined engine streams (admissions prefill on the GPU\n\
+         \x20       stream while decode ticks keep advancing; same outputs,\n\
+         \x20       decoupled TTFT/decode latency).\n\
          \x20       --n-csds shards each sequence across K engine instances\n\
          \x20       (--csds is an alias); --shard-policy picks head striping,\n\
          \x20       head blocks, or context (token-group) striping with a\n\
@@ -53,8 +57,10 @@ fn usage() -> ! {
          \x20       important tokens when a preempted sequence returns\n\
          \x20 bench <target|all> [--json FILE]   regenerate paper figures\n\
          \x20       (fig4 fig5 fig6 fig11 fig12 fig13 fig14 fig15 fig16\n\
-         \x20       fig17a fig17b table1 tier shard serve ablate-group\n\
-         \x20       ablate-dualk ablate-pipeline ablate-p2p ablate-placement)\n\
+         \x20       fig17a fig17b table1 tier shard serve overlap ablate-group\n\
+         \x20       ablate-dualk ablate-pipeline ablate-p2p ablate-placement);\n\
+         \x20       `bench all --json` emits one stitched trajectory document\n\
+         \x20       (schema instinfer-bench-trajectory/v1, run-numbered in CI)\n\
          \x20 golden [--artifacts DIR] [--tol T]\n\
          \x20 inspect [--artifacts DIR]"
     );
@@ -105,6 +111,7 @@ fn serve(args: &[String]) -> Result<()> {
     let tier_policy = TierPolicy::parse(flag_value(args, "--tier-policy").unwrap_or("lru"))?;
     let drop_on_resume = has_flag(args, "--drop-on-resume");
     let resume_keep: usize = flag_value(args, "--resume-keep").unwrap_or("0").parse()?;
+    let overlap = has_flag(args, "--overlap");
     let arrival_rate: Option<f64> = match flag_value(args, "--arrival-rate") {
         Some(v) => Some(v.parse().context("--arrival-rate")?),
         None => None,
@@ -138,11 +145,9 @@ fn serve(args: &[String]) -> Result<()> {
         r
     };
     let scfg = SchedConfig {
-        max_batch: batch,
-        prefill_chunk,
-        slots: slot_cap,
         drop_on_resume,
         resume_keep,
+        ..SchedConfig::serving(batch, prefill_chunk, slot_cap).overlapped(overlap)
     };
     let t0 = std::time::Instant::now();
     let report = match arrival_rate {
@@ -223,6 +228,21 @@ fn serve(args: &[String]) -> Result<()> {
             ck.straggler,
         );
     }
+    if overlap {
+        let st = &engine.shards.stats;
+        let ck = &engine.shards.clock;
+        println!(
+            "pipeline: decode step {:.6}s (admission stalls incl.), {:.1} KiB prefill \
+             KV shipped as background link load ({:.6}s ingest busy), {} contended \
+             all-reduces (+{:.2}us total), dual-stream link time {:.6}s",
+            engine.metrics.decode_step_time_s(),
+            st.prefill_ship_bytes / 1024.0,
+            ck.ingest_s.iter().sum::<f64>(),
+            st.contended_merges,
+            st.contention_delay_s * 1e6,
+            ck.dual_stream_s,
+        );
+    }
     let st = engine.tier_stats();
     if st.hits + st.misses > 0 {
         println!(
@@ -254,7 +274,7 @@ fn serve(args: &[String]) -> Result<()> {
     Ok(())
 }
 
-fn write_bench_json(path: &str, tables: &[(&str, Table)]) -> Result<()> {
+fn bench_tables_json(tables: &[(&str, Table)]) -> Vec<Json> {
     let mut items = Vec::new();
     for (name, t) in tables {
         if let Json::Obj(mut m) = t.to_json() {
@@ -262,9 +282,34 @@ fn write_bench_json(path: &str, tables: &[(&str, Table)]) -> Result<()> {
             items.push(Json::Obj(m));
         }
     }
-    let doc = Json::Arr(items);
+    items
+}
+
+fn write_bench_json(path: &str, tables: &[(&str, Table)]) -> Result<()> {
+    let doc = Json::Arr(bench_tables_json(tables));
     std::fs::write(path, format!("{doc}\n")).with_context(|| format!("writing {path}"))?;
     println!("wrote {path}");
+    Ok(())
+}
+
+/// The `bench all --json` umbrella: one stitched trajectory document —
+/// every table, plus the dashboard subset (`bench::TRAJECTORY`) called
+/// out so cross-run stitching knows which targets to chart.  CI names
+/// the uploaded artifact with the run number; `run` carries it inside
+/// the document too (from `GITHUB_RUN_NUMBER` when present).
+fn write_trajectory_json(path: &str, tables: &[(&str, Table)]) -> Result<()> {
+    let mut doc = std::collections::BTreeMap::new();
+    doc.insert("schema".to_string(), Json::Str("instinfer-bench-trajectory/v1".to_string()));
+    let run = std::env::var("GITHUB_RUN_NUMBER").map(Json::Str).unwrap_or(Json::Null);
+    doc.insert("run".to_string(), run);
+    doc.insert(
+        "trajectory_targets".to_string(),
+        Json::Arr(bench::TRAJECTORY.iter().map(|s| Json::Str(s.to_string())).collect()),
+    );
+    doc.insert("targets".to_string(), Json::Arr(bench_tables_json(tables)));
+    let doc = Json::Obj(doc);
+    std::fs::write(path, format!("{doc}\n")).with_context(|| format!("writing {path}"))?;
+    println!("wrote {path} (stitched trajectory)");
     Ok(())
 }
 
@@ -296,7 +341,7 @@ fn bench_cmd(args: &[String]) -> Result<()> {
                 t.print();
             }
             if let Some(p) = json_path {
-                write_bench_json(p, &tables)?;
+                write_trajectory_json(p, &tables)?;
             }
         }
         Some(name) => match bench::run_one(name) {

@@ -159,6 +159,38 @@ pub fn fair_share_finish(ingress_bw: f64, reqs: &[XferReq]) -> Vec<Time> {
     done
 }
 
+/// Completion times for `reqs` when `background` transfers — the
+/// overlapped prefill stream's KV shipping — contend for the same
+/// ingress fabric (the disaggregated executor runs prefill KV shipping
+/// and decode partial returns on the same links).  Returns the
+/// per-request finish times and the contention delay of the slowest
+/// request relative to an uncontended link.  With no background load
+/// this is exactly [`fair_share_finish`] — the serialized path's
+/// timing is untouched.
+pub fn fair_share_contended(
+    ingress_bw: f64,
+    reqs: &[XferReq],
+    background: &[XferReq],
+) -> (Vec<Time>, Time) {
+    if background.is_empty() {
+        return (fair_share_finish(ingress_bw, reqs), 0.0);
+    }
+    let free = fair_share_finish(ingress_bw, reqs);
+    let mut all: Vec<XferReq> = Vec::with_capacity(reqs.len() + background.len());
+    all.extend_from_slice(reqs);
+    all.extend_from_slice(background);
+    let contended = fair_share_finish(ingress_bw, &all);
+    let fin: Vec<Time> = contended[..reqs.len()].to_vec();
+    let t_free = free.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let t_cont = fin.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let delay = if t_free.is_finite() && t_cont.is_finite() {
+        (t_cont - t_free).max(0.0)
+    } else {
+        0.0
+    };
+    (fin, delay)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -288,6 +320,38 @@ mod tests {
         let done =
             fair_share_finish(1e9, &[XferReq { start: 0.0, bytes: 64.0, dev_bw: 0.0 }]);
         assert!(done[0].is_infinite());
+    }
+
+    #[test]
+    fn contended_no_background_is_plain_fair_share() {
+        let reqs = [
+            XferReq { start: 0.0, bytes: 1e9, dev_bw: 2e9 },
+            XferReq { start: 0.5, bytes: 1e9, dev_bw: 2e9 },
+        ];
+        let (fin, delay) = fair_share_contended(4e9, &reqs, &[]);
+        assert_eq!(fin, fair_share_finish(4e9, &reqs));
+        assert_eq!(delay, 0.0);
+    }
+
+    #[test]
+    fn contended_background_slows_and_reports_delay() {
+        // one decode return on a 2 GB/s ingress, with a concurrent
+        // prefill ship over the same fabric: the return takes twice as
+        // long as alone (equal fair shares), and the delay says so
+        let ret = [XferReq { start: 0.0, bytes: 1e9, dev_bw: 2e9 }];
+        let bg = [XferReq { start: 0.0, bytes: 4e9, dev_bw: 2e9 }];
+        let (free, d0) = fair_share_contended(2e9, &ret, &[]);
+        assert!((free[0] - 0.5).abs() < 1e-6);
+        assert_eq!(d0, 0.0);
+        let (fin, delay) = fair_share_contended(2e9, &ret, &bg);
+        assert!((fin[0] - 1.0).abs() < 1e-6, "{}", fin[0]);
+        assert!((delay - 0.5).abs() < 1e-6, "{delay}");
+        // a background ship that starts after the return finishes must
+        // not slow it at all
+        let late = [XferReq { start: 5.0, bytes: 4e9, dev_bw: 2e9 }];
+        let (fin, delay) = fair_share_contended(2e9, &ret, &late);
+        assert!((fin[0] - 0.5).abs() < 1e-6);
+        assert_eq!(delay, 0.0);
     }
 
     #[test]

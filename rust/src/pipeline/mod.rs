@@ -1,0 +1,225 @@
+//! Prefill/decode disaggregation: the two-stream pipelined executor's
+//! state (paper §IV-B dataflow; ROADMAP "prefill/decode disaggregation").
+//!
+//! The serialized scheduler runs chunked prefill *inside* the step, so
+//! every admission stalls all in-flight decodes: the step clock first
+//! advances through the cohort's layer-wise KV shipping and only then
+//! starts the decode tick.  The pipelined executor instead advances two
+//! streams on a shared event timeline:
+//!
+//! * the GPU **prefill stream** — chunked prefill plus layer-wise KV
+//!   shipping to the CSD array.  In the simulated plane its cost is the
+//!   shipping (GPU block compute is functional wall time, exactly as the
+//!   serialized path accounts it); the stream has its own frontier
+//!   (`prefill_free`) and cohorts queue on it FIFO.
+//! * the CSD **decode stream** — the per-step decode ticks over the live
+//!   batch, advancing `engine.sim_now` without ever waiting on the
+//!   prefill stream.
+//!
+//! A cohort whose prefill completes at `ready` is *parked* until the
+//! decode frontier reaches `ready`, then joins the running batch.  While
+//! both streams are in flight, prefill KV shipping and decode partial
+//! returns contend for the same PCIe links — the shard coordinator
+//! registers the shipping as background load for its fair-share
+//! all-reduce arbiter ([`crate::pcie::fair_share_contended`]).
+//!
+//! [`OverlapStats`] is the overlap-efficiency ledger: how much decode
+//! time was shadowed by prefill (the win), how long the GPU prefill
+//! stream sat idle during decode, and how long the CSDs sat idle during
+//! prefill (both costs the serialized executor pays on every admission).
+
+pub mod stream;
+
+pub use stream::StreamTimeline;
+
+use crate::coordinator::request::Sequence;
+use crate::sim::Time;
+
+/// A prefilled cohort parked on the prefill stream, waiting for the
+/// decode stream's frontier to reach its ready time.
+#[derive(Debug)]
+pub struct PendingCohort {
+    pub seqs: Vec<Sequence>,
+    /// prefill-stream completion (GPU blocks + layer-wise KV ship done)
+    pub ready: Time,
+}
+
+/// Overlap-efficiency accounting across a run (simulated seconds).
+#[derive(Debug, Clone, Default)]
+pub struct OverlapStats {
+    /// prefill-stream busy time (layer-wise KV shipping spans)
+    pub prefill_busy_s: Time,
+    /// decode-stream busy time (step spans over the live batch)
+    pub decode_busy_s: Time,
+    /// time both streams were simultaneously busy — the disaggregation
+    /// win the serialized executor structurally cannot have
+    pub overlapped_s: Time,
+    /// decode-stream time with the GPU prefill stream idle
+    pub gpu_idle_during_decode_s: Time,
+    /// cohorts that rode the prefill stream
+    pub cohorts: u64,
+    /// decode steps taken while at least one prefill was in flight
+    pub steps_with_prefill_inflight: u64,
+}
+
+impl OverlapStats {
+    /// Prefill-stream time during which the CSD decode plane sat idle
+    /// (shipping that was NOT shadowed by a concurrent decode tick).
+    pub fn csd_idle_during_prefill_s(&self) -> Time {
+        (self.prefill_busy_s - self.overlapped_s).max(0.0)
+    }
+
+    /// Fraction of prefill-stream busy time shadowed by decode work.
+    pub fn overlap_frac(&self) -> f64 {
+        if self.prefill_busy_s <= 0.0 {
+            0.0
+        } else {
+            (self.overlapped_s / self.prefill_busy_s).clamp(0.0, 1.0)
+        }
+    }
+}
+
+/// State of the two engine streams: the prefill-stream frontier, the
+/// parked cohorts awaiting their decode-stream join, and the overlap
+/// ledger.  Owned by the scheduler; inert (and empty) when the
+/// serialized executor runs.
+#[derive(Debug, Default)]
+pub struct PipelineState {
+    /// when the GPU prefill stream next frees up (cohorts queue FIFO)
+    pub prefill_free: Time,
+    pending: Vec<PendingCohort>,
+    prefill_intervals: StreamTimeline,
+    pub stats: OverlapStats,
+}
+
+impl PipelineState {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Parked cohorts still mid-prefill (or awaiting their join).
+    pub fn pending_cohorts(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Sequences across all parked cohorts — they hold KV slots and
+    /// claim decode seats, so admission planning must count them.
+    pub fn pending_seqs(&self) -> usize {
+        self.pending.iter().map(|c| c.seqs.len()).sum()
+    }
+
+    /// Iterate the parked sequences (KV-byte accounting).
+    pub fn pending_iter(&self) -> impl Iterator<Item = &Sequence> + '_ {
+        self.pending.iter().flat_map(|c| c.seqs.iter())
+    }
+
+    /// Earliest prefill-stream completion among parked cohorts.
+    pub fn earliest_ready(&self) -> Option<Time> {
+        self.pending.iter().map(|c| c.ready).fold(None, |acc, t| match acc {
+            Some(b) if b <= t => Some(b),
+            _ => Some(t),
+        })
+    }
+
+    /// Park a cohort that occupied the prefill stream over
+    /// `[start, ready)`; it joins the decode stream once the decode
+    /// frontier reaches `ready`.
+    pub fn park(&mut self, seqs: Vec<Sequence>, start: Time, ready: Time) {
+        self.stats.cohorts += 1;
+        self.prefill_intervals.push(start, ready);
+        // single source of truth: the timeline's cumulative busy time
+        self.stats.prefill_busy_s = self.prefill_intervals.busy_s();
+        if ready > self.prefill_free {
+            self.prefill_free = ready;
+        }
+        self.pending.push(PendingCohort { seqs, ready });
+    }
+
+    /// Pop every parked sequence whose cohort's prefill finished by
+    /// `now` (the decode frontier), in stream order.
+    pub fn take_ready(&mut self, now: Time) -> Vec<Sequence> {
+        if self.pending.is_empty() {
+            return Vec::new();
+        }
+        let mut ready: Vec<PendingCohort> = Vec::new();
+        let mut keep: Vec<PendingCohort> = Vec::new();
+        for c in self.pending.drain(..) {
+            if c.ready <= now {
+                ready.push(c);
+            } else {
+                keep.push(c);
+            }
+        }
+        self.pending = keep;
+        // the stream is FIFO so push order == ready order, but keep the
+        // join order explicit for safety
+        ready.sort_by(|a, b| a.ready.total_cmp(&b.ready));
+        ready.into_iter().flat_map(|c| c.seqs).collect()
+    }
+
+    /// Account one decode-stream step span `[d0, d1)` against the
+    /// prefill stream's busy intervals.
+    pub fn note_decode(&mut self, d0: Time, d1: Time) {
+        let span = (d1 - d0).max(0.0);
+        self.stats.decode_busy_s += span;
+        if self.prefill_free > d0 {
+            self.stats.steps_with_prefill_inflight += 1;
+        }
+        let ov = self.prefill_intervals.overlap_and_prune(d0, d1);
+        self.stats.overlapped_s += ov;
+        self.stats.gpu_idle_during_decode_s += (span - ov).max(0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::Request;
+
+    fn seq(id: u64) -> Sequence {
+        Sequence::new(Request { id, prompt: vec![1, 2], max_new_tokens: 2 }, id as u32)
+    }
+
+    #[test]
+    fn park_and_join_in_stream_order() {
+        let mut p = PipelineState::new();
+        assert_eq!(p.pending_cohorts(), 0);
+        assert!(p.earliest_ready().is_none());
+        p.park(vec![seq(1), seq(2)], 0.0, 2.0);
+        p.park(vec![seq(3)], 2.0, 5.0);
+        assert_eq!(p.pending_seqs(), 3);
+        assert_eq!(p.earliest_ready(), Some(2.0));
+        assert_eq!(p.prefill_free, 5.0);
+        // frontier at 1.0: nothing ready yet
+        assert!(p.take_ready(1.0).is_empty());
+        // frontier at 2.0: first cohort joins, second stays parked
+        let j = p.take_ready(2.0);
+        assert_eq!(j.iter().map(|s| s.req.id).collect::<Vec<_>>(), vec![1, 2]);
+        assert_eq!(p.pending_cohorts(), 1);
+        let j = p.take_ready(10.0);
+        assert_eq!(j.iter().map(|s| s.req.id).collect::<Vec<_>>(), vec![3]);
+        assert_eq!(p.pending_cohorts(), 0);
+        assert_eq!(p.stats.cohorts, 2);
+        assert!((p.stats.prefill_busy_s - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn decode_overlap_accounting() {
+        let mut p = PipelineState::new();
+        p.park(vec![seq(1)], 0.0, 4.0);
+        // decode tick [1, 3): fully shadowed by the prefill interval
+        p.note_decode(1.0, 3.0);
+        assert!((p.stats.overlapped_s - 2.0).abs() < 1e-12);
+        assert_eq!(p.stats.steps_with_prefill_inflight, 1);
+        // decode tick [3, 6): one more second of overlap, two alone
+        p.note_decode(3.0, 6.0);
+        assert!((p.stats.overlapped_s - 3.0).abs() < 1e-12);
+        assert!((p.stats.gpu_idle_during_decode_s - 2.0).abs() < 1e-12);
+        assert!((p.stats.csd_idle_during_prefill_s() - 1.0).abs() < 1e-12);
+        assert!((p.stats.overlap_frac() - 0.75).abs() < 1e-12);
+        // after the stream drains, later ticks are all GPU-idle
+        p.note_decode(6.0, 7.0);
+        assert_eq!(p.stats.steps_with_prefill_inflight, 2);
+        assert!((p.stats.gpu_idle_during_decode_s - 3.0).abs() < 1e-12);
+    }
+}

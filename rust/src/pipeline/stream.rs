@@ -1,0 +1,99 @@
+//! Stream timelines: busy-interval bookkeeping for overlap accounting.
+//!
+//! The two-stream executor needs to know how much of the decode stream's
+//! progress was shadowed by concurrent prefill work (the disaggregation
+//! win) and how much of each stream ran alone (the idle cost the
+//! serialized executor pays structurally).  A [`StreamTimeline`] records
+//! one stream's busy intervals and answers overlap queries from the
+//! other stream's observation windows, pruning intervals once the
+//! observing frontier has passed them so a long run stays O(in-flight).
+
+use crate::sim::Time;
+
+/// Busy intervals of one engine stream.  Observation windows must be
+/// presented in non-decreasing order (the decode stream's step spans
+/// are), so every interval contributes to the overlap total exactly
+/// once before it is pruned.
+#[derive(Debug, Clone, Default)]
+pub struct StreamTimeline {
+    intervals: Vec<(Time, Time)>,
+    busy_s: Time,
+}
+
+impl StreamTimeline {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a busy interval `[start, end)`; empty/inverted intervals
+    /// are ignored.
+    pub fn push(&mut self, start: Time, end: Time) {
+        if end > start {
+            self.busy_s += end - start;
+            self.intervals.push((start, end));
+        }
+    }
+
+    /// Total busy seconds ever recorded (never pruned away).
+    pub fn busy_s(&self) -> Time {
+        self.busy_s
+    }
+
+    /// Intervals still in flight (not yet passed by an observation).
+    pub fn in_flight(&self) -> usize {
+        self.intervals.len()
+    }
+
+    /// Overlap of the observation window `[d0, d1)` with the recorded
+    /// intervals.  Intervals that end at or before `d1` are pruned:
+    /// successive windows are non-overlapping and non-decreasing, so a
+    /// pruned interval can never contribute again, and a surviving one
+    /// only contributes its not-yet-observed tail.
+    pub fn overlap_and_prune(&mut self, d0: Time, d1: Time) -> Time {
+        let mut ov = 0.0;
+        for &(s, e) in &self.intervals {
+            ov += (e.min(d1) - s.max(d0)).max(0.0);
+        }
+        self.intervals.retain(|&(_, e)| e > d1);
+        ov
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_ignores_empty_intervals() {
+        let mut t = StreamTimeline::new();
+        t.push(2.0, 2.0);
+        t.push(3.0, 1.0);
+        assert_eq!(t.in_flight(), 0);
+        assert_eq!(t.busy_s(), 0.0);
+        t.push(1.0, 4.0);
+        assert_eq!(t.in_flight(), 1);
+        assert_eq!(t.busy_s(), 3.0);
+    }
+
+    #[test]
+    fn overlap_counts_each_interval_once() {
+        let mut t = StreamTimeline::new();
+        t.push(0.0, 10.0);
+        // two successive decode windows split the interval's coverage
+        assert!((t.overlap_and_prune(1.0, 4.0) - 3.0).abs() < 1e-12);
+        assert_eq!(t.in_flight(), 1, "interval outlives the first window");
+        assert!((t.overlap_and_prune(4.0, 12.0) - 6.0).abs() < 1e-12);
+        assert_eq!(t.in_flight(), 0, "fully observed intervals are pruned");
+        assert_eq!(t.overlap_and_prune(12.0, 20.0), 0.0);
+    }
+
+    #[test]
+    fn disjoint_interval_reports_zero_overlap() {
+        let mut t = StreamTimeline::new();
+        t.push(5.0, 6.0);
+        assert_eq!(t.overlap_and_prune(0.0, 5.0), 0.0);
+        assert_eq!(t.in_flight(), 1, "future intervals survive");
+        assert!((t.overlap_and_prune(5.5, 8.0) - 0.5).abs() < 1e-12);
+        assert_eq!(t.in_flight(), 0);
+    }
+}

@@ -6,6 +6,14 @@
 //! shards drifted at each barrier — the straggler effect that head
 //! imbalance, uneven flash layouts and fair-share PCIe induce (and that a
 //! single global engine clock structurally cannot express).
+//!
+//! Under the disaggregated executor each CSD's clock additionally
+//! advances from two concurrent directions: prefill-KV **ingest** (the
+//! GPU prefill stream shipping a cohort's cache down) and decode-result
+//! **egress** (partial attention returns to the merge).  The clock keeps
+//! the in-flight ingest windows per shard and accounts the time both
+//! directions were simultaneously live (`dual_stream_s`) — the overlap
+//! window the serialized executor never enters.
 
 use crate::sim::Time;
 
@@ -20,6 +28,14 @@ pub struct ShardClock {
     pub max_skew_s: Time,
     /// how often each shard was the straggler at a barrier
     pub straggler: Vec<u64>,
+    /// per-shard prefill-KV ingest windows still in flight (overlap
+    /// executor only; pruned as egress observations pass them)
+    ingest: Vec<Vec<(Time, Time)>>,
+    /// per-shard cumulative ingest busy seconds
+    pub ingest_s: Vec<Time>,
+    /// accumulated per-shard time where KV ingest and result egress
+    /// were concurrently in flight
+    pub dual_stream_s: Time,
 }
 
 impl ShardClock {
@@ -31,6 +47,9 @@ impl ShardClock {
             skew_s: 0.0,
             max_skew_s: 0.0,
             straggler: vec![0; n],
+            ingest: vec![Vec::new(); n],
+            ingest_s: vec![0.0; n],
+            dual_stream_s: 0.0,
         }
     }
 
@@ -90,6 +109,55 @@ impl ShardClock {
         hi
     }
 
+    /// Record a prefill-KV ingest window on shard `c` (overlap executor:
+    /// the GPU prefill stream occupies this device's link over
+    /// `[start, end)` while decode egress may run concurrently).
+    pub fn note_ingest(&mut self, c: usize, start: Time, end: Time) {
+        if end <= start {
+            return;
+        }
+        self.ingest_s[c] += end - start;
+        self.ingest[c].push((start, end));
+    }
+
+    /// Drop ingest windows that ended at or before the decode frontier:
+    /// future egress windows start at or after it, so those windows can
+    /// never overlap again.  The coordinator calls this once per decode
+    /// dispatch — the consumer-side prune that keeps a never-egressing
+    /// shard (a single CSD has no all-reduce) bounded.
+    pub fn prune_ingest(&mut self, frontier: Time) {
+        for w in self.ingest.iter_mut() {
+            w.retain(|&(_, e)| e > frontier);
+        }
+    }
+
+    /// Record a decode-result egress window on shard `c` and account
+    /// how much of it ran concurrently with in-flight ingest.  Egress
+    /// windows arrive in non-decreasing start order per shard, so each
+    /// observed ingest portion is consumed (no double counting when
+    /// successive egress windows overlap the same ship) and windows
+    /// fully behind `start` are pruned.  (This deliberately does NOT
+    /// reuse [`crate::pipeline::StreamTimeline`]: that helper assumes
+    /// non-overlapping observation windows — true for decode step spans
+    /// — while per-CSD egress windows from different sequences of the
+    /// same layer can overlap, which is why observed portions must be
+    /// consumed here.)
+    pub fn note_egress(&mut self, c: usize, start: Time, end: Time) {
+        if end <= start {
+            return;
+        }
+        let mut rest: Vec<(Time, Time)> = Vec::with_capacity(self.ingest[c].len());
+        for &(s, e) in &self.ingest[c] {
+            self.dual_stream_s += (e.min(end) - s.max(start)).max(0.0);
+            if e > end {
+                // tail not yet observed; the head (< start) can never be
+                // observed again because egress starts are monotone
+                rest.push((s.max(end), e));
+            }
+        }
+        self.ingest[c] = rest;
+    }
+
     /// Mean per-barrier skew (0 when no barrier happened).
     pub fn mean_skew_s(&self) -> Time {
         if self.barriers == 0 {
@@ -132,5 +200,36 @@ mod tests {
         // an empty barrier (no participants) is a no-op
         assert_eq!(c.note_barrier(&[]), 0.0);
         assert_eq!(c.barriers, 2);
+    }
+
+    #[test]
+    fn dual_stream_overlap_consumes_ingest_windows() {
+        let mut c = ShardClock::new(2);
+        c.note_ingest(0, 0.0, 4.0);
+        assert_eq!(c.ingest_s[0], 4.0);
+        // egress [1, 2): one second concurrent
+        c.note_egress(0, 1.0, 2.0);
+        assert!((c.dual_stream_s - 1.0).abs() < 1e-12);
+        // a second egress over the SAME ship window counts only the
+        // not-yet-observed tail
+        c.note_egress(0, 2.0, 10.0);
+        assert!((c.dual_stream_s - 3.0).abs() < 1e-12);
+        // fully observed: later egress adds nothing
+        c.note_egress(0, 10.0, 12.0);
+        assert!((c.dual_stream_s - 3.0).abs() < 1e-12);
+        // other shards are independent
+        c.note_ingest(1, 0.0, 1.0);
+        c.note_egress(1, 5.0, 6.0);
+        assert!((c.dual_stream_s - 3.0).abs() < 1e-12);
+        // degenerate windows are ignored
+        c.note_ingest(0, 3.0, 3.0);
+        c.note_egress(0, 5.0, 5.0);
+        assert_eq!(c.ingest_s[0], 4.0);
+        // consumer-side prune at the decode frontier: a window wholly
+        // behind it can never contribute overlap again
+        c.note_ingest(0, 12.0, 13.0);
+        c.prune_ingest(13.0);
+        c.note_egress(0, 13.0, 15.0);
+        assert!((c.dual_stream_s - 3.0).abs() < 1e-12, "pruned window added overlap");
     }
 }

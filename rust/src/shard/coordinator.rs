@@ -40,6 +40,14 @@ pub struct ShardStats {
     pub xfer_bytes: f64,
     /// merge barriers executed (0 on a single device)
     pub merges: u64,
+    /// bytes shipped CSD-ward by the overlapped prefill stream
+    /// (registered as background link load)
+    pub prefill_ship_bytes: f64,
+    /// all-reduces that were actually slowed by in-flight prefill KV
+    /// shipping on the shared links
+    pub contended_merges: u64,
+    /// extra all-reduce latency attributable to that contention
+    pub contention_delay_s: Time,
 }
 
 pub struct ShardCoordinator {
@@ -50,6 +58,17 @@ pub struct ShardCoordinator {
     pcie: PcieSpec,
     gpu: GpuSpec,
     d_head: usize,
+    /// overlap executor: register prefill KV shipping as background
+    /// link load so decode partial returns contend with it (off by
+    /// default — the serialized path's timing is untouched)
+    overlap_tracking: bool,
+    /// in-flight background KV-ship transfers and their uncontended
+    /// completion times (for pruning)
+    bg_ship: Vec<(XferReq, Time)>,
+    /// per-CSD frontier of the background ship chain: layer ships on
+    /// one device link serialize (the NVMe queue runs them one after
+    /// another), so their wire windows must chain, not stack
+    bg_free: Vec<Time>,
 }
 
 impl ShardCoordinator {
@@ -62,19 +81,23 @@ impl ShardCoordinator {
         p2p: bool,
         gpu: GpuSpec,
     ) -> Result<Self> {
-        let mut queues = Vec::with_capacity(topology.n_csds);
-        for _ in 0..topology.n_csds {
+        let n_csds = topology.n_csds;
+        let mut queues = Vec::with_capacity(n_csds);
+        for _ in 0..n_csds {
             let csd = InstCsd::with_tier(spec, ftl_cfg, tier).context("constructing InstCSD")?;
             queues.push(NvmeQueue::new(csd, &pcie, p2p));
         }
         Ok(ShardCoordinator {
-            clock: ShardClock::new(topology.n_csds),
+            clock: ShardClock::new(n_csds),
             topology,
             queues,
             stats: ShardStats::default(),
             pcie,
             gpu,
             d_head: ftl_cfg.d_head,
+            overlap_tracking: false,
+            bg_ship: Vec::new(),
+            bg_free: vec![0.0; n_csds],
         })
     }
 
@@ -88,6 +111,67 @@ impl ShardCoordinator {
 
     fn io_lat(&self) -> Time {
         self.pcie.p2p_io_us * 1e-6
+    }
+
+    /// Enable/disable overlap link tracking (the pipelined executor
+    /// turns this on; the serialized executor leaves it off so its
+    /// arbiter calls — and therefore its timing — are unchanged).
+    pub fn set_overlap_tracking(&mut self, on: bool) {
+        self.overlap_tracking = on;
+        if !on {
+            self.bg_ship.clear();
+            self.bg_free.iter_mut().for_each(|t| *t = 0.0);
+        }
+    }
+
+    /// Register one prefill-stream KV ship to CSD `c`: background link
+    /// load over the wire window (what decode partial returns contend
+    /// with), and a device-side ingest window until the flash programs
+    /// land (`ingest_done`) for the dual-stream clock accounting.
+    fn note_prefill_ship(&mut self, c: usize, at: Time, bytes: f64, ingest_done: Time) {
+        let dev_bw = self.dev_bw();
+        if dev_bw <= 0.0 {
+            return;
+        }
+        // chain on this device's link: the NVMe queue serializes the
+        // layer ships, so their wire windows follow one another instead
+        // of all stacking at the cohort's anchor (which would both
+        // overstate simultaneous contention and end the background
+        // window too early)
+        let start = at.max(self.bg_free[c]);
+        let wire_done = start + self.io_lat() + bytes / dev_bw;
+        self.bg_free[c] = wire_done;
+        self.bg_ship.push((XferReq { start, bytes, dev_bw }, wire_done));
+        self.stats.prefill_ship_bytes += bytes;
+        self.clock.note_ingest(c, start, ingest_done.max(wire_done));
+    }
+
+    /// Background KV-ship transfers still in flight at `at` (prunes
+    /// completed ones — dispatch times are non-decreasing).
+    fn active_bg(&mut self, at: Time) -> Vec<XferReq> {
+        self.bg_ship.retain(|(_, done)| *done > at);
+        self.bg_ship.iter().map(|(r, _)| *r).collect()
+    }
+
+    /// The all-reduce's fair-share arbitration under background prefill
+    /// KV contention: finish times for `reqs` (one per entry of
+    /// `shards`), contention stats, and per-shard egress windows —
+    /// shared by the head and context dispatch paths so the contention
+    /// bookkeeping cannot drift between them.
+    fn contended_all_reduce(&mut self, shards: &[usize], reqs: &[XferReq], at: Time) -> Vec<Time> {
+        let bg = if self.overlap_tracking { self.active_bg(at) } else { Vec::new() };
+        let ingress = self.pcie.gpu_p2p_ingress_bw;
+        let (fin, delay) = pcie::fair_share_contended(ingress, reqs, &bg);
+        if delay > 0.0 {
+            self.stats.contended_merges += 1;
+            self.stats.contention_delay_s += delay;
+        }
+        if self.overlap_tracking {
+            for (k, &c) in shards.iter().enumerate() {
+                self.clock.note_egress(c, reqs[k].start, fin[k]);
+            }
+        }
+        fin
     }
 
     /// One sequence-layer decode on the array: ship this token's K/V,
@@ -105,6 +189,15 @@ impl ShardCoordinator {
         mode: AttnMode,
         at: Time,
     ) -> Result<(Vec<f32>, Time, UnitBreakdown)> {
+        if self.overlap_tracking {
+            // consumer-side pruning at the DECODE frontier (which lags
+            // the prefill stream's): ships and ingest windows wholly
+            // behind `at` can never contend with this or any later
+            // dispatch.  This is also what keeps the lists bounded on a
+            // single CSD, where no all-reduce or egress ever runs.
+            self.bg_ship.retain(|(_, done)| *done > at);
+            self.clock.prune_ingest(at);
+        }
         if self.topology.splits_context() {
             self.decode_token_context(slot, layer, q_hd, k_hd, v_hd, len, mode, at)
         } else {
@@ -167,7 +260,9 @@ impl ShardCoordinator {
         let mut done = t_attn;
         if n > 1 {
             // all-reduce: every head-bearing shard ships its partial
-            // output at once; the streams fair-share the GPU ingress
+            // output at once; the streams fair-share the GPU ingress,
+            // contending with any in-flight prefill KV shipping from
+            // the overlapped prefill stream
             let active: Vec<usize> =
                 (0..n).filter(|&c| !self.topology.heads_of(c).is_empty()).collect();
             let reqs: Vec<XferReq> = active
@@ -178,7 +273,7 @@ impl ShardCoordinator {
                     dev_bw: self.dev_bw(),
                 })
                 .collect();
-            let fin = pcie::fair_share_finish(self.pcie.gpu_p2p_ingress_bw, &reqs);
+            let fin = self.contended_all_reduce(&active, &reqs, at);
             let arrived = fin.iter().cloned().fold(t_attn, f64::max);
             let merge_t = merge::gather_time(&self.gpu, self.topology.n_heads, d);
             done = arrived + merge_t;
@@ -260,7 +355,8 @@ impl ShardCoordinator {
         let t_attn = attn_done.iter().cloned().fold(at, f64::max);
         self.stats.attn_span_s += t_attn - at;
         let joined: Vec<usize> = (0..n).filter(|&c| !pstats[c].is_empty()).collect();
-        // all-reduce: every participant ships outputs + LSE stats
+        // all-reduce: every participant ships outputs + LSE stats,
+        // contending with in-flight prefill KV from the overlap stream
         let bytes = (h * (d + 2) * FP16_BYTES) as f64;
         let reqs: Vec<XferReq> = joined
             .iter()
@@ -270,7 +366,7 @@ impl ShardCoordinator {
                 dev_bw: self.dev_bw(),
             })
             .collect();
-        let fin = pcie::fair_share_finish(self.pcie.gpu_p2p_ingress_bw, &reqs);
+        let fin = self.contended_all_reduce(&joined, &reqs, at);
         let arrived = fin.iter().cloned().fold(t_attn, f64::max);
         let merge_t = merge::lse_merge_time(&self.gpu, h, d, joined.len());
         let done = arrived + merge_t;
@@ -364,6 +460,7 @@ impl ShardCoordinator {
                         vp.extend_from_slice(&v_seq[base..base + d]);
                     }
                 }
+                let ship_bytes = ((kp.len() + vp.len()) * FP16_BYTES) as f64;
                 let comp = self.queues[c].submit(
                     CsdCommand::WritePrefillLayer {
                         slot,
@@ -375,6 +472,9 @@ impl ShardCoordinator {
                     },
                     at,
                 )?;
+                if self.overlap_tracking {
+                    self.note_prefill_ship(c, at, ship_bytes, comp.done);
+                }
                 self.clock.advance(c, comp.done);
                 done = done.max(comp.done);
             }
@@ -391,10 +491,14 @@ impl ShardCoordinator {
                     kp.extend_from_slice(&k_seq[base..base + len * d]);
                     vp.extend_from_slice(&v_seq[base..base + len * d]);
                 }
+                let ship_bytes = ((kp.len() + vp.len()) * FP16_BYTES) as f64;
                 let comp = self.queues[c].submit(
                     CsdCommand::WritePrefillLayer { slot, layer, heads, s_len: len, k: kp, v: vp },
                     at,
                 )?;
+                if self.overlap_tracking {
+                    self.note_prefill_ship(c, at, ship_bytes, comp.done);
+                }
                 self.clock.advance(c, comp.done);
                 done = done.max(comp.done);
             }

@@ -65,6 +65,7 @@ fn preempt_resume_run(tier: TierConfig, resume_keep: usize) -> (Vec<i32>, u64, u
         slots: 4,
         drop_on_resume: true,
         resume_keep,
+        ..Default::default()
     });
     sched.enqueue(Arrival { req: r1, at: 0.0, priority: 0 }).unwrap();
     let mut steps = 0;
