@@ -4,7 +4,7 @@
 //!
 //!     cargo run --release --example csd_explorer
 
-use instinfer::config::hw::FlashSpec;
+use instinfer::config::hw::{FlashPathConfig, FlashSpec};
 use instinfer::config::model::SparsityParams;
 use instinfer::csd::{AttnMode, InstCsd};
 use instinfer::config::hw::CsdSpec;
@@ -26,6 +26,7 @@ fn explore(channels: usize, n_group: usize, sparse: bool) -> anyhow::Result<Vec<
         read_us: 50.0,
         program_us: 600.0,
         erase_ms: 3.0,
+        path: FlashPathConfig::legacy(),
     };
     let spec = CsdSpec {
         name: "explorer",
@@ -38,7 +39,7 @@ fn explore(channels: usize, n_group: usize, sparse: bool) -> anyhow::Result<Vec<
         filter_bw_per_channel: flash.channel_bw,
         dram_bw: 4.2e9,
         hot_tier_bytes: 0, // the explorer measures raw flash behaviour
-        kv_capacity_bytes: flash.capacity_bytes() as u64,
+        kv_capacity_bytes: flash.usable_capacity_bytes() as u64,
     };
     let mut csd = InstCsd::new(spec, FtlConfig { d_head: d, m: 4, n: n_group })?;
 

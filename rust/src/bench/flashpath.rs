@@ -1,0 +1,163 @@
+//! `bench flashpath` — the flash-microarchitecture data-path evidence
+//! run: sweep block placement x read scheduling x read-compute
+//! pipelining over the dies-per-channel axis on the functional engine,
+//! dense and SparF.
+//!
+//! Each row fills a fresh micro-geometry device with the same 256-token
+//! stream, clears the array timing, and measures one full-context
+//! decode-attention call at t=0 — so every row computes bit-identical
+//! outputs and the only difference is how the same pages lay out and
+//! stream through the die/plane/channel FIFOs.  Expected shape (paper
+//! §IV, Fig. 8): the legacy channel placement is flat in the die count
+//! (one open block per channel pins every read to one die), while the
+//! die-interleaved + conflict-aware + pipelined path scales with the
+//! dies until the channel bus or the kernels bind.
+
+use crate::config::hw::{CsdSpec, FlashPathConfig, FlashPlacement, FlashReadSched};
+use crate::config::model::SparsityParams;
+use crate::csd::{AttnMode, InstCsd};
+use crate::ftl::{FtlConfig, StreamKey};
+use crate::util::rng::Rng;
+use crate::util::table::{eng, Table};
+
+/// Context length of the measured decode-attention call.
+pub const TOKENS: usize = 256;
+
+/// Micro-geometry CSD with `dies` dies per channel and the given path.
+pub fn spec(dies: usize, path: FlashPathConfig) -> CsdSpec {
+    let mut s = CsdSpec::micro();
+    s.flash.dies_per_channel = dies;
+    s.flash.path = path;
+    s.kv_capacity_bytes = s.flash.usable_capacity_bytes() as u64;
+    s
+}
+
+/// The sweep's SparF point: the paper's 1/8 token budget at d_head 32.
+pub fn sparf_mode() -> AttnMode {
+    AttnMode::SparF(SparsityParams { r: 8, k: 32, m: 4, n: 8 })
+}
+
+pub struct AttnRun {
+    pub out: Vec<f32>,
+    /// completion of the attention call issued at t=0 on a quiet array
+    pub secs: f64,
+    /// the breakdown's flash wall-wait
+    pub flash_wait_s: f64,
+    pub die_busy_s: f64,
+    pub channel_busy_s: f64,
+    pub die_peak_q: usize,
+}
+
+/// One decode-attention measurement on a freshly-filled device:
+/// deterministic per (dies, path, mode).
+pub fn run_attention(
+    dies: usize,
+    path: FlashPathConfig,
+    mode: AttnMode,
+) -> anyhow::Result<AttnRun> {
+    let mut csd = InstCsd::new(spec(dies, path), FtlConfig::micro_head())?;
+    let key = StreamKey { slot: 0, layer: 0, head: 0 };
+    let mut rng = Rng::new(4242);
+    for _ in 0..TOKENS {
+        let k: Vec<f32> = (0..32).map(|_| rng.normal_f32()).collect();
+        let v: Vec<f32> = (0..32).map(|_| rng.normal_f32()).collect();
+        csd.write_token(0, 0, &k, &v, 0.0)?;
+    }
+    let q: Vec<f32> = (0..32).map(|_| rng.normal_f32()).collect();
+    csd.ftl.array.reset_timing();
+    let (out, done, bd) = csd.attention_head(key, &q, TOKENS, mode, 0.0)?;
+    let fu = csd.flash_util();
+    Ok(AttnRun {
+        out,
+        secs: done,
+        flash_wait_s: bd.flash_read,
+        die_busy_s: fu.die_busy_s,
+        channel_busy_s: fu.channel_busy_s,
+        die_peak_q: fu.die_peak_depth,
+    })
+}
+
+/// The ablation ladder from the legacy path to the tuned path.
+pub fn ladder() -> Vec<FlashPathConfig> {
+    vec![
+        FlashPathConfig::legacy(),
+        FlashPathConfig {
+            placement: FlashPlacement::Die,
+            sched: FlashReadSched::Fifo,
+            pipeline: false,
+        },
+        FlashPathConfig {
+            placement: FlashPlacement::Die,
+            sched: FlashReadSched::Interleave,
+            pipeline: false,
+        },
+        FlashPathConfig::tuned(),
+    ]
+}
+
+fn err_row(t: &mut Table, dies: usize, label: String, e: &anyhow::Error) {
+    t.row(vec![
+        dies.to_string(),
+        label,
+        "ERR".into(),
+        format!("{e:#}"),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+    ]);
+}
+
+pub fn flashpath() -> Table {
+    let mut t = Table::new(
+        "Flash data path — placement x sched x pipeline vs dies/channel (opt-micro, sim)",
+        &[
+            "dies",
+            "path",
+            "dense_us",
+            "dense_speedup",
+            "sparf_us",
+            "sparf_speedup",
+            "die_busy_us",
+            "chan_busy_us",
+            "peak_die_q",
+        ],
+    );
+    for dies in [1usize, 2, 4] {
+        // the ladder's first rung IS the baseline — run it once and
+        // reuse it for every speedup column (cf. bench shard's n=1 row)
+        let base_dense = run_attention(dies, FlashPathConfig::legacy(), AttnMode::Dense);
+        let base_sparf = run_attention(dies, FlashPathConfig::legacy(), sparf_mode());
+        let (base_dense, base_sparf) = match (base_dense, base_sparf) {
+            (Ok(d), Ok(s)) => (d, s),
+            (Err(e), _) | (_, Err(e)) => {
+                err_row(&mut t, dies, "legacy".into(), &e);
+                continue;
+            }
+        };
+        let mk = |path: FlashPathConfig, d: &AttnRun, s: &AttnRun| -> Vec<String> {
+            vec![
+                dies.to_string(),
+                path.label(),
+                eng(d.secs * 1e6),
+                eng(base_dense.secs / d.secs.max(1e-30)),
+                eng(s.secs * 1e6),
+                eng(base_sparf.secs / s.secs.max(1e-30)),
+                eng(d.die_busy_s * 1e6),
+                eng(d.channel_busy_s * 1e6),
+                d.die_peak_q.to_string(),
+            ]
+        };
+        t.row(mk(FlashPathConfig::legacy(), &base_dense, &base_sparf));
+        for path in ladder().into_iter().skip(1) {
+            let dense = run_attention(dies, path, AttnMode::Dense);
+            let sparf = run_attention(dies, path, sparf_mode());
+            match (dense, sparf) {
+                (Ok(d), Ok(s)) => t.row(mk(path, &d, &s)),
+                (Err(e), _) | (_, Err(e)) => err_row(&mut t, dies, path.label(), &e),
+            }
+        }
+    }
+    t
+}

@@ -5,6 +5,7 @@
 
 pub mod accuracy;
 pub mod figures;
+pub mod flashpath;
 pub mod overlap;
 pub mod serve;
 pub mod shard;
@@ -15,7 +16,7 @@ use crate::util::table::Table;
 /// The serving-dashboard trajectory targets: the subset of `bench all`
 /// that CI stitches across runs (run-numbered artifacts) to track the
 /// system's performance trajectory.
-pub const TRAJECTORY: &[&str] = &["fig16", "tier", "shard", "serve", "overlap"];
+pub const TRAJECTORY: &[&str] = &["fig16", "tier", "shard", "serve", "overlap", "flashpath"];
 
 /// All paper targets in order; returns rendered tables.
 pub fn run_all() -> Vec<String> {
@@ -55,6 +56,7 @@ pub fn registry() -> Vec<(&'static str, BenchFn)> {
         ("shard", shard::shard),
         ("serve", serve::serve),
         ("overlap", overlap::overlap),
+        ("flashpath", flashpath::flashpath),
         ("ablate-group", figures::ablate_group),
         ("ablate-dualk", figures::ablate_dualk),
         ("ablate-pipeline", figures::ablate_pipeline),

@@ -42,6 +42,10 @@ pub struct OverlapRun {
     /// all-reduces slowed by in-flight prefill KV on the shared links
     pub contended_merges: u64,
     pub contention_delay_s: f64,
+    /// aggregate die busy seconds across the CSD array (utilisation)
+    pub die_busy_s: f64,
+    /// worst per-die backlog observed on any shard
+    pub die_peak_q: usize,
 }
 
 /// Serve a deterministic Poisson trace once.  Same seed per config, so
@@ -62,6 +66,7 @@ pub fn run_config(
     let [t50, _, _] = report.ttft_percentiles().unwrap_or([0.0; 3]);
     let [l50, _, _] = report.latency_percentiles().unwrap_or([0.0; 3]);
     let st = &engine.shards.stats;
+    let fu = engine.flash_util();
     Ok(OverlapRun {
         decode_step_s: engine.metrics.decode_step_time_s(),
         ttft_p50_s: t50,
@@ -72,6 +77,8 @@ pub fn run_config(
         csd_idle_s: report.overlap.csd_idle_during_prefill_s(),
         contended_merges: st.contended_merges,
         contention_delay_s: st.contention_delay_s,
+        die_busy_s: fu.die_busy_s,
+        die_peak_q: fu.die_peak_depth,
     })
 }
 
@@ -99,6 +106,8 @@ fn err_row(t: &mut Table, csds: usize, chunk: usize, rate: f64, e: &anyhow::Erro
         "-".into(),
         "-".into(),
         "-".into(),
+        "-".into(),
+        "-".into(),
     ]);
 }
 
@@ -116,6 +125,8 @@ pub fn overlap() -> Table {
             "overlap_ms",
             "gpu_idle_ms",
             "contention_us",
+            "die_busy_ms",
+            "peak_die_q",
         ],
     );
     for n_csds in [1usize, 2, 4] {
@@ -141,6 +152,8 @@ pub fn overlap() -> Table {
                     "0".into(),
                     "-".into(),
                     "0".into(),
+                    eng(serial.die_busy_s * 1e3),
+                    serial.die_peak_q.to_string(),
                 ]);
                 t.row(vec![
                     n_csds.to_string(),
@@ -153,6 +166,8 @@ pub fn overlap() -> Table {
                     eng(piped.overlapped_s * 1e3),
                     eng(piped.gpu_idle_s * 1e3),
                     eng(piped.contention_delay_s * 1e6),
+                    eng(piped.die_busy_s * 1e3),
+                    piped.die_peak_q.to_string(),
                 ]);
             }
         }

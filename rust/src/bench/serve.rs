@@ -29,6 +29,8 @@ struct ServeRun {
     p95_latency_s: f64,
     p50_ttft_s: f64,
     mean_occupancy: f64,
+    die_busy_s: f64,
+    die_peak_q: usize,
 }
 
 fn engine() -> anyhow::Result<InferenceEngine> {
@@ -54,12 +56,15 @@ fn run_continuous(rate: f64) -> anyhow::Result<ServeRun> {
     let report = run_open_loop(&mut engine, arr, sched())?;
     let [p50, p95, _] = report.latency_percentiles().unwrap_or([0.0; 3]);
     let [t50, _, _] = report.ttft_percentiles().unwrap_or([0.0; 3]);
+    let fu = engine.flash_util();
     Ok(ServeRun {
         tput_tok_s: report.total_generated() as f64 / report.sim_end.max(1e-12),
         p50_latency_s: p50,
         p95_latency_s: p95,
         p50_ttft_s: t50,
         mean_occupancy: engine.metrics.mean_occupancy(),
+        die_busy_s: fu.die_busy_s,
+        die_peak_q: fu.die_peak_depth,
     })
 }
 
@@ -95,12 +100,15 @@ fn run_offline(rate: f64) -> anyhow::Result<ServeRun> {
         })
         .collect();
     use crate::util::stats::percentile;
+    let fu = engine.flash_util();
     Ok(ServeRun {
         tput_tok_s: report.total_generated() as f64 / report.sim_end.max(1e-12),
         p50_latency_s: percentile(&mut lats, 50.0),
         p95_latency_s: percentile(&mut lats, 95.0),
         p50_ttft_s: percentile(&mut ttfts, 50.0),
         mean_occupancy: engine.metrics.mean_occupancy(),
+        die_busy_s: fu.die_busy_s,
+        die_peak_q: fu.die_peak_depth,
     })
 }
 
@@ -110,6 +118,8 @@ fn err_row(t: &mut Table, rate: f64, mode: &str, e: &anyhow::Error) {
         mode.into(),
         "ERR".into(),
         format!("{e:#}"),
+        "-".into(),
+        "-".into(),
         "-".into(),
         "-".into(),
         "-".into(),
@@ -127,31 +137,30 @@ pub fn serve() -> Table {
             "p95_latency_s",
             "p50_ttft_s",
             "mean_occupancy",
+            "die_busy_ms",
+            "peak_die_q",
         ],
     );
+    let row = |rate: f64, mode: &str, r: &ServeRun| {
+        vec![
+            format!("{rate}"),
+            mode.into(),
+            eng(r.tput_tok_s),
+            eng(r.p50_latency_s),
+            eng(r.p95_latency_s),
+            eng(r.p50_ttft_s),
+            eng(r.mean_occupancy),
+            eng(r.die_busy_s * 1e3),
+            r.die_peak_q.to_string(),
+        ]
+    };
     for rate in [25.0f64, 100.0, 400.0] {
         match run_continuous(rate) {
-            Ok(r) => t.row(vec![
-                format!("{rate}"),
-                "continuous".into(),
-                eng(r.tput_tok_s),
-                eng(r.p50_latency_s),
-                eng(r.p95_latency_s),
-                eng(r.p50_ttft_s),
-                eng(r.mean_occupancy),
-            ]),
+            Ok(r) => t.row(row(rate, "continuous", &r)),
             Err(e) => err_row(&mut t, rate, "continuous", &e),
         }
         match run_offline(rate) {
-            Ok(r) => t.row(vec![
-                format!("{rate}"),
-                "offline".into(),
-                eng(r.tput_tok_s),
-                eng(r.p50_latency_s),
-                eng(r.p95_latency_s),
-                eng(r.p50_ttft_s),
-                eng(r.mean_occupancy),
-            ]),
+            Ok(r) => t.row(row(rate, "offline", &r)),
             Err(e) => err_row(&mut t, rate, "offline", &e),
         }
     }

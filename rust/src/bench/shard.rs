@@ -32,6 +32,10 @@ pub struct ShardRun {
     pub decode_s_per_step: f64,
     /// mean per-barrier clock skew across shards, seconds
     pub skew_s: f64,
+    /// aggregate die busy seconds across the array (utilisation)
+    pub die_busy_s: f64,
+    /// worst per-die backlog observed on any shard
+    pub die_peak_q: usize,
 }
 
 /// One full serving run under a shard topology; deterministic per config.
@@ -50,11 +54,14 @@ pub fn run_config(n_csds: usize, policy: ShardPolicy) -> anyhow::Result<ShardRun
     )?;
     let steps = engine.metrics.decode_steps.max(1) as f64;
     let st = &engine.shards.stats;
+    let fu = engine.flash_util();
     Ok(ShardRun {
         attn_s_per_step: st.attn_span_s / steps,
         merge_s_per_step: st.merge_span_s / steps,
         decode_s_per_step: engine.metrics.decode_sim_s / steps,
         skew_s: engine.shards.clock.mean_skew_s(),
+        die_busy_s: fu.die_busy_s,
+        die_peak_q: fu.die_peak_depth,
     })
 }
 
@@ -64,6 +71,8 @@ fn err_row(t: &mut Table, policy: &str, n: usize, e: &anyhow::Error) {
         n.to_string(),
         "ERR".into(),
         format!("{e:#}"),
+        "-".into(),
+        "-".into(),
         "-".into(),
         "-".into(),
         "-".into(),
@@ -81,6 +90,8 @@ pub fn shard() -> Table {
             "merge_us_per_step",
             "decode_ms_per_step",
             "skew_us",
+            "die_busy_ms",
+            "peak_die_q",
         ],
     );
     let base = match run_config(1, ShardPolicy::HeadStripe) {
@@ -99,6 +110,8 @@ pub fn shard() -> Table {
             eng(r.merge_s_per_step * 1e6),
             eng(r.decode_s_per_step * 1e3),
             eng(r.skew_s * 1e6),
+            eng(r.die_busy_s * 1e3),
+            r.die_peak_q.to_string(),
         ]
     };
     t.row(row(&base, ShardPolicy::HeadStripe, 1, &base));

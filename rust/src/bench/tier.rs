@@ -28,6 +28,10 @@ const SEATS: usize = 4;
 pub struct TierRun {
     pub hit_rate: f64,
     pub decode_s_per_step: f64,
+    /// flash-array utilisation: hits skipping flash show up as lower
+    /// die busy time at the same decode workload
+    pub die_busy_s: f64,
+    pub die_peak_q: usize,
 }
 
 /// One full serving run under a tier config; deterministic per config.
@@ -45,9 +49,12 @@ pub fn run_config(tier: TierConfig) -> anyhow::Result<TierRun> {
     )?;
     let st = engine.tier_stats();
     let steps = engine.metrics.decode_steps.max(1) as f64;
+    let fu = engine.flash_util();
     Ok(TierRun {
         hit_rate: st.hit_rate(),
         decode_s_per_step: engine.metrics.decode_sim_s / steps,
+        die_busy_s: fu.die_busy_s,
+        die_peak_q: fu.die_peak_depth,
     })
 }
 
@@ -72,13 +79,24 @@ fn err_row(t: &mut Table, policy: &str, hot_kib: usize, cap: &str, e: &anyhow::E
         "ERR".into(),
         format!("{e:#}"),
         "-".into(),
+        "-".into(),
+        "-".into(),
     ]);
 }
 
 pub fn tier() -> Table {
     let mut t = Table::new(
         "KV tiering — hot-tier capacity x policy (DRAM hit rate vs decode time)",
-        &["policy", "hot_KiB", "capacity", "hit_rate_%", "decode_ms_per_step", "speedup"],
+        &[
+            "policy",
+            "hot_KiB",
+            "capacity",
+            "hit_rate_%",
+            "decode_ms_per_step",
+            "speedup",
+            "die_busy_ms",
+            "peak_die_q",
+        ],
     );
     let full = working_set_bytes();
     let base = match run_config(TierConfig::flash_only()) {
@@ -95,6 +113,8 @@ pub fn tier() -> Table {
         eng(0.0),
         eng(base.decode_s_per_step * 1e3),
         eng(1.0),
+        eng(base.die_busy_s * 1e3),
+        base.die_peak_q.to_string(),
     ]);
     let policies = [
         TierPolicy::Lru,
@@ -113,6 +133,8 @@ pub fn tier() -> Table {
                     eng(100.0 * r.hit_rate),
                     eng(r.decode_s_per_step * 1e3),
                     eng(base.decode_s_per_step / r.decode_s_per_step.max(1e-30)),
+                    eng(r.die_busy_s * 1e3),
+                    r.die_peak_q.to_string(),
                 ]),
                 Err(e) => err_row(&mut t, &policy.label(), hot_bytes / 1024, &cap, &e),
             }

@@ -93,6 +93,15 @@ impl EngineConfig {
         self.shard_policy = policy;
         self
     }
+
+    /// Pick the flash KV data path (placement x read sched x pipelining)
+    /// for every CSD in the array.  The micro default is the legacy
+    /// channel/fifo/barrier path; `FlashPathConfig::tuned()` is the
+    /// die-interleaved pipelined engine.
+    pub fn flash_path(mut self, path: crate::config::hw::FlashPathConfig) -> Self {
+        self.csd_spec.flash.path = path;
+        self
+    }
 }
 
 pub struct InferenceEngine {
@@ -516,6 +525,12 @@ impl InferenceEngine {
         self.shards.tier_stats()
     }
 
+    /// Aggregate flash-array utilisation (die/channel busy, peak die
+    /// queue depth) across the CSD array.
+    pub fn flash_util(&self) -> crate::csd::FlashUtil {
+        self.shards.flash_util()
+    }
+
     /// Bytes currently resident in the hot tiers of all CSDs.
     pub fn tier_hot_bytes(&self) -> usize {
         self.shards.tier_hot_bytes()
@@ -571,6 +586,9 @@ impl InferenceEngine {
 impl CsdSpec {
     /// Functional-plane CSD: geometry sized for the opt-micro model
     /// (512 B pages so n=8 token groups fill a page exactly; ~16 MB).
+    /// The flash path defaults to legacy so the pinned functional-plane
+    /// timing is unchanged; `EngineConfig::flash_path` / the CLI's
+    /// `--flash-*` flags opt into the tuned die-interleaved path.
     pub fn micro() -> Self {
         let flash = FlashSpec {
             channels: 4,
@@ -583,6 +601,7 @@ impl CsdSpec {
             read_us: 50.0,
             program_us: 600.0,
             erase_ms: 3.0,
+            path: crate::config::hw::FlashPathConfig::legacy(),
         };
         CsdSpec {
             name: "micro-csd",
@@ -598,7 +617,7 @@ impl CsdSpec {
             // (hot_tier_bytes 0 keeps the paper's flash-only baseline)
             dram_bw: 8e9,
             hot_tier_bytes: 0,
-            kv_capacity_bytes: flash.capacity_bytes() as u64,
+            kv_capacity_bytes: flash.usable_capacity_bytes() as u64,
         }
     }
 }

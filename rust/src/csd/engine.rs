@@ -36,6 +36,14 @@ pub enum AttnMode {
 }
 
 /// Per-unit time breakdown of one engine invocation (Fig. 16 rows).
+///
+/// Semantics: every field is the *wall-clock wait* one invocation spent
+/// on that unit — the time the step's critical path could see.
+/// Concurrent activity within an invocation counts once: the K and V
+/// fetches overlap, so `flash_read` and `dram_hit` each take the max of
+/// the two waits, never their sum.  `merge` then sums invocations
+/// (heads run back to back through the shared units), which is what the
+/// Fig. 16 percentage rows divide.
 #[derive(Debug, Clone, Default)]
 pub struct UnitBreakdown {
     pub argtopk: Time,
@@ -89,11 +97,44 @@ type DenseStats = (Vec<f32>, f32, f32, Vec<f32>, Time, UnitBreakdown);
 /// Result of a tier-aware token-group fetch.
 struct TieredFetch {
     rows: Vec<(usize, Vec<f32>)>,
+    /// per-group completion times aligned with `rows` (base-sorted) —
+    /// what the read-compute pipelining consumes
+    group_done: Vec<Time>,
     done: Time,
-    /// DRAM group-buffer service time consumed by hot-tier hits
-    dram_busy: Time,
-    /// wait attributable to flash (misses), relative to issue time
+    /// wall wait attributable to hot-tier hits (latest hit completion
+    /// minus issue time; zero when everything missed)
+    dram_wait: Time,
+    /// wall wait attributable to flash (misses), relative to issue time
     flash_wait: Time,
+}
+
+/// Flash-array utilisation snapshot: the die/channel busy seconds and
+/// the deepest die backlog, surfaced in the serve summary and the
+/// engine-backed bench rows so the placement's effect on the internal
+/// parallelism is visible in the trajectory document.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FlashUtil {
+    pub die_busy_s: Time,
+    pub channel_busy_s: Time,
+    pub die_peak_depth: usize,
+}
+
+impl FlashUtil {
+    pub fn merge(&mut self, o: &FlashUtil) {
+        self.die_busy_s += o.die_busy_s;
+        self.channel_busy_s += o.channel_busy_s;
+        self.die_peak_depth = self.die_peak_depth.max(o.die_peak_depth);
+    }
+}
+
+/// One group's slice of the step-8 kernel work for the pipelined path.
+struct KernelChunk {
+    /// K-page landing time (Logit readiness)
+    k_ready: Time,
+    /// V-page landing time (Attend readiness, once its logits are in)
+    v_ready: Time,
+    logit_flops: f64,
+    attend_flops: f64,
 }
 
 pub struct InstCsd {
@@ -149,6 +190,70 @@ impl InstCsd {
         bytes as f64 / (self.spec.filter_bw_per_channel * self.spec.flash.channels as f64)
     }
 
+    /// Incrementally schedule per-group Logit/Attend kernel chunks as
+    /// the group reads complete (paper Fig. 8's pipelined engine,
+    /// `FlashPathConfig::pipeline`).  Logit chunks chain in K-arrival
+    /// order on one logical kernel; a group's Attend chunk needs its V
+    /// page and its own logits (the online-softmax rescale is folded
+    /// into the final chunk).  Timing only — the functional softmax and
+    /// attend arithmetic are computed exactly as in the barrier path,
+    /// so outputs are bit-identical.  Returns (completion, logit busy,
+    /// attend busy); `floor` is the completion when there is no chunk.
+    fn pipeline_kernels(&mut self, chunks: &[KernelChunk], floor: Time) -> (Time, Time, Time) {
+        let mut order: Vec<usize> = (0..chunks.len()).collect();
+        order.sort_by(|&a, &b| {
+            chunks[a].k_ready.partial_cmp(&chunks[b].k_ready).unwrap().then(a.cmp(&b))
+        });
+        let mut logit_end = vec![0.0; chunks.len()];
+        let mut prev = f64::NEG_INFINITY;
+        let mut logit_busy = 0.0;
+        for &i in &order {
+            let svc = self.kernel_time(chunks[i].logit_flops);
+            let (_, _, e) = self.kernels.schedule(chunks[i].k_ready.max(prev), svc);
+            logit_end[i] = e;
+            prev = e;
+            logit_busy += svc;
+        }
+        let ready: Vec<Time> =
+            (0..chunks.len()).map(|i| chunks[i].v_ready.max(logit_end[i])).collect();
+        let mut order2: Vec<usize> = (0..chunks.len()).collect();
+        order2.sort_by(|&a, &b| ready[a].partial_cmp(&ready[b]).unwrap().then(a.cmp(&b)));
+        let mut done = floor;
+        let mut prev2 = f64::NEG_INFINITY;
+        let mut attend_busy = 0.0;
+        for &i in &order2 {
+            let svc = self.kernel_time(chunks[i].attend_flops);
+            let (_, _, e) = self.kernels.schedule(ready[i].max(prev2), svc);
+            prev2 = e;
+            attend_busy += svc;
+            done = done.max(e);
+        }
+        (done, logit_busy, attend_busy)
+    }
+
+    /// Fold the die/channel busy accumulated since the given marks into
+    /// the per-engine ledger (the utilisation rows next to the unit
+    /// breakdowns).
+    fn ledger_flash_busy(&mut self, die_mark: Time, chan_mark: Time) {
+        let die_d = self.ftl.array.die_busy() - die_mark;
+        if die_d > 0.0 {
+            self.ledger.add("flash_die_busy", die_d);
+        }
+        let chan_d = self.ftl.array.channel_busy() - chan_mark;
+        if chan_d > 0.0 {
+            self.ledger.add("flash_chan_busy", chan_d);
+        }
+    }
+
+    /// Flash-array utilisation counters for this engine.
+    pub fn flash_util(&self) -> FlashUtil {
+        FlashUtil {
+            die_busy_s: self.ftl.array.die_busy(),
+            channel_busy_s: self.ftl.array.channel_busy(),
+            die_peak_depth: self.ftl.array.die_peak_depth(),
+        }
+    }
+
     /// Tier-aware token-group fetch: hot-tier hits are served by the
     /// DRAM group-buffer port and never touch the flash die/channel
     /// FIFOs; misses stream from flash and are read-allocated into the
@@ -164,10 +269,10 @@ impl InstCsd {
         let n = self.ftl.cfg.n;
         let page_bytes = self.spec.flash.page_bytes;
         let sealed = self.ftl.sealed_groups(key);
-        let mut rows: Vec<(usize, Vec<f32>)> = Vec::with_capacity(groups.len());
+        let mut items: Vec<(usize, Vec<f32>, Time)> = Vec::with_capacity(groups.len());
         let mut misses: Vec<usize> = Vec::new();
         let mut done = at;
-        let mut dram_busy = 0.0;
+        let mut dram_done = at;
         let mut flash_wait = 0.0;
         for &g in groups {
             if g >= sealed {
@@ -179,23 +284,23 @@ impl InstCsd {
                 Some(data) => {
                     let svc = page_bytes as f64 / self.spec.dram_bw;
                     let (_, t) = self.dram.schedule(at, svc);
-                    dram_busy += svc;
+                    dram_done = dram_done.max(t);
                     done = done.max(t);
-                    rows.push((g * n, data));
+                    items.push((g * n, data, t));
                 }
                 None => misses.push(g),
             }
         }
         if !misses.is_empty() {
-            let (fetched, t) = self.ftl.fetch_token_groups(key, kind, &misses, at)?;
+            let (fetched, t) = self.ftl.fetch_token_groups_timed(key, kind, &misses, at)?;
             flash_wait = t - at;
             done = done.max(t);
             let stream_len = self.ftl.tokens_appended(key);
-            for (base, data) in &fetched {
-                let g = *base / n;
+            for gf in fetched {
+                let g = gf.base / n;
                 if g < sealed {
                     let id = PageId { key, kind, group: g as u32 };
-                    let (resident, evicted) = self.tier.admit(id, data.clone(), stream_len);
+                    let (resident, evicted) = self.tier.admit(id, gf.rows.clone(), stream_len);
                     if resident {
                         self.ftl.counters.promotions += 1;
                     }
@@ -203,11 +308,18 @@ impl InstCsd {
                         self.ftl.demote_group(ev.key, ev.kind, ev.group as usize);
                     }
                 }
+                items.push((gf.base, gf.rows, gf.done));
             }
-            rows.extend(fetched);
         }
-        rows.sort_by_key(|&(base, _)| base);
-        Ok(TieredFetch { rows, done, dram_busy, flash_wait })
+        items.sort_by_key(|it| it.0);
+        let dram_wait = (dram_done - at).max(0.0);
+        let mut rows = Vec::with_capacity(items.len());
+        let mut group_done = Vec::with_capacity(items.len());
+        for (base, data, t) in items {
+            rows.push((base, data));
+            group_done.push(t);
+        }
+        Ok(TieredFetch { rows, group_done, done, dram_wait, flash_wait })
     }
 
     /// Mask token positions of `slot` out of all future attention
@@ -393,11 +505,13 @@ impl InstCsd {
             .collect();
 
         let t0 = at;
+        let die_mark = self.ftl.array.die_busy();
+        let chan_mark = self.ftl.array.channel_busy();
         let fk = self.fetch_token_groups_tiered(key, KvKind::K, &groups, t0)?;
         let fv = self.fetch_token_groups_tiered(key, KvKind::V, &groups, t0)?;
         let t_read = fk.done.max(fv.done);
         bd.flash_read = fk.flash_wait.max(fv.flash_wait);
-        bd.dram_hit = fk.dram_busy + fv.dram_busy;
+        bd.dram_hit = fk.dram_wait.max(fv.dram_wait);
 
         let rows = n_groups * n;
         let kmat = assemble_rows(&fk.rows, rows, d);
@@ -451,18 +565,39 @@ impl InstCsd {
             s[..len].to_vec()
         };
 
-        // Logit GeMV (2*len*d) + softmax + Attend GeMV (2*len*d)
-        let logit_t = self.kernel_time(2.0 * len as f64 * d as f64);
-        let attend_t = self.kernel_time(2.0 * len as f64 * d as f64);
-        let (_, _, t1) = self.kernels.schedule(t_read, logit_t);
-        let (_, _, t2) = self.kernels.schedule(t1, attend_t);
-        bd.logit = logit_t;
-        bd.attend = attend_t;
+        // Logit GeMV (2*len*d) + softmax + Attend GeMV (2*len*d): one
+        // barrier'd pass behind the full fetch (legacy), or per-group
+        // chunks pipelined behind the page reads as they land
+        let (t2, logit_busy, attend_busy) = if self.spec.flash.path.pipeline {
+            let chunks: Vec<KernelChunk> = groups
+                .iter()
+                .enumerate()
+                .map(|(i, &g)| {
+                    let toks = n.min(len - g * n) as f64;
+                    KernelChunk {
+                        k_ready: fk.group_done[i],
+                        v_ready: fv.group_done[i],
+                        logit_flops: 2.0 * toks * d as f64,
+                        attend_flops: 2.0 * toks * d as f64,
+                    }
+                })
+                .collect();
+            self.pipeline_kernels(&chunks, t_read)
+        } else {
+            let logit_t = self.kernel_time(2.0 * len as f64 * d as f64);
+            let attend_t = self.kernel_time(2.0 * len as f64 * d as f64);
+            let (_, _, t1) = self.kernels.schedule(t_read, logit_t);
+            let (_, _, t2) = self.kernels.schedule(t1, attend_t);
+            (t2, logit_t, attend_t)
+        };
+        bd.logit = logit_busy;
+        bd.attend = attend_busy;
         self.ledger.add("flash_read", bd.flash_read);
         if bd.dram_hit > 0.0 {
             self.ledger.add("dram_hit", bd.dram_hit);
         }
-        self.ledger.add("kernel", logit_t + attend_t);
+        self.ledger.add("kernel", logit_busy + attend_busy);
+        self.ledger_flash_busy(die_mark, chan_mark);
         Ok((out, mx, sum_exp, weights, t2, bd))
     }
 
@@ -479,6 +614,8 @@ impl InstCsd {
         let mut bd = UnitBreakdown::default();
         let page_bytes = self.spec.flash.page_bytes;
         let dropped = self.dropped.get(&key.slot).cloned().unwrap_or_default();
+        let die_mark = self.ftl.array.die_busy();
+        let chan_mark = self.ftl.array.channel_busy();
 
         // ---- step 1: argtopk over |q| (d elements)
         let t_top1 = self.argtopk_time(d);
@@ -550,9 +687,7 @@ impl InstCsd {
         let fv = self.fetch_token_groups_tiered(key, KvKind::V, &groups, t2)?;
         let t_fetch2 = fk.done.max(fv.done);
         bd.flash_read += fk.flash_wait.max(fv.flash_wait);
-        bd.dram_hit += fk.dram_busy + fv.dram_busy;
-        let t_filt2 = self.filter_time(2 * groups.len() * page_bytes);
-        bd.nfc_filter += t_filt2;
+        bd.dram_hit += fk.dram_wait.max(fv.dram_wait);
 
         // ---- steps 9-11: Kernel #2 — exact attention over kept tokens
         let rows = pad_to(len, n);
@@ -581,12 +716,48 @@ impl InstCsd {
         for c in 0..d {
             out[c] = alpha * out[c] + (1.0 - alpha) * vbar[c];
         }
-        let kept = tok_mask.iter().filter(|&&b| b).count();
-        let k2_flops = 2.0 * 2.0 * kept as f64 * d as f64;
-        let k2_t = self.kernel_time(k2_flops);
-        let (_, _, t_k2) = self.kernels.schedule(t_fetch2 + t_filt2, k2_t);
-        bd.logit = k2_t / 2.0;
-        bd.attend = k2_t / 2.0;
+        // Kernel #2 timing: one barrier'd pass after the whole fetch +
+        // filter (legacy), or per-group chunks pipelined behind the page
+        // reads — each group becomes ready one per-page filter pass
+        // after its K/V pages land.  The filter wall-wait follows suit:
+        // barrier'd, the whole 2*G-page pass sits on the critical path;
+        // pipelined, the passes overlap the reads and only one page's
+        // filter depth delays the last chunk.
+        let t_k2 = if self.spec.flash.path.pipeline {
+            // one page streams through its OWN channel's filter at the
+            // per-channel line rate (filter_time's aggregate rate only
+            // applies to batches striped across every channel)
+            let pf = page_bytes as f64 / self.spec.filter_bw_per_channel;
+            bd.nfc_filter += pf;
+            let chunks: Vec<KernelChunk> = groups
+                .iter()
+                .enumerate()
+                .map(|(i, &g)| {
+                    let hi = ((g + 1) * n).min(tok_mask.len());
+                    let kept_g = tok_mask[g * n..hi].iter().filter(|&&b| b).count() as f64;
+                    KernelChunk {
+                        k_ready: fk.group_done[i] + pf,
+                        v_ready: fv.group_done[i] + pf,
+                        logit_flops: 2.0 * kept_g * d as f64,
+                        attend_flops: 2.0 * kept_g * d as f64,
+                    }
+                })
+                .collect();
+            let (t_k2, logit_busy, attend_busy) = self.pipeline_kernels(&chunks, t_fetch2);
+            bd.logit = logit_busy;
+            bd.attend = attend_busy;
+            t_k2
+        } else {
+            let t_filt2 = self.filter_time(2 * groups.len() * page_bytes);
+            bd.nfc_filter += t_filt2;
+            let kept = tok_mask.iter().filter(|&&b| b).count();
+            let k2_flops = 2.0 * 2.0 * kept as f64 * d as f64;
+            let k2_t = self.kernel_time(k2_flops);
+            let (_, _, t_k2) = self.kernels.schedule(t_fetch2 + t_filt2, k2_t);
+            bd.logit = k2_t / 2.0;
+            bd.attend = k2_t / 2.0;
+            t_k2
+        };
         self.tier.importance.accumulate(key.slot, &s[..len]);
 
         self.ledger.add("argtopk", bd.argtopk);
@@ -596,6 +767,7 @@ impl InstCsd {
         }
         self.ledger.add("nfc_filter", bd.nfc_filter);
         self.ledger.add("kernel", bd.logit0 + bd.logit + bd.attend);
+        self.ledger_flash_busy(die_mark, chan_mark);
         Ok((out, t_k2, bd))
     }
 

@@ -12,5 +12,5 @@ pub mod engine;
 pub mod nvme;
 pub mod resources;
 
-pub use engine::{AttnMode, InstCsd, UnitBreakdown};
+pub use engine::{AttnMode, FlashUtil, InstCsd, UnitBreakdown};
 pub use nvme::{CsdCommand, CsdCompletion, NvmeQueue};

@@ -55,6 +55,17 @@ impl Geometry {
         self.block_channel(b) * self.dies_per_channel + self.block_die(b)
     }
 
+    /// Plane within the die (the next id dimension after channel, die).
+    pub fn block_plane(&self, b: BlockAddr) -> usize {
+        (b.0 / (self.channels * self.dies_per_channel)) % self.planes_per_die
+    }
+
+    /// Global plane index (channel, die, plane) for the plane-split
+    /// read pipelines of the die-aware data path.
+    pub fn block_plane_global(&self, b: BlockAddr) -> usize {
+        self.block_die_global(b) * self.planes_per_die + self.block_plane(b)
+    }
+
     pub fn page_of(&self, b: BlockAddr, page_in_block: usize) -> Ppa {
         debug_assert!(page_in_block < self.pages_per_block);
         Ppa(b.0 * self.pages_per_block + page_in_block)
@@ -74,6 +85,10 @@ impl Geometry {
 
     pub fn page_die_global(&self, p: Ppa) -> usize {
         self.block_die_global(self.block_of(p))
+    }
+
+    pub fn page_plane_global(&self, p: Ppa) -> usize {
+        self.block_plane_global(self.block_of(p))
     }
 }
 

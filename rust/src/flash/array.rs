@@ -6,16 +6,24 @@
 //! * pages within a block must be programmed sequentially (NAND constraint);
 //! * erase operates on whole blocks.
 //!
-//! Timing: a read occupies the page's die for tR, then its channel for the
-//! transfer; a program occupies the channel first, then the die for tProg;
-//! an erase occupies the die for tBERS.  Dies and channels are FIFO
-//! resources, so contention (the thing the FTL's striping fights) emerges
-//! naturally.
+//! Timing: a read occupies the page's read unit for tR, then its channel
+//! for the transfer; a program occupies the channel first, then the unit
+//! for tProg; an erase occupies the unit for tBERS.  Units and channels
+//! are FIFO resources, so contention (the thing the FTL's striping
+//! fights) emerges naturally.
+//!
+//! The read unit's granularity follows the configured data path
+//! (`FlashSpec::path`): the legacy channel-placement path keeps the
+//! pre-refactor die-granular pipelines (planes serialize on their die);
+//! the die-aware path splits them per plane, modelling multi-plane read
+//! pipelining — the parallelism the die-interleaved placement exists to
+//! exploit.
 
 use super::addr::{BlockAddr, Geometry, Ppa};
-use crate::config::hw::FlashSpec;
+use crate::config::hw::{FlashPlacement, FlashReadSched, FlashSpec};
 use crate::sim::{FifoResource, Time};
 use anyhow::{bail, Result};
+use std::collections::BTreeMap;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum PageState {
@@ -41,7 +49,9 @@ pub struct FlashArray {
     data: Vec<Option<Box<[u8]>>>,
     /// next sequential programmable page per block
     write_ptr: Vec<u16>,
-    dies: Vec<FifoResource>,
+    /// tR/tProg/tBERS pipelines: one per die (legacy channel placement)
+    /// or one per plane (die-aware placement)
+    units: Vec<FifoResource>,
     channels: Vec<FifoResource>,
     pub counters: FlashCounters,
 }
@@ -50,15 +60,19 @@ impl FlashArray {
     pub fn new(spec: FlashSpec) -> Self {
         let geo = Geometry::of(&spec);
         let pages = geo.total_pages();
+        let n_units = spec.channels
+            * spec.dies_per_channel
+            * match spec.path.placement {
+                FlashPlacement::Channel => 1,
+                FlashPlacement::Die => spec.planes_per_die,
+            };
         FlashArray {
             spec,
             geo,
             state: vec![PageState::Erased; pages],
             data: (0..pages).map(|_| None).collect(),
             write_ptr: vec![0; geo.total_blocks()],
-            dies: (0..spec.channels * spec.dies_per_channel)
-                .map(|_| FifoResource::new())
-                .collect(),
+            units: (0..n_units).map(|_| FifoResource::new()).collect(),
             channels: (0..spec.channels).map(|_| FifoResource::new()).collect(),
             counters: FlashCounters::default(),
         }
@@ -66,6 +80,14 @@ impl FlashArray {
 
     fn xfer_time(&self, bytes: usize) -> Time {
         bytes as f64 / self.spec.channel_bw
+    }
+
+    /// The FIFO pipeline a page's array operation occupies.
+    fn unit_of(&self, b: BlockAddr) -> usize {
+        match self.spec.path.placement {
+            FlashPlacement::Channel => self.geo.block_die_global(b),
+            FlashPlacement::Die => self.geo.block_plane_global(b),
+        }
     }
 
     /// Program the next sequential page of `block` with `data`
@@ -94,10 +116,10 @@ impl FlashArray {
 
         // channel transfer, then die program
         let ch = self.geo.page_channel(ppa);
-        let die = self.geo.page_die_global(ppa);
+        let unit = self.unit_of(block);
         let xfer = self.xfer_time(self.spec.page_bytes);
         let (_, ch_done) = self.channels[ch].schedule(at, xfer);
-        let (_, done) = self.dies[die].schedule(ch_done, self.spec.program_us * 1e-6);
+        let (_, done) = self.units[unit].schedule(ch_done, self.spec.program_us * 1e-6);
         Ok((ppa, done))
     }
 
@@ -110,11 +132,11 @@ impl FlashArray {
             PageState::Programmed | PageState::Invalid => {}
             PageState::Erased => bail!("read of erased page {}", ppa.0),
         }
-        let die = self.geo.page_die_global(ppa);
+        let unit = self.unit_of(self.geo.block_of(ppa));
         let ch = self.geo.page_channel(ppa);
         let xfer = self.xfer_time(self.spec.page_bytes);
-        let (_, die_done) = self.dies[die].schedule(at, self.spec.read_us * 1e-6);
-        let (_, done) = self.channels[ch].schedule(die_done, xfer);
+        let (_, unit_done) = self.units[unit].schedule(at, self.spec.read_us * 1e-6);
+        let (_, done) = self.channels[ch].schedule(unit_done, xfer);
         self.counters.page_reads += 1;
         self.counters.bytes_read += self.spec.page_bytes as u64;
         Ok((self.data[ppa.0].as_deref().unwrap(), done))
@@ -124,12 +146,53 @@ impl FlashArray {
     /// the slowest page (per-die/per-channel FIFO contention applies).
     /// This is the primitive whose latency the dual-step loading optimises.
     pub fn read_batch(&mut self, ppas: &[Ppa], at: Time) -> Result<Time> {
-        let mut done = at;
-        for &p in ppas {
-            let (_, t) = self.read(p, at)?;
-            done = done.max(t);
+        let times = self.read_batch_times(ppas, at)?;
+        Ok(times.iter().fold(at, |a, &t| a.max(t)))
+    }
+
+    /// Read a batch of pages under the configured issue scheduler,
+    /// returning per-page completion times aligned with `ppas` (the
+    /// read-compute pipelining consumes these incrementally).
+    ///
+    /// `Fifo` issues in caller order — exactly the legacy `read_batch`.
+    /// `Interleave` buckets the batch by read unit (sorted by PPA within
+    /// a bucket) and issues round-robin, one page per unit per round, so
+    /// one hot die no longer convoys the whole fetch.  The order is a
+    /// pure function of the PPAs — never of hash-map iteration order —
+    /// so replays are deterministic.
+    pub fn read_batch_times(&mut self, ppas: &[Ppa], at: Time) -> Result<Vec<Time>> {
+        let mut times = vec![at; ppas.len()];
+        match self.spec.path.sched {
+            FlashReadSched::Fifo => {
+                for (i, &p) in ppas.iter().enumerate() {
+                    let (_, t) = self.read(p, at)?;
+                    times[i] = t;
+                }
+            }
+            FlashReadSched::Interleave => {
+                let mut buckets: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+                for (i, &p) in ppas.iter().enumerate() {
+                    if p.0 >= self.geo.total_pages() {
+                        bail!("read: ppa {} out of range", p.0);
+                    }
+                    let u = self.unit_of(self.geo.block_of(p));
+                    buckets.entry(u).or_default().push(i);
+                }
+                for idxs in buckets.values_mut() {
+                    idxs.sort_by_key(|&i| (ppas[i].0, i));
+                }
+                let rounds = buckets.values().map(|v| v.len()).max().unwrap_or(0);
+                for round in 0..rounds {
+                    for idxs in buckets.values() {
+                        if let Some(&i) = idxs.get(round) {
+                            let (_, t) = self.read(ppas[i], at)?;
+                            times[i] = t;
+                        }
+                    }
+                }
+            }
         }
-        Ok(done)
+        Ok(times)
     }
 
     /// Copy of page data without timing (for assembling after read_batch;
@@ -162,8 +225,8 @@ impl FlashArray {
         }
         self.write_ptr[block.0] = 0;
         self.counters.block_erases += 1;
-        let die = self.geo.block_die_global(block);
-        let (_, done) = self.dies[die].schedule(at, self.spec.erase_ms * 1e-3);
+        let unit = self.unit_of(block);
+        let (_, done) = self.units[unit].schedule(at, self.spec.erase_ms * 1e-3);
         Ok(done)
     }
 
@@ -181,7 +244,7 @@ impl FlashArray {
 
     /// All work drained at...
     pub fn drained(&self) -> Time {
-        self.dies
+        self.units
             .iter()
             .map(|d| d.free_at())
             .chain(self.channels.iter().map(|c| c.free_at()))
@@ -193,12 +256,20 @@ impl FlashArray {
         self.channels.iter().map(|c| c.busy()).sum()
     }
 
+    /// Total seconds the die pipelines were busy (summed over the read
+    /// units, so a die's planes contribute their combined busy time).
     pub fn die_busy(&self) -> Time {
-        self.dies.iter().map(|d| d.busy()).sum()
+        self.units.iter().map(|d| d.busy()).sum()
+    }
+
+    /// Deepest backlog any die/plane pipeline ever saw — the convoy the
+    /// interleaved read scheduler flattens.
+    pub fn die_peak_depth(&self) -> usize {
+        self.units.iter().map(|d| d.peak_depth()).max().unwrap_or(0)
     }
 
     pub fn reset_timing(&mut self) {
-        self.dies.iter_mut().for_each(|d| d.reset());
+        self.units.iter_mut().for_each(|d| d.reset());
         self.channels.iter_mut().for_each(|c| c.reset());
     }
 }

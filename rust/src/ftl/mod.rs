@@ -16,7 +16,7 @@
 
 pub mod layout;
 
-use crate::config::hw::FlashSpec;
+use crate::config::hw::{FlashPlacement, FlashSpec};
 use crate::flash::{BlockAddr, FlashArray, Ppa};
 use crate::sim::Time;
 use anyhow::{anyhow, bail, Result};
@@ -114,14 +114,31 @@ pub struct FtlCounters {
     pub dropped_groups: u64,
 }
 
+/// One sealed token group fetched back from the data path: its first
+/// token index, decoded rows, and the completion time of *this group's*
+/// page read (tail groups complete at issue time).  The per-group times
+/// feed the engine's read-compute pipelining; `base`-sorted.
+#[derive(Debug, Clone)]
+pub struct GroupFetch {
+    pub base: usize,
+    pub rows: Vec<f32>,
+    pub done: Time,
+}
+
 pub struct KvFtl {
     pub cfg: FtlConfig,
     pub array: FlashArray,
     tokens_per_emb_page: usize,
     /// free blocks per channel (striping pool)
     free: Vec<VecDeque<BlockAddr>>,
-    /// open (partially programmed) block per channel
+    /// open (partially programmed) block per allocation unit: one per
+    /// channel under the legacy channel placement, one per (channel,
+    /// die) — indexed `ch * dies_per_channel + die` — under the
+    /// die-interleaved placement
     open: Vec<Option<BlockAddr>>,
+    /// per-channel die round-robin cursor (die placement only):
+    /// successive pages staged on a channel rotate across its dies
+    next_die: Vec<usize>,
     token_map: HashMap<(StreamKey, KvKind, u32), Ppa>,
     emb_map: HashMap<(StreamKey, u16, u32), Ppa>,
     rev: HashMap<Ppa, PageTag>,
@@ -146,12 +163,17 @@ impl KvFtl {
             let ba = BlockAddr(b);
             free[geo.block_channel(ba)].push_back(ba);
         }
+        let units = match spec.path.placement {
+            FlashPlacement::Channel => spec.channels,
+            FlashPlacement::Die => spec.channels * spec.dies_per_channel,
+        };
         Ok(KvFtl {
             tokens_per_emb_page: cfg.tokens_per_emb_page(&spec),
             cfg,
             array,
             free,
-            open: vec![None; spec.channels],
+            open: vec![None; units],
+            next_die: vec![0; spec.channels],
             token_map: HashMap::new(),
             emb_map: HashMap::new(),
             rev: HashMap::new(),
@@ -168,39 +190,87 @@ impl KvFtl {
 
     // ---- block allocation / GC -------------------------------------------
 
-    fn alloc_block(&mut self, ch: usize, at: Time) -> Result<(BlockAddr, Time)> {
-        if let Some(b) = self.free[ch].pop_front() {
-            return Ok((b, at));
-        }
+    /// Pull a free block on `ch`; `die` steers the allocation to one
+    /// die of the channel (die placement), `None` takes the channel
+    /// pool's head (the legacy channel placement).  The die is a
+    /// preference, not a capacity constraint: when the preferred die is
+    /// out of blocks the allocation falls back to any die on the
+    /// channel.
+    ///
+    /// One free block per channel is held back as the GC relocation
+    /// reserve.  GC fires exactly when an open block has just filled,
+    /// so without the reserve a victim's valid pages would have nowhere
+    /// to land (the pre-refactor allocator dead-ended here).  Normal
+    /// allocation therefore garbage-collects early and keeps collecting
+    /// until the pool is back above the reserve — a relocation may
+    /// consume it, and each round returns its erased victim — before
+    /// handing out the caller's block.
+    fn alloc_block(
+        &mut self,
+        ch: usize,
+        die: Option<usize>,
+        at: Time,
+    ) -> Result<(BlockAddr, Time)> {
         if self.gc_active {
-            bail!("channel {ch}: out of blocks during GC relocation (device full)");
+            // relocation allocation: may take the reserve
+            return self.pop_free(ch, die).map(|b| (b, at)).ok_or_else(|| {
+                anyhow!("channel {ch}: out of blocks during GC relocation (device full)")
+            });
         }
-        // GC: reclaim the most-invalid full block on this channel.  Fully
-        // valid blocks are not candidates — relocating them frees nothing.
         let geo = self.array.geo;
-        let candidate = (0..geo.total_blocks())
-            .map(BlockAddr)
-            .filter(|&b| geo.block_channel(b) == ch)
-            .filter(|&b| self.array.programmed_pages(b) == geo.pages_per_block)
-            .filter(|&b| (self.block_valid[b.0] as usize) < geo.pages_per_block)
-            .filter(|&b| self.open[ch] != Some(b))
-            .min_by_key(|&b| self.block_valid[b.0]);
-        let victim = candidate
-            .ok_or_else(|| anyhow!("channel {ch}: no reclaimable block (device full)"))?;
-        self.gc_active = true;
-        let res = self.gc_block(victim, at);
-        self.gc_active = false;
-        let t = res?;
-        self.free[ch]
-            .pop_front()
-            .map(|b| (b, t))
-            .ok_or_else(|| anyhow!("channel {ch}: GC did not free a block"))
+        let mut t = at;
+        loop {
+            if self.free[ch].len() > 1 {
+                if let Some(b) = self.pop_free(ch, die) {
+                    return Ok((b, t));
+                }
+            }
+            // GC: reclaim the most-invalid full block on this channel.
+            // Fully valid blocks are not candidates — relocating them
+            // frees nothing.  A FULL block lingering in an open slot is
+            // fair game (the slot is cleared when the victim is
+            // erased); only the programmed==pages_per_block filter
+            // keeps actively-written blocks off-limits.
+            let candidate = (0..geo.total_blocks())
+                .map(BlockAddr)
+                .filter(|&b| geo.block_channel(b) == ch)
+                .filter(|&b| self.array.programmed_pages(b) == geo.pages_per_block)
+                .filter(|&b| (self.block_valid[b.0] as usize) < geo.pages_per_block)
+                .min_by_key(|&b| self.block_valid[b.0]);
+            let victim = candidate
+                .ok_or_else(|| anyhow!("channel {ch}: no reclaimable block (device full)"))?;
+            self.gc_active = true;
+            let res = self.gc_block(victim, at);
+            self.gc_active = false;
+            t = t.max(res?);
+        }
+    }
+
+    /// Take the first free block of `ch`, preferring the given die (pool
+    /// order, so the legacy `None` path pops exactly the pre-refactor
+    /// block sequence).
+    fn pop_free(&mut self, ch: usize, die: Option<usize>) -> Option<BlockAddr> {
+        if let Some(d) = die {
+            let geo = self.array.geo;
+            if let Some(pos) = self.free[ch].iter().position(|&b| geo.block_die(b) == d) {
+                return self.free[ch].remove(pos);
+            }
+        }
+        self.free[ch].pop_front()
     }
 
     /// Relocate valid pages out of `victim`, erase it, return completion.
+    ///
+    /// The relocation reads are all issued at `at` — the victim's die
+    /// pipeline serializes them at tR cadence — and each page
+    /// re-programs through the normal placement path as soon as its
+    /// read lands, so moves targeting different dies overlap.  Only the
+    /// per-block program order (the NAND sequential-program rule)
+    /// serializes, on the destination open block's pipeline.  The erase
+    /// waits for every move.
     fn gc_block(&mut self, victim: BlockAddr, at: Time) -> Result<Time> {
-        let mut t = at;
         let valid = self.array.valid_pages(victim);
+        let mut moves: Vec<(Ppa, PageTag, Vec<u8>, Time)> = Vec::with_capacity(valid.len());
         for pi in valid {
             let ppa = self.array.geo.page_of(victim, pi);
             let tag = match self.rev.get(&ppa) {
@@ -208,12 +278,18 @@ impl KvFtl {
                 None => continue, // untagged (shouldn't happen) — drop it
             };
             let (data, rt) = {
-                let (d, rt) = self.array.read(ppa, t)?;
+                let (d, rt) = self.array.read(ppa, at)?;
                 (d.to_vec(), rt)
             };
-            // re-program on the same channel (keeps striping invariant)
+            moves.push((ppa, tag, data, rt));
+        }
+        let mut t = at;
+        for (ppa, tag, data, rt) in moves {
+            // re-program on the same channel (keeps striping invariant;
+            // die placement re-rotates via the cursor, preserving the
+            // round-robin spread)
             let ch = self.array.geo.page_channel(ppa);
-            let (new_ppa, wt) = self.program_to_channel(ch, &data, rt)?;
+            let (new_ppa, wt) = self.program_page(ch, &data, rt)?;
             self.retag(tag, new_ppa);
             self.array.invalidate(ppa);
             self.block_valid[victim.0] = self.block_valid[victim.0].saturating_sub(1);
@@ -222,6 +298,14 @@ impl KvFtl {
         }
         let te = self.array.erase(victim, t)?;
         self.block_valid[victim.0] = 0;
+        // the victim may still sit in an open slot (a full block lingers
+        // there until the unit's next program) — clear it so the erased
+        // block is never written through two handles at once
+        for o in self.open.iter_mut() {
+            if *o == Some(victim) {
+                *o = None;
+            }
+        }
         let ch = self.array.geo.block_channel(victim);
         self.free[ch].push_back(victim);
         Ok(te)
@@ -240,16 +324,58 @@ impl KvFtl {
         self.block_valid[self.array.geo.block_of(new_ppa).0] += 1;
     }
 
-    fn program_to_channel(&mut self, ch: usize, data: &[u8], at: Time) -> Result<(Ppa, Time)> {
+    /// Program one page on `ch`, picking the open block per the
+    /// configured placement: the channel's single open block (legacy),
+    /// or the next die in the channel's round-robin rotation so a
+    /// stream's consecutive pages stripe across the channel's dies.
+    fn program_page(&mut self, ch: usize, data: &[u8], at: Time) -> Result<(Ppa, Time)> {
+        let (unit, die) = match self.array.spec.path.placement {
+            FlashPlacement::Channel => (ch, None),
+            FlashPlacement::Die => {
+                let dpc = self.array.spec.dies_per_channel;
+                let ppb = self.array.geo.pages_per_block;
+                let mut d = self.next_die[ch];
+                if self.gc_active {
+                    // steer relocations to a die whose open block still
+                    // has room, so one reserve block covers a whole GC
+                    // round (blind rotation could demand a fresh block
+                    // on every die of the channel mid-GC)
+                    for off in 0..dpc {
+                        let cand = (d + off) % dpc;
+                        if let Some(b) = self.open[ch * dpc + cand] {
+                            if self.array.programmed_pages(b) < ppb {
+                                d = cand;
+                                break;
+                            }
+                        }
+                    }
+                }
+                self.next_die[ch] = (d + 1) % dpc;
+                (ch * dpc + d, Some(d))
+            }
+        };
         let geo = self.array.geo;
         let mut t = at;
-        let block = match self.open[ch] {
+        let block = match self.open[unit] {
             Some(b) if self.array.programmed_pages(b) < geo.pages_per_block => b,
             _ => {
-                let (b, ta) = self.alloc_block(ch, at)?;
+                let (b, ta) = self.alloc_block(ch, die, at)?;
                 t = ta;
-                self.open[ch] = Some(b);
-                b
+                match self.open[unit] {
+                    // the alloc may have run GC whose relocations
+                    // re-opened this very unit — write into that block
+                    // instead of evicting it (which would leak its
+                    // remaining pages) and return the fresh block to
+                    // the head of the pool
+                    Some(ob) if self.array.programmed_pages(ob) < geo.pages_per_block => {
+                        self.free[ch].push_front(b);
+                        ob
+                    }
+                    _ => {
+                        self.open[unit] = Some(b);
+                        b
+                    }
+                }
             }
         };
         let (ppa, done) = self.array.program_next(block, data, t)?;
@@ -269,7 +395,7 @@ impl KvFtl {
             self.block_valid[self.array.geo.block_of(old).0] =
                 self.block_valid[self.array.geo.block_of(old).0].saturating_sub(1);
         }
-        let (ppa, t) = self.program_to_channel(ch, data, at)?;
+        let (ppa, t) = self.program_page(ch, data, at)?;
         self.retag(tag, ppa);
         Ok(t)
     }
@@ -392,6 +518,21 @@ impl KvFtl {
         groups: &[usize],
         at: Time,
     ) -> Result<(Vec<(usize, Vec<f32>)>, Time)> {
+        let (fetched, done) = self.fetch_token_groups_timed(key, kind, groups, at)?;
+        Ok((fetched.into_iter().map(|g| (g.base, g.rows)).collect(), done))
+    }
+
+    /// As [`Self::fetch_token_groups`], but with per-group completion
+    /// times: page reads go through the configured issue scheduler and
+    /// each group reports when *its* page landed, so the engine can
+    /// pipeline kernel work behind the remaining reads.
+    pub fn fetch_token_groups_timed(
+        &mut self,
+        key: StreamKey,
+        kind: KvKind,
+        groups: &[usize],
+        at: Time,
+    ) -> Result<(Vec<GroupFetch>, Time)> {
         let d = self.cfg.d_head;
         let n = self.cfg.n;
         let count = self.tokens_appended(key);
@@ -418,18 +559,19 @@ impl KvFtl {
                 }
                 let mut rows = tail.clone();
                 rows.resize(n * d, 0.0);
-                out.push((base_tok, rows));
+                out.push(GroupFetch { base: base_tok, rows, done: at });
                 self.counters.tail_hits += 1;
             }
         }
         let batch: Vec<Ppa> = ppas.iter().map(|&(_, p)| p).collect();
-        let done = self.array.read_batch(&batch, at)?;
+        let times = self.array.read_batch_times(&batch, at)?;
+        let done = times.iter().fold(at, |a, &t| a.max(t));
         self.counters.page_fetches += batch.len() as u64;
-        for (g, ppa) in ppas {
+        for (i, (g, ppa)) in ppas.into_iter().enumerate() {
             let rows = decode_rows(self.array.page_data(ppa)?, n * d);
-            out.push((g * n, rows));
+            out.push(GroupFetch { base: g * n, rows, done: times[i] });
         }
-        out.sort_by_key(|&(base, _)| base);
+        out.sort_by_key(|g| g.base);
         Ok((out, done))
     }
 
@@ -667,6 +809,15 @@ impl KvFtl {
         self.token_map
             .get(&(key, kind, group as u32))
             .map(|&ppa| self.array.geo.page_channel(ppa))
+    }
+
+    /// Die (within its channel) a sealed token group's page lives on —
+    /// the placement tests check the round-robin spread, including
+    /// after GC relocation.
+    pub fn token_group_die(&self, key: StreamKey, kind: KvKind, group: usize) -> Option<usize> {
+        self.token_map
+            .get(&(key, kind, group as u32))
+            .map(|&ppa| self.array.geo.block_die(self.array.geo.block_of(ppa)))
     }
 }
 

@@ -11,6 +11,7 @@
 
 use anyhow::{bail, Context, Result};
 use instinfer::bench;
+use instinfer::config::hw::{FlashPathConfig, FlashPlacement, FlashReadSched};
 use instinfer::coordinator::{
     run_closed_loop, run_open_loop, EngineConfig, InferenceEngine, SchedConfig,
 };
@@ -41,6 +42,9 @@ fn usage() -> ! {
          \x20       [--hi-frac F]\n\
          \x20       [--hot-kib N] [--tier-policy lru|h2o|pin[:W]]\n\
          \x20       [--drop-on-resume] [--resume-keep K]\n\
+         \x20       [--flash-path legacy|tuned] [--flash-placement channel|die]\n\
+         \x20       [--flash-sched fifo|interleave]\n\
+         \x20       [--flash-pipeline | --flash-no-pipeline]\n\
          \x20       continuous batching; --arrival-rate R runs open-loop\n\
          \x20       Poisson arrivals (R req/s on the simulated clock),\n\
          \x20       otherwise all requests are present at t=0.\n\
@@ -54,11 +58,18 @@ fn usage() -> ! {
          \x20       log-sum-exp merge — context implies dense attention.\n\
          \x20       --hot-kib enables the per-CSD DRAM hot tier;\n\
          \x20       --drop-on-resume keeps only the --resume-keep most\n\
-         \x20       important tokens when a preempted sequence returns\n\
+         \x20       important tokens when a preempted sequence returns.\n\
+         \x20       --flash-path picks the flash KV data path (default\n\
+         \x20       legacy = channel placement + fifo reads + read barrier;\n\
+         \x20       tuned = die-interleaved placement + conflict-aware reads\n\
+         \x20       + read-compute pipelining); the individual --flash-*\n\
+         \x20       flags then override its components, e.g. --flash-path\n\
+         \x20       tuned --flash-no-pipeline ablates only the pipelining\n\
          \x20 bench <target|all> [--json FILE]   regenerate paper figures\n\
          \x20       (fig4 fig5 fig6 fig11 fig12 fig13 fig14 fig15 fig16\n\
-         \x20       fig17a fig17b table1 tier shard serve overlap ablate-group\n\
-         \x20       ablate-dualk ablate-pipeline ablate-p2p ablate-placement);\n\
+         \x20       fig17a fig17b table1 tier shard serve overlap flashpath\n\
+         \x20       ablate-group ablate-dualk ablate-pipeline ablate-p2p\n\
+         \x20       ablate-placement);\n\
          \x20       `bench all --json` emits one stitched trajectory document\n\
          \x20       (schema instinfer-bench-trajectory/v1, run-numbered in CI)\n\
          \x20 golden [--artifacts DIR] [--tol T]\n\
@@ -112,6 +123,22 @@ fn serve(args: &[String]) -> Result<()> {
     let drop_on_resume = has_flag(args, "--drop-on-resume");
     let resume_keep: usize = flag_value(args, "--resume-keep").unwrap_or("0").parse()?;
     let overlap = has_flag(args, "--overlap");
+    let mut flash_path = match flag_value(args, "--flash-path") {
+        Some(v) => FlashPathConfig::parse(v)?,
+        None => FlashPathConfig::legacy(),
+    };
+    if let Some(v) = flag_value(args, "--flash-placement") {
+        flash_path.placement = FlashPlacement::parse(v)?;
+    }
+    if let Some(v) = flag_value(args, "--flash-sched") {
+        flash_path.sched = FlashReadSched::parse(v)?;
+    }
+    if has_flag(args, "--flash-pipeline") {
+        flash_path.pipeline = true;
+    }
+    if has_flag(args, "--flash-no-pipeline") {
+        flash_path.pipeline = false;
+    }
     let arrival_rate: Option<f64> = match flag_value(args, "--arrival-rate") {
         Some(v) => Some(v.parse().context("--arrival-rate")?),
         None => None,
@@ -134,7 +161,8 @@ fn serve(args: &[String]) -> Result<()> {
     }
     let cfg = EngineConfig::micro_for(&meta, n_csds, sparse)
         .tiered(TierConfig { hot_bytes: hot_kib * 1024, policy: tier_policy })
-        .sharded(shard_policy);
+        .sharded(shard_policy)
+        .flash_path(flash_path);
     let mut engine = InferenceEngine::new(rt, cfg)?;
 
     let mut wg = WorkloadGen::new(42, meta.vocab, meta.max_seq, profile,
@@ -212,6 +240,14 @@ fn serve(args: &[String]) -> Result<()> {
             100.0 * u.gpu_merge / u.total(),
         );
     }
+    let fu = engine.flash_util();
+    println!(
+        "flash path {}: die busy {:.6}s, channel busy {:.6}s, peak die queue {}",
+        flash_path.label(),
+        fu.die_busy_s,
+        fu.channel_busy_s,
+        fu.die_peak_depth,
+    );
     if engine.shards.n_csds() > 1 {
         let st = &engine.shards.stats;
         let ck = &engine.shards.clock;

@@ -581,6 +581,16 @@ impl ShardCoordinator {
         TierStats::merged(self.queues.iter().map(|q| &q.csd.tier.stats))
     }
 
+    /// Aggregate flash-array utilisation across the shards (busy times
+    /// sum; the peak die queue depth takes the worst device).
+    pub fn flash_util(&self) -> crate::csd::FlashUtil {
+        let mut u = crate::csd::FlashUtil::default();
+        for q in &self.queues {
+            u.merge(&q.csd.flash_util());
+        }
+        u
+    }
+
     /// Per-shard hot-tier statistics (the tier dashboard's per-device
     /// rows).
     pub fn per_shard_tier_stats(&self) -> Vec<TierStats> {

@@ -18,6 +18,10 @@ pub struct FifoResource {
     free_at: Time,
     busy: Time,
     jobs: u64,
+    /// completion times of jobs still in the system (waiting or in
+    /// service) relative to the last arrival — pruned on each schedule
+    in_system: Vec<Time>,
+    peak_depth: usize,
 }
 
 impl FifoResource {
@@ -34,6 +38,9 @@ impl FifoResource {
         self.free_at = end;
         self.busy += service;
         self.jobs += 1;
+        self.in_system.retain(|&e| e > arrival);
+        self.in_system.push(end);
+        self.peak_depth = self.peak_depth.max(self.in_system.len());
         (start, end)
     }
 
@@ -48,6 +55,13 @@ impl FifoResource {
 
     pub fn jobs(&self) -> u64 {
         self.jobs
+    }
+
+    /// Deepest backlog ever observed at an arrival instant (jobs waiting
+    /// plus the one in service) — the convoy signature the conflict-aware
+    /// read scheduler is meant to flatten.
+    pub fn peak_depth(&self) -> usize {
+        self.peak_depth
     }
 
     pub fn reset(&mut self) {

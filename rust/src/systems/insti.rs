@@ -94,9 +94,29 @@ pub fn csd_layer_step(cfg: &SystemConfig, b: usize, s: usize, heads: usize) -> C
 
     let csd = &cfg.csd;
     // sustained internal rate is the aggregated channel bandwidth (the
-    // paper's 11.2 GB/s; multi-plane die reads keep the dies off the
-    // critical path) plus one array-read latency to first byte
-    let t_flash = flash_bytes / csd.flash.internal_bw() + csd.flash.read_us * 1e-6;
+    // paper's 11.2 GB/s) plus one array-read latency to first byte —
+    // PROVIDED the data path keeps every die's tR pipeline busy.  The
+    // derate below models the flash microarchitecture (cf. the DES
+    // engine's die/plane FIFOs): channel placement leaves one die per
+    // channel on the critical path, so the sustained rate collapses by
+    // the die x plane parallelism; die placement with FIFO issue still
+    // convoys about half the batch behind the hottest die.
+    let path = csd.flash.path;
+    let die_par = (csd.flash.dies_per_channel * csd.flash.planes_per_die).max(1) as f64;
+    let place_f = match path.placement {
+        crate::config::hw::FlashPlacement::Die => match path.sched {
+            crate::config::hw::FlashReadSched::Interleave => 1.0,
+            crate::config::hw::FlashReadSched::Fifo => {
+                if die_par > 1.0 {
+                    0.5
+                } else {
+                    1.0
+                }
+            }
+        },
+        crate::config::hw::FlashPlacement::Channel => 1.0 / die_par,
+    };
+    let t_flash = flash_bytes / (csd.flash.internal_bw() * place_f) + csd.flash.read_us * 1e-6;
     let t_kernel = flops / csd.engine_flops;
     let t_filter = flash_bytes / (csd.filter_bw_per_channel * csd.flash.channels as f64);
     let t_argtopk = match sp {
@@ -107,9 +127,11 @@ pub fn csd_layer_step(cfg: &SystemConfig, b: usize, s: usize, heads: usize) -> C
     // pipeline: the kernels and NFC filters consume pages as they stream,
     // but page-batch synchronisation exposes ~25% of their time as stalls
     // (calibrated against Fig. 14's 80.7% KV-access share; the functional
-    // engine shows the same page-boundary bubbles)
+    // engine shows the same page-boundary bubbles).  Without read-compute
+    // pipelining the kernels and filters sit fully behind the reads.
     const PIPE_STALL: f64 = 0.25;
-    let time = t_argtopk + t_flash + PIPE_STALL * (t_kernel + t_filter);
+    let stall = if path.pipeline { PIPE_STALL } else { 1.0 };
+    let time = t_argtopk + t_flash + stall * (t_kernel + t_filter);
 
     let (logit0, logit, attend) = match sp {
         Some(sp) => {
@@ -328,5 +350,29 @@ mod tests {
         let cfg = SystemConfig::paper_base(OffloadPolicy::InStorage);
         let st = csd_layer_step(&cfg, 256, 1536, cfg.model.n_heads);
         assert!(st.units.flash_read > st.units.logit + st.units.attend);
+    }
+
+    #[test]
+    fn flash_path_derates_order_legacy_below_tuned() {
+        use crate::config::hw::{FlashPathConfig, FlashPlacement, FlashReadSched};
+        // zynq7045's default IS the tuned path (the paper's engine), so
+        // the calibrated numbers above are the tuned numbers
+        let tuned = SystemConfig::paper_base(OffloadPolicy::InStorage);
+        assert_eq!(tuned.csd.flash.path, FlashPathConfig::tuned());
+        let mut legacy = tuned.clone();
+        legacy.csd.flash.path = FlashPathConfig::legacy();
+        let mut mid = tuned.clone();
+        mid.csd.flash.path = FlashPathConfig {
+            placement: FlashPlacement::Die,
+            sched: FlashReadSched::Fifo,
+            pipeline: true,
+        };
+        let tt = csd_layer_step(&tuned, 64, 1536, tuned.model.n_heads).time;
+        let mt = csd_layer_step(&mid, 64, 1536, mid.model.n_heads).time;
+        let lt = csd_layer_step(&legacy, 64, 1536, legacy.model.n_heads).time;
+        assert!(tt < mt && mt < lt, "tuned {tt} !< die/fifo {mt} !< legacy {lt}");
+        // the channel placement's collapse scales with die x plane
+        // parallelism (4 dies x 2 planes on the paper spec)
+        assert!(lt > 4.0 * tt, "legacy {lt} should be >4x tuned {tt}");
     }
 }

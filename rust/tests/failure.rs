@@ -1,7 +1,7 @@
 //! Failure injection and robustness: the coordinator and substrates must
 //! fail loudly and recover cleanly, never corrupt state.
 
-use instinfer::config::hw::FlashSpec;
+use instinfer::config::hw::{FlashPathConfig, FlashSpec};
 use instinfer::csd::{AttnMode, InstCsd};
 use instinfer::ftl::{FtlConfig, KvFtl, StreamKey};
 use instinfer::util::prop::check;
@@ -25,6 +25,7 @@ fn device_full_is_reported_not_corrupted() {
         read_us: 10.0,
         program_us: 100.0,
         erase_ms: 1.0,
+        path: FlashPathConfig::legacy(),
     };
     let mut ftl = KvFtl::new(spec, FtlConfig::micro_head()).unwrap();
     let mut rng = Rng::new(1);
