@@ -8,35 +8,32 @@
 //! and SparF attention modes.
 //!
 //!     cargo run --release --example serve_offline -- --batch 8 --steps 16
+//!
+//! Flags are the shared [`ServeOpts`] serve surface (`--requests`,
+//! `--batch`, `--gen`/`--steps`, ...); the dense/sparse sweep below
+//! overrides `--sparse` per mode.
 
 use instinfer::coordinator::{
-    run_closed_loop, EngineConfig, InferenceEngine, OfflineBatcher, SchedConfig, Sequence,
-    SlotManager,
+    run_closed_loop, InferenceEngine, OfflineBatcher, Sequence, ServeOpts, SlotManager,
 };
 use instinfer::runtime::Runtime;
 use instinfer::util::stats::percentile;
 use instinfer::workload::{LengthProfile, WorkloadGen};
 
-fn flag(args: &[String], name: &str, default: usize) -> usize {
-    args.iter()
-        .position(|a| a == name)
-        .and_then(|i| args.get(i + 1))
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(default)
-}
-
-fn run_mode(dir: &str, sparse: bool, n_req: usize, batch: usize, gen: usize) -> anyhow::Result<()> {
+fn run_mode(dir: &str, opts: &ServeOpts, sparse: bool) -> anyhow::Result<()> {
     let rt = Runtime::open(dir)?;
     let meta = rt.manifest.model.clone();
     let buckets = rt.manifest.batch_buckets.clone();
     rt.warmup()?;
-    let cfg = EngineConfig::micro_for(&meta, 2, sparse);
-    let mut engine = InferenceEngine::new(rt, cfg)?;
+    let mut mode_opts = opts.clone();
+    mode_opts.sparse = sparse;
+    let mut engine = InferenceEngine::new(rt, mode_opts.engine_config(&meta))?;
+    let gen = opts.gen;
     let mut wg = WorkloadGen::new(
         1234, meta.vocab, meta.max_seq, LengthProfile::Chat, meta.prefill_seq / 2, gen,
     );
-    let mut batcher = OfflineBatcher::new(buckets, batch);
-    for mut r in wg.batch(n_req) {
+    let mut batcher = OfflineBatcher::new(buckets, opts.batch);
+    for mut r in wg.batch(opts.requests) {
         r.prompt.truncate(meta.prefill_seq);
         r.max_new_tokens = r.max_new_tokens.clamp(2, gen);
         batcher.push(r);
@@ -108,16 +105,17 @@ fn run_mode(dir: &str, sparse: bool, n_req: usize, batch: usize, gen: usize) -> 
 /// The same closed-loop workload through the continuous-batching
 /// scheduler: stragglers no longer hold their bucket hostage, so the
 /// drained-queue throughput is a lower bound for this path.
-fn run_continuous(dir: &str, n_req: usize, batch: usize, gen: usize) -> anyhow::Result<f64> {
+fn run_continuous(dir: &str, opts: &ServeOpts) -> anyhow::Result<f64> {
     let rt = Runtime::open(dir)?;
     let meta = rt.manifest.model.clone();
     rt.warmup()?;
-    let mut engine = InferenceEngine::new(rt, EngineConfig::micro(2))?;
+    let mut engine = InferenceEngine::new(rt, opts.engine_config(&meta))?;
+    let gen = opts.gen;
     let mut wg = WorkloadGen::new(
         1234, meta.vocab, meta.max_seq, LengthProfile::Chat, meta.prefill_seq / 2, gen,
     );
     let reqs = wg
-        .batch(n_req)
+        .batch(opts.requests)
         .into_iter()
         .map(|mut r| {
             r.prompt.truncate(meta.prefill_seq);
@@ -125,11 +123,7 @@ fn run_continuous(dir: &str, n_req: usize, batch: usize, gen: usize) -> anyhow::
             r
         })
         .collect();
-    let report = run_closed_loop(
-        &mut engine,
-        reqs,
-        SchedConfig::serving(batch, 4, 64),
-    )?;
+    let report = run_closed_loop(&mut engine, reqs, opts.sched_config())?;
     let tput = report.total_generated() as f64 / report.sim_end.max(1e-12);
     println!("== InstI-Dense, continuous batching (same closed-loop Chat workload) ==");
     println!("{}", report.summary(&engine.metrics));
@@ -138,16 +132,21 @@ fn run_continuous(dir: &str, n_req: usize, batch: usize, gen: usize) -> anyhow::
 }
 
 fn main() -> anyhow::Result<()> {
-    let args: Vec<String> = std::env::args().skip(1).collect();
-    let n_req = flag(&args, "--requests", 12);
-    let batch = flag(&args, "--batch", 8);
-    let gen = flag(&args, "--steps", 12).max(2);
-    let dir = std::env::var("INSTINFER_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    // example-specific defaults first; user args later (last write wins)
+    let mut args: Vec<String> = ["--requests", "12", "--batch", "8", "--gen", "12"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    args.extend(std::env::args().skip(1));
+    let mut opts = ServeOpts::parse(&args)?;
+    opts.gen = opts.gen.max(2);
+    let dir = std::env::var("INSTINFER_ARTIFACTS").unwrap_or_else(|_| opts.artifacts.clone());
     println!(
-        "serve_offline: {n_req} requests, batch {batch}, {gen} new tokens each\n"
+        "serve_offline: {} requests, batch {}, {} new tokens each\n",
+        opts.requests, opts.batch, opts.gen
     );
-    run_mode(&dir, false, n_req, batch, gen)?;
-    run_mode(&dir, true, n_req, batch, gen)?;
-    run_continuous(&dir, n_req, batch, gen)?;
+    run_mode(&dir, &opts, false)?;
+    run_mode(&dir, &opts, true)?;
+    run_continuous(&dir, &opts)?;
     Ok(())
 }

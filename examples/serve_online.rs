@@ -11,77 +11,80 @@
 //!
 //!     cargo run --release --example serve_online -- --requests 24 --rate 2000
 //!
-//! Pass `--overlap` to disaggregate prefill and decode onto the two
-//! pipelined engine streams (same outputs, decoupled TTFT).
+//! All `instinfer serve` flags work here (one shared [`ServeOpts`]
+//! surface): `--overlap` disaggregates prefill and decode onto the two
+//! pipelined engine streams, `--prefix-cache` shares sealed prompt
+//! prefixes across requests (multi-turn workload, `--share-ratio`
+//! controls the shared fraction).
 //!
 //! Runs with or without AOT artifacts (native backend synthesizes the
 //! opt-micro model when `artifacts/` is absent).
 
-use instinfer::coordinator::{run_open_loop, EngineConfig, InferenceEngine, SchedConfig};
+use instinfer::coordinator::{run_open_loop, InferenceEngine, ServeOpts};
 use instinfer::runtime::Runtime;
-use instinfer::shard::ShardPolicy;
-use instinfer::workload::{ArrivalGen, LengthProfile, WorkloadGen};
-
-fn flag(args: &[String], name: &str, default: f64) -> f64 {
-    args.iter()
-        .position(|a| a == name)
-        .and_then(|i| args.get(i + 1))
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(default)
-}
+use instinfer::workload::{ArrivalGen, PrefixWorkloadGen, RequestSource, WorkloadGen};
 
 fn main() -> anyhow::Result<()> {
-    let args: Vec<String> = std::env::args().skip(1).collect();
-    let n_req = flag(&args, "--requests", 24.0) as usize;
-    let rate = flag(&args, "--rate", 2000.0); // req per simulated second
-    let batch = flag(&args, "--batch", 8.0) as usize;
-    let gen = (flag(&args, "--steps", 12.0) as usize).max(2);
-    let sparse = args.iter().any(|a| a == "--sparse");
-    let overlap = args.iter().any(|a| a == "--overlap");
-    let n_csds = flag(&args, "--n-csds", 2.0) as usize;
-    let shard_policy = ShardPolicy::parse(
-        args.iter()
-            .position(|a| a == "--shard-policy")
-            .and_then(|i| args.get(i + 1))
-            .map(|s| s.as_str())
-            .unwrap_or("stripe"),
-    )?;
-    if sparse && shard_policy == ShardPolicy::Context {
-        anyhow::bail!("--shard-policy context supports dense attention only (drop --sparse)");
-    }
-    if n_csds == 0 {
-        anyhow::bail!("--n-csds must be >= 1");
-    }
-    let dir = std::env::var("INSTINFER_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    // example-specific defaults first; user args later (last write wins)
+    let mut args: Vec<String> = [
+        "--requests", "24", "--rate", "2000", "--batch", "8", "--gen", "12",
+        "--profile", "chat", "--prefill-chunk", "2", "--slots", "32",
+        "--hi-frac", "0.2",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    args.extend(std::env::args().skip(1));
+    let opts = ServeOpts::parse(&args)?;
+    let gen = opts.gen.max(2);
+    let rate = opts.arrival_rate.expect("--rate is pre-seeded");
+    let dir = std::env::var("INSTINFER_ARTIFACTS").unwrap_or_else(|_| opts.artifacts.clone());
 
     let rt = Runtime::open(&dir)?;
     println!("serve_online: backend {}", rt.platform());
     rt.warmup()?;
     let meta = rt.manifest.model.clone();
-    let cfg = EngineConfig::micro_for(&meta, n_csds, sparse).sharded(shard_policy);
-    let mut engine = InferenceEngine::new(rt, cfg)?;
+    println!("{opts}");
+    let mut engine = InferenceEngine::new(rt, opts.engine_config(&meta))?;
 
-    let wg = WorkloadGen::new(
-        1234, meta.vocab, meta.max_seq, LengthProfile::Chat, meta.prefill_seq / 2, gen,
-    );
-    let mut ag = ArrivalGen::new(wg, 77, rate).with_high_priority_fraction(0.2);
-    let mut arrivals = ag.take(n_req);
+    let src: Box<dyn RequestSource> = if opts.prefix_cache {
+        Box::new(PrefixWorkloadGen::new(
+            1234,
+            meta.vocab,
+            (meta.prefill_seq / 2).max(1),
+            gen,
+            opts.share_ratio,
+            meta.n,
+            0.8,
+            4,
+        ))
+    } else {
+        Box::new(WorkloadGen::new(
+            1234,
+            meta.vocab,
+            meta.max_seq,
+            opts.profile,
+            meta.prefill_seq / 2,
+            gen,
+        ))
+    };
+    let mut ag = ArrivalGen::new(src, 77, rate).with_high_priority_fraction(opts.hi_frac);
+    let mut arrivals = ag.take(opts.requests);
     for a in arrivals.iter_mut() {
         a.req.prompt.truncate(meta.prefill_seq);
         a.req.max_new_tokens = a.req.max_new_tokens.clamp(2, gen);
     }
     println!(
-        "{n_req} requests, Poisson {rate} req/s (sim clock), {batch} seats, \
-         chunked prefill 2/step{}\n",
-        if overlap { ", overlapped prefill/decode streams" } else { "" }
+        "{} requests, Poisson {rate} req/s (sim clock), {} seats, \
+         chunked prefill {}/step{}\n",
+        opts.requests,
+        opts.batch,
+        opts.prefill_chunk,
+        if opts.overlap { ", overlapped prefill/decode streams" } else { "" }
     );
 
     let t0 = std::time::Instant::now();
-    let report = run_open_loop(
-        &mut engine,
-        arrivals,
-        SchedConfig::serving(batch, 2, 32).overlapped(overlap),
-    )?;
+    let report = run_open_loop(&mut engine, arrivals, opts.sched_config())?;
     let wall = t0.elapsed().as_secs_f64();
 
     let mut records = report.records.clone();
@@ -132,11 +135,23 @@ fn main() -> anyhow::Result<()> {
             "shards ({} x {}): attn {:.6}s | all-reduce {:.6}s | mean barrier \
              skew {:.2}us | stragglers {:?}",
             engine.shards.n_csds(),
-            shard_policy.label(),
+            opts.shard_policy.label(),
             st.attn_span_s,
             st.merge_span_s,
             engine.shards.clock.mean_skew_s() * 1e6,
             engine.shards.clock.straggler,
+        );
+    }
+    if opts.prefix_cache {
+        let (mut attaches, mut toks) = (0u64, 0u64);
+        for q in engine.csds() {
+            attaches += q.csd.ftl.counters.prefix_attaches;
+            toks += q.csd.ftl.counters.prefix_tokens_attached;
+        }
+        println!(
+            "prefix cache: {attaches} attaches, {toks} shared tokens attached, \
+             {} prompt tokens skipped at prefill",
+            engine.metrics.prefix_hit_tokens,
         );
     }
     Ok(())

@@ -7,6 +7,7 @@ pub mod accuracy;
 pub mod figures;
 pub mod flashpath;
 pub mod overlap;
+pub mod prefix;
 pub mod serve;
 pub mod shard;
 pub mod tier;
@@ -16,7 +17,8 @@ use crate::util::table::Table;
 /// The serving-dashboard trajectory targets: the subset of `bench all`
 /// that CI stitches across runs (run-numbered artifacts) to track the
 /// system's performance trajectory.
-pub const TRAJECTORY: &[&str] = &["fig16", "tier", "shard", "serve", "overlap", "flashpath"];
+pub const TRAJECTORY: &[&str] =
+    &["fig16", "tier", "shard", "serve", "overlap", "flashpath", "prefix"];
 
 /// All paper targets in order; returns rendered tables.
 pub fn run_all() -> Vec<String> {
@@ -57,6 +59,7 @@ pub fn registry() -> Vec<(&'static str, BenchFn)> {
         ("serve", serve::serve),
         ("overlap", overlap::overlap),
         ("flashpath", flashpath::flashpath),
+        ("prefix", prefix::prefix),
         ("ablate-group", figures::ablate_group),
         ("ablate-dualk", figures::ablate_dualk),
         ("ablate-pipeline", figures::ablate_pipeline),

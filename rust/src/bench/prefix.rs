@@ -1,0 +1,169 @@
+//! `bench prefix` — the cross-request prefix-caching evidence run:
+//! sweep shared-stem ratio x stem hit rate over a multi-turn workload
+//! ([`crate::workload::PrefixWorkloadGen`]) and serve the same open-loop
+//! Poisson trace twice, cold (prefix cache off) and warm (on).
+//!
+//! The headline columns are the prompt tokens actually shipped at
+//! prefill (`prefill_tok`) and TTFT p50.  Warm, every admission whose
+//! stem is already sealed in the flash tier attaches the donor's token
+//! groups by reference and ships KV only for the unique suffix, so
+//! `prefill_tok` must fall monotonically as the shared fraction of the
+//! prompt grows (pinned by `tests/prefix.rs`).  `mapped_pages` counts
+//! physical flash pages holding KV across the array — aliasing shows up
+//! as warm < cold at equal logical footprint.  Functional prefill always
+//! runs in full, so warm outputs stay bit-identical to cold ones; the
+//! cache is a data-movement and flash-capacity optimisation.
+
+use crate::coordinator::{run_open_loop, InferenceEngine, ServeOpts};
+use crate::runtime::Runtime;
+use crate::util::table::{eng, Table};
+use crate::workload::{ArrivalGen, PrefixWorkloadGen};
+
+const PROMPT: usize = 24;
+const GEN: usize = 8;
+const REQUESTS: usize = 12;
+const SEATS: usize = 4;
+const SLOTS: usize = 16;
+const RATE: f64 = 50.0;
+const STEMS: usize = 2;
+
+/// One serving run's prefix-cache-relevant numbers.
+pub struct PrefixRun {
+    pub ttft_p50_s: f64,
+    pub latency_p50_s: f64,
+    pub sim_end_s: f64,
+    /// prompt tokens shipped over PCIe at prefill (suffix-only when warm)
+    pub prefill_tokens: u64,
+    /// prompt tokens covered by attached cached prefixes
+    pub prefix_hit_tokens: u64,
+    /// sealed prefixes registered in the FTL index, summed over CSDs
+    pub registrations: u64,
+    /// cache hits that attached shared groups, summed over CSDs
+    pub attaches: u64,
+    /// tokens attached by reference, summed over CSDs
+    pub tokens_attached: u64,
+    /// physical flash pages mapped across the array (aliasing evidence)
+    pub mapped_pages: usize,
+}
+
+/// Serve one deterministic multi-turn trace.  Same seeds per config, so
+/// the cold and warm rows face the identical workload.
+pub fn run_config(share_ratio: f64, hit_rate: f64, prefix_on: bool) -> anyhow::Result<PrefixRun> {
+    let rt = Runtime::open("artifacts")?;
+    let meta = rt.manifest.model.clone();
+    let opts = ServeOpts {
+        batch: SEATS,
+        slots: SLOTS,
+        prefix_cache: prefix_on,
+        share_ratio,
+        ..ServeOpts::default()
+    };
+    let mut engine = InferenceEngine::new(rt, opts.engine_config(&meta))?;
+    let src = PrefixWorkloadGen::new(
+        9100, meta.vocab, PROMPT, GEN, share_ratio, meta.n, hit_rate, STEMS,
+    );
+    let arrivals = ArrivalGen::new(src, 9101, RATE).take(REQUESTS);
+    let report = run_open_loop(&mut engine, arrivals, opts.sched_config())?;
+    let [t50, _, _] = report.ttft_percentiles().unwrap_or([0.0; 3]);
+    let [l50, _, _] = report.latency_percentiles().unwrap_or([0.0; 3]);
+    let mut registrations = 0u64;
+    let mut attaches = 0u64;
+    let mut tokens_attached = 0u64;
+    let mut mapped_pages = 0usize;
+    for q in engine.csds() {
+        registrations += q.csd.ftl.counters.prefix_registrations;
+        attaches += q.csd.ftl.counters.prefix_attaches;
+        tokens_attached += q.csd.ftl.counters.prefix_tokens_attached;
+        mapped_pages += q.csd.ftl.mapped_pages_total();
+    }
+    Ok(PrefixRun {
+        ttft_p50_s: t50,
+        latency_p50_s: l50,
+        sim_end_s: report.sim_end,
+        prefill_tokens: engine.metrics.prefill_tokens,
+        prefix_hit_tokens: engine.metrics.prefix_hit_tokens,
+        registrations,
+        attaches,
+        tokens_attached,
+        mapped_pages,
+    })
+}
+
+/// The cold/warm pair for one config (test hook).
+pub fn run_pair(share_ratio: f64, hit_rate: f64) -> anyhow::Result<(PrefixRun, PrefixRun)> {
+    Ok((
+        run_config(share_ratio, hit_rate, false)?,
+        run_config(share_ratio, hit_rate, true)?,
+    ))
+}
+
+fn err_row(t: &mut Table, share: f64, hit: f64, e: &anyhow::Error) {
+    t.row(vec![
+        format!("{share}"),
+        format!("{hit}"),
+        "ERR".into(),
+        format!("{e:#}"),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+    ]);
+}
+
+pub fn prefix() -> Table {
+    let mut t = Table::new(
+        "Cross-request prefix caching — cold vs warm flash KV reuse (opt-micro, sim)",
+        &[
+            "share_ratio",
+            "hit_rate",
+            "mode",
+            "prefill_tok",
+            "hit_tok",
+            "ttft_p50_s",
+            "ttft_save",
+            "attaches",
+            "attached_tok",
+            "mapped_pages",
+        ],
+    );
+    for share in [0.25f64, 0.5, 1.0] {
+        for hit in [0.5f64, 1.0] {
+            let pair = run_pair(share, hit);
+            let (cold, warm) = match pair {
+                Ok(p) => p,
+                Err(e) => {
+                    err_row(&mut t, share, hit, &e);
+                    continue;
+                }
+            };
+            let save = 1.0 - warm.ttft_p50_s / cold.ttft_p50_s.max(1e-30);
+            t.row(vec![
+                format!("{share}"),
+                format!("{hit}"),
+                "cold".into(),
+                cold.prefill_tokens.to_string(),
+                cold.prefix_hit_tokens.to_string(),
+                eng(cold.ttft_p50_s),
+                "0".into(),
+                cold.attaches.to_string(),
+                cold.tokens_attached.to_string(),
+                cold.mapped_pages.to_string(),
+            ]);
+            t.row(vec![
+                format!("{share}"),
+                format!("{hit}"),
+                "warm".into(),
+                warm.prefill_tokens.to_string(),
+                warm.prefix_hit_tokens.to_string(),
+                eng(warm.ttft_p50_s),
+                eng(save),
+                warm.attaches.to_string(),
+                warm.tokens_attached.to_string(),
+                warm.mapped_pages.to_string(),
+            ]);
+        }
+    }
+    t
+}

@@ -46,6 +46,12 @@ pub struct EngineConfig {
     pub tier: TierConfig,
     /// how a sequence's KV is partitioned across the CSD array
     pub shard_policy: ShardPolicy,
+    /// cross-request prefix caching: look admitted prompts up in the
+    /// FTL's content-addressed index, attach the shared sealed token
+    /// groups (refcounted, copy-on-write), and ship only the unique
+    /// suffix.  Off keeps the engine bit-identical — outputs AND
+    /// timestamps — to the pre-prefix-cache code path.
+    pub prefix_cache: bool,
 }
 
 impl EngineConfig {
@@ -60,6 +66,7 @@ impl EngineConfig {
             tier: TierConfig::for_spec(&csd_spec),
             csd_spec,
             shard_policy: ShardPolicy::HeadStripe,
+            prefix_cache: false,
         }
     }
 
@@ -91,6 +98,13 @@ impl EngineConfig {
     /// Pick the shard partition policy (head stripe by default).
     pub fn sharded(mut self, policy: ShardPolicy) -> Self {
         self.shard_policy = policy;
+        self
+    }
+
+    /// Enable cross-request prefix caching (content-addressed,
+    /// refcounted sealed KV token groups in the flash tier).
+    pub fn prefix_cached(mut self, on: bool) -> Self {
+        self.prefix_cache = on;
         self
     }
 
@@ -201,6 +215,19 @@ impl InferenceEngine {
             self.alloc_host_kv(bucket)?;
         }
         let mut ship_done = start;
+        // attach cached prefixes before any suffix KV ships: the FIFO
+        // submission queues serialize the metadata command ahead of the
+        // layer-0 writes, aliasing the sealed shared groups into each
+        // hit slot's stream mappings (refcounted, no page copies)
+        if matches!(self.cfg.backend, AttnBackend::Csd(_)) {
+            for s in seqs.iter() {
+                if s.prefix_hit > 0 {
+                    let t =
+                        self.shards.attach_prefix(s.slot, &s.req.prompt, s.prefix_hit, start)?;
+                    ship_done = ship_done.max(t);
+                }
+            }
+        }
         for layer in 0..m.n_layers {
             let mut outs = self.rt.call("prefill_block", bucket, layer, &[x])?;
             let v = outs.pop().unwrap();
@@ -209,6 +236,16 @@ impl InferenceEngine {
             // layer-wise pipeline: ship layer `layer` while the GPU computes
             // layer+1 — in sim time the ship for this layer starts now
             ship_done = ship_done.max(self.ship_prefill_kv(seqs, layer as u16, &k, &v, sp, start)?);
+        }
+        // seal + register every just-prefilled prompt in the
+        // content-addressed index (metadata-only; the first registration
+        // per boundary hash wins, so a donor that itself attached only
+        // extends the index past its shared prefix).  Off the request's
+        // critical path: the donor's TTFT does not wait on it.
+        if self.cfg.prefix_cache && matches!(self.cfg.backend, AttnBackend::Csd(_)) {
+            for s in seqs.iter() {
+                self.shards.register_prefix(s.slot, &s.req.prompt, ship_done)?;
+            }
         }
 
         // next-token logits from each sequence's last valid row
@@ -228,7 +265,8 @@ impl InferenceEngine {
             s.generated.push(next[i]);
             s.kv_len = s.req.prompt.len();
             s.phase = RequestPhase::Decoding;
-            self.metrics.prefill_tokens += s.req.prompt.len() as u64;
+            self.metrics.prefill_tokens += (s.req.prompt.len() - s.prefix_hit) as u64;
+            self.metrics.prefix_hit_tokens += s.prefix_hit as u64;
             self.metrics.tokens_generated += 1;
         }
         self.metrics.gpu_wall_s += t0.elapsed().as_secs_f64();
@@ -303,6 +341,7 @@ impl InferenceEngine {
                         layer,
                         sp,
                         len,
+                        s.prefix_hit,
                         &kd[base..base + h * sp * dh],
                         &vd[base..base + h * sp * dh],
                         start,
@@ -499,6 +538,18 @@ impl InferenceEngine {
             self.sim_now = self.shards.free_slot(seq.slot, self.sim_now)?;
         }
         Ok(())
+    }
+
+    /// Longest indexed prefix (whole token groups) of `prompt` in the
+    /// FTL's content-addressed index, in tokens; 0 when prefix caching
+    /// is off or the backend is not the CSD array.  Pure lookup — with
+    /// the feature off it performs no work at all, keeping prefix-off
+    /// runs bit-identical to the pre-prefix-cache engine.
+    pub fn prefix_match(&self, prompt: &[i32]) -> usize {
+        if !self.cfg.prefix_cache || !matches!(self.cfg.backend, AttnBackend::Csd(_)) {
+            return 0;
+        }
+        self.shards.prefix_match(prompt).min(prompt.len())
     }
 
     /// Cumulative per-token attention mass for `slot` in global token

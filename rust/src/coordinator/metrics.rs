@@ -27,6 +27,9 @@ pub struct EngineMetrics {
     pub requests_done: u64,
     pub tokens_generated: u64,
     pub prefill_tokens: u64,
+    /// prompt tokens covered by an attached cached prefix (skipped from
+    /// `prefill_tokens` — neither shipped over PCIe nor programmed)
+    pub prefix_hit_tokens: u64,
     pub decode_steps: u64,
     /// host wall time in the PJRT executables
     pub gpu_wall_s: f64,

@@ -16,6 +16,8 @@
 //! * [`engine`]    — the inference engine gluing PJRT + the sharded CSD
 //!   array ([`crate::shard::ShardCoordinator`]) per §IV-D
 //! * [`metrics`]   — throughput/latency/occupancy/churn accounting
+//! * [`serveopts`] — parse-once serve configuration shared by the CLI,
+//!   the examples and the engine-backed benches
 
 pub mod batcher;
 pub mod engine;
@@ -23,6 +25,7 @@ pub mod kvmgr;
 pub mod metrics;
 pub mod request;
 pub mod scheduler;
+pub mod serveopts;
 
 pub use batcher::OfflineBatcher;
 pub use engine::{EngineConfig, InferenceEngine};
@@ -33,3 +36,4 @@ pub use scheduler::{
     run_closed_loop, run_open_loop, RequestRecord, SchedConfig, Scheduler, ServeReport,
     StepReport,
 };
+pub use serveopts::ServeOpts;

@@ -24,6 +24,10 @@ pub struct Sequence {
     /// positions < kv_len masked out by drop-on-resume (their KV pages
     /// are freed group-wise; positions themselves are preserved)
     pub dropped: std::collections::BTreeSet<u32>,
+    /// prompt tokens covered by an attached cached prefix (set at
+    /// admission from the FTL's content-addressed index; prefill ships
+    /// KV only for positions >= prefix_hit)
+    pub prefix_hit: usize,
     pub generated: Vec<i32>,
 }
 
@@ -35,6 +39,7 @@ impl Sequence {
             phase: RequestPhase::Queued,
             kv_len: 0,
             dropped: std::collections::BTreeSet::new(),
+            prefix_hit: 0,
             generated: Vec::new(),
         }
     }

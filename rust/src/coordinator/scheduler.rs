@@ -555,6 +555,11 @@ impl Scheduler {
                     let a = self.queue.remove(i);
                     let slot = self.slots.reserve()?;
                     let mut s = Sequence::new(a.req, slot);
+                    // split the prompt at admission: cached prefix
+                    // (attached from the index) + unique suffix (the
+                    // only part prefill ships).  A pure lookup — returns
+                    // 0 with prefix caching off.
+                    s.prefix_hit = engine.prefix_match(&s.req.prompt);
                     s.phase = RequestPhase::Prefilling;
                     cohort.push(s);
                 }

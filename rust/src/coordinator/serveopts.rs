@@ -1,0 +1,583 @@
+//! Parse-once, validate-once serving configuration.
+//!
+//! `instinfer serve`, the `serve_online`/`serve_offline` examples and the
+//! engine-backed benches all need the same ~20 knobs turned into five
+//! config structs ([`EngineConfig`], [`SchedConfig`], `TierConfig`,
+//! `ShardPolicy`, `FlashPathConfig`).  They used to hand-roll the
+//! parsing and re-thread the same literals; [`ServeOpts`] is the single
+//! surface: one flag-spec table ([`SERVE_FLAGS`]) drives parsing, the
+//! generated usage string, and the README's CLI reference — so the
+//! three can never drift apart.
+
+use crate::config::hw::{FlashPathConfig, FlashPlacement, FlashReadSched};
+use crate::coordinator::engine::EngineConfig;
+use crate::coordinator::scheduler::SchedConfig;
+use crate::kvtier::{TierConfig, TierPolicy};
+use crate::runtime::manifest::ModelMeta;
+use crate::shard::ShardPolicy;
+use crate::workload::LengthProfile;
+use anyhow::{bail, Context, Result};
+use std::fmt;
+
+/// One serve flag: the canonical name (with leading `--`), an optional
+/// alias, a value placeholder (`None` marks a boolean switch), the
+/// default rendered in help text (empty = off/inherit), and a one-line
+/// description.
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub alias: Option<&'static str>,
+    pub value: Option<&'static str>,
+    pub default: &'static str,
+    pub help: &'static str,
+}
+
+/// The full `serve` flag table — the single source of truth for
+/// [`ServeOpts::parse`], [`ServeOpts::usage_block`] and
+/// [`ServeOpts::markdown_reference`].
+pub const SERVE_FLAGS: &[FlagSpec] = &[
+    FlagSpec {
+        name: "--requests",
+        alias: None,
+        value: Some("N"),
+        default: "8",
+        help: "requests to serve",
+    },
+    FlagSpec {
+        name: "--batch",
+        alias: None,
+        value: Some("B"),
+        default: "4",
+        help: "decode seats (max sequences per engine step)",
+    },
+    FlagSpec {
+        name: "--gen",
+        alias: Some("--steps"),
+        value: Some("T"),
+        default: "8",
+        help: "new tokens per request",
+    },
+    FlagSpec {
+        name: "--n-csds",
+        alias: Some("--csds"),
+        value: Some("K"),
+        default: "2",
+        help: "CSD devices each sequence is sharded across",
+    },
+    FlagSpec {
+        name: "--sparse",
+        alias: None,
+        value: None,
+        default: "",
+        help: "SparF sparse in-storage attention (dense by default)",
+    },
+    FlagSpec {
+        name: "--shard-policy",
+        alias: None,
+        value: Some("P"),
+        default: "stripe",
+        help: "KV partitioning: stripe|block (heads) or context (token \
+               groups, log-sum-exp merge; dense only)",
+    },
+    FlagSpec {
+        name: "--overlap",
+        alias: None,
+        value: None,
+        default: "",
+        help: "disaggregate prefill and decode onto two pipelined engine \
+               streams (same outputs, decoupled TTFT)",
+    },
+    FlagSpec {
+        name: "--profile",
+        alias: None,
+        value: Some("P"),
+        default: "fixed",
+        help: "prompt/output length profile: fixed|chat|qa",
+    },
+    FlagSpec {
+        name: "--artifacts",
+        alias: None,
+        value: Some("DIR"),
+        default: "artifacts",
+        help: "AOT artifact directory",
+    },
+    FlagSpec {
+        name: "--arrival-rate",
+        alias: Some("--rate"),
+        value: Some("R"),
+        default: "",
+        help: "open-loop Poisson arrivals at R req/s on the simulated \
+               clock (absent = closed loop, all requests at t=0)",
+    },
+    FlagSpec {
+        name: "--prefill-chunk",
+        alias: None,
+        value: Some("C"),
+        default: "4",
+        help: "max new admissions prefilled per step",
+    },
+    FlagSpec {
+        name: "--slots",
+        alias: None,
+        value: Some("S"),
+        default: "64",
+        help: "KV slot capacity",
+    },
+    FlagSpec {
+        name: "--hi-frac",
+        alias: None,
+        value: Some("F"),
+        default: "0",
+        help: "fraction of high-priority arrivals (exercises preemption)",
+    },
+    FlagSpec {
+        name: "--hot-kib",
+        alias: None,
+        value: Some("N"),
+        default: "0",
+        help: "per-CSD DRAM hot-tier capacity in KiB (0 = flash only)",
+    },
+    FlagSpec {
+        name: "--tier-policy",
+        alias: None,
+        value: Some("P"),
+        default: "lru",
+        help: "hot-tier admission/eviction policy: lru|h2o|pin[:W]",
+    },
+    FlagSpec {
+        name: "--drop-on-resume",
+        alias: None,
+        value: None,
+        default: "",
+        help: "H2O-style importance drop when a preempted sequence resumes",
+    },
+    FlagSpec {
+        name: "--resume-keep",
+        alias: None,
+        value: Some("K"),
+        default: "0",
+        help: "token budget kept per sequence by --drop-on-resume (0 = all)",
+    },
+    FlagSpec {
+        name: "--flash-path",
+        alias: None,
+        value: Some("P"),
+        default: "legacy",
+        help: "flash KV data path: legacy (channel placement + fifo reads \
+               + read barrier) or tuned (die-interleaved + conflict-aware \
+               + pipelined)",
+    },
+    FlagSpec {
+        name: "--flash-placement",
+        alias: None,
+        value: Some("P"),
+        default: "",
+        help: "override the page placement component: channel|die",
+    },
+    FlagSpec {
+        name: "--flash-sched",
+        alias: None,
+        value: Some("P"),
+        default: "",
+        help: "override the read scheduler component: fifo|interleave",
+    },
+    FlagSpec {
+        name: "--flash-pipeline",
+        alias: None,
+        value: None,
+        default: "",
+        help: "force read-compute pipelining on",
+    },
+    FlagSpec {
+        name: "--flash-no-pipeline",
+        alias: None,
+        value: None,
+        default: "",
+        help: "force read-compute pipelining off",
+    },
+    FlagSpec {
+        name: "--prefix-cache",
+        alias: None,
+        value: None,
+        default: "",
+        help: "cross-request prefix caching: content-addressed, refcounted \
+               KV token groups shared in the flash tier; admitted prompts \
+               split into cached prefix + unique suffix",
+    },
+    FlagSpec {
+        name: "--share-ratio",
+        alias: None,
+        value: Some("F"),
+        default: "0.5",
+        help: "shared-prefix fraction of each prompt in the multi-turn \
+               workload (with --prefix-cache)",
+    },
+];
+
+fn default_of(name: &str) -> &'static str {
+    SERVE_FLAGS
+        .iter()
+        .find(|f| f.name == name)
+        .map(|f| f.default)
+        .unwrap_or("")
+}
+
+fn parse_profile(s: &str) -> Result<LengthProfile> {
+    Ok(match s {
+        "fixed" => LengthProfile::Fixed,
+        "chat" => LengthProfile::Chat,
+        "qa" => LengthProfile::Qa,
+        other => bail!("unknown profile {other:?} (fixed|chat|qa)"),
+    })
+}
+
+fn profile_label(p: LengthProfile) -> &'static str {
+    match p {
+        LengthProfile::Fixed => "fixed",
+        LengthProfile::Chat => "chat",
+        LengthProfile::Qa => "qa",
+    }
+}
+
+/// Everything `serve` needs, parsed and validated exactly once.
+#[derive(Debug, Clone)]
+pub struct ServeOpts {
+    pub requests: usize,
+    pub batch: usize,
+    pub gen: usize,
+    pub n_csds: usize,
+    pub sparse: bool,
+    pub shard_policy: ShardPolicy,
+    pub overlap: bool,
+    pub profile: LengthProfile,
+    pub artifacts: String,
+    pub arrival_rate: Option<f64>,
+    pub prefill_chunk: usize,
+    pub slots: usize,
+    pub hi_frac: f64,
+    pub hot_kib: usize,
+    pub tier_policy: TierPolicy,
+    pub drop_on_resume: bool,
+    pub resume_keep: usize,
+    pub flash_path: FlashPathConfig,
+    pub prefix_cache: bool,
+    pub share_ratio: f64,
+}
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        ServeOpts::parse(&[]).expect("the flag table's defaults must parse")
+    }
+}
+
+impl ServeOpts {
+    /// Parse a serve argument list against [`SERVE_FLAGS`].  Unknown
+    /// flags, missing values and invalid combinations (e.g. `--sparse`
+    /// with `--shard-policy context`) are rejected here, once.
+    pub fn parse(args: &[String]) -> Result<ServeOpts> {
+        let mut seen: Vec<(&'static str, String)> = Vec::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = args[i].as_str();
+            let Some(spec) =
+                SERVE_FLAGS.iter().find(|f| f.name == a || f.alias == Some(a))
+            else {
+                bail!("unknown serve flag {a:?} (run with no args for usage)");
+            };
+            match spec.value {
+                None => {
+                    seen.push((spec.name, String::from("true")));
+                    i += 1;
+                }
+                Some(_) => {
+                    let Some(v) = args.get(i + 1) else {
+                        bail!("flag {} needs a value", spec.name);
+                    };
+                    seen.push((spec.name, v.clone()));
+                    i += 2;
+                }
+            }
+        }
+        let get = |name: &str| -> Option<&str> {
+            seen.iter().rev().find(|(n, _)| *n == name).map(|(_, v)| v.as_str())
+        };
+        let has = |name: &str| get(name).is_some();
+        let val = |name: &str| -> &str { get(name).unwrap_or_else(|| default_of(name)) };
+
+        let requests: usize = val("--requests").parse().context("--requests")?;
+        let batch: usize = val("--batch").parse().context("--batch")?;
+        let gen: usize = val("--gen").parse().context("--gen")?;
+        let n_csds: usize = val("--n-csds").parse().context("--n-csds")?;
+        if n_csds == 0 {
+            bail!("--n-csds must be >= 1");
+        }
+        let sparse = has("--sparse");
+        let shard_policy = ShardPolicy::parse(val("--shard-policy"))?;
+        if sparse && shard_policy == ShardPolicy::Context {
+            bail!("--shard-policy context supports dense attention only (drop --sparse)");
+        }
+        let overlap = has("--overlap");
+        let profile = parse_profile(val("--profile"))?;
+        let artifacts = val("--artifacts").to_string();
+        let arrival_rate: Option<f64> = match get("--arrival-rate") {
+            Some(v) => {
+                let r: f64 = v.parse().context("--arrival-rate")?;
+                if r <= 0.0 {
+                    bail!("--arrival-rate must be > 0");
+                }
+                Some(r)
+            }
+            None => None,
+        };
+        let prefill_chunk: usize = val("--prefill-chunk").parse().context("--prefill-chunk")?;
+        let slots: usize = val("--slots").parse().context("--slots")?;
+        let hi_frac: f64 = val("--hi-frac").parse().context("--hi-frac")?;
+        let hot_kib: usize = val("--hot-kib").parse().context("--hot-kib")?;
+        let tier_policy = TierPolicy::parse(val("--tier-policy"))?;
+        let drop_on_resume = has("--drop-on-resume");
+        let resume_keep: usize = val("--resume-keep").parse().context("--resume-keep")?;
+        let mut flash_path = match get("--flash-path") {
+            Some(v) => FlashPathConfig::parse(v)?,
+            None => FlashPathConfig::legacy(),
+        };
+        if let Some(v) = get("--flash-placement") {
+            flash_path.placement = FlashPlacement::parse(v)?;
+        }
+        if let Some(v) = get("--flash-sched") {
+            flash_path.sched = FlashReadSched::parse(v)?;
+        }
+        if has("--flash-pipeline") {
+            flash_path.pipeline = true;
+        }
+        if has("--flash-no-pipeline") {
+            flash_path.pipeline = false;
+        }
+        let prefix_cache = has("--prefix-cache");
+        let share_ratio: f64 = val("--share-ratio").parse().context("--share-ratio")?;
+        if !(0.0..=1.0).contains(&share_ratio) {
+            bail!("--share-ratio must be in [0, 1]");
+        }
+
+        Ok(ServeOpts {
+            requests,
+            batch,
+            gen,
+            n_csds,
+            sparse,
+            shard_policy,
+            overlap,
+            profile,
+            artifacts,
+            arrival_rate,
+            prefill_chunk,
+            slots,
+            hi_frac,
+            hot_kib,
+            tier_policy,
+            drop_on_resume,
+            resume_keep,
+            flash_path,
+            prefix_cache,
+            share_ratio,
+        })
+    }
+
+    /// The engine-side config: micro functional plane + tier + shard
+    /// policy + flash path + prefix caching, exactly as `serve` has
+    /// always built it.
+    pub fn engine_config(&self, meta: &ModelMeta) -> EngineConfig {
+        EngineConfig::micro_for(meta, self.n_csds, self.sparse)
+            .tiered(TierConfig { hot_bytes: self.hot_kib * 1024, policy: self.tier_policy })
+            .sharded(self.shard_policy)
+            .flash_path(self.flash_path)
+            .prefix_cached(self.prefix_cache)
+    }
+
+    /// The scheduler-side config (seats, chunked prefill, slots,
+    /// drop-on-resume, overlapped executor).
+    pub fn sched_config(&self) -> SchedConfig {
+        SchedConfig {
+            drop_on_resume: self.drop_on_resume,
+            resume_keep: self.resume_keep,
+            ..SchedConfig::serving(self.batch, self.prefill_chunk, self.slots)
+                .overlapped(self.overlap)
+        }
+    }
+
+    /// The `serve` section of the CLI usage text, generated from
+    /// [`SERVE_FLAGS`] so a new flag can never be missing from help.
+    pub fn usage_block() -> String {
+        let mut out = String::new();
+        for f in SERVE_FLAGS {
+            let head = match (f.value, f.alias) {
+                (Some(v), Some(a)) => format!("{} {v}  ({a})", f.name),
+                (Some(v), None) => format!("{} {v}", f.name),
+                (None, Some(a)) => format!("{}  ({a})", f.name),
+                (None, None) => f.name.to_string(),
+            };
+            let default = if f.default.is_empty() {
+                String::new()
+            } else {
+                format!(" [default {}]", f.default)
+            };
+            out.push_str(&format!("    {head:<32} {}{default}\n", f.help));
+        }
+        out
+    }
+
+    /// Markdown table of every serve flag (the README's CLI reference).
+    pub fn markdown_reference() -> String {
+        let mut out =
+            String::from("| flag | default | description |\n| --- | --- | --- |\n");
+        for f in SERVE_FLAGS {
+            let flag = match f.value {
+                Some(v) => format!("`{} {v}`", f.name),
+                None => format!("`{}`", f.name),
+            };
+            let alias = match f.alias {
+                Some(a) => format!(" (alias `{a}`)"),
+                None => String::new(),
+            };
+            let default = if f.default.is_empty() {
+                "—".to_string()
+            } else {
+                format!("`{}`", f.default)
+            };
+            // bare | would split the markdown cell
+            let help = f.help.replace('|', "\\|");
+            out.push_str(&format!("| {flag}{alias} | {default} | {help} |\n"));
+        }
+        out
+    }
+}
+
+impl fmt::Display for ServeOpts {
+    /// One summary header line for serve runs.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mode = match self.arrival_rate {
+            Some(r) => format!("open-loop {r} req/s, hi-frac {}", self.hi_frac),
+            None => "closed-loop".to_string(),
+        };
+        let tier = if self.hot_kib == 0 {
+            "off".to_string()
+        } else {
+            format!("{} KiB {}", self.hot_kib, self.tier_policy.label())
+        };
+        write!(
+            f,
+            "serve: {} requests x {} tokens ({} profile, {mode}), {} seats / \
+             chunk {} / {} slots, {} CSD(s) [{}], {} attention, flash {}, tier {}",
+            self.requests,
+            self.gen,
+            profile_label(self.profile),
+            self.batch,
+            self.prefill_chunk,
+            self.slots,
+            self.n_csds,
+            self.shard_policy.label(),
+            if self.sparse { "SparF" } else { "dense" },
+            self.flash_path.label(),
+            tier,
+        )?;
+        if self.overlap {
+            write!(f, ", overlapped streams")?;
+        }
+        if self.drop_on_resume {
+            write!(f, ", drop-on-resume keep {}", self.resume_keep)?;
+        }
+        if self.prefix_cache {
+            write!(f, ", prefix-cache (share ratio {:.2})", self.share_ratio)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_match_flag_table() {
+        let o = ServeOpts::default();
+        assert_eq!(o.requests, 8);
+        assert_eq!(o.batch, 4);
+        assert_eq!(o.gen, 8);
+        assert_eq!(o.n_csds, 2);
+        assert!(!o.sparse && !o.overlap && !o.prefix_cache && !o.drop_on_resume);
+        assert_eq!(o.arrival_rate, None);
+        assert_eq!(o.slots, 64);
+        assert_eq!(o.share_ratio, 0.5);
+        assert_eq!(o.artifacts, "artifacts");
+    }
+
+    #[test]
+    fn aliases_and_last_write_wins() {
+        let o = ServeOpts::parse(&sv(&[
+            "--steps", "12", "--csds", "3", "--rate", "100", "--requests", "4",
+            "--requests", "6",
+        ]))
+        .unwrap();
+        assert_eq!(o.gen, 12);
+        assert_eq!(o.n_csds, 3);
+        assert_eq!(o.arrival_rate, Some(100.0));
+        assert_eq!(o.requests, 6, "later occurrence must win");
+    }
+
+    #[test]
+    fn invalid_combinations_rejected_once() {
+        let e = ServeOpts::parse(&sv(&["--sparse", "--shard-policy", "context"]))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("dense attention only"), "{e}");
+        assert!(ServeOpts::parse(&sv(&["--bogus"])).is_err());
+        assert!(ServeOpts::parse(&sv(&["--requests"])).is_err(), "missing value");
+        assert!(ServeOpts::parse(&sv(&["--share-ratio", "1.5"])).is_err());
+        assert!(ServeOpts::parse(&sv(&["--arrival-rate", "0"])).is_err());
+        assert!(ServeOpts::parse(&sv(&["--n-csds", "0"])).is_err());
+    }
+
+    #[test]
+    fn flash_component_overrides_compose() {
+        let o = ServeOpts::parse(&sv(&["--flash-path", "tuned", "--flash-no-pipeline"]))
+            .unwrap();
+        assert!(!o.flash_path.pipeline);
+        let o = ServeOpts::parse(&sv(&["--flash-pipeline"])).unwrap();
+        assert!(o.flash_path.pipeline, "component override without --flash-path");
+    }
+
+    #[test]
+    fn generated_help_covers_every_flag() {
+        let usage = ServeOpts::usage_block();
+        let md = ServeOpts::markdown_reference();
+        for f in SERVE_FLAGS {
+            assert!(usage.contains(f.name), "usage missing {}", f.name);
+            assert!(md.contains(f.name), "markdown reference missing {}", f.name);
+        }
+        // the Display header mentions the load mode and backend shape
+        let s = ServeOpts::default().to_string();
+        assert!(s.contains("closed-loop") && s.contains("2 CSD(s)"), "{s}");
+        let o =
+            ServeOpts::parse(&sv(&["--prefix-cache", "--share-ratio", "0.75"])).unwrap();
+        assert!(o.to_string().contains("share ratio 0.75"));
+    }
+
+    #[test]
+    fn builds_engine_and_sched_configs() {
+        use crate::coordinator::engine::AttnBackend;
+        let meta = crate::runtime::native::micro_meta();
+        let o = ServeOpts::parse(&sv(&[
+            "--prefix-cache", "--overlap", "--batch", "6", "--slots", "16",
+            "--drop-on-resume", "--resume-keep", "8",
+        ]))
+        .unwrap();
+        let ec = o.engine_config(&meta);
+        assert!(ec.prefix_cache);
+        assert!(matches!(ec.backend, AttnBackend::Csd(_)));
+        let sc = o.sched_config();
+        assert!(sc.overlap && sc.drop_on_resume);
+        assert_eq!((sc.max_batch, sc.slots, sc.resume_keep), (6, 16, 8));
+    }
+}

@@ -149,6 +149,10 @@ pub struct InstCsd {
     d_head: usize,
     /// per-slot token positions masked out by drop-on-resume
     dropped: BTreeMap<u32, BTreeSet<u32>>,
+    /// slot -> (prefix pseudo-slot, shared tokens) for streams that
+    /// attached a cached prefix; the hot tier keys shared groups under
+    /// the pseudo-slot so every sharer hits one DRAM copy
+    attached: BTreeMap<u32, (u32, usize)>,
 }
 
 impl InstCsd {
@@ -171,6 +175,7 @@ impl InstCsd {
             ledger: BusyLedger::default(),
             d_head: ftl_cfg.d_head,
             dropped: BTreeMap::new(),
+            attached: BTreeMap::new(),
         })
     }
 
@@ -269,6 +274,17 @@ impl InstCsd {
         let n = self.ftl.cfg.n;
         let page_bytes = self.spec.flash.page_bytes;
         let sealed = self.ftl.sealed_groups(key);
+        // groups inside an attached shared prefix are keyed in the hot
+        // tier under the prefix pseudo-slot, so every sharer (and every
+        // future sharer) hits the same DRAM copy instead of pinning
+        // per-slot duplicates of one physical flash page
+        let attached = self.attached.get(&key.slot).copied();
+        let canon = |g: usize| match attached {
+            Some((pslot, toks)) if (g + 1) * n <= toks => {
+                StreamKey { slot: pslot, layer: key.layer, head: key.head }
+            }
+            _ => key,
+        };
         let mut items: Vec<(usize, Vec<f32>, Time)> = Vec::with_capacity(groups.len());
         let mut misses: Vec<usize> = Vec::new();
         let mut done = at;
@@ -279,7 +295,7 @@ impl InstCsd {
                 misses.push(g); // tail group: FTL DRAM stream buffer
                 continue;
             }
-            let id = PageId { key, kind, group: g as u32 };
+            let id = PageId { key: canon(g), kind, group: g as u32 };
             match self.tier.lookup(id) {
                 Some(data) => {
                     let svc = page_bytes as f64 / self.spec.dram_bw;
@@ -292,14 +308,14 @@ impl InstCsd {
             }
         }
         if !misses.is_empty() {
-            let (fetched, t) = self.ftl.fetch_token_groups_timed(key, kind, &misses, at)?;
+            let (fetched, t) = self.ftl.fetch_token_groups(key, kind, &misses, at)?;
             flash_wait = t - at;
             done = done.max(t);
             let stream_len = self.ftl.tokens_appended(key);
             for gf in fetched {
                 let g = gf.base / n;
                 if g < sealed {
-                    let id = PageId { key, kind, group: g as u32 };
+                    let id = PageId { key: canon(g), kind, group: g as u32 };
                     let (resident, evicted) = self.tier.admit(id, gf.rows.clone(), stream_len);
                     if resident {
                         self.ftl.counters.promotions += 1;
@@ -337,6 +353,7 @@ impl InstCsd {
         }
         let set = set.clone();
         let n = self.ftl.cfg.n;
+        let attached = self.attached.get(&slot).copied();
         for key in self.ftl.stream_keys(slot) {
             let sealed = self.ftl.sealed_groups(key);
             for g in 0..sealed {
@@ -344,10 +361,16 @@ impl InstCsd {
                 if !all_dropped {
                     continue;
                 }
-                for kind in [KvKind::K, KvKind::V] {
-                    let id = PageId { key, kind, group: g as u32 };
-                    if self.tier.drop_page(id) {
-                        self.ftl.demote_group(key, kind, g);
+                // a group inside an attached shared prefix keeps its
+                // canonical hot-tier page (other sharers still read it);
+                // detaching only drops this stream's reference
+                let shared_prefix = attached.is_some_and(|(_, toks)| (g + 1) * n <= toks);
+                if !shared_prefix {
+                    for kind in [KvKind::K, KvKind::V] {
+                        let id = PageId { key, kind, group: g as u32 };
+                        if self.tier.drop_page(id) {
+                            self.ftl.demote_group(key, kind, g);
+                        }
                     }
                 }
                 self.ftl.free_token_group(key, g);
@@ -361,7 +384,30 @@ impl InstCsd {
     pub fn free_slot(&mut self, slot: u32, at: Time) -> Result<Time> {
         self.tier.free_slot(slot);
         self.dropped.remove(&slot);
+        self.attached.remove(&slot);
         self.ftl.free_slot(slot, at)
+    }
+
+    /// Attach a registered prefix (looked up by its boundary hash) to
+    /// `slot`: the FTL aliases the sealed pages into the slot's stream
+    /// mappings and this engine records the canonical pseudo-slot so the
+    /// hot tier serves one shared DRAM copy for all sharers.  Returns the
+    /// attached token count.
+    pub fn attach_prefix(&mut self, slot: u32, hash: u64) -> Result<usize> {
+        let (pslot, tokens) = self.ftl.attach_prefix(hash, slot)?;
+        if tokens > 0 {
+            self.attached.insert(slot, (pslot, tokens));
+        }
+        Ok(tokens)
+    }
+
+    /// Register a just-prefilled slot's sealed prefix groups in the
+    /// content-addressed index.  Hot-tier pages keyed under any
+    /// LRU-evicted registration's pseudo-slot are purged with it.
+    pub fn register_prefix(&mut self, slot: u32, bounds: &[(u64, usize)]) {
+        for pslot in self.ftl.register_prefix(slot, bounds) {
+            self.tier.free_slot(pslot);
+        }
     }
 
     /// Store one token's K/V rows for every head of a layer (decode write).

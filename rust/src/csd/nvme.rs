@@ -41,6 +41,14 @@ pub enum CsdCommand {
     /// mask token positions of a live sequence out of future attention
     /// (H2O-style drop-on-resume; fully-dropped groups free flash pages)
     DropTokens { slot: u32, tokens: Vec<u32> },
+    /// register a just-prefilled slot's sealed prefix in the FTL's
+    /// content-addressed index: `bounds[i] = (boundary hash, local
+    /// tokens)` per complete token group of the prompt (metadata only —
+    /// the sealed pages are refcount-aliased, never copied)
+    RegisterPrefix { slot: u32, bounds: Vec<(u64, usize)> },
+    /// attach a cached prefix to a new slot's stream mappings before its
+    /// (suffix-only) prefill ships
+    AttachPrefix { slot: u32, hash: u64 },
     /// drop a finished sequence
     FreeSlot { slot: u32 },
 }
@@ -137,6 +145,26 @@ impl NvmeQueue {
             }
             CsdCommand::DropTokens { slot, tokens } => {
                 self.csd.drop_tokens(slot, &tokens)?;
+                Ok(CsdCompletion {
+                    data: vec![],
+                    done: dispatched,
+                    breakdown: None,
+                    stats: vec![],
+                    weights: vec![],
+                })
+            }
+            CsdCommand::RegisterPrefix { slot, bounds } => {
+                self.csd.register_prefix(slot, &bounds);
+                Ok(CsdCompletion {
+                    data: vec![],
+                    done: dispatched,
+                    breakdown: None,
+                    stats: vec![],
+                    weights: vec![],
+                })
+            }
+            CsdCommand::AttachPrefix { slot, hash } => {
+                self.csd.attach_prefix(slot, hash)?;
                 Ok(CsdCompletion {
                     data: vec![],
                     done: dispatched,

@@ -112,6 +112,15 @@ pub struct FtlCounters {
     /// sealed token groups whose flash pages were freed outright
     /// (drop-on-resume reclaim)
     pub dropped_groups: u64,
+    /// drops/frees that merely released one reference to a page other
+    /// streams (or the prefix index) still own — no flash reclaimed
+    pub shared_releases: u64,
+    /// prefixes registered in the content-addressed index
+    pub prefix_registrations: u64,
+    /// cached prefixes attached to a new stream's mapping
+    pub prefix_attaches: u64,
+    /// local tokens served by attachment instead of host writes
+    pub prefix_tokens_attached: u64,
 }
 
 /// One sealed token group fetched back from the data path: its first
@@ -123,6 +132,44 @@ pub struct GroupFetch {
     pub base: usize,
     pub rows: Vec<f32>,
     pub done: Time,
+}
+
+/// Pseudo-slot ids for the content-addressed prefix index live far above
+/// any scheduler slot, so a registration's stream keys can never collide
+/// with a live sequence.
+pub const PREFIX_SLOT_BASE: u32 = u32::MAX / 2;
+
+/// Registered prefixes kept per device (LRU beyond this).
+const PREFIX_INDEX_CAP: usize = 32;
+
+/// Chain hashes over `n`-token chunks of a prompt: hash `i` is FNV-1a
+/// over the little-endian bytes of the first `(i + 1) * n` token ids,
+/// so a longest-prefix lookup is one probe per complete group and two
+/// prompts share a boundary hash iff they share the tokens before it.
+pub fn prefix_hashes(prompt: &[i32], n: usize) -> Vec<u64> {
+    let mut out = Vec::with_capacity(prompt.len() / n.max(1));
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for (i, &t) in prompt.iter().enumerate() {
+        for b in (t as u32).to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+        if (i + 1) % n == 0 {
+            out.push(h);
+        }
+    }
+    out
+}
+
+/// One registered prefix: which (layer, head) streams it covers, how
+/// many local tokens its pseudo-slot aliases, and the boundary hashes
+/// it owns in the index (removed when the registration is evicted).
+#[derive(Debug, Clone)]
+struct PrefixReg {
+    streams: Vec<(u16, u16)>,
+    tokens: usize,
+    hashes: Vec<u64>,
+    last_use: u64,
 }
 
 pub struct KvFtl {
@@ -142,6 +189,17 @@ pub struct KvFtl {
     token_map: HashMap<(StreamKey, KvKind, u32), Ppa>,
     emb_map: HashMap<(StreamKey, u16, u32), Ppa>,
     rev: HashMap<Ppa, PageTag>,
+    /// co-owner tags of physically shared pages (cross-request prefix
+    /// caching).  Absent => `rev` is the page's sole owner; present =>
+    /// every tag in the vector maps to the page and `rev` holds the
+    /// canonical tag (`refs[0]`) GC uses for bookkeeping.
+    shared: HashMap<Ppa, Vec<PageTag>>,
+    /// content-addressed prefix index: boundary hash -> (pseudo-slot,
+    /// local tokens at that boundary)
+    prefix_index: HashMap<u64, (u32, usize)>,
+    prefix_regs: HashMap<u32, PrefixReg>,
+    next_pslot: u32,
+    prefix_clock: u64,
     /// valid-page count per block
     block_valid: Vec<u32>,
     streams: HashMap<StreamKey, StreamBuf>,
@@ -177,6 +235,11 @@ impl KvFtl {
             token_map: HashMap::new(),
             emb_map: HashMap::new(),
             rev: HashMap::new(),
+            shared: HashMap::new(),
+            prefix_index: HashMap::new(),
+            prefix_regs: HashMap::new(),
+            next_pslot: PREFIX_SLOT_BASE,
+            prefix_clock: 0,
             block_valid: vec![0; geo.total_blocks()],
             streams: HashMap::new(),
             counters: FtlCounters::default(),
@@ -270,27 +333,33 @@ impl KvFtl {
     /// waits for every move.
     fn gc_block(&mut self, victim: BlockAddr, at: Time) -> Result<Time> {
         let valid = self.array.valid_pages(victim);
-        let mut moves: Vec<(Ppa, PageTag, Vec<u8>, Time)> = Vec::with_capacity(valid.len());
+        let mut moves: Vec<(Ppa, Vec<PageTag>, Vec<u8>, Time)> = Vec::with_capacity(valid.len());
         for pi in valid {
             let ppa = self.array.geo.page_of(victim, pi);
-            let tag = match self.rev.get(&ppa) {
-                Some(t) => *t,
-                None => continue, // untagged (shouldn't happen) — drop it
+            // a shared page moves ONCE; every co-owner's mapping follows
+            let tags: Vec<PageTag> = match self.shared.get(&ppa) {
+                Some(refs) => refs.clone(),
+                None => match self.rev.get(&ppa) {
+                    Some(t) => vec![*t],
+                    None => continue, // untagged (shouldn't happen) — drop it
+                },
             };
             let (data, rt) = {
                 let (d, rt) = self.array.read(ppa, at)?;
                 (d.to_vec(), rt)
             };
-            moves.push((ppa, tag, data, rt));
+            moves.push((ppa, tags, data, rt));
         }
         let mut t = at;
-        for (ppa, tag, data, rt) in moves {
+        for (ppa, tags, data, rt) in moves {
             // re-program on the same channel (keeps striping invariant;
             // die placement re-rotates via the cursor, preserving the
             // round-robin spread)
             let ch = self.array.geo.page_channel(ppa);
             let (new_ppa, wt) = self.program_page(ch, &data, rt)?;
-            self.retag(tag, new_ppa);
+            self.shared.remove(&ppa);
+            self.rev.remove(&ppa);
+            self.retag_all(&tags, new_ppa);
             self.array.invalidate(ppa);
             self.block_valid[victim.0] = self.block_valid[victim.0].saturating_sub(1);
             self.counters.gc_relocations += 1;
@@ -311,17 +380,65 @@ impl KvFtl {
         Ok(te)
     }
 
-    fn retag(&mut self, tag: PageTag, new_ppa: Ppa) {
-        match tag {
-            PageTag::Token { key, kind, group } => {
-                self.token_map.insert((key, kind, group), new_ppa);
-            }
-            PageTag::Emb { key, eg, tpage } => {
-                self.emb_map.insert((key, eg, tpage), new_ppa);
+    /// Point every owner tag at a page's new location.  The physical
+    /// page is counted once (`block_valid`, `rev`); co-owner tags beyond
+    /// the first live in `shared`.
+    fn retag_all(&mut self, tags: &[PageTag], new_ppa: Ppa) {
+        for tag in tags {
+            match *tag {
+                PageTag::Token { key, kind, group } => {
+                    self.token_map.insert((key, kind, group), new_ppa);
+                }
+                PageTag::Emb { key, eg, tpage } => {
+                    self.emb_map.insert((key, eg, tpage), new_ppa);
+                }
             }
         }
-        self.rev.insert(new_ppa, tag);
+        self.rev.insert(new_ppa, tags[0]);
+        if tags.len() > 1 {
+            self.shared.insert(new_ppa, tags.to_vec());
+        }
         self.block_valid[self.array.geo.block_of(new_ppa).0] += 1;
+    }
+
+    /// Add a co-owner tag to a mapped page (prefix sharing).  The page's
+    /// existing `rev` tag seeds the owner list on first sharing.
+    fn add_ref(&mut self, ppa: Ppa, tag: PageTag) {
+        let canon = self.rev.get(&ppa).copied();
+        let refs = self.shared.entry(ppa).or_insert_with(|| canon.into_iter().collect());
+        if !refs.contains(&tag) {
+            refs.push(tag);
+        }
+    }
+
+    /// Drop one owner tag from a page.  Returns true when the page has
+    /// no owners left — only then may the caller invalidate it and
+    /// reclaim the flash space (copy-on-write discipline: sharers never
+    /// free each other's data).
+    fn release_ref(&mut self, ppa: Ppa, tag: PageTag) -> bool {
+        if let Some(refs) = self.shared.get_mut(&ppa) {
+            refs.retain(|t| *t != tag);
+            match refs.len() {
+                0 => {
+                    self.shared.remove(&ppa);
+                    self.rev.remove(&ppa);
+                    true
+                }
+                n => {
+                    let first = refs[0];
+                    if n == 1 {
+                        // back to an exclusive owner
+                        self.shared.remove(&ppa);
+                    }
+                    self.rev.insert(ppa, first);
+                    self.counters.shared_releases += 1;
+                    false
+                }
+            }
+        } else {
+            self.rev.remove(&ppa);
+            true
+        }
     }
 
     /// Program one page on `ch`, picking the open block per the
@@ -390,13 +507,14 @@ impl KvFtl {
             PageTag::Emb { key, eg, tpage } => self.emb_map.get(&(key, eg, tpage)).copied(),
         };
         if let Some(old) = prior {
-            self.array.invalidate(old);
-            self.rev.remove(&old);
-            self.block_valid[self.array.geo.block_of(old).0] =
-                self.block_valid[self.array.geo.block_of(old).0].saturating_sub(1);
+            if self.release_ref(old, tag) {
+                self.array.invalidate(old);
+                self.block_valid[self.array.geo.block_of(old).0] =
+                    self.block_valid[self.array.geo.block_of(old).0].saturating_sub(1);
+            }
         }
         let (ppa, t) = self.program_page(ch, data, at)?;
-        self.retag(tag, ppa);
+        self.retag_all(&[tag], ppa);
         Ok(t)
     }
 
@@ -508,25 +626,13 @@ impl KvFtl {
     // ---- read path ---------------------------------------------------------
 
     /// Fetch token groups (dual-step loading, step 8): whole pages stream
-    /// from flash; groups still in the DRAM tail cost no flash I/O.
-    /// Returns rows as (first_token_index, n*d floats) per requested group,
-    /// plus the completion time.
+    /// from flash through the configured issue scheduler; groups still in
+    /// the DRAM tail cost no flash I/O.  The single read entry point:
+    /// each [`GroupFetch`] reports its first token index, decoded rows,
+    /// and when *its* page landed (so the engine can pipeline kernel work
+    /// behind the remaining reads — callers that don't care drop `done`),
+    /// plus the batch completion time.
     pub fn fetch_token_groups(
-        &mut self,
-        key: StreamKey,
-        kind: KvKind,
-        groups: &[usize],
-        at: Time,
-    ) -> Result<(Vec<(usize, Vec<f32>)>, Time)> {
-        let (fetched, done) = self.fetch_token_groups_timed(key, kind, groups, at)?;
-        Ok((fetched.into_iter().map(|g| (g.base, g.rows)).collect(), done))
-    }
-
-    /// As [`Self::fetch_token_groups`], but with per-group completion
-    /// times: page reads go through the configured issue scheduler and
-    /// each group reports when *its* page landed, so the engine can
-    /// pipeline kernel work behind the remaining reads.
-    pub fn fetch_token_groups_timed(
         &mut self,
         key: StreamKey,
         kind: KvKind,
@@ -679,13 +785,15 @@ impl KvFtl {
         self.token_map.keys().filter(|(k, _, _)| k.slot == slot).count()
     }
 
-    /// Total flash-mapped pages across every live stream — token (K/V)
+    /// Total *physical* flash pages currently mapped — token (K/V)
     /// pages AND the dual-K embedding pages, which are ~half again on
     /// top of K/V.  This is the per-shard cold-tier footprint the
     /// scheduler's capacity invariants check under striping; counting
-    /// token pages alone would let a device overflow unnoticed.
+    /// map entries instead would bill a prefix-shared page once per
+    /// sharer and starve admission of exactly the capacity that sharing
+    /// recovered.  (With no sharing this equals the map entry count.)
     pub fn mapped_pages_total(&self) -> usize {
-        self.token_map.len() + self.emb_map.len()
+        self.rev.len()
     }
 
     /// Promote one sealed token group into a DRAM tier: a timed page
@@ -724,20 +832,234 @@ impl KvFtl {
     /// dropped these tokens for good — H2O-style drop-on-resume).  The
     /// embedding-indexed K copy stays mapped: it packs many tokens per
     /// page and is reclaimed wholesale at `free_slot`.  Idempotent.
-    pub fn free_token_group(&mut self, key: StreamKey, group: usize) {
+    ///
+    /// A group whose pages are prefix-shared only releases this stream's
+    /// reference — the flash pages stay for the other owners, and the
+    /// call returns false (`dropped_groups` counts real reclaims only).
+    pub fn free_token_group(&mut self, key: StreamKey, group: usize) -> bool {
         let mut freed = false;
         for kind in [KvKind::K, KvKind::V] {
             if let Some(ppa) = self.token_map.remove(&(key, kind, group as u32)) {
-                self.rev.remove(&ppa);
-                self.array.invalidate(ppa);
-                let b = self.array.geo.block_of(ppa).0;
-                self.block_valid[b] = self.block_valid[b].saturating_sub(1);
-                freed = true;
+                let tag = PageTag::Token { key, kind, group: group as u32 };
+                if self.release_ref(ppa, tag) {
+                    self.array.invalidate(ppa);
+                    let b = self.array.geo.block_of(ppa).0;
+                    self.block_valid[b] = self.block_valid[b].saturating_sub(1);
+                    freed = true;
+                }
             }
         }
         if freed {
             self.counters.dropped_groups += 1;
         }
+        freed
+    }
+
+    // ---- cross-request prefix caching --------------------------------------
+    //
+    // The content-addressed index maps boundary hashes of token-id
+    // chunks to pseudo-slots whose stream mappings alias a donor's
+    // sealed pages (refcounted — zero flash I/O).  Registration pins the
+    // pages past the donor's `free_slot`; attachment aliases them again
+    // under a new sequence's own stream keys and rebuilds the DRAM
+    // stream state, so the fetch path needs no sharing awareness at all.
+
+    /// Register a donor slot's sealed prefix under its content hashes.
+    /// `bounds[i] = (boundary hash, local tokens at that boundary)`,
+    /// ascending; local tokens is how many of the boundary's tokens this
+    /// device's FTL holds (== global tokens under head sharding, the
+    /// round-robin group share under context striping — always a
+    /// multiple of `n`).  Boundaries already in the index are kept (first
+    /// registration wins; the donor's pages are content-identical by
+    /// construction).  Returns the pseudo-slots evicted to stay under
+    /// the index capacity, so the caller can purge any DRAM-tier copies.
+    pub fn register_prefix(&mut self, donor: u32, bounds: &[(u64, usize)]) -> Vec<u32> {
+        let fresh: Vec<(u64, usize)> =
+            bounds.iter().copied().filter(|(h, _)| !self.prefix_index.contains_key(h)).collect();
+        if fresh.is_empty() {
+            return Vec::new();
+        }
+        let tokens = fresh.iter().map(|&(_, t)| t).max().unwrap();
+        let n = self.cfg.n;
+        let t_emb = self.tokens_per_emb_page;
+        let egs = (self.cfg.d_head / self.cfg.m) as u16;
+        let pslot = self.next_pslot;
+        self.next_pslot += 1;
+        let keys = self.stream_keys(donor);
+        let mut streams = Vec::with_capacity(keys.len());
+        for key in &keys {
+            let pkey = StreamKey { slot: pslot, layer: key.layer, head: key.head };
+            for g in 0..(tokens / n) as u32 {
+                for kind in [KvKind::K, KvKind::V] {
+                    if let Some(&ppa) = self.token_map.get(&(*key, kind, g)) {
+                        self.token_map.insert((pkey, kind, g), ppa);
+                        self.add_ref(ppa, PageTag::Token { key: pkey, kind, group: g });
+                    }
+                }
+            }
+            for tp in 0..(tokens / t_emb) as u32 {
+                for eg in 0..egs {
+                    if let Some(&ppa) = self.emb_map.get(&(*key, eg, tp)) {
+                        self.emb_map.insert((pkey, eg, tp), ppa);
+                        self.add_ref(ppa, PageTag::Emb { key: pkey, eg, tpage: tp });
+                    }
+                }
+            }
+            streams.push((key.layer, key.head));
+        }
+        let hashes: Vec<u64> = fresh.iter().map(|&(h, _)| h).collect();
+        for &(h, t) in &fresh {
+            self.prefix_index.insert(h, (pslot, t));
+        }
+        let tick = self.prefix_clock;
+        self.prefix_clock += 1;
+        self.prefix_regs.insert(pslot, PrefixReg { streams, tokens, hashes, last_use: tick });
+        self.counters.prefix_registrations += 1;
+
+        let mut evicted = Vec::new();
+        while self.prefix_regs.len() > PREFIX_INDEX_CAP {
+            let victim = self
+                .prefix_regs
+                .iter()
+                .min_by_key(|(&p, r)| (r.last_use, p))
+                .map(|(&p, _)| p)
+                .unwrap();
+            self.release_prefix(victim);
+            evicted.push(victim);
+        }
+        evicted
+    }
+
+    /// Longest registered boundary among `hashes` (one hash per complete
+    /// group, ascending — [`prefix_hashes`]).  Returns the boundary
+    /// index; the caller derives the hit length as `(i + 1) * n` global
+    /// tokens.  Read-only: LRU state moves at attach time, never here.
+    pub fn lookup_prefix(&self, hashes: &[u64]) -> Option<usize> {
+        hashes.iter().rposition(|h| self.prefix_index.contains_key(h))
+    }
+
+    /// Attach a cached prefix to `slot`: alias the registered
+    /// pseudo-slot's pages into the slot's own mappings (refcounted,
+    /// zero flash I/O) and rebuild the DRAM stream state — token count,
+    /// embedding tail, running v̄ — exactly as if the rows had been
+    /// appended, from the sealed pages (which hold the quantised prefix
+    /// rows, so the reconstruction is bit-exact).  Returns the
+    /// pseudo-slot and the local tokens attached.
+    pub fn attach_prefix(&mut self, hash: u64, slot: u32) -> Result<(u32, usize)> {
+        let &(pslot, tokens) = self
+            .prefix_index
+            .get(&hash)
+            .ok_or_else(|| anyhow!("attach of unregistered prefix hash {hash:#x}"))?;
+        let tick = self.prefix_clock;
+        self.prefix_clock += 1;
+        let reg = self
+            .prefix_regs
+            .get_mut(&pslot)
+            .ok_or_else(|| anyhow!("prefix index points at dead pseudo-slot {pslot}"))?;
+        reg.last_use = tick;
+        let stream_lh = reg.streams.clone();
+        let n = self.cfg.n;
+        let d = self.cfg.d_head;
+        let t_emb = self.tokens_per_emb_page;
+        let egs = (d / self.cfg.m) as u16;
+        for (layer, head) in stream_lh {
+            let pkey = StreamKey { slot: pslot, layer, head };
+            let skey = StreamKey { slot, layer, head };
+            for g in 0..(tokens / n) as u32 {
+                for kind in [KvKind::K, KvKind::V] {
+                    let ppa = *self
+                        .token_map
+                        .get(&(pkey, kind, g))
+                        .ok_or_else(|| anyhow!("registered prefix lost group {g}"))?;
+                    self.token_map.insert((skey, kind, g), ppa);
+                    self.add_ref(ppa, PageTag::Token { key: skey, kind, group: g });
+                }
+            }
+            for tp in 0..(tokens / t_emb) as u32 {
+                for eg in 0..egs {
+                    let ppa = *self
+                        .emb_map
+                        .get(&(pkey, eg, tp))
+                        .ok_or_else(|| anyhow!("registered prefix lost emb page {tp}"))?;
+                    self.emb_map.insert((skey, eg, tp), ppa);
+                    self.add_ref(ppa, PageTag::Emb { key: skey, eg, tpage: tp });
+                }
+            }
+            // rebuild the DRAM stream state functionally (no timed I/O)
+            let mut vbar_sum = vec![0.0f32; d];
+            for g in 0..tokens / n {
+                let ppa = self.token_map[&(skey, KvKind::V, g as u32)];
+                let rows = decode_rows(self.array.page_data(ppa)?, n * d);
+                for r in rows.chunks_exact(d) {
+                    for (s, &x) in vbar_sum.iter_mut().zip(r) {
+                        *s += x;
+                    }
+                }
+            }
+            let emb_base = (tokens / t_emb) * t_emb;
+            let mut emb_tail = Vec::with_capacity((tokens - emb_base) * d);
+            for t in emb_base..tokens {
+                let ppa = self.token_map[&(skey, KvKind::K, (t / n) as u32)];
+                let rows = decode_rows(self.array.page_data(ppa)?, n * d);
+                emb_tail.extend_from_slice(&rows[(t % n) * d..(t % n + 1) * d]);
+            }
+            self.streams.insert(
+                skey,
+                StreamBuf {
+                    count: tokens,
+                    k_tail: Vec::new(),
+                    v_tail: Vec::new(),
+                    emb_tail,
+                    vbar_sum,
+                },
+            );
+        }
+        self.counters.prefix_attaches += 1;
+        self.counters.prefix_tokens_attached += tokens as u64;
+        Ok((pslot, tokens))
+    }
+
+    /// Drop one registration: its index entries and the pseudo-slot's
+    /// page references.  Pages shared with live sequences survive; pages
+    /// nobody else owns are invalidated for GC.
+    fn release_prefix(&mut self, pslot: u32) {
+        let Some(reg) = self.prefix_regs.remove(&pslot) else { return };
+        for h in &reg.hashes {
+            self.prefix_index.remove(h);
+        }
+        let n = self.cfg.n;
+        let t_emb = self.tokens_per_emb_page;
+        let egs = (self.cfg.d_head / self.cfg.m) as u16;
+        for &(layer, head) in &reg.streams {
+            let pkey = StreamKey { slot: pslot, layer, head };
+            for g in 0..(reg.tokens / n) as u32 {
+                for kind in [KvKind::K, KvKind::V] {
+                    if let Some(ppa) = self.token_map.remove(&(pkey, kind, g)) {
+                        if self.release_ref(ppa, PageTag::Token { key: pkey, kind, group: g }) {
+                            self.array.invalidate(ppa);
+                            self.block_valid[self.array.geo.block_of(ppa).0] =
+                                self.block_valid[self.array.geo.block_of(ppa).0].saturating_sub(1);
+                        }
+                    }
+                }
+            }
+            for tp in 0..(reg.tokens / t_emb) as u32 {
+                for eg in 0..egs {
+                    if let Some(ppa) = self.emb_map.remove(&(pkey, eg, tp)) {
+                        if self.release_ref(ppa, PageTag::Emb { key: pkey, eg, tpage: tp }) {
+                            self.array.invalidate(ppa);
+                            self.block_valid[self.array.geo.block_of(ppa).0] =
+                                self.block_valid[self.array.geo.block_of(ppa).0].saturating_sub(1);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Registered prefixes currently held (index size in pseudo-slots).
+    pub fn prefix_registrations(&self) -> usize {
+        self.prefix_regs.len()
     }
 
     // ---- lifecycle ---------------------------------------------------------
@@ -752,10 +1074,12 @@ impl KvFtl {
             .collect();
         for k in tkeys {
             let ppa = self.token_map.remove(&k).unwrap();
-            self.rev.remove(&ppa);
-            self.array.invalidate(ppa);
-            self.block_valid[self.array.geo.block_of(ppa).0] =
-                self.block_valid[self.array.geo.block_of(ppa).0].saturating_sub(1);
+            let tag = PageTag::Token { key: k.0, kind: k.1, group: k.2 };
+            if self.release_ref(ppa, tag) {
+                self.array.invalidate(ppa);
+                self.block_valid[self.array.geo.block_of(ppa).0] =
+                    self.block_valid[self.array.geo.block_of(ppa).0].saturating_sub(1);
+            }
         }
         let ekeys: Vec<_> = self
             .emb_map
@@ -765,10 +1089,12 @@ impl KvFtl {
             .collect();
         for k in ekeys {
             let ppa = self.emb_map.remove(&k).unwrap();
-            self.rev.remove(&ppa);
-            self.array.invalidate(ppa);
-            self.block_valid[self.array.geo.block_of(ppa).0] =
-                self.block_valid[self.array.geo.block_of(ppa).0].saturating_sub(1);
+            let tag = PageTag::Emb { key: k.0, eg: k.1, tpage: k.2 };
+            if self.release_ref(ppa, tag) {
+                self.array.invalidate(ppa);
+                self.block_valid[self.array.geo.block_of(ppa).0] =
+                    self.block_valid[self.array.geo.block_of(ppa).0].saturating_sub(1);
+            }
         }
         self.streams.retain(|k, _| k.slot != slot);
 

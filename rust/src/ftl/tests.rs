@@ -45,13 +45,18 @@ fn append_then_fetch_token_groups_exact() {
     let (rows, t) = ftl.fetch_token_groups(k, KvKind::K, &[0, 2], 0.0).unwrap();
     assert!(t > 0.0);
     assert_eq!(rows.len(), 2);
-    for (base, data) in rows {
+    for g in rows {
         for i in 0..8 {
-            assert_eq!(&data[i * 32..(i + 1) * 32], &all_k[base + i][..], "token {}", base + i);
+            assert_eq!(
+                &g.rows[i * 32..(i + 1) * 32],
+                &all_k[g.base + i][..],
+                "token {}",
+                g.base + i
+            );
         }
     }
     let (vrows, _) = ftl.fetch_token_groups(k, KvKind::V, &[1], 0.0).unwrap();
-    assert_eq!(&vrows[0].1[..32], &all_v[8][..]);
+    assert_eq!(&vrows[0].rows[..32], &all_v[8][..]);
 }
 
 #[test]
@@ -68,10 +73,10 @@ fn tail_group_served_from_dram() {
     let reads_before = ftl.array.counters.page_reads;
     let (rows, _) = ftl.fetch_token_groups(k, KvKind::K, &[1], 0.0).unwrap();
     assert_eq!(ftl.array.counters.page_reads, reads_before, "tail must not hit flash");
-    assert_eq!(rows[0].0, 8);
+    assert_eq!(rows[0].base, 8);
     assert_eq!(ftl.counters.tail_hits, 1);
     // tail rows beyond appended tokens are zero-padded
-    assert!(rows[0].1[3 * 32..].iter().all(|&x| x == 0.0));
+    assert!(rows[0].rows[3 * 32..].iter().all(|&x| x == 0.0));
 }
 
 #[test]
@@ -199,6 +204,166 @@ fn fetch_beyond_appended_errors() {
     assert!(ftl.fetch_emb_channels(k, &[99], 4, 0.0).is_err());
 }
 
+/// Append `n_tok` tokens to every (layer 0, head 0|1) stream of `slot`,
+/// returning the quantised K truth rows (same for both heads).
+fn fill_slot(ftl: &mut KvFtl, slot: u32, n_tok: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    let mut truth = Vec::new();
+    for _ in 0..n_tok {
+        let kr = row(&mut rng, 32);
+        let vr = row(&mut rng, 32);
+        for head in 0..2u16 {
+            ftl.append_token(key(slot, 0, head), &kr, &vr, 0.0).unwrap();
+        }
+        truth.push(kr.iter().map(|&x| layout::q16(x)).collect());
+    }
+    truth
+}
+
+/// Register slot 0's 24-token prefix under the hashes of `prompt` and
+/// return the boundary hash list.
+fn register(ftl: &mut KvFtl, prompt: &[i32]) -> Vec<u64> {
+    let hashes = prefix_hashes(prompt, 8);
+    let bounds: Vec<(u64, usize)> =
+        hashes.iter().enumerate().map(|(i, &h)| (h, (i + 1) * 8)).collect();
+    assert!(ftl.register_prefix(0, &bounds).is_empty());
+    hashes
+}
+
+#[test]
+fn prefix_attach_aliases_pages_and_reconstructs_stream() {
+    let mut ftl = mk();
+    let truth = fill_slot(&mut ftl, 0, 24, 11);
+    let prompt: Vec<i32> = (0..24).collect();
+    let hashes = register(&mut ftl, &prompt);
+    assert_eq!(hashes.len(), 3);
+    // longest-boundary lookup, including past the registered range
+    let longer = prefix_hashes(&[&prompt[..], &[99, 98][..]].concat(), 8);
+    assert_eq!(ftl.lookup_prefix(&longer), Some(2));
+
+    let physical = ftl.mapped_pages_total();
+    let programmed = ftl.array.counters.bytes_programmed;
+    let (_pslot, toks) = ftl.attach_prefix(hashes[2], 5).unwrap();
+    assert_eq!(toks, 24);
+    // sharing is metadata-only: no flash programs, no new physical pages
+    assert_eq!(ftl.array.counters.bytes_programmed, programmed);
+    assert_eq!(ftl.mapped_pages_total(), physical);
+    assert_eq!(ftl.counters.prefix_attaches, 1);
+    assert_eq!(ftl.counters.prefix_tokens_attached, 24);
+
+    let k5 = key(5, 0, 1);
+    assert_eq!(ftl.tokens_appended(k5), 24);
+    // reconstructed v̄ matches the donor's bit-exactly
+    assert_eq!(ftl.vbar(k5).unwrap(), ftl.vbar(key(0, 0, 1)).unwrap());
+    let (rows, _) = ftl.fetch_token_groups(k5, KvKind::K, &[0, 1, 2], 0.0).unwrap();
+    for g in rows {
+        for i in 0..8 {
+            assert_eq!(&g.rows[i * 32..(i + 1) * 32], &truth[g.base + i][..]);
+        }
+    }
+    // the attached stream keeps appending seamlessly past the prefix
+    let mut rng = Rng::new(12);
+    let (kr, vr) = (row(&mut rng, 32), row(&mut rng, 32));
+    ftl.append_token(k5, &kr, &vr, 0.0).unwrap();
+    let (tail, _) = ftl.fetch_token_groups(k5, KvKind::K, &[3], 0.0).unwrap();
+    assert_eq!(tail[0].base, 24);
+    let kq: Vec<f32> = kr.iter().map(|&x| layout::q16(x)).collect();
+    assert_eq!(&tail[0].rows[..32], &kq[..]);
+    // and the emb view of the attached stream agrees token-for-token
+    let (lanes, _) = ftl.fetch_emb_channels(k5, &[7], 25, 0.0).unwrap();
+    for t in 0..24 {
+        assert_eq!(lanes[0][t], truth[t][7], "emb chan 7 tok {t}");
+    }
+    assert_eq!(lanes[0][24], kq[7]);
+}
+
+#[test]
+fn shared_group_gc_relocation_updates_every_owner() {
+    let mut ftl = mk();
+    let truth = fill_slot(&mut ftl, 0, 24, 21);
+    let prompt: Vec<i32> = (100..124).collect();
+    let hashes = register(&mut ftl, &prompt);
+    ftl.attach_prefix(hashes[2], 5).unwrap();
+    // churn other slots until GC relocates pages on the tiny device
+    let mut rng = Rng::new(22);
+    for round in 0..6u32 {
+        let k = key(10 + round, 0, 0);
+        for _ in 0..64 {
+            ftl.append_token(k, &row(&mut rng, 32), &row(&mut rng, 32), 0.0).unwrap();
+        }
+        ftl.free_slot(10 + round, 0.0).unwrap();
+    }
+    assert!(ftl.counters.gc_relocations > 0, "churn must trigger GC");
+    // every owner's mapping moved together: donor and sharer still alias
+    // the same physical page, and the data survived relocation
+    for head in 0..2u16 {
+        for g in 0..3u32 {
+            for kind in [KvKind::K, KvKind::V] {
+                assert_eq!(
+                    ftl.token_map[&(key(0, 0, head), kind, g)],
+                    ftl.token_map[&(key(5, 0, head), kind, g)],
+                    "head {head} group {g} diverged"
+                );
+            }
+        }
+        let (rows, _) =
+            ftl.fetch_token_groups(key(5, 0, head), KvKind::K, &[0, 1, 2], 0.0).unwrap();
+        for g in rows {
+            for i in 0..8 {
+                assert_eq!(&g.rows[i * 32..(i + 1) * 32], &truth[g.base + i][..]);
+            }
+        }
+    }
+}
+
+#[test]
+fn drop_on_shared_group_detaches_without_freeing() {
+    let mut ftl = mk();
+    let truth = fill_slot(&mut ftl, 0, 24, 31);
+    let prompt: Vec<i32> = (200..224).collect();
+    let hashes = register(&mut ftl, &prompt);
+    let (pslot, _) = ftl.attach_prefix(hashes[2], 5).unwrap();
+    let physical = ftl.mapped_pages_total();
+
+    // drop-on-resume on the sharer: detach, don't free
+    assert!(!ftl.free_token_group(key(5, 0, 0), 0));
+    assert_eq!(ftl.counters.dropped_groups, 0);
+    assert!(ftl.counters.shared_releases >= 2, "K and V must both detach");
+    assert_eq!(ftl.mapped_pages_total(), physical);
+    // the donor still reads its group back intact
+    let (rows, _) = ftl.fetch_token_groups(key(0, 0, 0), KvKind::K, &[0], 0.0).unwrap();
+    assert_eq!(&rows[0].rows[..32], &truth[0][..]);
+
+    // donor drops too: the registration still pins the pages
+    assert!(!ftl.free_token_group(key(0, 0, 0), 0));
+    assert_eq!(ftl.counters.dropped_groups, 0);
+    assert_eq!(ftl.mapped_pages_total(), physical);
+
+    // last owner out reclaims the flash
+    ftl.release_prefix(pslot);
+    assert!(ftl.mapped_pages_total() < physical);
+    assert_eq!(ftl.prefix_registrations(), 0);
+}
+
+#[test]
+fn donor_free_slot_keeps_registered_prefix_alive() {
+    let mut ftl = mk();
+    let truth = fill_slot(&mut ftl, 0, 24, 41);
+    let prompt: Vec<i32> = (300..324).collect();
+    let hashes = register(&mut ftl, &prompt);
+    ftl.free_slot(0, 0.0).unwrap();
+    // the index still serves the prefix after the donor retired
+    assert_eq!(ftl.lookup_prefix(&hashes), Some(2));
+    let (_, toks) = ftl.attach_prefix(hashes[2], 7).unwrap();
+    assert_eq!(toks, 24);
+    let (rows, _) = ftl.fetch_token_groups(key(7, 0, 0), KvKind::K, &[0, 1, 2], 0.0).unwrap();
+    for g in rows {
+        for i in 0..8 {
+            assert_eq!(&g.rows[i * 32..(i + 1) * 32], &truth[g.base + i][..]);
+        }
+    }
+}
+
 #[test]
 fn prop_random_append_fetch_consistency() {
     check(
@@ -220,13 +385,13 @@ fn prop_random_append_fetch_consistency() {
             let groups: Vec<usize> = (0..n_groups).collect();
             let (rows, _) =
                 ftl.fetch_token_groups(k, KvKind::K, &groups, 0.0).map_err(|e| e.to_string())?;
-            for (base, data) in rows {
+            for g in rows {
                 for i in 0..8 {
-                    let t = base + i;
+                    let t = g.base + i;
                     if t >= n_tok {
                         continue;
                     }
-                    if data[i * 32..(i + 1) * 32] != truth[t][..] {
+                    if g.rows[i * 32..(i + 1) * 32] != truth[t][..] {
                         return Err(format!("mismatch at token {t}"));
                     }
                 }

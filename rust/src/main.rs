@@ -11,16 +11,13 @@
 
 use anyhow::{bail, Context, Result};
 use instinfer::bench;
-use instinfer::config::hw::{FlashPathConfig, FlashPlacement, FlashReadSched};
-use instinfer::coordinator::{
-    run_closed_loop, run_open_loop, EngineConfig, InferenceEngine, SchedConfig,
-};
-use instinfer::kvtier::{TierConfig, TierPolicy};
+use instinfer::coordinator::{run_closed_loop, run_open_loop, InferenceEngine, ServeOpts};
 use instinfer::runtime::{golden, Runtime};
-use instinfer::shard::ShardPolicy;
 use instinfer::util::json::Json;
 use instinfer::util::table::Table;
-use instinfer::workload::{ArrivalGen, LengthProfile, Request, WorkloadGen};
+use instinfer::workload::{
+    ArrivalGen, PrefixWorkloadGen, Request, RequestSource, WorkloadGen,
+};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -35,45 +32,25 @@ fn usage() -> ! {
         "usage: instinfer <command> [options]\n\
          \n\
          commands:\n\
-         \x20 serve [--requests N] [--batch B] [--gen T] [--n-csds K] [--sparse]\n\
-         \x20       [--shard-policy stripe|block|context] [--overlap]\n\
-         \x20       [--profile fixed|chat|qa] [--artifacts DIR]\n\
-         \x20       [--arrival-rate R] [--prefill-chunk C] [--slots S]\n\
-         \x20       [--hi-frac F]\n\
-         \x20       [--hot-kib N] [--tier-policy lru|h2o|pin[:W]]\n\
-         \x20       [--drop-on-resume] [--resume-keep K]\n\
-         \x20       [--flash-path legacy|tuned] [--flash-placement channel|die]\n\
-         \x20       [--flash-sched fifo|interleave]\n\
-         \x20       [--flash-pipeline | --flash-no-pipeline]\n\
-         \x20       continuous batching; --arrival-rate R runs open-loop\n\
-         \x20       Poisson arrivals (R req/s on the simulated clock),\n\
-         \x20       otherwise all requests are present at t=0.\n\
+         \x20 serve — continuous batching on the functional engine.\n\
+         \x20       Closed-loop by default; --arrival-rate R runs open-loop\n\
+         \x20       Poisson arrivals (R req/s on the simulated clock).\n\
          \x20       --overlap disaggregates prefill and decode onto two\n\
-         \x20       pipelined engine streams (admissions prefill on the GPU\n\
-         \x20       stream while decode ticks keep advancing; same outputs,\n\
-         \x20       decoupled TTFT/decode latency).\n\
-         \x20       --n-csds shards each sequence across K engine instances\n\
-         \x20       (--csds is an alias); --shard-policy picks head striping,\n\
-         \x20       head blocks, or context (token-group) striping with a\n\
-         \x20       log-sum-exp merge — context implies dense attention.\n\
-         \x20       --hot-kib enables the per-CSD DRAM hot tier;\n\
-         \x20       --drop-on-resume keeps only the --resume-keep most\n\
-         \x20       important tokens when a preempted sequence returns.\n\
-         \x20       --flash-path picks the flash KV data path (default\n\
-         \x20       legacy = channel placement + fifo reads + read barrier;\n\
-         \x20       tuned = die-interleaved placement + conflict-aware reads\n\
-         \x20       + read-compute pipelining); the individual --flash-*\n\
-         \x20       flags then override its components, e.g. --flash-path\n\
-         \x20       tuned --flash-no-pipeline ablates only the pipelining\n\
+         \x20       pipelined engine streams (same outputs, decoupled TTFT);\n\
+         \x20       --prefix-cache shares sealed prompt prefixes across\n\
+         \x20       requests through the FTL's content-addressed index.\n\
+         \x20       Flags (generated from the ServeOpts table):\n\
+         {}\
          \x20 bench <target|all> [--json FILE]   regenerate paper figures\n\
          \x20       (fig4 fig5 fig6 fig11 fig12 fig13 fig14 fig15 fig16\n\
          \x20       fig17a fig17b table1 tier shard serve overlap flashpath\n\
-         \x20       ablate-group ablate-dualk ablate-pipeline ablate-p2p\n\
-         \x20       ablate-placement);\n\
+         \x20       prefix ablate-group ablate-dualk ablate-pipeline\n\
+         \x20       ablate-p2p ablate-placement);\n\
          \x20       `bench all --json` emits one stitched trajectory document\n\
          \x20       (schema instinfer-bench-trajectory/v1, run-numbered in CI)\n\
          \x20 golden [--artifacts DIR] [--tol T]\n\
-         \x20 inspect [--artifacts DIR]"
+         \x20 inspect [--artifacts DIR]",
+        ServeOpts::usage_block()
     );
     std::process::exit(2);
 }
@@ -83,10 +60,6 @@ fn flag_value<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
         .position(|a| a == name)
         .and_then(|i| args.get(i + 1))
         .map(|s| s.as_str())
-}
-
-fn has_flag(args: &[String], name: &str) -> bool {
-    args.iter().any(|a| a == name)
 }
 
 fn artifacts_dir(args: &[String]) -> String {
@@ -103,87 +76,59 @@ fn dispatch(args: &[String]) -> Result<()> {
     }
 }
 
-fn serve(args: &[String]) -> Result<()> {
-    let n_req: usize = flag_value(args, "--requests").unwrap_or("8").parse()?;
-    let batch: usize = flag_value(args, "--batch").unwrap_or("4").parse()?;
-    let gen_toks: usize = flag_value(args, "--gen").unwrap_or("8").parse()?;
-    let n_csds: usize = flag_value(args, "--n-csds")
-        .or_else(|| flag_value(args, "--csds"))
-        .unwrap_or("2")
-        .parse()?;
-    let shard_policy = ShardPolicy::parse(flag_value(args, "--shard-policy").unwrap_or("stripe"))?;
-    if n_csds == 0 {
-        bail!("--n-csds must be >= 1");
-    }
-    let prefill_chunk: usize = flag_value(args, "--prefill-chunk").unwrap_or("4").parse()?;
-    let slot_cap: usize = flag_value(args, "--slots").unwrap_or("64").parse()?;
-    let hi_frac: f64 = flag_value(args, "--hi-frac").unwrap_or("0").parse()?;
-    let hot_kib: usize = flag_value(args, "--hot-kib").unwrap_or("0").parse()?;
-    let tier_policy = TierPolicy::parse(flag_value(args, "--tier-policy").unwrap_or("lru"))?;
-    let drop_on_resume = has_flag(args, "--drop-on-resume");
-    let resume_keep: usize = flag_value(args, "--resume-keep").unwrap_or("0").parse()?;
-    let overlap = has_flag(args, "--overlap");
-    let mut flash_path = match flag_value(args, "--flash-path") {
-        Some(v) => FlashPathConfig::parse(v)?,
-        None => FlashPathConfig::legacy(),
-    };
-    if let Some(v) = flag_value(args, "--flash-placement") {
-        flash_path.placement = FlashPlacement::parse(v)?;
-    }
-    if let Some(v) = flag_value(args, "--flash-sched") {
-        flash_path.sched = FlashReadSched::parse(v)?;
-    }
-    if has_flag(args, "--flash-pipeline") {
-        flash_path.pipeline = true;
-    }
-    if has_flag(args, "--flash-no-pipeline") {
-        flash_path.pipeline = false;
-    }
-    let arrival_rate: Option<f64> = match flag_value(args, "--arrival-rate") {
-        Some(v) => Some(v.parse().context("--arrival-rate")?),
-        None => None,
-    };
-    let profile = match flag_value(args, "--profile").unwrap_or("fixed") {
-        "fixed" => LengthProfile::Fixed,
-        "chat" => LengthProfile::Chat,
-        "qa" => LengthProfile::Qa,
-        other => bail!("unknown profile {other:?}"),
-    };
+/// Stem-reuse probability of the multi-turn workload behind
+/// `serve --prefix-cache` (the share *length* is `--share-ratio`).
+const PREFIX_HIT_RATE: f64 = 0.8;
+/// Stem pool size of that workload (distinct shared system prompts).
+const PREFIX_STEMS: usize = 4;
 
-    let rt = Runtime::open(artifacts_dir(args)).context("opening artifacts")?;
+fn serve(args: &[String]) -> Result<()> {
+    let opts = ServeOpts::parse(args)?;
+    let rt = Runtime::open(&opts.artifacts).context("opening artifacts")?;
     println!("platform: {}", rt.platform());
     let compiled = rt.warmup()?;
     println!("prepared {compiled} executables");
     let meta = rt.manifest.model.clone();
-    let sparse = has_flag(args, "--sparse");
-    if sparse && shard_policy == ShardPolicy::Context {
-        bail!("--shard-policy context supports dense attention only (drop --sparse)");
-    }
-    let cfg = EngineConfig::micro_for(&meta, n_csds, sparse)
-        .tiered(TierConfig { hot_bytes: hot_kib * 1024, policy: tier_policy })
-        .sharded(shard_policy)
-        .flash_path(flash_path);
-    let mut engine = InferenceEngine::new(rt, cfg)?;
+    println!("{opts}");
+    let mut engine = InferenceEngine::new(rt, opts.engine_config(&meta))?;
 
-    let mut wg = WorkloadGen::new(42, meta.vocab, meta.max_seq, profile,
-                                  meta.prefill_seq / 2, gen_toks);
+    // multi-turn / shared-system-prompt workload when prefix caching is
+    // on (stems rounded to whole token groups); independent prompts
+    // from the length profile otherwise
+    let prompt_len = (meta.prefill_seq / 2).max(1);
+    let mut src: Box<dyn RequestSource> = if opts.prefix_cache {
+        Box::new(PrefixWorkloadGen::new(
+            42,
+            meta.vocab,
+            prompt_len,
+            opts.gen,
+            opts.share_ratio,
+            meta.n,
+            PREFIX_HIT_RATE,
+            PREFIX_STEMS,
+        ))
+    } else {
+        Box::new(WorkloadGen::new(
+            42,
+            meta.vocab,
+            meta.max_seq,
+            opts.profile,
+            prompt_len,
+            opts.gen,
+        ))
+    };
     let sanitize = |mut r: Request| -> Request {
         r.prompt.truncate(meta.prefill_seq);
-        r.max_new_tokens = r.max_new_tokens.min(gen_toks).max(1);
+        r.max_new_tokens = r.max_new_tokens.min(opts.gen).max(1);
         r
     };
-    let scfg = SchedConfig {
-        drop_on_resume,
-        resume_keep,
-        ..SchedConfig::serving(batch, prefill_chunk, slot_cap).overlapped(overlap)
-    };
+    let scfg = opts.sched_config();
+    let n_req = opts.requests;
     let t0 = std::time::Instant::now();
-    let report = match arrival_rate {
+    let report = match opts.arrival_rate {
         Some(rate) => {
-            if rate <= 0.0 {
-                bail!("--arrival-rate must be > 0");
-            }
-            let mut ag = ArrivalGen::new(wg, 43, rate).with_high_priority_fraction(hi_frac);
+            let mut ag =
+                ArrivalGen::new(src, 43, rate).with_high_priority_fraction(opts.hi_frac);
             let mut arrivals = ag.take(n_req);
             for a in arrivals.iter_mut() {
                 a.req = sanitize(a.req.clone());
@@ -192,7 +137,7 @@ fn serve(args: &[String]) -> Result<()> {
             run_open_loop(&mut engine, arrivals, scfg)?
         }
         None => {
-            let reqs: Vec<Request> = wg.batch(n_req).into_iter().map(sanitize).collect();
+            let reqs: Vec<Request> = (0..n_req).map(|_| sanitize(src.request())).collect();
             println!("closed loop: {n_req} requests at t=0\n");
             run_closed_loop(&mut engine, reqs, scfg)?
         }
@@ -243,7 +188,7 @@ fn serve(args: &[String]) -> Result<()> {
     let fu = engine.flash_util();
     println!(
         "flash path {}: die busy {:.6}s, channel busy {:.6}s, peak die queue {}",
-        flash_path.label(),
+        opts.flash_path.label(),
         fu.die_busy_s,
         fu.channel_busy_s,
         fu.die_peak_depth,
@@ -255,7 +200,7 @@ fn serve(args: &[String]) -> Result<()> {
             "shards ({} x {}): attn {:.6}s, all-reduce {:.6}s ({:.1} KiB shipped), \
              mean barrier skew {:.2}us over {} barriers, stragglers {:?}",
             engine.shards.n_csds(),
-            shard_policy.label(),
+            opts.shard_policy.label(),
             st.attn_span_s,
             st.merge_span_s,
             st.xfer_bytes / 1024.0,
@@ -264,7 +209,7 @@ fn serve(args: &[String]) -> Result<()> {
             ck.straggler,
         );
     }
-    if overlap {
+    if opts.overlap {
         let st = &engine.shards.stats;
         let ck = &engine.shards.clock;
         println!(
@@ -284,8 +229,8 @@ fn serve(args: &[String]) -> Result<()> {
         println!(
             "KV tier ({}, {} KiB/CSD): {} hits / {} misses ({:.1}% hit rate), \
              {} admissions, {} evictions, {} tokens dropped on resume",
-            tier_policy.label(),
-            hot_kib,
+            opts.tier_policy.label(),
+            opts.hot_kib,
             st.hits,
             st.misses,
             100.0 * st.hit_rate(),
@@ -306,6 +251,20 @@ fn serve(args: &[String]) -> Result<()> {
                 }
             }
         }
+    }
+    if opts.prefix_cache {
+        let (mut regs, mut attaches, mut toks) = (0u64, 0u64, 0u64);
+        for q in engine.csds() {
+            let c = &q.csd.ftl.counters;
+            regs += c.prefix_registrations;
+            attaches += c.prefix_attaches;
+            toks += c.prefix_tokens_attached;
+        }
+        println!(
+            "prefix cache: {regs} registrations, {attaches} attaches, {toks} shared \
+             tokens attached across shards, {} prompt tokens skipped at prefill",
+            engine.metrics.prefix_hit_tokens,
+        );
     }
     Ok(())
 }

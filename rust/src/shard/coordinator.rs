@@ -22,7 +22,7 @@ use super::ShardTopology;
 use crate::config::hw::{CsdSpec, GpuSpec, PcieSpec};
 use crate::config::model::FP16_BYTES;
 use crate::csd::{AttnMode, CsdCommand, InstCsd, NvmeQueue, UnitBreakdown};
-use crate::ftl::FtlConfig;
+use crate::ftl::{prefix_hashes, FtlConfig};
 use crate::kvtier::{TierConfig, TierStats};
 use crate::pcie::{self, XferReq};
 use crate::sim::Time;
@@ -425,7 +425,10 @@ impl ShardCoordinator {
     /// `(H, sp, d)` blocks for this sequence; `len` is the prompt
     /// length.  Head policies send each shard its heads' rows over the
     /// whole prompt; context striping sends each shard its token groups
-    /// for every head.
+    /// for every head.  `skip` global tokens (the attached cached
+    /// prefix, always a group multiple; 0 without prefix caching — the
+    /// commands are then byte-identical to the pre-prefix engine) are
+    /// already resident and are neither shipped nor re-programmed.
     #[allow(clippy::too_many_arguments)]
     pub fn prefill_layer(
         &mut self,
@@ -433,6 +436,7 @@ impl ShardCoordinator {
         layer: u16,
         sp: usize,
         len: usize,
+        skip: usize,
         k_seq: &[f32],
         v_seq: &[f32],
         at: Time,
@@ -443,17 +447,21 @@ impl ShardCoordinator {
             k_seq.len() == h * sp * d && v_seq.len() == h * sp * d,
             "prefill rows mismatch"
         );
+        anyhow::ensure!(skip <= len, "prefix skip {skip} > prompt {len}");
         let mut done = at;
         if self.topology.splits_context() {
             for c in 0..self.topology.n_csds {
                 let llen = self.topology.local_len(c, len);
-                if llen == 0 {
+                // this shard's share of the attached prefix is already
+                // resident at local positions [0, lskip)
+                let lskip = self.topology.local_len(c, skip);
+                if llen == lskip {
                     continue;
                 }
-                let mut kp = Vec::with_capacity(h * llen * d);
-                let mut vp = Vec::with_capacity(h * llen * d);
+                let mut kp = Vec::with_capacity(h * (llen - lskip) * d);
+                let mut vp = Vec::with_capacity(h * (llen - lskip) * d);
                 for hh in 0..h {
-                    for lt in 0..llen {
+                    for lt in lskip..llen {
                         let t = self.topology.to_global(c, lt);
                         let base = (hh * sp + t) * d;
                         kp.extend_from_slice(&k_seq[base..base + d]);
@@ -466,7 +474,7 @@ impl ShardCoordinator {
                         slot,
                         layer,
                         heads: (0..h as u16).collect(),
-                        s_len: llen,
+                        s_len: llen - lskip,
                         k: kp,
                         v: vp,
                     },
@@ -484,16 +492,26 @@ impl ShardCoordinator {
                 if heads.is_empty() {
                     continue; // more devices than heads: nothing lives here
                 }
-                let mut kp = Vec::with_capacity(heads.len() * len * d);
-                let mut vp = Vec::with_capacity(heads.len() * len * d);
+                if skip == len {
+                    continue; // whole prompt attached: nothing to ship
+                }
+                let mut kp = Vec::with_capacity(heads.len() * (len - skip) * d);
+                let mut vp = Vec::with_capacity(heads.len() * (len - skip) * d);
                 for &hh in &heads {
                     let base = hh as usize * sp * d;
-                    kp.extend_from_slice(&k_seq[base..base + len * d]);
-                    vp.extend_from_slice(&v_seq[base..base + len * d]);
+                    kp.extend_from_slice(&k_seq[base + skip * d..base + len * d]);
+                    vp.extend_from_slice(&v_seq[base + skip * d..base + len * d]);
                 }
                 let ship_bytes = ((kp.len() + vp.len()) * FP16_BYTES) as f64;
                 let comp = self.queues[c].submit(
-                    CsdCommand::WritePrefillLayer { slot, layer, heads, s_len: len, k: kp, v: vp },
+                    CsdCommand::WritePrefillLayer {
+                        slot,
+                        layer,
+                        heads,
+                        s_len: len - skip,
+                        k: kp,
+                        v: vp,
+                    },
                     at,
                 )?;
                 if self.overlap_tracking {
@@ -502,6 +520,83 @@ impl ShardCoordinator {
                 self.clock.advance(c, comp.done);
                 done = done.max(comp.done);
             }
+        }
+        Ok(done)
+    }
+
+    /// Local tokens of a `global`-token prefix resident on shard `c`:
+    /// all of them for a head-bearing shard under head policies, the
+    /// stripe's round-robin share under context striping, 0 where
+    /// nothing lives.
+    fn shard_prefix_tokens(&self, c: usize, global: usize) -> usize {
+        if self.topology.splits_context() {
+            self.topology.local_len(c, global)
+        } else if self.topology.heads_of(c).is_empty() {
+            0
+        } else {
+            global
+        }
+    }
+
+    /// Longest registered prefix of `prompt` on the array, in global
+    /// tokens (0 when nothing matches).  Shard 0's index is the
+    /// representative: register/attach commands mirror to every
+    /// populated shard, so the per-device indexes stay in lockstep, and
+    /// shard 0 always owns the first token group.
+    pub fn prefix_match(&self, prompt: &[i32]) -> usize {
+        let n = self.queues[0].csd.ftl.cfg.n;
+        let hashes = prefix_hashes(prompt, n);
+        match self.queues[0].csd.ftl.lookup_prefix(&hashes) {
+            Some(i) => (i + 1) * n,
+            None => 0,
+        }
+    }
+
+    /// Attach the cached prefix covering `hit` global tokens of the
+    /// prompt to `slot` on every shard that holds part of it — a
+    /// metadata-only NVMe command per shard (the aliased flash pages
+    /// never move, so only the command latency is charged).
+    pub fn attach_prefix(&mut self, slot: u32, prompt: &[i32], hit: usize, at: Time) -> Result<Time> {
+        let n = self.queues[0].csd.ftl.cfg.n;
+        let hashes = prefix_hashes(&prompt[..hit], n);
+        let hash = *hashes.last().expect("attach below one token group");
+        let mut done = at;
+        for c in 0..self.topology.n_csds {
+            if self.shard_prefix_tokens(c, hit) == 0 {
+                continue;
+            }
+            let comp = self.queues[c].submit(CsdCommand::AttachPrefix { slot, hash }, at)?;
+            self.clock.advance(c, comp.done);
+            done = done.max(comp.done);
+        }
+        Ok(done)
+    }
+
+    /// Register `slot`'s just-shipped prompt in the content-addressed
+    /// prefix index of every shard, each with its local token count per
+    /// group boundary.
+    pub fn register_prefix(&mut self, slot: u32, prompt: &[i32], at: Time) -> Result<Time> {
+        let n = self.queues[0].csd.ftl.cfg.n;
+        let hashes = prefix_hashes(prompt, n);
+        if hashes.is_empty() {
+            return Ok(at);
+        }
+        let mut done = at;
+        for c in 0..self.topology.n_csds {
+            let bounds: Vec<(u64, usize)> = hashes
+                .iter()
+                .enumerate()
+                .filter_map(|(i, &h)| {
+                    let local = self.shard_prefix_tokens(c, (i + 1) * n);
+                    (local > 0).then_some((h, local))
+                })
+                .collect();
+            if bounds.is_empty() {
+                continue;
+            }
+            let comp = self.queues[c].submit(CsdCommand::RegisterPrefix { slot, bounds }, at)?;
+            self.clock.advance(c, comp.done);
+            done = done.max(comp.done);
         }
         Ok(done)
     }

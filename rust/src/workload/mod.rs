@@ -93,6 +93,102 @@ impl WorkloadGen {
     }
 }
 
+/// Anything that can mint the next [`Request`] of a stream — the seam
+/// that lets [`ArrivalGen`] drive either independent prompts
+/// ([`WorkloadGen`]) or prefix-sharing ones ([`PrefixWorkloadGen`])
+/// through the same Poisson arrival process.
+pub trait RequestSource {
+    fn request(&mut self) -> Request;
+}
+
+impl RequestSource for WorkloadGen {
+    fn request(&mut self) -> Request {
+        WorkloadGen::request(self)
+    }
+}
+
+impl<T: RequestSource + ?Sized> RequestSource for Box<T> {
+    fn request(&mut self) -> Request {
+        (**self).request()
+    }
+}
+
+/// Multi-turn / shared-system-prompt workload: a fixed pool of prompt
+/// *stems* (the shared system prompt or conversation history) is
+/// generated up front; each request then either reuses a stem followed
+/// by a unique suffix (probability `hit_rate`) or is fully unique.
+/// `stem_len` is rounded to whole KV token groups so a reused stem is
+/// exactly the portion the FTL's content-addressed index can seal and
+/// share.  Deterministic per seed.
+#[derive(Debug, Clone)]
+pub struct PrefixWorkloadGen {
+    rng: Rng,
+    vocab: usize,
+    prompt_len: usize,
+    output_len: usize,
+    stem_len: usize,
+    hit_rate: f64,
+    stems: Vec<Vec<i32>>,
+    next_id: u64,
+}
+
+impl PrefixWorkloadGen {
+    /// `share_ratio` is the target shared fraction of each prompt;
+    /// the stem length is `share_ratio * prompt_len` rounded to whole
+    /// token groups of `group` tokens (the FTL's sealing granule).
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        seed: u64,
+        vocab: usize,
+        prompt_len: usize,
+        output_len: usize,
+        share_ratio: f64,
+        group: usize,
+        hit_rate: f64,
+        n_stems: usize,
+    ) -> Self {
+        assert!(prompt_len >= 1 && group >= 1);
+        let share = share_ratio.clamp(0.0, 1.0);
+        let groups = (prompt_len as f64 * share / group as f64).round() as usize;
+        let stem_len = (groups * group).min(prompt_len);
+        let mut rng = Rng::new(seed);
+        let stems = (0..n_stems.max(1))
+            .map(|_| (0..stem_len).map(|_| rng.below(vocab) as i32).collect())
+            .collect();
+        PrefixWorkloadGen {
+            rng,
+            vocab,
+            prompt_len,
+            output_len,
+            stem_len,
+            hit_rate: hit_rate.clamp(0.0, 1.0),
+            stems,
+            next_id: 0,
+        }
+    }
+
+    /// The stem length actually in use (whole token groups, tokens).
+    pub fn stem_len(&self) -> usize {
+        self.stem_len
+    }
+}
+
+impl RequestSource for PrefixWorkloadGen {
+    fn request(&mut self) -> Request {
+        let shared = self.stem_len > 0 && self.rng.bool(self.hit_rate);
+        let mut prompt: Vec<i32> = if shared {
+            let s = self.rng.below(self.stems.len());
+            self.stems[s].clone()
+        } else {
+            (0..self.stem_len).map(|_| self.rng.below(self.vocab) as i32).collect()
+        };
+        prompt.extend((prompt.len()..self.prompt_len).map(|_| self.rng.below(self.vocab) as i32));
+        let id = self.next_id;
+        self.next_id += 1;
+        Request { id, prompt, max_new_tokens: self.output_len }
+    }
+}
+
 /// One open-loop request: a [`Request`] stamped with its (simulated)
 /// arrival time and a scheduling priority (higher = more urgent).
 #[derive(Debug, Clone)]
@@ -104,21 +200,22 @@ pub struct Arrival {
 }
 
 /// Open-loop arrival process: Poisson arrivals at `rate` requests per
-/// simulated second over a [`WorkloadGen`] length profile, with an
-/// optional fraction of high-priority requests (priority 1 vs 0) to
+/// simulated second over any [`RequestSource`] (length-profile prompts
+/// by default; prefix-sharing prompts via [`PrefixWorkloadGen`]), with
+/// an optional fraction of high-priority requests (priority 1 vs 0) to
 /// exercise preemption.  Deterministic per seed.
 #[derive(Debug, Clone)]
-pub struct ArrivalGen {
-    lengths: WorkloadGen,
+pub struct ArrivalGen<S = WorkloadGen> {
+    lengths: S,
     rng: Rng,
     rate: f64,
     hi_frac: f64,
     clock: f64,
 }
 
-impl ArrivalGen {
+impl<S: RequestSource> ArrivalGen<S> {
     /// `rate` must be > 0 (requests per simulated second).
-    pub fn new(lengths: WorkloadGen, seed: u64, rate: f64) -> Self {
+    pub fn new(lengths: S, seed: u64, rate: f64) -> Self {
         assert!(rate > 0.0, "arrival rate must be positive");
         ArrivalGen { lengths, rng: Rng::new(seed), rate, hi_frac: 0.0, clock: 0.0 }
     }
@@ -234,6 +331,38 @@ mod tests {
         let b = ag2.take(200);
         assert_eq!(arrivals[50].req.prompt, b[50].req.prompt);
         assert_eq!(arrivals[50].at, b[50].at);
+    }
+
+    #[test]
+    fn prefix_workload_shares_group_aligned_stems() {
+        // share_ratio 0.5 over 24-token prompts with 8-token groups:
+        // stems are 16 tokens (rounded to whole groups)
+        let mut g = PrefixWorkloadGen::new(11, 128, 24, 6, 0.5, 8, 0.7, 2);
+        assert_eq!(g.stem_len(), 16);
+        let reqs: Vec<Request> = (0..60).map(|_| g.request()).collect();
+        let mut stem_counts = std::collections::HashMap::new();
+        for r in &reqs {
+            assert_eq!(r.prompt.len(), 24);
+            assert_eq!(r.max_new_tokens, 6);
+            *stem_counts.entry(r.prompt[..16].to_vec()).or_insert(0usize) += 1;
+        }
+        // with hit_rate 0.7 and 2 stems, the two pool stems must repeat
+        // many times while misses stay unique
+        let repeated: usize = stem_counts.values().filter(|&&c| c > 1).copied().sum();
+        assert!(repeated > 20, "only {repeated}/60 requests shared a stem");
+        assert!(stem_counts.values().filter(|&&c| c == 1).count() > 3);
+        // determinism per seed
+        let mut g2 = PrefixWorkloadGen::new(11, 128, 24, 6, 0.5, 8, 0.7, 2);
+        let again: Vec<Request> = (0..60).map(|_| g2.request()).collect();
+        for (a, b) in reqs.iter().zip(&again) {
+            assert_eq!(a.prompt, b.prompt);
+        }
+        // share_ratio 0 degenerates to fully unique prompts
+        let mut g0 = PrefixWorkloadGen::new(5, 128, 24, 6, 0.0, 8, 1.0, 2);
+        assert_eq!(g0.stem_len(), 0);
+        let a = g0.request();
+        let b = g0.request();
+        assert_ne!(a.prompt, b.prompt);
     }
 
     #[test]

@@ -103,13 +103,13 @@ fn prop_interleaved_streams_never_cross_contaminate() {
                 let (rows, _) = ftl
                     .fetch_token_groups(key, instinfer::ftl::KvKind::K, &groups, 0.0)
                     .map_err(|e| e.to_string())?;
-                for (base, data) in rows {
+                for gf in rows {
                     for i in 0..8 {
-                        let t = base + i;
+                        let t = gf.base + i;
                         if t >= toks {
                             continue;
                         }
-                        if data[i * 32..(i + 1) * 32] != truth[sidx][t][..] {
+                        if gf.rows[i * 32..(i + 1) * 32] != truth[sidx][t][..] {
                             return Err(format!("stream {sidx} token {t} corrupted"));
                         }
                     }

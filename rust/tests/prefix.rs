@@ -1,0 +1,187 @@
+//! Cross-request prefix caching crosschecks.
+//!
+//! The load-bearing guarantees:
+//!
+//! 1. Prefix caching never changes generated tokens: functional prefill
+//!    always runs in full, so a 100%-hit request is bit-identical to its
+//!    cold-path twin while its prompt KV is attached by reference from
+//!    the donor's sealed flash pages (zero suffix shipping).
+//! 2. With the cache off (the default), the engine takes the exact
+//!    pre-PR path — `tests/pipeline.rs` pins outputs AND timestamps
+//!    against the serialized reference replay; here we pin that the
+//!    off-path never touches the prefix machinery.
+//! 3. The cached-prefix admission split composes with the overlapped
+//!    prefill/decode executor: same outputs, either stream layout.
+//! 4. The `bench prefix` evidence run is monotone: more shared prompt
+//!    (higher share ratio) means fewer prompt tokens shipped at prefill
+//!    and more tokens attached by reference.
+
+use instinfer::bench::prefix::run_config;
+use instinfer::coordinator::{
+    run_closed_loop, run_open_loop, EngineConfig, InferenceEngine, SchedConfig,
+};
+use instinfer::runtime::Runtime;
+use instinfer::workload::{ArrivalGen, PrefixWorkloadGen, Request, RequestSource};
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../artifacts")
+}
+
+fn engine(n_csds: usize, prefix_on: bool) -> InferenceEngine {
+    let rt = Runtime::open(artifacts_dir()).expect("opening runtime");
+    let meta = rt.manifest.model.clone();
+    let cfg = EngineConfig::micro_for(&meta, n_csds, false).prefix_cached(prefix_on);
+    InferenceEngine::new(rt, cfg).unwrap()
+}
+
+/// Two requests with the SAME group-aligned prompt: the first is the
+/// donor (registers its sealed prefix at ship-done), the second is a
+/// 100% hit.  Single seat + chunk 1 so the donor completes before the
+/// twin is admitted.
+fn twin_requests(engine: &InferenceEngine) -> Vec<Request> {
+    let m = &engine.rt.manifest.model;
+    // 3 full token groups at the micro model's n=8
+    let plen = 3 * m.n;
+    let prompt: Vec<i32> = (0..plen as i32).map(|i| (i * 7 + 3) % m.vocab as i32).collect();
+    vec![
+        Request { id: 0, prompt: prompt.clone(), max_new_tokens: 6 },
+        Request { id: 1, prompt, max_new_tokens: 6 },
+    ]
+}
+
+fn prefix_counters(engine: &InferenceEngine) -> (u64, u64, u64) {
+    let (mut regs, mut attaches, mut toks) = (0u64, 0u64, 0u64);
+    for q in engine.csds() {
+        regs += q.csd.ftl.counters.prefix_registrations;
+        attaches += q.csd.ftl.counters.prefix_attaches;
+        toks += q.csd.ftl.counters.prefix_tokens_attached;
+    }
+    (regs, attaches, toks)
+}
+
+#[test]
+fn full_hit_request_is_bit_identical_to_its_cold_twin() {
+    // ISSUE acceptance: a second request whose prompt is 100% cached
+    // produces bit-identical outputs to the same request served cold.
+    let mut cold = engine(2, false);
+    let mut warm = engine(2, true);
+    let reqs = twin_requests(&cold);
+    let sched = SchedConfig::serving(1, 1, 8);
+    let rc = run_closed_loop(&mut cold, reqs.clone(), sched.clone()).unwrap();
+    let rw = run_closed_loop(&mut warm, reqs, sched).unwrap();
+
+    let key = |r: &instinfer::coordinator::ServeReport| {
+        let mut t: Vec<(u64, Vec<i32>)> =
+            r.records.iter().map(|x| (x.id, x.generated.clone())).collect();
+        t.sort_by_key(|(id, _)| *id);
+        t
+    };
+    assert_eq!(key(&rc), key(&rw), "prefix hit changed generated tokens");
+    // identical prompts, deterministic engine: the twin's tokens equal
+    // the donor's on BOTH paths
+    let toks = key(&rw);
+    assert_eq!(toks[0].1, toks[1].1);
+
+    // the warm engine really took the cached path for the whole prompt
+    let plen = 3 * warm.rt.manifest.model.n;
+    assert_eq!(warm.metrics.prefix_hit_tokens, plen as u64);
+    let (regs, attaches, attached) = prefix_counters(&warm);
+    assert!(regs > 0, "donor never registered its prefix");
+    assert!(attaches > 0, "twin never attached the cached prefix");
+    assert_eq!(attached, plen as u64, "twin must attach every prompt group");
+    // and shipped KV only for the donor's prompt, not the twin's
+    assert_eq!(cold.metrics.prefill_tokens, 2 * plen as u64);
+    assert_eq!(warm.metrics.prefill_tokens, plen as u64);
+}
+
+#[test]
+fn prefix_off_never_touches_the_prefix_machinery() {
+    // the default path (pinned bit-identical to the pre-PR executor by
+    // tests/pipeline.rs) must leave zero prefix side effects even on a
+    // workload full of repeated prompts
+    let mut e = engine(2, false);
+    let reqs = twin_requests(&e);
+    let _ = run_closed_loop(&mut e, reqs, SchedConfig::serving(1, 1, 8)).unwrap();
+    assert_eq!(prefix_counters(&e), (0, 0, 0));
+    assert_eq!(e.metrics.prefix_hit_tokens, 0);
+}
+
+fn serve_prefix_tokens(overlap: bool) -> Vec<(u64, Vec<i32>)> {
+    let mut e = engine(2, true);
+    let m = e.rt.manifest.model.clone();
+    let src = PrefixWorkloadGen::new(31, m.vocab, 24, 6, 0.5, m.n, 0.8, 2);
+    let arrivals = ArrivalGen::new(src, 32, 100.0).take(8);
+    let cfg = SchedConfig::serving(4, 2, 16).overlapped(overlap);
+    let report = run_open_loop(&mut e, arrivals, cfg).unwrap();
+    let mut toks: Vec<(u64, Vec<i32>)> =
+        report.records.into_iter().map(|r| (r.id, r.generated)).collect();
+    toks.sort_by_key(|(id, _)| *id);
+    toks
+}
+
+#[test]
+fn prefix_cache_composes_with_overlapped_streams() {
+    // the admission split (attach prefix + ship suffix only) rides the
+    // same prefill_stage both executors use, so stream layout must not
+    // change outputs
+    assert_eq!(serve_prefix_tokens(false), serve_prefix_tokens(true));
+}
+
+#[test]
+fn warm_multi_turn_serving_ships_fewer_prompt_tokens() {
+    let src = |seed: u64| {
+        let rt = Runtime::open(artifacts_dir()).unwrap();
+        let m = rt.manifest.model.clone();
+        (rt, PrefixWorkloadGen::new(seed, m.vocab, 24, 6, 0.5, m.n, 1.0, 1))
+    };
+    let run = |prefix_on: bool| {
+        let (rt, mut gen) = src(7);
+        let meta = rt.manifest.model.clone();
+        let cfg = EngineConfig::micro_for(&meta, 2, false).prefix_cached(prefix_on);
+        let mut e = InferenceEngine::new(rt, cfg).unwrap();
+        let reqs: Vec<Request> = (0..6).map(|_| gen.request()).collect();
+        let _ = run_closed_loop(&mut e, reqs, SchedConfig::serving(1, 1, 8)).unwrap();
+        (e.metrics.prefill_tokens, e.metrics.prefix_hit_tokens)
+    };
+    let (cold_ship, cold_hit) = run(false);
+    let (warm_ship, warm_hit) = run(true);
+    assert_eq!(cold_hit, 0);
+    assert!(warm_hit > 0, "single-stem 100%-hit workload never hit the cache");
+    assert!(
+        warm_ship < cold_ship,
+        "warm path shipped {warm_ship} prompt tokens, cold {cold_ship}"
+    );
+    // token conservation: every prompt token is either shipped or attached
+    assert_eq!(warm_ship + warm_hit, cold_ship);
+}
+
+#[test]
+fn bench_prefix_reduction_is_monotone_in_share_ratio() {
+    // ISSUE acceptance: at fixed hit rate, the warm rows' shipped
+    // prompt tokens fall (and attached tokens rise) monotonically as
+    // the shared fraction of the prompt grows
+    let runs: Vec<_> =
+        [0.25f64, 0.5, 1.0].iter().map(|&s| run_config(s, 1.0, true).unwrap()).collect();
+    for w in runs.windows(2) {
+        assert!(
+            w[1].prefill_tokens <= w[0].prefill_tokens,
+            "shipped tokens rose with share ratio: {} -> {}",
+            w[0].prefill_tokens,
+            w[1].prefill_tokens
+        );
+        assert!(
+            w[1].prefix_hit_tokens >= w[0].prefix_hit_tokens,
+            "hit tokens fell with share ratio: {} -> {}",
+            w[0].prefix_hit_tokens,
+            w[1].prefix_hit_tokens
+        );
+    }
+    assert!(
+        runs[2].prefill_tokens < runs[0].prefill_tokens,
+        "full-prompt sharing must beat quarter-prompt sharing"
+    );
+    // and every warm run beats its cold twin on data movement
+    let cold = run_config(1.0, 1.0, false).unwrap();
+    assert!(runs[2].prefill_tokens < cold.prefill_tokens);
+    assert_eq!(cold.prefix_hit_tokens, 0);
+}

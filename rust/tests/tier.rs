@@ -199,9 +199,9 @@ fn gc_with_promote_demote_churn_conserves_pages() {
     // conservation: the surviving stream's mappings and bytes are intact
     assert_eq!(ftl.mapped_token_pages(0), mapped_before);
     let (got, _) = ftl.fetch_token_groups(keep, KvKind::K, &groups, 0.0).unwrap();
-    for ((b0, d0), (b1, d1)) in want.iter().zip(&got) {
-        assert_eq!(b0, b1);
-        assert_eq!(d0, d1, "group at token {b0} corrupted by churn");
+    for (g0, g1) in want.iter().zip(&got) {
+        assert_eq!(g0.base, g1.base);
+        assert_eq!(g0.rows, g1.rows, "group at token {} corrupted by churn", g0.base);
     }
     assert!(ftl.free_blocks() > 0);
 }
