@@ -71,3 +71,28 @@ pub fn registry() -> Vec<(&'static str, BenchFn)> {
 pub fn run_one(name: &str) -> Option<Table> {
     registry().into_iter().find(|(n, _)| *n == name).map(|(_, f)| f())
 }
+
+/// Digest of the canonical traced serve run: a fixed-seed open-loop
+/// sweep point traced at `full` level, hashed byte-for-byte.  The
+/// trajectory document carries this fingerprint so cross-run stitching
+/// catches any timing/ordering perturbation even when every table cell
+/// still agrees.
+pub fn canonical_trace_digest() -> anyhow::Result<String> {
+    use crate::coordinator::{run_open_loop, EngineConfig, InferenceEngine, SchedConfig};
+    use crate::runtime::Runtime;
+    use crate::workload::{ArrivalGen, LengthProfile, WorkloadGen};
+
+    let rt = Runtime::open("artifacts")?;
+    let meta = rt.manifest.model.clone();
+    let mut engine = InferenceEngine::new(rt, EngineConfig::micro_for(&meta, 2, false))?;
+    let wg = WorkloadGen::new(777, meta.vocab, meta.max_seq, LengthProfile::Fixed, 16, 8);
+    let arrivals = ArrivalGen::new(wg, 778, 100.0).take(8);
+    crate::obs::install(crate::obs::TraceLevel::Full);
+    let run = run_open_loop(&mut engine, arrivals, SchedConfig::serving(4, 2, 16));
+    let sink = crate::obs::uninstall();
+    run?;
+    match sink {
+        Some(s) => Ok(s.digest_hex()),
+        None => anyhow::bail!("trace sink was not installed"),
+    }
+}

@@ -56,15 +56,17 @@ fn run_continuous(rate: f64) -> anyhow::Result<ServeRun> {
     let report = run_open_loop(&mut engine, arr, sched())?;
     let [p50, p95, _] = report.latency_percentiles().unwrap_or([0.0; 3]);
     let [t50, _, _] = report.ttft_percentiles().unwrap_or([0.0; 3]);
-    let fu = engine.flash_util();
+    // occupancy and flash utilisation read through the unified registry
+    // so the bench rows embed the same snapshot `--metrics-json` dumps
+    let reg = engine.metrics_registry(&report.overlap);
     Ok(ServeRun {
         tput_tok_s: report.total_generated() as f64 / report.sim_end.max(1e-12),
         p50_latency_s: p50,
         p95_latency_s: p95,
         p50_ttft_s: t50,
-        mean_occupancy: engine.metrics.mean_occupancy(),
-        die_busy_s: fu.die_busy_s,
-        die_peak_q: fu.die_peak_depth,
+        mean_occupancy: reg.value("engine.step_occupancy").unwrap_or(0.0),
+        die_busy_s: reg.value("flash.die_busy_s").unwrap_or(0.0),
+        die_peak_q: reg.value("flash.die_peak_depth").unwrap_or(0.0) as usize,
     })
 }
 
@@ -100,15 +102,15 @@ fn run_offline(rate: f64) -> anyhow::Result<ServeRun> {
         })
         .collect();
     use crate::util::stats::percentile;
-    let fu = engine.flash_util();
+    let reg = engine.metrics_registry(&report.overlap);
     Ok(ServeRun {
         tput_tok_s: report.total_generated() as f64 / report.sim_end.max(1e-12),
         p50_latency_s: percentile(&mut lats, 50.0),
         p95_latency_s: percentile(&mut lats, 95.0),
         p50_ttft_s: percentile(&mut ttfts, 50.0),
-        mean_occupancy: engine.metrics.mean_occupancy(),
-        die_busy_s: fu.die_busy_s,
-        die_peak_q: fu.die_peak_depth,
+        mean_occupancy: reg.value("engine.step_occupancy").unwrap_or(0.0),
+        die_busy_s: reg.value("flash.die_busy_s").unwrap_or(0.0),
+        die_peak_q: reg.value("flash.die_peak_depth").unwrap_or(0.0) as usize,
     })
 }
 

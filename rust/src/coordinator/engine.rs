@@ -224,6 +224,7 @@ impl InferenceEngine {
                 if s.prefix_hit > 0 {
                     let t =
                         self.shards.attach_prefix(s.slot, &s.req.prompt, s.prefix_hit, start)?;
+                    crate::obs::req_span(s.req.id, "prefix_attach", start, t);
                     ship_done = ship_done.max(t);
                 }
             }
@@ -346,6 +347,7 @@ impl InferenceEngine {
                         &vd[base..base + h * sp * dh],
                         start,
                     )?;
+                    crate::obs::req_span(s.req.id, "kv_ship", start, t);
                     done = done.max(t);
                 }
                 self.metrics.csd_wall_s += t0.elapsed().as_secs_f64();
@@ -428,7 +430,7 @@ impl InferenceEngine {
             self.metrics.tokens_generated += 1;
         }
         self.metrics.decode_steps += 1;
-        self.metrics.step_occupancy.push(b as u32);
+        self.metrics.step_occupancy.push(b as f64);
         self.metrics.gpu_wall_s += t0.elapsed().as_secs_f64();
         Ok(step_done)
     }
@@ -602,6 +604,77 @@ impl InferenceEngine {
     /// device).
     pub fn kv_capacity_bytes_per_csd(&self) -> u64 {
         self.cfg.csd_spec.kv_capacity_bytes
+    }
+
+    /// Unified metric snapshot: folds the five historical accounting
+    /// structs — `EngineMetrics` (`engine.*` / `units.*`), the merged
+    /// per-CSD `BusyLedger` (`ledger.*`), `ShardStats` (`shard.*`),
+    /// `OverlapStats` (`overlap.*`) and `FlashUtil` (`flash.*`) — into
+    /// one deterministically-ordered [`crate::obs::MetricsRegistry`].
+    /// This is what `--metrics-json` dumps and what the engine-backed
+    /// bench rows read, so every surface reports the same numbers.
+    pub fn metrics_registry(
+        &self,
+        overlap: &crate::pipeline::OverlapStats,
+    ) -> crate::obs::MetricsRegistry {
+        let mut r = crate::obs::MetricsRegistry::new();
+        let m = &self.metrics;
+        r.counter("engine.requests_done", m.requests_done);
+        r.counter("engine.tokens_generated", m.tokens_generated);
+        r.counter("engine.prefill_tokens", m.prefill_tokens);
+        r.counter("engine.prefix_hit_tokens", m.prefix_hit_tokens);
+        r.counter("engine.dropped_tokens", m.dropped_tokens);
+        r.counter("engine.decode_steps", m.decode_steps);
+        r.counter("engine.admissions", m.admissions);
+        r.counter("engine.retirements", m.retirements);
+        r.counter("engine.preemptions", m.preemptions);
+        r.counter("engine.resumes", m.resumes);
+        r.counter("engine.busy_steps", m.busy_steps);
+        r.gauge("engine.gpu_wall_s", m.gpu_wall_s);
+        r.gauge("engine.csd_wall_s", m.csd_wall_s);
+        r.gauge("engine.csd_sim_s", m.csd_sim_s);
+        r.gauge("engine.decode_sim_s", m.decode_sim_s);
+        r.gauge("engine.busy_step_sim_s", m.busy_step_sim_s);
+        r.gauge("engine.decode_step_time_s", m.decode_step_time_s());
+        r.histogram("engine.step_occupancy", &m.step_occupancy);
+        r.histogram("engine.batch_latency_s", &m.batch_latencies);
+        let u = &m.units;
+        r.gauge("units.argtopk_s", u.argtopk);
+        r.gauge("units.flash_read_s", u.flash_read);
+        r.gauge("units.dram_hit_s", u.dram_hit);
+        r.gauge("units.nfc_filter_s", u.nfc_filter);
+        r.gauge("units.logit0_s", u.logit0);
+        r.gauge("units.logit_s", u.logit);
+        r.gauge("units.attend_s", u.attend);
+        r.gauge("units.writeback_s", u.writeback);
+        r.gauge("units.pcie_xfer_s", u.pcie_xfer);
+        r.gauge("units.gpu_merge_s", u.gpu_merge);
+        let mut ledger = crate::sim::BusyLedger::default();
+        for q in &self.shards.queues {
+            ledger.merge(&q.csd.ledger);
+        }
+        for (name, secs, _frac) in ledger.rows() {
+            r.gauge(&format!("ledger.{name}_s"), secs);
+        }
+        let st = &self.shards.stats;
+        r.gauge("shard.attn_span_s", st.attn_span_s);
+        r.gauge("shard.merge_span_s", st.merge_span_s);
+        r.gauge("shard.xfer_bytes", st.xfer_bytes);
+        r.counter("shard.merges", st.merges);
+        r.gauge("shard.prefill_ship_bytes", st.prefill_ship_bytes);
+        r.counter("shard.contended_merges", st.contended_merges);
+        r.gauge("shard.contention_delay_s", st.contention_delay_s);
+        r.gauge("overlap.prefill_busy_s", overlap.prefill_busy_s);
+        r.gauge("overlap.decode_busy_s", overlap.decode_busy_s);
+        r.gauge("overlap.overlapped_s", overlap.overlapped_s);
+        r.gauge("overlap.gpu_idle_during_decode_s", overlap.gpu_idle_during_decode_s);
+        r.counter("overlap.cohorts", overlap.cohorts);
+        r.counter("overlap.steps_with_prefill_inflight", overlap.steps_with_prefill_inflight);
+        let f = self.flash_util();
+        r.gauge("flash.die_busy_s", f.die_busy_s);
+        r.gauge("flash.channel_busy_s", f.channel_busy_s);
+        r.gauge("flash.die_peak_depth", f.die_peak_depth as f64);
+        r
     }
 
     /// Run a whole batch to completion: prefill, then decode until every

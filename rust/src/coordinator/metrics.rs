@@ -20,6 +20,7 @@
 //! step that happens to absorb it.
 
 use crate::csd::UnitBreakdown;
+use crate::obs::SampleStats;
 use crate::sim::Time;
 
 #[derive(Debug, Default, Clone)]
@@ -44,8 +45,9 @@ pub struct EngineMetrics {
     pub dropped_tokens: u64,
     /// per-unit simulated breakdown (Fig. 16 numerator)
     pub units: UnitBreakdown,
-    /// per-batch latencies (seconds, wall)
-    pub batch_latencies: Vec<f64>,
+    /// per-batch latencies (seconds, wall) — capped streaming reservoir
+    /// so long open-loop runs don't grow memory with step count
+    pub batch_latencies: SampleStats,
     // ---- continuous-batching churn ------------------------------------
     /// sequences admitted into the running batch (chunked prefill done)
     pub admissions: u64,
@@ -55,8 +57,9 @@ pub struct EngineMetrics {
     pub preemptions: u64,
     /// preempted sequences brought back into the batch
     pub resumes: u64,
-    /// batch occupancy of every decode step, in step order
-    pub step_occupancy: Vec<u32>,
+    /// batch occupancy of every decode step — streaming stats (exact
+    /// count/sum/min/max; percentiles over a capped first-N reservoir)
+    pub step_occupancy: SampleStats,
     // ---- prefill/decode disaggregation --------------------------------
     /// scheduler steps that decoded at least one sequence
     pub busy_steps: u64,
@@ -90,21 +93,18 @@ impl EngineMetrics {
 
     /// Mean decode-batch occupancy across all steps (0 when no steps ran).
     pub fn mean_occupancy(&self) -> f64 {
-        if self.step_occupancy.is_empty() {
-            0.0
-        } else {
-            self.step_occupancy.iter().map(|&o| o as f64).sum::<f64>()
-                / self.step_occupancy.len() as f64
-        }
+        self.step_occupancy.mean()
     }
 
     pub fn report(&self) -> String {
         format!(
-            "requests={} tokens={} prefill_toks={} steps={} gpu_wall={:.3}s \
-             csd_wall={:.3}s csd_sim={:.6}s tput={:.1} tok/s(wall)",
+            "requests={} tokens={} prefill_toks={} prefix_hit={} dropped={} steps={} \
+             gpu_wall={:.3}s csd_wall={:.3}s csd_sim={:.6}s tput={:.1} tok/s(wall)",
             self.requests_done,
             self.tokens_generated,
             self.prefill_tokens,
+            self.prefix_hit_tokens,
+            self.dropped_tokens,
             self.decode_steps,
             self.gpu_wall_s,
             self.csd_wall_s,
@@ -137,13 +137,18 @@ mod tests {
         let m = EngineMetrics { tokens_generated: 10, gpu_wall_s: 2.0, ..Default::default() };
         assert_eq!(m.throughput_tok_per_wall_s(), 5.0);
         assert!(m.report().contains("tokens=10"));
+        assert!(m.report().contains("prefix_hit=0"));
+        assert!(m.report().contains("dropped=0"));
     }
 
     #[test]
     fn occupancy_mean_over_steps() {
         let m = EngineMetrics::default();
         assert_eq!(m.mean_occupancy(), 0.0);
-        let m = EngineMetrics { step_occupancy: vec![2, 4, 6], ..Default::default() };
+        let mut m = EngineMetrics::default();
+        for o in [2.0, 4.0, 6.0] {
+            m.step_occupancy.push(o);
+        }
         assert!((m.mean_occupancy() - 4.0).abs() < 1e-12);
         assert!(m.churn_report().contains("mean_occupancy"));
     }

@@ -226,6 +226,7 @@ impl Scheduler {
                 preemptions: 0,
             },
         );
+        crate::obs::req_instant(a.req.id, "arrive", a.at);
         self.queue.push(a);
         Ok(())
     }
@@ -347,6 +348,8 @@ impl Scheduler {
             engine.prefill(&mut cohort, bucket)?;
             let first_token_at = engine.sim_now;
             for s in &cohort {
+                crate::obs::req_instant(s.req.id, "admit", now);
+                crate::obs::req_span(s.req.id, "prefill", now, first_token_at);
                 if let Some(m) = self.meta.get_mut(&s.req.id) {
                     m.admitted_at = now;
                     m.first_token_at = first_token_at;
@@ -364,7 +367,13 @@ impl Scheduler {
         // ---- one decode step over the live batch ----------------------
         if !self.running.is_empty() {
             let bucket = engine.bucket_for(self.running.len());
+            let d0 = engine.sim_now;
             engine.decode_step(&mut self.running, bucket)?;
+            if crate::obs::enabled() {
+                for s in &self.running {
+                    crate::obs::req_span(s.req.id, "decode_step", d0, engine.sim_now);
+                }
+            }
         }
         rep.occupancy = self.running.len();
         rep.retired += self.retire(engine)?;
@@ -430,6 +439,11 @@ impl Scheduler {
             let d0 = engine.sim_now;
             let bucket = engine.bucket_for(self.running.len());
             engine.decode_step(&mut self.running, bucket)?;
+            if crate::obs::enabled() {
+                for s in &self.running {
+                    crate::obs::req_span(s.req.id, "decode_step", d0, engine.sim_now);
+                }
+            }
             Some((d0, engine.sim_now))
         };
         rep.occupancy = self.running.len();
@@ -443,6 +457,8 @@ impl Scheduler {
             let start = now.max(self.pipeline.prefill_free);
             let ready = engine.prefill_stage(&mut cohort, bucket, start)?;
             for s in &cohort {
+                crate::obs::req_instant(s.req.id, "admit", now);
+                crate::obs::req_span(s.req.id, "prefill", start, ready);
                 if let Some(m) = self.meta.get_mut(&s.req.id) {
                     // TTFT is pinned to the prefill STREAM's completion,
                     // not to the end of the decode step that later
@@ -509,6 +525,7 @@ impl Scheduler {
                 if bad {
                     let a = self.queue.remove(i);
                     self.meta.remove(&a.req.id);
+                    crate::obs::req_instant(a.req.id, "reject", now);
                     self.finished.push(RequestRecord {
                         id: a.req.id,
                         priority: a.priority,
@@ -537,6 +554,7 @@ impl Scheduler {
                 }
                 engine.metrics.preemptions += 1;
                 rep.preempted += 1;
+                crate::obs::req_instant(victim.req.id, "preempt", now);
                 self.suspended.push(victim);
             }
             match cand {
@@ -549,6 +567,7 @@ impl Scheduler {
                     s.phase = RequestPhase::Decoding;
                     engine.metrics.resumes += 1;
                     rep.resumed += 1;
+                    crate::obs::req_instant(s.req.id, "resume", now);
                     self.running.push(s);
                 }
                 Cand::Admit(i) => {
@@ -676,6 +695,7 @@ impl Scheduler {
             self.slots.release(s.slot)?;
             engine.metrics.requests_done += 1;
             engine.metrics.retirements += 1;
+            crate::obs::req_instant(s.req.id, "retire", engine.sim_now);
             let m = self.meta.remove(&s.req.id).unwrap_or_else(|| ReqMeta {
                 priority: 0,
                 arrived_at: 0.0,

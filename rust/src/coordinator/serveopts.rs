@@ -13,6 +13,7 @@ use crate::config::hw::{FlashPathConfig, FlashPlacement, FlashReadSched};
 use crate::coordinator::engine::EngineConfig;
 use crate::coordinator::scheduler::SchedConfig;
 use crate::kvtier::{TierConfig, TierPolicy};
+use crate::obs::TraceLevel;
 use crate::runtime::manifest::ModelMeta;
 use crate::shard::ShardPolicy;
 use crate::workload::LengthProfile;
@@ -211,6 +212,32 @@ pub const SERVE_FLAGS: &[FlagSpec] = &[
         help: "shared-prefix fraction of each prompt in the multi-turn \
                workload (with --prefix-cache)",
     },
+    FlagSpec {
+        name: "--trace",
+        alias: None,
+        value: Some("FILE"),
+        default: "",
+        help: "write a Chrome trace-event JSON of the run (load in \
+               Perfetto); observational only — outputs and simulated \
+               timestamps are bit-identical with tracing off",
+    },
+    FlagSpec {
+        name: "--trace-level",
+        alias: None,
+        value: Some("L"),
+        default: "device",
+        help: "trace verbosity: request (lifecycle spans), device (+ \
+               streams, NVMe, PCIe, GC), full (+ per-(channel,die) flash \
+               FIFOs)",
+    },
+    FlagSpec {
+        name: "--metrics-json",
+        alias: None,
+        value: Some("FILE"),
+        default: "",
+        help: "dump the unified metrics registry (engine/ledger/shard/\
+               overlap/flash) as one deterministic JSON snapshot",
+    },
 ];
 
 fn default_of(name: &str) -> &'static str {
@@ -261,6 +288,11 @@ pub struct ServeOpts {
     pub flash_path: FlashPathConfig,
     pub prefix_cache: bool,
     pub share_ratio: f64,
+    /// trace output path (None = tracing off)
+    pub trace: Option<String>,
+    pub trace_level: TraceLevel,
+    /// unified metrics snapshot output path (None = no dump)
+    pub metrics_json: Option<String>,
 }
 
 impl Default for ServeOpts {
@@ -356,6 +388,9 @@ impl ServeOpts {
         if !(0.0..=1.0).contains(&share_ratio) {
             bail!("--share-ratio must be in [0, 1]");
         }
+        let trace = get("--trace").filter(|v| !v.is_empty()).map(String::from);
+        let trace_level = TraceLevel::parse(val("--trace-level"))?;
+        let metrics_json = get("--metrics-json").filter(|v| !v.is_empty()).map(String::from);
 
         Ok(ServeOpts {
             requests,
@@ -378,6 +413,9 @@ impl ServeOpts {
             flash_path,
             prefix_cache,
             share_ratio,
+            trace,
+            trace_level,
+            metrics_json,
         })
     }
 
@@ -487,6 +525,9 @@ impl fmt::Display for ServeOpts {
         if self.prefix_cache {
             write!(f, ", prefix-cache (share ratio {:.2})", self.share_ratio)?;
         }
+        if let Some(p) = &self.trace {
+            write!(f, ", trace {} -> {p}", self.trace_level.label())?;
+        }
         Ok(())
     }
 }
@@ -511,6 +552,21 @@ mod tests {
         assert_eq!(o.slots, 64);
         assert_eq!(o.share_ratio, 0.5);
         assert_eq!(o.artifacts, "artifacts");
+        assert_eq!(o.trace, None);
+        assert_eq!(o.trace_level, TraceLevel::Device);
+        assert_eq!(o.metrics_json, None);
+    }
+
+    #[test]
+    fn trace_flags_parse_and_validate() {
+        let o = ServeOpts::parse(&sv(&[
+            "--trace", "out.json", "--trace-level", "full", "--metrics-json", "m.json",
+        ]))
+        .unwrap();
+        assert_eq!(o.trace.as_deref(), Some("out.json"));
+        assert_eq!(o.trace_level, TraceLevel::Full);
+        assert_eq!(o.metrics_json.as_deref(), Some("m.json"));
+        assert!(ServeOpts::parse(&sv(&["--trace-level", "verbose"])).is_err());
     }
 
     #[test]

@@ -53,6 +53,23 @@ pub enum CsdCommand {
     FreeSlot { slot: u32 },
 }
 
+impl CsdCommand {
+    /// Trace label for the command's span on the device track.
+    pub fn name(&self) -> &'static str {
+        match self {
+            CsdCommand::WriteToken { .. } => "write_token",
+            CsdCommand::WritePrefillLayer { .. } => "write_prefill_layer",
+            CsdCommand::Attention { .. } => "attention",
+            CsdCommand::PartialAttention { .. } => "partial_attention",
+            CsdCommand::AccumulateImportance { .. } => "accumulate_importance",
+            CsdCommand::DropTokens { .. } => "drop_tokens",
+            CsdCommand::RegisterPrefix { .. } => "register_prefix",
+            CsdCommand::AttachPrefix { .. } => "attach_prefix",
+            CsdCommand::FreeSlot { .. } => "free_slot",
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct CsdCompletion {
     /// attention output (empty for writes/frees)
@@ -81,19 +98,25 @@ pub struct NvmeQueue {
     sq: FifoResource,
     cmd_latency: Time,
     pub submitted: u64,
+    /// device index in the CSD array — tags this queue's trace track
+    /// (and, via the ambient device scope, everything the command
+    /// touches down-stack: FTL GC, flash FIFOs).  Purely observational.
+    pub dev: usize,
 }
 
 impl NvmeQueue {
     /// `p2p`: commands arrive over the peer-to-peer path (no host FS).
     pub fn new(csd: InstCsd, pcie: &PcieSpec, p2p: bool) -> Self {
         let cmd_latency = if p2p { pcie.p2p_io_us } else { pcie.host_fs_io_us } * 1e-6;
-        NvmeQueue { csd, sq: FifoResource::new(), cmd_latency, submitted: 0 }
+        NvmeQueue { csd, sq: FifoResource::new(), cmd_latency, submitted: 0, dev: 0 }
     }
 
     pub fn submit(&mut self, cmd: CsdCommand, at: Time) -> Result<CsdCompletion> {
         self.submitted += 1;
-        let (_, dispatched) = self.sq.schedule(at, self.cmd_latency);
-        match cmd {
+        let _scope = crate::obs::DeviceScope::enter(self.dev);
+        let cmd_name = cmd.name();
+        let (d0, dispatched) = self.sq.schedule(at, self.cmd_latency);
+        let comp: Result<CsdCompletion> = match cmd {
             CsdCommand::WriteToken { slot, layer, heads, k, v } => {
                 let done = self.csd.write_token_heads(slot, layer, &heads, &k, &v, dispatched)?;
                 Ok(CsdCompletion {
@@ -183,7 +206,10 @@ impl NvmeQueue {
                     weights: vec![],
                 })
             }
-        }
+        };
+        let comp = comp?;
+        crate::obs::device_span(self.dev, cmd_name, d0, comp.done);
+        Ok(comp)
     }
 }
 

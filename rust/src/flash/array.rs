@@ -118,8 +118,10 @@ impl FlashArray {
         let ch = self.geo.page_channel(ppa);
         let unit = self.unit_of(block);
         let xfer = self.xfer_time(self.spec.page_bytes);
-        let (_, ch_done) = self.channels[ch].schedule(at, xfer);
-        let (_, done) = self.units[unit].schedule(ch_done, self.spec.program_us * 1e-6);
+        let (c0, ch_done) = self.channels[ch].schedule(at, xfer);
+        let (u0, done) = self.units[unit].schedule(ch_done, self.spec.program_us * 1e-6);
+        crate::obs::flash_channel_span(ch, "program_xfer", c0, ch_done);
+        crate::obs::flash_unit_span(unit, "program", u0, done);
         Ok((ppa, done))
     }
 
@@ -135,8 +137,10 @@ impl FlashArray {
         let unit = self.unit_of(self.geo.block_of(ppa));
         let ch = self.geo.page_channel(ppa);
         let xfer = self.xfer_time(self.spec.page_bytes);
-        let (_, unit_done) = self.units[unit].schedule(at, self.spec.read_us * 1e-6);
-        let (_, done) = self.channels[ch].schedule(unit_done, xfer);
+        let (u0, unit_done) = self.units[unit].schedule(at, self.spec.read_us * 1e-6);
+        let (c0, done) = self.channels[ch].schedule(unit_done, xfer);
+        crate::obs::flash_unit_span(unit, "read", u0, unit_done);
+        crate::obs::flash_channel_span(ch, "read_xfer", c0, done);
         self.counters.page_reads += 1;
         self.counters.bytes_read += self.spec.page_bytes as u64;
         Ok((self.data[ppa.0].as_deref().unwrap(), done))
@@ -226,7 +230,8 @@ impl FlashArray {
         self.write_ptr[block.0] = 0;
         self.counters.block_erases += 1;
         let unit = self.unit_of(block);
-        let (_, done) = self.units[unit].schedule(at, self.spec.erase_ms * 1e-3);
+        let (u0, done) = self.units[unit].schedule(at, self.spec.erase_ms * 1e-3);
+        crate::obs::flash_unit_span(unit, "erase", u0, done);
         Ok(done)
     }
 

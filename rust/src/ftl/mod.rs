@@ -366,6 +366,7 @@ impl KvFtl {
             t = t.max(wt);
         }
         let te = self.array.erase(victim, t)?;
+        crate::obs::ftl_gc(self.counters.gc_relocations, te);
         self.block_valid[victim.0] = 0;
         // the victim may still sit in an open slot (a full block lingers
         // there until the unit's next program) — clear it so the erased

@@ -21,6 +21,9 @@
 //!   for the same PCIe links.
 //! * [`coordinator`] is the L3 host control plane: request batching,
 //!   prefill/decode scheduling, head->CSD routing, KV management.
+//! * [`obs`] is the deterministic trace plane: zero-perturbation span
+//!   recording on simulated time, Perfetto-loadable export, and the
+//!   unified metrics registry.
 //! * [`bench`] regenerates every table and figure of the paper's evaluation.
 
 pub mod bench;
@@ -32,6 +35,7 @@ pub mod flash;
 pub mod ftl;
 pub mod gpu;
 pub mod kvtier;
+pub mod obs;
 pub mod pcie;
 pub mod pipeline;
 pub mod runtime;

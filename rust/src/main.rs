@@ -124,6 +124,9 @@ fn serve(args: &[String]) -> Result<()> {
     };
     let scfg = opts.sched_config();
     let n_req = opts.requests;
+    if opts.trace.is_some() {
+        instinfer::obs::install(opts.trace_level);
+    }
     let t0 = std::time::Instant::now();
     let report = match opts.arrival_rate {
         Some(rate) => {
@@ -143,6 +146,22 @@ fn serve(args: &[String]) -> Result<()> {
         }
     };
     let wall = t0.elapsed().as_secs_f64();
+
+    // drain the trace sink first so nothing below can perturb the event
+    // stream; the digest doubles as the determinism fingerprint
+    let mut trace_digest: Option<String> = None;
+    if let Some(path) = &opts.trace {
+        if let Some(sink) = instinfer::obs::uninstall() {
+            std::fs::write(path, sink.export()).with_context(|| format!("writing {path}"))?;
+            let digest = sink.digest_hex();
+            println!(
+                "trace: {} events -> {path} (level {}, digest {digest})",
+                sink.len(),
+                sink.level.label(),
+            );
+            trace_digest = Some(digest);
+        }
+    }
 
     let mut records = report.records.clone();
     records.sort_by_key(|r| r.id);
@@ -266,6 +285,22 @@ fn serve(args: &[String]) -> Result<()> {
             engine.metrics.prefix_hit_tokens,
         );
     }
+    if let Some(path) = &opts.metrics_json {
+        let reg = engine.metrics_registry(&report.overlap);
+        let mut doc = std::collections::BTreeMap::new();
+        doc.insert("schema".to_string(), Json::Str("instinfer-metrics/v1".to_string()));
+        doc.insert("metrics".to_string(), reg.to_json());
+        doc.insert(
+            "trace_digest".to_string(),
+            match &trace_digest {
+                Some(d) => Json::Str(d.clone()),
+                None => Json::Null,
+            },
+        );
+        std::fs::write(path, format!("{}\n", Json::Obj(doc)))
+            .with_context(|| format!("writing {path}"))?;
+        println!("wrote {path} (unified metrics snapshot, {} series)", reg.len());
+    }
     Ok(())
 }
 
@@ -300,6 +335,16 @@ fn write_trajectory_json(path: &str, tables: &[(&str, Table)]) -> Result<()> {
     doc.insert(
         "trajectory_targets".to_string(),
         Json::Arr(bench::TRAJECTORY.iter().map(|s| Json::Str(s.to_string())).collect()),
+    );
+    // determinism fingerprint: the digest of the canonical traced serve
+    // run, stitched into every trajectory document so cross-run diffs
+    // catch timing perturbations even when the tables agree
+    doc.insert(
+        "trace_digest".to_string(),
+        match bench::canonical_trace_digest() {
+            Ok(d) => Json::Str(d),
+            Err(_) => Json::Null,
+        },
     );
     doc.insert("targets".to_string(), Json::Arr(bench_tables_json(tables)));
     let doc = Json::Obj(doc);

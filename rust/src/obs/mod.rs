@@ -1,0 +1,866 @@
+//! Deterministic trace plane + unified metrics registry.
+//!
+//! The simulator is single-threaded and every device timestamp is
+//! simulated, so tracing can be something real systems can't offer: a
+//! **zero-perturbation, byte-reproducible** record of where time goes.
+//! Instrumentation sites emit into a thread-local [`TraceSink`] using
+//! values the simulation already computed — never scheduling, never
+//! reading clocks — so tracing on/off leaves outputs AND simulated
+//! timestamps bit-identical (pinned by `tests/obs.rs`).
+//!
+//! Events live on two kinds of tracks:
+//!
+//! * **request tracks** (pid 1, tid = request id): arrival → admission →
+//!   chunked-prefill spans → KV-ship spans → prefix attach → per-decode-
+//!   step spans → preempt/resume → retire;
+//! * **device tracks**: the prefill/decode stream frontiers (pid 2),
+//!   per-PCIe-link transfers and the contention arbiter (pid 3), and per
+//!   CSD `d` (pid 10+d) the NVMe command stream, FTL GC, and — at the
+//!   `full` level — every per-(channel, die) flash FIFO.
+//!
+//! [`TraceSink::export`] renders Chrome trace-event JSON (the
+//! `{"traceEvents": [...]}` object form) loadable directly in Perfetto
+//! or `chrome://tracing`; [`TraceSink::digest_hex`] hashes the exported
+//! bytes (FNV-1a 64) into a stable digest used as a schedule-level
+//! regression pin in the bench trajectory document.
+//!
+//! The module also hosts the [`MetricsRegistry`] — typed counters /
+//! gauges / histograms with deterministic (BTreeMap) snapshot order —
+//! that unifies the five historical accounting structs (`EngineMetrics`,
+//! `BusyLedger`, `ShardStats`, `OverlapStats`, `FlashUtil`) into one
+//! `--metrics-json` snapshot, and [`SampleStats`], the capped reservoir
+//! that bounds the per-step sample vectors.
+
+use std::cell::{Cell, RefCell};
+use std::collections::BTreeMap;
+
+use crate::sim::Time;
+use crate::util::json::Json;
+
+// ---------------------------------------------------------------------------
+// Trace levels
+// ---------------------------------------------------------------------------
+
+/// Verbosity of the trace plane, ordered: each level includes the ones
+/// below it.  `Request` records request-lifecycle tracks only; `Device`
+/// adds streams, NVMe commands, PCIe links and FTL GC; `Full` adds every
+/// per-(channel, die) flash FIFO span (large files — debugging only).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum TraceLevel {
+    Request,
+    Device,
+    Full,
+}
+
+impl TraceLevel {
+    pub fn parse(s: &str) -> anyhow::Result<TraceLevel> {
+        match s {
+            "request" => Ok(TraceLevel::Request),
+            "device" => Ok(TraceLevel::Device),
+            "full" => Ok(TraceLevel::Full),
+            other => anyhow::bail!("unknown --trace-level {other:?} (request|device|full)"),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            TraceLevel::Request => "request",
+            TraceLevel::Device => "device",
+            TraceLevel::Full => "full",
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Events and the sink
+// ---------------------------------------------------------------------------
+
+/// One structured trace event on simulated time.  `ph` is the chrome
+/// trace-event phase: `'X'` for complete spans (with `dur`), `'i'` for
+/// instants.  Timestamps are seconds here; export converts to µs.
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    pub pid: u64,
+    pub tid: u64,
+    pub name: &'static str,
+    pub ph: char,
+    pub ts: Time,
+    pub dur: Time,
+    /// optional single argument rendered under `"args"`
+    pub arg: Option<(&'static str, f64)>,
+}
+
+/// Process ids of the track-naming scheme (see module docs).
+const PID_REQUESTS: u64 = 1;
+const PID_STREAMS: u64 = 2;
+const PID_PCIE: u64 = 3;
+const PID_CSD_BASE: u64 = 10;
+
+/// Tid offsets inside a CSD process / the PCIe process.
+const TID_NVME: u64 = 0;
+const TID_FTL: u64 = 1;
+const TID_CHANNEL_BASE: u64 = 100;
+const TID_UNIT_BASE: u64 = 1000;
+const TID_PCIE_BG_BASE: u64 = 100;
+const TID_PCIE_ARBITER: u64 = 999;
+
+fn process_label(pid: u64) -> String {
+    match pid {
+        PID_REQUESTS => "requests".to_string(),
+        PID_STREAMS => "streams".to_string(),
+        PID_PCIE => "pcie".to_string(),
+        d => format!("csd {}", d - PID_CSD_BASE),
+    }
+}
+
+fn thread_label(pid: u64, tid: u64) -> String {
+    match pid {
+        PID_REQUESTS => format!("req {tid}"),
+        PID_STREAMS => match tid {
+            0 => "prefill stream".to_string(),
+            _ => "decode stream".to_string(),
+        },
+        PID_PCIE => {
+            if tid == TID_PCIE_ARBITER {
+                "arbiter".to_string()
+            } else if tid >= TID_PCIE_BG_BASE {
+                format!("bg link {}", tid - TID_PCIE_BG_BASE)
+            } else {
+                format!("link {tid}")
+            }
+        }
+        _ => {
+            if tid >= TID_UNIT_BASE {
+                format!("unit {}", tid - TID_UNIT_BASE)
+            } else if tid >= TID_CHANNEL_BASE {
+                format!("channel {}", tid - TID_CHANNEL_BASE)
+            } else if tid == TID_FTL {
+                "ftl".to_string()
+            } else {
+                "nvme".to_string()
+            }
+        }
+    }
+}
+
+/// Records structured span/instant events on simulated time and exports
+/// them as Chrome trace-event JSON.  Event order inside the sink is the
+/// (deterministic) emission order; export stable-sorts per track so
+/// every track's timestamps are monotone by construction.
+#[derive(Debug)]
+pub struct TraceSink {
+    pub level: TraceLevel,
+    events: Vec<TraceEvent>,
+}
+
+impl TraceSink {
+    pub fn new(level: TraceLevel) -> TraceSink {
+        TraceSink { level, events: Vec::new() }
+    }
+
+    pub fn record(&mut self, ev: TraceEvent) {
+        self.events.push(ev);
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn events(&self) -> &[TraceEvent] {
+        &self.events
+    }
+
+    /// Render the chrome trace-event JSON document: `"M"` metadata
+    /// events naming every process and thread first, then all span /
+    /// instant events stable-sorted by `(pid, tid, ts, emission index)`
+    /// — so each track is monotone in `ts` regardless of emission
+    /// interleaving.  Timestamps/durations are exported in µs.
+    pub fn export(&self) -> String {
+        let mut idx: Vec<usize> = (0..self.events.len()).collect();
+        idx.sort_by(|&a, &b| {
+            let ea = &self.events[a];
+            let eb = &self.events[b];
+            (ea.pid, ea.tid)
+                .cmp(&(eb.pid, eb.tid))
+                .then(ea.ts.total_cmp(&eb.ts))
+                .then(a.cmp(&b))
+        });
+
+        let mut out: Vec<Json> = Vec::new();
+        // Metadata: one process_name per pid, one thread_name per
+        // (pid, tid), in sorted track order (idx is already sorted).
+        let mut last_pid = u64::MAX;
+        let mut last_track = (u64::MAX, u64::MAX);
+        for &i in &idx {
+            let ev = &self.events[i];
+            if ev.pid != last_pid {
+                last_pid = ev.pid;
+                out.push(meta_event("process_name", ev.pid, 0, &process_label(ev.pid)));
+            }
+            if (ev.pid, ev.tid) != last_track {
+                last_track = (ev.pid, ev.tid);
+                out.push(meta_event(
+                    "thread_name",
+                    ev.pid,
+                    ev.tid,
+                    &thread_label(ev.pid, ev.tid),
+                ));
+            }
+        }
+        for &i in &idx {
+            out.push(self.events[i].to_json());
+        }
+
+        let mut doc = BTreeMap::new();
+        doc.insert("traceEvents".to_string(), Json::Arr(out));
+        doc.insert("displayTimeUnit".to_string(), Json::Str("ms".to_string()));
+        format!("{}\n", Json::Obj(doc))
+    }
+
+    /// FNV-1a 64 over the exported JSON bytes, rendered as a 16-hex-char
+    /// string (a u64 would lose precision through `Json::Num`).  Equal
+    /// digests ⟺ byte-identical trace files.
+    pub fn digest_hex(&self) -> String {
+        format!("{:016x}", fnv1a64(self.export().as_bytes()))
+    }
+}
+
+fn meta_event(name: &str, pid: u64, tid: u64, label: &str) -> Json {
+    let mut args = BTreeMap::new();
+    args.insert("name".to_string(), Json::Str(label.to_string()));
+    let mut m = BTreeMap::new();
+    m.insert("ph".to_string(), Json::Str("M".to_string()));
+    m.insert("name".to_string(), Json::Str(name.to_string()));
+    m.insert("pid".to_string(), Json::Num(pid as f64));
+    m.insert("tid".to_string(), Json::Num(tid as f64));
+    m.insert("args".to_string(), Json::Obj(args));
+    Json::Obj(m)
+}
+
+impl TraceEvent {
+    fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("name".to_string(), Json::Str(self.name.to_string()));
+        m.insert("ph".to_string(), Json::Str(self.ph.to_string()));
+        m.insert("pid".to_string(), Json::Num(self.pid as f64));
+        m.insert("tid".to_string(), Json::Num(self.tid as f64));
+        m.insert("ts".to_string(), Json::Num(self.ts * 1e6));
+        if self.ph == 'X' {
+            m.insert("dur".to_string(), Json::Num(self.dur * 1e6));
+        }
+        if self.ph == 'i' {
+            // instant scope: thread
+            m.insert("s".to_string(), Json::Str("t".to_string()));
+        }
+        if let Some((k, v)) = self.arg {
+            let mut args = BTreeMap::new();
+            args.insert(k.to_string(), Json::Num(v));
+            m.insert("args".to_string(), Json::Obj(args));
+        }
+        Json::Obj(m)
+    }
+}
+
+pub(crate) fn fnv1a64(bytes: &[u8]) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    bytes
+        .iter()
+        .fold(OFFSET, |h, &b| (h ^ b as u64).wrapping_mul(PRIME))
+}
+
+// ---------------------------------------------------------------------------
+// Thread-local installation + ambient device context
+// ---------------------------------------------------------------------------
+
+thread_local! {
+    static SINK: RefCell<Option<TraceSink>> = const { RefCell::new(None) };
+    /// Device index ambient context: set by `NvmeQueue::submit` (via
+    /// [`DeviceScope`]) so FTL / flash-array emissions deep in the call
+    /// stack tag the CSD that issued them.
+    static CUR_DEV: Cell<usize> = const { Cell::new(0) };
+}
+
+/// Install a fresh sink on this thread at the given level.  Replaces any
+/// existing sink.
+pub fn install(level: TraceLevel) {
+    SINK.with(|s| *s.borrow_mut() = Some(TraceSink::new(level)));
+}
+
+/// Remove and return the thread's sink (None if tracing was off).
+pub fn uninstall() -> Option<TraceSink> {
+    SINK.with(|s| s.borrow_mut().take())
+}
+
+/// Is a sink installed on this thread?
+pub fn enabled() -> bool {
+    SINK.with(|s| s.borrow().is_some())
+}
+
+/// RAII guard scoping the ambient CSD device index; restores the
+/// previous value on drop (NVMe submits never nest across devices, but
+/// restoring is cheap and makes the guard composable).
+pub struct DeviceScope {
+    prev: usize,
+}
+
+impl DeviceScope {
+    pub fn enter(dev: usize) -> DeviceScope {
+        let prev = CUR_DEV.with(|c| c.replace(dev));
+        DeviceScope { prev }
+    }
+}
+
+impl Drop for DeviceScope {
+    fn drop(&mut self) {
+        CUR_DEV.with(|c| c.set(self.prev));
+    }
+}
+
+fn emit(min: TraceLevel, ev: TraceEvent) {
+    SINK.with(|s| {
+        if let Some(sink) = s.borrow_mut().as_mut() {
+            if sink.level >= min {
+                sink.record(ev);
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Emitters — every call site passes values the simulation already
+// computed; none of these functions reads or advances any clock.
+// ---------------------------------------------------------------------------
+
+/// Request-lifecycle instant (arrive/admit/preempt/resume/retire/...).
+pub fn req_instant(id: u64, name: &'static str, ts: Time) {
+    emit(
+        TraceLevel::Request,
+        TraceEvent { pid: PID_REQUESTS, tid: id, name, ph: 'i', ts, dur: 0.0, arg: None },
+    );
+}
+
+/// Request-lifecycle span (prefill / kv_ship / decode_step).
+pub fn req_span(id: u64, name: &'static str, t0: Time, t1: Time) {
+    emit(
+        TraceLevel::Request,
+        TraceEvent { pid: PID_REQUESTS, tid: id, name, ph: 'X', ts: t0, dur: t1 - t0, arg: None },
+    );
+}
+
+/// Stream-frontier span: stream 0 = prefill, 1 = decode.
+pub fn stream_span(stream: u64, name: &'static str, t0: Time, t1: Time) {
+    emit(
+        TraceLevel::Device,
+        TraceEvent { pid: PID_STREAMS, tid: stream, name, ph: 'X', ts: t0, dur: t1 - t0, arg: None },
+    );
+}
+
+/// NVMe command span on CSD `dev`'s command track.
+pub fn device_span(dev: usize, name: &'static str, t0: Time, t1: Time) {
+    emit(
+        TraceLevel::Device,
+        TraceEvent {
+            pid: PID_CSD_BASE + dev as u64,
+            tid: TID_NVME,
+            name,
+            ph: 'X',
+            ts: t0,
+            dur: t1 - t0,
+            arg: None,
+        },
+    );
+}
+
+/// FTL garbage-collection instant on the ambient device's FTL track.
+pub fn ftl_gc(relocations: u64, ts: Time) {
+    let dev = CUR_DEV.with(|c| c.get());
+    emit(
+        TraceLevel::Device,
+        TraceEvent {
+            pid: PID_CSD_BASE + dev as u64,
+            tid: TID_FTL,
+            name: "gc",
+            ph: 'i',
+            ts,
+            dur: 0.0,
+            arg: Some(("relocations", relocations as f64)),
+        },
+    );
+}
+
+/// Flash unit (die/plane FIFO) span on the ambient device — `full` only.
+pub fn flash_unit_span(unit: usize, name: &'static str, t0: Time, t1: Time) {
+    let dev = CUR_DEV.with(|c| c.get());
+    emit(
+        TraceLevel::Full,
+        TraceEvent {
+            pid: PID_CSD_BASE + dev as u64,
+            tid: TID_UNIT_BASE + unit as u64,
+            name,
+            ph: 'X',
+            ts: t0,
+            dur: t1 - t0,
+            arg: None,
+        },
+    );
+}
+
+/// Flash channel FIFO span on the ambient device — `full` only.
+pub fn flash_channel_span(ch: usize, name: &'static str, t0: Time, t1: Time) {
+    let dev = CUR_DEV.with(|c| c.get());
+    emit(
+        TraceLevel::Full,
+        TraceEvent {
+            pid: PID_CSD_BASE + dev as u64,
+            tid: TID_CHANNEL_BASE + ch as u64,
+            name,
+            ph: 'X',
+            ts: t0,
+            dur: t1 - t0,
+            arg: None,
+        },
+    );
+}
+
+/// Foreground PCIe link transfer (all-reduce shard merge) on link `dev`.
+pub fn pcie_span(dev: usize, name: &'static str, t0: Time, t1: Time, bytes: f64) {
+    emit(
+        TraceLevel::Device,
+        TraceEvent {
+            pid: PID_PCIE,
+            tid: dev as u64,
+            name,
+            ph: 'X',
+            ts: t0,
+            dur: t1 - t0,
+            arg: Some(("bytes", bytes)),
+        },
+    );
+}
+
+/// Background PCIe transfer (prefill KV shipping) on link `dev`.
+pub fn pcie_bg_span(dev: usize, name: &'static str, t0: Time, t1: Time, bytes: f64) {
+    emit(
+        TraceLevel::Device,
+        TraceEvent {
+            pid: PID_PCIE,
+            tid: TID_PCIE_BG_BASE + dev as u64,
+            name,
+            ph: 'X',
+            ts: t0,
+            dur: t1 - t0,
+            arg: Some(("bytes", bytes)),
+        },
+    );
+}
+
+/// PCIe ingress-contention arbiter decision instant.
+pub fn pcie_arbiter(background: usize, delay: Time, ts: Time) {
+    emit(
+        TraceLevel::Device,
+        TraceEvent {
+            pid: PID_PCIE,
+            tid: TID_PCIE_ARBITER,
+            name: if background > 0 { "contended" } else { "uncontended" },
+            ph: 'i',
+            ts,
+            dur: 0.0,
+            arg: Some(("delay_s", delay)),
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// SampleStats — capped streaming reservoir
+// ---------------------------------------------------------------------------
+
+/// Streaming sample statistics with a first-N capped reservoir for
+/// percentiles: `count/sum/min/max` are exact over ALL pushed samples;
+/// `p50/p95` come from the first `cap` samples (deterministic — no RNG,
+/// no replacement), which is exact for every run shorter than the cap
+/// and a stable early-window estimate beyond it.  Replaces the unbounded
+/// per-step `Vec`s in `EngineMetrics` so open-loop serve memory no
+/// longer grows linearly with steps.
+#[derive(Debug, Clone)]
+pub struct SampleStats {
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+    reservoir: Vec<f64>,
+    cap: usize,
+}
+
+/// Default reservoir bound (samples, not bytes): 32 KiB of f64 per stat.
+pub const SAMPLE_CAP: usize = 4096;
+
+impl Default for SampleStats {
+    fn default() -> Self {
+        SampleStats::with_cap(SAMPLE_CAP)
+    }
+}
+
+impl SampleStats {
+    pub fn with_cap(cap: usize) -> SampleStats {
+        SampleStats {
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            reservoir: Vec::new(),
+            cap,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.count += 1;
+        self.sum += x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+        if self.reservoir.len() < self.cap {
+            self.reservoir.push(x);
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Percentile over the reservoir window; 0.0 when empty.
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.reservoir.is_empty() {
+            return 0.0;
+        }
+        let mut xs = self.reservoir.clone();
+        crate::util::stats::percentile(&mut xs, q)
+    }
+
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            count: self.count,
+            sum: self.sum,
+            min: self.min(),
+            max: self.max(),
+            p50: self.percentile(50.0),
+            p95: self.percentile(95.0),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// MetricsRegistry
+// ---------------------------------------------------------------------------
+
+/// Point-in-time summary of a [`SampleStats`] histogram.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistogramSnapshot {
+    pub count: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p95: f64,
+}
+
+/// One typed metric value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum MetricValue {
+    Counter(u64),
+    Gauge(f64),
+    Histogram(HistogramSnapshot),
+}
+
+/// Unified, deterministically-ordered metric snapshot: the five ad-hoc
+/// accounting structs (`EngineMetrics`, `BusyLedger`, `ShardStats`,
+/// `OverlapStats`, `FlashUtil`) register here under dotted names
+/// (`engine.*`, `ledger.*`, `shard.*`, `overlap.*`, `flash.*`,
+/// `units.*`), and `--metrics-json` / bench rows read the one snapshot.
+/// BTreeMap keys make iteration and JSON output order deterministic.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsRegistry {
+    map: BTreeMap<String, MetricValue>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    pub fn counter(&mut self, name: &str, v: u64) {
+        self.map.insert(name.to_string(), MetricValue::Counter(v));
+    }
+
+    pub fn gauge(&mut self, name: &str, v: f64) {
+        self.map.insert(name.to_string(), MetricValue::Gauge(v));
+    }
+
+    pub fn histogram(&mut self, name: &str, s: &SampleStats) {
+        self.map
+            .insert(name.to_string(), MetricValue::Histogram(s.snapshot()));
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&MetricValue> {
+        self.map.get(name)
+    }
+
+    /// Numeric read across types (counter as f64, gauge, histogram
+    /// mean) — the bench-table accessor.
+    pub fn value(&self, name: &str) -> Option<f64> {
+        self.map.get(name).map(|v| match v {
+            MetricValue::Counter(c) => *c as f64,
+            MetricValue::Gauge(g) => *g,
+            MetricValue::Histogram(h) => {
+                if h.count == 0 {
+                    0.0
+                } else {
+                    h.sum / h.count as f64
+                }
+            }
+        })
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &MetricValue)> {
+        self.map.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
+    /// Deterministic JSON object: counters/gauges as numbers, histograms
+    /// as `{count, sum, min, max, p50, p95}` objects.
+    pub fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        for (k, v) in &self.map {
+            let jv = match v {
+                MetricValue::Counter(c) => Json::Num(*c as f64),
+                MetricValue::Gauge(g) => Json::Num(*g),
+                MetricValue::Histogram(h) => {
+                    let mut hm = BTreeMap::new();
+                    hm.insert("count".to_string(), Json::Num(h.count as f64));
+                    hm.insert("sum".to_string(), Json::Num(h.sum));
+                    hm.insert("min".to_string(), Json::Num(h.min));
+                    hm.insert("max".to_string(), Json::Num(h.max));
+                    hm.insert("p50".to_string(), Json::Num(h.p50));
+                    hm.insert("p95".to_string(), Json::Num(h.p95));
+                    Json::Obj(hm)
+                }
+            };
+            obj.insert(k.clone(), jv);
+        }
+        Json::Obj(obj)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_levels_are_ordered() {
+        assert!(TraceLevel::Request < TraceLevel::Device);
+        assert!(TraceLevel::Device < TraceLevel::Full);
+        assert_eq!(TraceLevel::parse("device").unwrap(), TraceLevel::Device);
+        assert!(TraceLevel::parse("bogus").is_err());
+        assert_eq!(TraceLevel::Full.label(), "full");
+    }
+
+    #[test]
+    fn sink_filters_below_level() {
+        let mut sink = TraceSink::new(TraceLevel::Request);
+        // emulate what emit() does for a device-level event
+        if sink.level >= TraceLevel::Device {
+            sink.record(TraceEvent {
+                pid: PID_STREAMS,
+                tid: 0,
+                name: "x",
+                ph: 'X',
+                ts: 0.0,
+                dur: 1.0,
+                arg: None,
+            });
+        }
+        assert!(sink.is_empty());
+    }
+
+    #[test]
+    fn export_is_sorted_and_parses() {
+        let mut sink = TraceSink::new(TraceLevel::Full);
+        // emit out of track order and out of ts order across tracks
+        sink.record(TraceEvent {
+            pid: PID_CSD_BASE,
+            tid: TID_NVME,
+            name: "attn",
+            ph: 'X',
+            ts: 2.0,
+            dur: 0.5,
+            arg: None,
+        });
+        sink.record(TraceEvent {
+            pid: PID_REQUESTS,
+            tid: 7,
+            name: "arrive",
+            ph: 'i',
+            ts: 1.0,
+            dur: 0.0,
+            arg: None,
+        });
+        sink.record(TraceEvent {
+            pid: PID_CSD_BASE,
+            tid: TID_NVME,
+            name: "write",
+            ph: 'X',
+            ts: 1.0,
+            dur: 0.25,
+            arg: Some(("bytes", 64.0)),
+        });
+        let text = sink.export();
+        let doc = Json::parse(text.trim_end()).expect("export parses");
+        let evs = doc.get("traceEvents").and_then(|e| e.as_arr()).unwrap();
+        // 3 events + 2 process_name + 2 thread_name metadata
+        assert_eq!(evs.len(), 7);
+        // metadata first
+        assert_eq!(evs[0].get("ph").and_then(|p| p.as_str()), Some("M"));
+        // per-track monotone ts among 'X'/'i' events
+        let mut last: Option<(f64, f64, f64)> = None;
+        for e in evs {
+            if e.get("ph").and_then(|p| p.as_str()) == Some("M") {
+                continue;
+            }
+            let key = (
+                e.get("pid").and_then(|v| v.as_f64()).unwrap(),
+                e.get("tid").and_then(|v| v.as_f64()).unwrap(),
+                e.get("ts").and_then(|v| v.as_f64()).unwrap(),
+            );
+            if let Some(prev) = last {
+                assert!(key >= prev, "events not sorted: {prev:?} then {key:?}");
+            }
+            last = Some(key);
+        }
+        // byte-stable: re-export is identical, digest matches
+        assert_eq!(text, sink.export());
+        assert_eq!(sink.digest_hex(), sink.digest_hex());
+        assert_eq!(sink.digest_hex().len(), 16);
+    }
+
+    #[test]
+    fn install_uninstall_roundtrip() {
+        assert!(!enabled());
+        install(TraceLevel::Device);
+        assert!(enabled());
+        req_instant(3, "arrive", 0.5);
+        stream_span(1, "decode_step", 1.0, 2.0);
+        flash_unit_span(0, "read", 0.0, 1.0); // Full-level: filtered out
+        {
+            let _scope = DeviceScope::enter(2);
+            ftl_gc(5, 3.0);
+        }
+        let sink = uninstall().expect("sink was installed");
+        assert!(!enabled());
+        assert_eq!(sink.len(), 3);
+        // the gc instant landed on csd 2 (ambient device scope)
+        let gc = sink.events().iter().find(|e| e.name == "gc").unwrap();
+        assert_eq!(gc.pid, PID_CSD_BASE + 2);
+        // emitting with no sink installed is a no-op
+        req_instant(4, "arrive", 9.0);
+        assert!(!enabled());
+    }
+
+    #[test]
+    fn sample_stats_caps_reservoir_but_counts_all() {
+        let mut s = SampleStats::with_cap(8);
+        for i in 0..100 {
+            s.push(i as f64);
+        }
+        assert_eq!(s.count(), 100);
+        assert!((s.sum() - 4950.0).abs() < 1e-9);
+        assert!((s.mean() - 49.5).abs() < 1e-9);
+        assert_eq!(s.min(), 0.0);
+        assert_eq!(s.max(), 99.0);
+        // percentiles come from the first-8 window
+        assert!(s.percentile(50.0) <= 7.0);
+        let snap = s.snapshot();
+        assert_eq!(snap.count, 100);
+        assert_eq!(snap.max, 99.0);
+        // empty stats are all-zero, not NaN/inf
+        let e = SampleStats::default();
+        assert_eq!(e.mean(), 0.0);
+        assert_eq!(e.min(), 0.0);
+        assert_eq!(e.max(), 0.0);
+        assert_eq!(e.percentile(95.0), 0.0);
+    }
+
+    #[test]
+    fn registry_snapshot_is_deterministic_json() {
+        let mut r = MetricsRegistry::new();
+        r.gauge("b.gauge", 2.5);
+        r.counter("a.counter", 7);
+        let mut s = SampleStats::default();
+        s.push(1.0);
+        s.push(3.0);
+        r.histogram("c.hist", &s);
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.value("a.counter"), Some(7.0));
+        assert_eq!(r.value("b.gauge"), Some(2.5));
+        assert_eq!(r.value("c.hist"), Some(2.0)); // histogram mean
+        assert_eq!(r.value("missing"), None);
+        let keys: Vec<&str> = r.iter().map(|(k, _)| k).collect();
+        assert_eq!(keys, vec!["a.counter", "b.gauge", "c.hist"]);
+        let j = r.to_json().to_string();
+        // BTreeMap order: keys appear sorted in the rendered JSON
+        assert!(j.find("a.counter").unwrap() < j.find("b.gauge").unwrap());
+        assert!(j.find("b.gauge").unwrap() < j.find("c.hist").unwrap());
+        assert!(j.contains("\"p95\""));
+        // round-trips through our own parser
+        assert!(Json::parse(&j).is_ok());
+    }
+
+    #[test]
+    fn fnv_digest_matches_reference_vectors() {
+        // Standard FNV-1a 64 test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+}

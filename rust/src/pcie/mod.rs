@@ -173,6 +173,9 @@ pub fn fair_share_contended(
     background: &[XferReq],
 ) -> (Vec<Time>, Time) {
     if background.is_empty() {
+        if let Some(t0) = reqs.iter().map(|r| r.start).reduce(Time::min) {
+            crate::obs::pcie_arbiter(0, 0.0, t0);
+        }
         return (fair_share_finish(ingress_bw, reqs), 0.0);
     }
     let free = fair_share_finish(ingress_bw, reqs);
@@ -188,6 +191,9 @@ pub fn fair_share_contended(
     } else {
         0.0
     };
+    if let Some(t0) = reqs.iter().map(|r| r.start).reduce(Time::min) {
+        crate::obs::pcie_arbiter(background.len(), delay, t0);
+    }
     (fin, delay)
 }
 

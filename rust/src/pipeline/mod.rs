@@ -125,6 +125,7 @@ impl PipelineState {
     /// `[start, ready)`; it joins the decode stream once the decode
     /// frontier reaches `ready`.
     pub fn park(&mut self, seqs: Vec<Sequence>, start: Time, ready: Time) {
+        crate::obs::stream_span(0, "prefill_cohort", start, ready);
         self.stats.cohorts += 1;
         self.prefill_intervals.push(start, ready);
         // single source of truth: the timeline's cumulative busy time
@@ -160,6 +161,7 @@ impl PipelineState {
     /// Account one decode-stream step span `[d0, d1)` against the
     /// prefill stream's busy intervals.
     pub fn note_decode(&mut self, d0: Time, d1: Time) {
+        crate::obs::stream_span(1, "decode_step", d0, d1);
         let span = (d1 - d0).max(0.0);
         self.stats.decode_busy_s += span;
         if self.prefill_free > d0 {

@@ -83,9 +83,11 @@ impl ShardCoordinator {
     ) -> Result<Self> {
         let n_csds = topology.n_csds;
         let mut queues = Vec::with_capacity(n_csds);
-        for _ in 0..n_csds {
+        for c in 0..n_csds {
             let csd = InstCsd::with_tier(spec, ftl_cfg, tier).context("constructing InstCSD")?;
-            queues.push(NvmeQueue::new(csd, &pcie, p2p));
+            let mut q = NvmeQueue::new(csd, &pcie, p2p);
+            q.dev = c;
+            queues.push(q);
         }
         Ok(ShardCoordinator {
             clock: ShardClock::new(n_csds),
@@ -140,6 +142,7 @@ impl ShardCoordinator {
         // window too early)
         let start = at.max(self.bg_free[c]);
         let wire_done = start + self.io_lat() + bytes / dev_bw;
+        crate::obs::pcie_bg_span(c, "kv_ship", start, wire_done, bytes);
         self.bg_free[c] = wire_done;
         self.bg_ship.push((XferReq { start, bytes, dev_bw }, wire_done));
         self.stats.prefill_ship_bytes += bytes;
@@ -165,6 +168,13 @@ impl ShardCoordinator {
         if delay > 0.0 {
             self.stats.contended_merges += 1;
             self.stats.contention_delay_s += delay;
+        }
+        if crate::obs::enabled() {
+            for (k, &c) in shards.iter().enumerate() {
+                if fin[k].is_finite() {
+                    crate::obs::pcie_span(c, "all_reduce", reqs[k].start, fin[k], reqs[k].bytes);
+                }
+            }
         }
         if self.overlap_tracking {
             for (k, &c) in shards.iter().enumerate() {

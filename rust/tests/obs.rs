@@ -1,0 +1,188 @@
+//! Trace-plane crosschecks.
+//!
+//! The load-bearing guarantees:
+//!
+//! 1. Tracing is purely observational: a run with the sink installed
+//!    produces bit-identical outputs AND simulated timestamps to the
+//!    same run with no sink — the emitters only record already-computed
+//!    `(start, end)` values, they never schedule.
+//! 2. Determinism: the same config + seed produces a byte-identical
+//!    trace file (equal FNV digests ⟺ equal bytes).
+//! 3. Well-formedness: spans have `end >= start`, every track is
+//!    monotone in `ts`, and metadata events name every track before any
+//!    data event appears.
+//! 4. The export parses as chrome trace-event JSON with the keys
+//!    Perfetto requires.
+
+use instinfer::coordinator::{run_open_loop, EngineConfig, InferenceEngine, SchedConfig};
+use instinfer::obs::{self, TraceLevel, TraceSink};
+use instinfer::runtime::Runtime;
+use instinfer::util::json::Json;
+use instinfer::workload::{Arrival, ArrivalGen, LengthProfile, WorkloadGen};
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../artifacts")
+}
+
+fn engine(n_csds: usize) -> InferenceEngine {
+    let rt = Runtime::open(artifacts_dir()).expect("opening runtime");
+    let meta = rt.manifest.model.clone();
+    InferenceEngine::new(rt, EngineConfig::micro_for(&meta, n_csds, false)).unwrap()
+}
+
+/// Deterministic fixed-length Poisson trace (single priority class).
+fn trace(engine: &InferenceEngine, n: usize, rate: f64) -> Vec<Arrival> {
+    let m = &engine.rt.manifest.model;
+    let wg = WorkloadGen::new(321, m.vocab, m.max_seq, LengthProfile::Fixed, 6, 4);
+    ArrivalGen::new(wg, 654, rate).take(n)
+}
+
+fn sched(overlap: bool) -> SchedConfig {
+    let mut s = SchedConfig::serving(4, 2, 16);
+    s.overlap = overlap;
+    s
+}
+
+/// Everything a run observably produces, per request: id, then the
+/// bit-patterns of arrival / first-token / finish timestamps, then the
+/// generated tokens (plus a final row for the simulated clock).
+type Fingerprint = Vec<(u64, u64, u64, u64, Vec<i32>)>;
+
+fn fingerprint(
+    engine: &InferenceEngine,
+    report: &instinfer::coordinator::ServeReport,
+) -> Fingerprint {
+    let mut rows: Vec<_> = report
+        .records
+        .iter()
+        .map(|r| {
+            (
+                r.id,
+                r.arrived_at.to_bits(),
+                r.first_token_at.to_bits(),
+                r.finished_at.to_bits(),
+                r.generated.clone(),
+            )
+        })
+        .collect();
+    rows.sort_by_key(|r| r.0);
+    rows.push((u64::MAX, report.sim_end.to_bits(), engine.sim_now.to_bits(), 0, Vec::new()));
+    rows
+}
+
+/// One traced run at the given level; returns the drained sink plus the
+/// run fingerprint.  Panics rather than leaking an installed sink.
+fn traced_run(overlap: bool, level: TraceLevel) -> (TraceSink, Fingerprint) {
+    let mut e = engine(2);
+    let arrivals = trace(&e, 6, 200.0);
+    obs::install(level);
+    let report = run_open_loop(&mut e, arrivals, sched(overlap));
+    let sink = obs::uninstall().expect("sink should still be installed");
+    let report = report.unwrap();
+    (sink, fingerprint(&e, &report))
+}
+
+#[test]
+fn tracing_off_is_bit_identical_to_traced_run() {
+    for overlap in [false, true] {
+        let mut e = engine(2);
+        let arrivals = trace(&e, 6, 200.0);
+        assert!(!obs::enabled());
+        let report = run_open_loop(&mut e, arrivals, sched(overlap)).unwrap();
+        let untraced = fingerprint(&e, &report);
+
+        let (sink, traced) = traced_run(overlap, TraceLevel::Full);
+        assert!(!sink.is_empty(), "full-level trace captured no events");
+        assert_eq!(
+            untraced, traced,
+            "tracing perturbed outputs or timestamps (overlap={overlap})"
+        );
+    }
+}
+
+#[test]
+fn same_seed_produces_byte_identical_trace() {
+    let (a, fp_a) = traced_run(true, TraceLevel::Full);
+    let (b, fp_b) = traced_run(true, TraceLevel::Full);
+    assert_eq!(fp_a, fp_b, "replay diverged before the trace comparison");
+    assert_eq!(a.len(), b.len());
+    assert_eq!(a.export(), b.export(), "trace files differ across identical runs");
+    assert_eq!(a.digest_hex(), b.digest_hex());
+    assert_eq!(a.digest_hex().len(), 16);
+
+    // a lower trace level is a strict filter, not a different timeline
+    let (c, fp_c) = traced_run(true, TraceLevel::Request);
+    assert_eq!(fp_a, fp_c);
+    assert!(c.len() < a.len(), "request level should drop device events");
+}
+
+#[test]
+fn trace_spans_are_well_formed() {
+    let (sink, _) = traced_run(true, TraceLevel::Full);
+    for ev in sink.events() {
+        assert!(ev.dur >= 0.0, "span {:?} ends before it starts", ev.name);
+        assert!(ev.ts.is_finite() && ev.ts >= 0.0);
+        assert!(matches!(ev.ph, 'X' | 'i'), "sink holds only data events");
+    }
+
+    let doc = Json::parse(&sink.export()).expect("export is valid json");
+    let events = doc.req("traceEvents").unwrap().as_arr().unwrap();
+    assert!(!events.is_empty());
+
+    // every metadata event precedes every data event, and each track's
+    // data timestamps are nondecreasing in file order
+    let mut seen_data = false;
+    let mut frontier: std::collections::BTreeMap<(u64, u64), f64> =
+        std::collections::BTreeMap::new();
+    for ev in events {
+        let ph = ev.req("ph").unwrap().as_str().unwrap();
+        if ph == "M" {
+            assert!(!seen_data, "metadata event after a data event");
+            continue;
+        }
+        seen_data = true;
+        let pid = ev.req("pid").unwrap().as_f64().unwrap() as u64;
+        let tid = ev.req("tid").unwrap().as_f64().unwrap() as u64;
+        let ts = ev.req("ts").unwrap().as_f64().unwrap();
+        let last = frontier.entry((pid, tid)).or_insert(f64::NEG_INFINITY);
+        assert!(ts >= *last, "track ({pid},{tid}) went backwards: {ts} < {last}");
+        *last = ts;
+    }
+    assert!(seen_data);
+}
+
+#[test]
+fn export_is_valid_chrome_trace_event_json() {
+    let (sink, _) = traced_run(false, TraceLevel::Full);
+    let text = sink.export();
+    assert!(text.ends_with('\n'));
+    let doc = Json::parse(&text).expect("export is valid json");
+    assert_eq!(doc.req("displayTimeUnit").unwrap().as_str(), Some("ms"));
+
+    let events = doc.req("traceEvents").unwrap().as_arr().unwrap();
+    let mut phases = std::collections::BTreeSet::new();
+    for ev in events {
+        for key in ["name", "ph", "pid", "tid"] {
+            assert!(ev.get(key).is_some(), "event missing required key {key:?}");
+        }
+        let ph = ev.req("ph").unwrap().as_str().unwrap().to_string();
+        match ph.as_str() {
+            "M" => assert!(ev.req("args").unwrap().get("name").is_some()),
+            "X" => {
+                assert!(ev.req("ts").unwrap().as_f64().is_some());
+                assert!(ev.req("dur").unwrap().as_f64().unwrap() >= 0.0);
+            }
+            "i" => {
+                assert!(ev.req("ts").unwrap().as_f64().is_some());
+                assert_eq!(ev.req("s").unwrap().as_str(), Some("t"));
+            }
+            other => panic!("unexpected phase {other:?}"),
+        }
+        phases.insert(ph);
+    }
+    // a serve run must produce all three shapes: track names, request /
+    // device spans, and lifecycle instants
+    for want in ["M", "X", "i"] {
+        assert!(phases.contains(want), "no {want:?} events in the export");
+    }
+}
