@@ -1,0 +1,152 @@
+//! `bench attr` — the critical-path latency-attribution evidence run:
+//! serve a dense closed-loop micro workload on one CSD with the
+//! attribution sink installed, aggregate the per-request exclusive
+//! buckets ([`crate::obs::attr`]), and cross-check the measured decode
+//! shares against the analytic plane's per-unit terms
+//! ([`crate::systems::insti::csd_layer_step`]).
+//!
+//! The e2e/decode rows are the bottleneck report: every bucket's
+//! attributed seconds and its share of the scope's wall time (the
+//! buckets are exclusive and sum to wall, pinned by `tests/obs.rs`).
+//! The `xcheck` rows map the DES-side decode buckets onto the analytic
+//! model's terms — flash wait (`flash_read` + conflict queueing) vs
+//! on-device compute — normalised over the pair, with the relative
+//! error between the measured and predicted shares.  Expected shape
+//! (paper Fig. 14): decode attention is flash-read bound, not compute
+//! bound, on both planes.
+
+use crate::config::model::ModelShape;
+use crate::config::system::{OffloadPolicy, SystemConfig};
+use crate::coordinator::{run_closed_loop, EngineConfig, InferenceEngine, SchedConfig};
+use crate::obs::attr::{self, AttrReport, Bucket, BUCKETS};
+use crate::runtime::Runtime;
+use crate::systems::insti;
+use crate::util::table::{eng, Table};
+use crate::workload::{LengthProfile, WorkloadGen};
+
+const PROMPT: usize = 24;
+const GEN: usize = 8;
+const REQUESTS: usize = 8;
+const SEATS: usize = 4;
+const SLOTS: usize = 16;
+
+/// Mid-generation context length the analytic cross-check is evaluated
+/// at: the fixed prompt plus half the generation budget.
+const XCHECK_CTX: usize = PROMPT + GEN / 2;
+
+/// Serve the designated dense micro workload (1 CSD, closed loop) with
+/// the attribution sink installed and return the extracted report.
+pub fn run_attributed() -> anyhow::Result<AttrReport> {
+    let rt = Runtime::open("artifacts")?;
+    let meta = rt.manifest.model.clone();
+    let mut engine = InferenceEngine::new(rt, EngineConfig::micro_for(&meta, 1, false))?;
+    let mut wg =
+        WorkloadGen::new(6001, meta.vocab, meta.max_seq, LengthProfile::Fixed, PROMPT, GEN);
+    let reqs = wg.batch(REQUESTS);
+    attr::install();
+    let run = run_closed_loop(&mut engine, reqs, SchedConfig::serving(SEATS, 2, SLOTS));
+    let sink = attr::uninstall().unwrap_or_default();
+    run?;
+    Ok(attr::extract(&sink))
+}
+
+/// The analytic plane's (flash, compute) decode-step seconds for the
+/// same rig: opt-micro shapes on the micro CSD geometry, dense.
+///
+/// `flash` is the model's streamed flash-read term; `compute` lumps the
+/// on-device kernels (argtopk + NFC filter + logits + attend) because
+/// the DES engine charges the filter pass to its compute accumulator on
+/// the dense path too.
+pub fn predicted_split() -> (f64, f64) {
+    let mut cfg = SystemConfig::paper_base(OffloadPolicy::InStorage);
+    cfg.model = ModelShape::opt_micro();
+    cfg.csd = crate::config::hw::CsdSpec::micro();
+    let step = insti::csd_layer_step(&cfg, SEATS, XCHECK_CTX, cfg.model.n_heads);
+    let u = &step.units;
+    let flash = u.flash_read;
+    let compute = u.argtopk + u.nfc_filter + u.logit0 + u.logit + u.attend;
+    (flash, compute)
+}
+
+/// The measured (flash, compute) decode seconds from an attribution
+/// report: flash wait = raw read service + die/channel conflict
+/// queueing; compute = the CSD kernel bucket.
+pub fn measured_split(rep: &AttrReport) -> (f64, f64) {
+    let flash = rep.decode_total[Bucket::FlashRead.index()]
+        + rep.decode_total[Bucket::FlashConflict.index()];
+    let compute = rep.decode_total[Bucket::CsdCompute.index()];
+    (flash, compute)
+}
+
+fn share(x: f64, total: f64) -> f64 {
+    x / total.max(1e-30)
+}
+
+pub fn attr() -> Table {
+    let mut t = Table::new(
+        "Critical-path latency attribution — exclusive buckets + analytic cross-check (opt-micro, sim)",
+        &["scope", "bucket", "s", "frac", "pred_frac", "rel_err"],
+    );
+    let rep = match run_attributed() {
+        Ok(r) => r,
+        Err(e) => {
+            t.row(vec![
+                "-".into(),
+                "-".into(),
+                "ERR".into(),
+                format!("{e:#}"),
+                "-".into(),
+                "-".into(),
+            ]);
+            return t;
+        }
+    };
+    let scope_rows = |t: &mut Table, scope: &str, totals: &[f64; attr::NBUCKETS], wall: f64| {
+        for b in BUCKETS {
+            let s = totals[b.index()];
+            t.row(vec![
+                scope.into(),
+                b.label().into(),
+                eng(s),
+                eng(share(s, wall)),
+                "-".into(),
+                "-".into(),
+            ]);
+        }
+    };
+    let decode_wall: f64 = rep.decode_total.iter().sum();
+    scope_rows(&mut t, "e2e", &rep.total, rep.wall_total);
+    scope_rows(&mut t, "decode", &rep.decode_total, decode_wall);
+    // predicted-vs-measured: shares normalised over the flash/compute
+    // pair so both planes answer the same question ("which binds?")
+    let (pf, pc) = predicted_split();
+    let (mf, mc) = measured_split(&rep);
+    let pairs = [("flash", mf, share(pf, pf + pc)), ("compute", mc, share(pc, pf + pc))];
+    for (name, meas_s, pred_share) in pairs {
+        let meas_share = share(meas_s, mf + mc);
+        let rel_err = (meas_share - pred_share).abs() / pred_share.max(1e-30);
+        t.row(vec![
+            "xcheck".into(),
+            name.into(),
+            eng(meas_s),
+            eng(meas_share),
+            eng(pred_share),
+            eng(rel_err),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn predicted_split_is_flash_bound() {
+        // the paper's claim on the analytic plane: dense decode
+        // attention waits on flash reads, not on the kernels
+        let (flash, compute) = predicted_split();
+        assert!(flash > 0.0 && compute > 0.0);
+        assert!(flash > compute, "flash {flash} vs compute {compute}");
+    }
+}

@@ -77,6 +77,17 @@ pub fn run_attention(
     })
 }
 
+/// `bench flashpath --trace`: run the designated sweep point (4 dies,
+/// tuned path, dense) with the trace plane installed and return the
+/// drained sink.
+pub fn traced(level: crate::obs::TraceLevel) -> anyhow::Result<crate::obs::TraceSink> {
+    crate::obs::install(level);
+    let run = run_attention(4, FlashPathConfig::tuned(), AttnMode::Dense);
+    let sink = crate::obs::uninstall();
+    run?;
+    sink.ok_or_else(|| anyhow::anyhow!("trace sink was not installed"))
+}
+
 /// The ablation ladder from the legacy path to the tuned path.
 pub fn ladder() -> Vec<FlashPathConfig> {
     vec![

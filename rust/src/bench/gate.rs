@@ -1,0 +1,478 @@
+//! `bench gate` — the CI perf regression gate: diff the key metrics of
+//! a `bench all --json` document against the committed baseline
+//! (`baselines/bench-baseline.json`, schema
+//! `instinfer-bench-gate-baseline/v1`) with per-metric one-sided
+//! tolerances, and fail loudly — printing the run's top decode
+//! attribution buckets so the failure names its suspect — when any
+//! metric regresses past tolerance.
+//!
+//! The baseline ships unseeded (`"seeded": false`): the gate then
+//! reports the current values and passes with a notice, so a fresh
+//! checkout stays green until someone runs
+//! `instinfer bench all --json BENCH_all.json && instinfer bench gate --update`
+//! on the reference machine and commits the result.  Re-baselining
+//! after an intentional perf change is the same two commands.
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+
+pub const SCHEMA: &str = "instinfer-bench-gate-baseline/v1";
+pub const DEFAULT_BENCH: &str = "BENCH_all.json";
+/// cargo runs from `rust/`; the baseline is committed at the repo root.
+pub const DEFAULT_BASELINE: &str = "../baselines/bench-baseline.json";
+
+/// One gated metric: a (target, row, column) address into the bench
+/// document plus the regression direction and tolerance.
+pub struct MetricSpec {
+    /// baseline key (stable across runs; the row address spelled out)
+    pub key: &'static str,
+    /// bench target whose table holds the metric
+    pub target: &'static str,
+    /// (column, cell) pairs that select the row
+    pub matchers: &'static [(&'static str, &'static str)],
+    /// column holding the metric value
+    pub column: &'static str,
+    /// regression direction: `true` gates on falling below baseline
+    pub higher_is_better: bool,
+    /// one-sided relative tolerance before a drift counts as regression
+    pub tol_rel: f64,
+}
+
+/// The gated metrics: the serving dashboard's headline numbers, one per
+/// evidence run.
+pub const METRICS: &[MetricSpec] = &[
+    MetricSpec {
+        key: "serve.continuous.rate100.p95_ttft_s",
+        target: "serve",
+        matchers: &[("rate_req_s", "100"), ("mode", "continuous")],
+        column: "p95_ttft_s",
+        higher_is_better: false,
+        tol_rel: 0.05,
+    },
+    MetricSpec {
+        key: "serve.continuous.rate100.tput_tok_s",
+        target: "serve",
+        matchers: &[("rate_req_s", "100"), ("mode", "continuous")],
+        column: "tput_tok_s",
+        higher_is_better: true,
+        tol_rel: 0.05,
+    },
+    MetricSpec {
+        key: "overlap.csds2.chunk4.rate400.decode_step_ms",
+        target: "overlap",
+        matchers: &[
+            ("csds", "2"),
+            ("prefill_chunk", "4"),
+            ("rate_req_s", "400"),
+            ("mode", "overlapped"),
+        ],
+        column: "decode_step_ms",
+        higher_is_better: false,
+        tol_rel: 0.05,
+    },
+    MetricSpec {
+        key: "overlap.csds2.chunk4.rate400.step_speedup",
+        target: "overlap",
+        matchers: &[
+            ("csds", "2"),
+            ("prefill_chunk", "4"),
+            ("rate_req_s", "400"),
+            ("mode", "overlapped"),
+        ],
+        column: "step_speedup",
+        higher_is_better: true,
+        tol_rel: 0.05,
+    },
+    MetricSpec {
+        key: "shard.stripe.csds4.attn_speedup",
+        target: "shard",
+        matchers: &[("policy", "stripe"), ("csds", "4")],
+        column: "attn_speedup",
+        higher_is_better: true,
+        tol_rel: 0.05,
+    },
+    MetricSpec {
+        key: "prefix.share0.5.hit1.warm.ttft_save",
+        target: "prefix",
+        matchers: &[("share_ratio", "0.5"), ("hit_rate", "1"), ("mode", "warm")],
+        column: "ttft_save",
+        higher_is_better: true,
+        tol_rel: 0.05,
+    },
+    MetricSpec {
+        key: "flashpath.dies4.tuned.dense_speedup",
+        target: "flashpath",
+        matchers: &[("dies", "4"), ("path", "die/interleave/pipe")],
+        column: "dense_speedup",
+        higher_is_better: true,
+        tol_rel: 0.05,
+    },
+];
+
+/// One gated metric's verdict.
+pub struct GateResult {
+    pub key: &'static str,
+    /// `None` when the metric could not be read from the bench document
+    pub current: Option<f64>,
+    pub baseline: Option<f64>,
+    /// populated iff this metric fails the gate
+    pub failure: Option<String>,
+}
+
+/// The tables of a bench document: both the stitched trajectory shape
+/// (`{"targets": [...]}`) and the plain per-target array are accepted.
+fn tables(doc: &Json) -> Vec<(&str, &Json)> {
+    let arr = doc
+        .get("targets")
+        .and_then(|t| t.as_arr())
+        .or_else(|| doc.as_arr())
+        .unwrap_or(&[]);
+    arr.iter()
+        .filter_map(|t| Some((t.get("target")?.as_str()?, t)))
+        .collect()
+}
+
+fn header_index(table: &Json, column: &str) -> Option<usize> {
+    table
+        .get("header")?
+        .as_arr()?
+        .iter()
+        .position(|h| h.as_str() == Some(column))
+}
+
+/// The rows of `target`'s table whose cells satisfy every matcher.
+fn matching_rows<'a>(
+    doc: &'a Json,
+    target: &str,
+    matchers: &[(&str, &str)],
+) -> Result<Vec<&'a [Json]>> {
+    let (_, table) = tables(doc)
+        .into_iter()
+        .find(|(name, _)| *name == target)
+        .with_context(|| format!("bench document has no {target:?} table"))?;
+    let rows = table.req("rows")?.as_arr().context("rows is not an array")?;
+    let mut cols = Vec::new();
+    for (c, want) in matchers {
+        let idx = header_index(table, c)
+            .with_context(|| format!("{target:?} table has no column {c:?}"))?;
+        cols.push((idx, *want));
+    }
+    Ok(rows
+        .iter()
+        .filter_map(|r| r.as_arr())
+        .filter(|r| {
+            cols.iter()
+                .all(|(i, want)| r.get(*i).and_then(|c| c.as_str()) == Some(*want))
+        })
+        .collect())
+}
+
+/// Read one metric out of a bench document; `ERR`/`-` cells and missing
+/// rows fail loudly (a gate that silently skips is no gate).
+fn metric_value(doc: &Json, spec: &MetricSpec) -> Result<f64> {
+    let rows = matching_rows(doc, spec.target, spec.matchers)?;
+    let row = match rows.as_slice() {
+        [] => bail!("{}: no row matches {:?}", spec.key, spec.matchers),
+        [r] => *r,
+        more => bail!("{}: {} rows match {:?}", spec.key, more.len(), spec.matchers),
+    };
+    let (_, table) = tables(doc)
+        .into_iter()
+        .find(|(name, _)| *name == spec.target)
+        .unwrap();
+    let idx = header_index(table, spec.column)
+        .with_context(|| format!("{}: no column {:?}", spec.key, spec.column))?;
+    let cell = row
+        .get(idx)
+        .and_then(|c| c.as_str())
+        .with_context(|| format!("{}: row too short for column {:?}", spec.key, spec.column))?;
+    cell.parse::<f64>()
+        .with_context(|| format!("{}: cell {cell:?} is not a number", spec.key))
+}
+
+/// Gate every metric in `METRICS` against the baseline document.  An
+/// unseeded baseline (`"seeded": false` or an empty/missing metrics
+/// map) yields no failures; a seeded baseline gates one-sided with each
+/// spec's relative tolerance.
+pub fn evaluate(bench: &Json, baseline: &Json) -> Vec<GateResult> {
+    let seeded = baseline.get("seeded").and_then(|s| s.as_bool()).unwrap_or(false);
+    let base_metrics = baseline.get("metrics").and_then(|m| m.as_obj());
+    METRICS
+        .iter()
+        .map(|spec| {
+            let current = metric_value(bench, spec);
+            let base = base_metrics.and_then(|m| m.get(spec.key)).and_then(|v| v.as_f64());
+            let failure = match (&current, base, seeded) {
+                (Err(e), _, _) => Some(format!("unreadable: {e:#}")),
+                (_, None, true) => Some("missing from seeded baseline".to_string()),
+                (_, _, false) => None,
+                (Ok(cur), Some(b), true) => {
+                    let (bound, breached) = if spec.higher_is_better {
+                        let bound = b * (1.0 - spec.tol_rel);
+                        (bound, *cur < bound)
+                    } else {
+                        let bound = b * (1.0 + spec.tol_rel);
+                        (bound, *cur > bound)
+                    };
+                    breached.then(|| {
+                        format!(
+                            "REGRESSION: current {cur:.6} vs baseline {b:.6} \
+                             (bound {bound:.6}, {} is better)",
+                            if spec.higher_is_better { "higher" } else { "lower" },
+                        )
+                    })
+                }
+            };
+            GateResult { key: spec.key, current: current.ok(), baseline: base, failure }
+        })
+        .collect()
+}
+
+/// Render a seeded baseline document from the bench document's current
+/// metric values (the `--update` path).  Unreadable metrics abort: a
+/// baseline must cover every gated metric.
+pub fn baseline_from(bench: &Json) -> Result<Json> {
+    let mut metrics = std::collections::BTreeMap::new();
+    for spec in METRICS {
+        let v = metric_value(bench, spec)?;
+        metrics.insert(spec.key.to_string(), Json::Num(v));
+    }
+    let mut doc = std::collections::BTreeMap::new();
+    doc.insert("schema".to_string(), Json::Str(SCHEMA.to_string()));
+    doc.insert("seeded".to_string(), Json::Bool(true));
+    doc.insert("metrics".to_string(), Json::Obj(metrics));
+    Ok(Json::Obj(doc))
+}
+
+/// The bench document's top decode attribution buckets (from the
+/// `attr` target), for naming the suspect when the gate fails.
+fn top_decode_attr(bench: &Json, n: usize) -> Vec<(String, String, String)> {
+    let rows = match matching_rows(bench, "attr", &[("scope", "decode")]) {
+        Ok(r) => r,
+        Err(_) => return Vec::new(),
+    };
+    let mut parsed: Vec<(String, f64, String, String)> = rows
+        .iter()
+        .filter_map(|r| {
+            let bucket = r.get(1)?.as_str()?.to_string();
+            let s_cell = r.get(2)?.as_str()?.to_string();
+            let frac = r.get(3)?.as_str()?.to_string();
+            let s = s_cell.parse::<f64>().ok()?;
+            Some((bucket, s, s_cell, frac))
+        })
+        .filter(|(_, s, _, _)| *s > 0.0)
+        .collect();
+    parsed.sort_by(|a, b| b.1.total_cmp(&a.1));
+    parsed.truncate(n);
+    parsed.into_iter().map(|(b, _, s, f)| (b, s, f)).collect()
+}
+
+fn load(path: &str) -> Result<Json> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    Json::parse(&text).map_err(|e| anyhow::anyhow!("parsing {path}: {e}"))
+}
+
+/// `instinfer bench gate [--bench FILE] [--baseline FILE] [--update]`.
+pub fn gate_cmd(args: &[String]) -> Result<()> {
+    let mut bench_path = DEFAULT_BENCH.to_string();
+    let mut baseline_path = DEFAULT_BASELINE.to_string();
+    let mut update = false;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--bench" => {
+                bench_path = args.get(i + 1).context("--bench needs a file path")?.clone();
+                i += 2;
+            }
+            "--baseline" => {
+                baseline_path =
+                    args.get(i + 1).context("--baseline needs a file path")?.clone();
+                i += 2;
+            }
+            "--update" => {
+                update = true;
+                i += 1;
+            }
+            other => bail!("unexpected bench gate argument {other:?}"),
+        }
+    }
+    let bench = load(&bench_path)?;
+    if update {
+        let doc = baseline_from(&bench)?;
+        std::fs::write(&baseline_path, format!("{doc}\n"))
+            .with_context(|| format!("writing {baseline_path}"))?;
+        println!("gate: seeded {baseline_path} from {bench_path} ({} metrics)", METRICS.len());
+        return Ok(());
+    }
+    let baseline = load(&baseline_path).with_context(|| {
+        format!("no baseline at {baseline_path}; run `bench gate --update` to seed one")
+    })?;
+    if let Some(s) = baseline.get("schema").and_then(|s| s.as_str()) {
+        if s != SCHEMA {
+            bail!("baseline {baseline_path} has schema {s:?}, expected {SCHEMA:?}");
+        }
+    }
+    let seeded = baseline.get("seeded").and_then(|s| s.as_bool()).unwrap_or(false);
+    let results = evaluate(&bench, &baseline);
+    let mut failures = 0usize;
+    for r in &results {
+        let cur = r.current.map(|v| format!("{v:.6}")).unwrap_or_else(|| "?".into());
+        let base = r.baseline.map(|v| format!("{v:.6}")).unwrap_or_else(|| "-".into());
+        match &r.failure {
+            Some(msg) => {
+                failures += 1;
+                println!("gate: FAIL {} current={cur} baseline={base}: {msg}", r.key);
+            }
+            None => println!("gate: ok   {} current={cur} baseline={base}", r.key),
+        }
+    }
+    if !seeded {
+        println!(
+            "gate: baseline {baseline_path} is unseeded; reporting only.  Seed it with \
+             `instinfer bench all --json {bench_path} && instinfer bench gate --update` \
+             and commit the result."
+        );
+    }
+    if failures > 0 {
+        let top = top_decode_attr(&bench, 5);
+        if !top.is_empty() {
+            println!("gate: top decode attribution buckets (suspects):");
+            for (bucket, s, frac) in &top {
+                println!("gate:   {bucket:<16} {s}s  ({frac} of decode)");
+            }
+        }
+        bail!("{failures}/{} gated metrics regressed past tolerance", results.len());
+    }
+    println!("gate: {} metrics within tolerance", results.len());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A minimal synthetic trajectory document covering every gated
+    /// metric plus an attr table (for the failure report).
+    fn bench_doc() -> Json {
+        Json::parse(
+            r#"{
+              "schema": "instinfer-bench-trajectory/v1",
+              "targets": [
+                {"target": "serve",
+                 "header": ["rate_req_s","mode","tput_tok_s","p95_ttft_s"],
+                 "rows": [["100","continuous","5000","0.020"],
+                          ["100","offline","4000","0.050"]]},
+                {"target": "overlap",
+                 "header": ["csds","prefill_chunk","rate_req_s","mode","decode_step_ms","step_speedup"],
+                 "rows": [["2","4","400","serialized","2.0","1.0"],
+                          ["2","4","400","overlapped","1.0","2.0"]]},
+                {"target": "shard",
+                 "header": ["policy","csds","attn_speedup"],
+                 "rows": [["stripe","4","3.5"]]},
+                {"target": "prefix",
+                 "header": ["share_ratio","hit_rate","mode","ttft_save"],
+                 "rows": [["0.5","1","warm","0.400"]]},
+                {"target": "flashpath",
+                 "header": ["dies","path","dense_speedup"],
+                 "rows": [["4","die/interleave/pipe","4.2"]]},
+                {"target": "attr",
+                 "header": ["scope","bucket","s","frac","pred_frac","rel_err"],
+                 "rows": [["decode","flash_read","0.030","0.700","-","-"],
+                          ["decode","csd_compute","0.010","0.230","-","-"]]}
+              ]
+            }"#,
+        )
+        .unwrap()
+    }
+
+    fn baseline_with(doctor: &[(&str, f64)]) -> Json {
+        let bench = bench_doc();
+        let mut doc = baseline_from(&bench).unwrap();
+        if let Json::Obj(m) = &mut doc {
+            if let Some(Json::Obj(metrics)) = m.get_mut("metrics") {
+                for (k, v) in doctor {
+                    metrics.insert(k.to_string(), Json::Num(*v));
+                }
+            }
+        }
+        doc
+    }
+
+    #[test]
+    fn matching_baseline_passes() {
+        let bench = bench_doc();
+        let baseline = baseline_with(&[]);
+        let results = evaluate(&bench, &baseline);
+        assert_eq!(results.len(), METRICS.len());
+        assert!(results.iter().all(|r| r.failure.is_none()));
+    }
+
+    #[test]
+    fn doctored_baseline_fails_both_directions() {
+        let bench = bench_doc();
+        // doctor the baseline past tolerance: claim twice the current
+        // throughput (higher-better) and half the current p95 TTFT
+        // (lower-better) — both must read as regressions of the run
+        let baseline = baseline_with(&[
+            ("serve.continuous.rate100.tput_tok_s", 10000.0),
+            ("serve.continuous.rate100.p95_ttft_s", 0.010),
+        ]);
+        let results = evaluate(&bench, &baseline);
+        let failed: Vec<&str> =
+            results.iter().filter(|r| r.failure.is_some()).map(|r| r.key).collect();
+        assert_eq!(
+            failed,
+            vec![
+                "serve.continuous.rate100.p95_ttft_s",
+                "serve.continuous.rate100.tput_tok_s",
+            ],
+        );
+    }
+
+    #[test]
+    fn within_tolerance_drift_passes() {
+        let bench = bench_doc();
+        // 3% better baseline: inside the 5% one-sided tolerance
+        let baseline = baseline_with(&[("serve.continuous.rate100.tput_tok_s", 5150.0)]);
+        let results = evaluate(&bench, &baseline);
+        assert!(results.iter().all(|r| r.failure.is_none()));
+    }
+
+    #[test]
+    fn unseeded_baseline_reports_without_failing() {
+        let bench = bench_doc();
+        let baseline = Json::parse(
+            r#"{"schema":"instinfer-bench-gate-baseline/v1","seeded":false,"metrics":{}}"#,
+        )
+        .unwrap();
+        let results = evaluate(&bench, &baseline);
+        assert!(results.iter().all(|r| r.failure.is_none()));
+        assert!(results.iter().all(|r| r.current.is_some()));
+    }
+
+    #[test]
+    fn missing_metric_fails_loudly() {
+        // drop the flashpath table entirely: the gate must flag the
+        // metric as unreadable, not skip it
+        let mut bench = bench_doc();
+        if let Json::Obj(m) = &mut bench {
+            if let Some(Json::Arr(targets)) = m.get_mut("targets") {
+                targets.retain(|t| t.get("target").and_then(|n| n.as_str()) != Some("flashpath"));
+            }
+        }
+        let baseline = baseline_with(&[]);
+        // baseline_from over the doctored doc would fail; reuse the full
+        // one so only the bench side is missing the table
+        let results = evaluate(&bench, &baseline);
+        let bad: Vec<&str> =
+            results.iter().filter(|r| r.failure.is_some()).map(|r| r.key).collect();
+        assert_eq!(bad, vec!["flashpath.dies4.tuned.dense_speedup"]);
+    }
+
+    #[test]
+    fn attr_suspects_ranked() {
+        let top = top_decode_attr(&bench_doc(), 5);
+        assert_eq!(top[0].0, "flash_read");
+        assert_eq!(top.len(), 2);
+    }
+}

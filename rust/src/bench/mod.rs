@@ -4,8 +4,10 @@
 //! the rendered table for logging.
 
 pub mod accuracy;
+pub mod attr;
 pub mod figures;
 pub mod flashpath;
+pub mod gate;
 pub mod overlap;
 pub mod prefix;
 pub mod serve;
@@ -18,7 +20,7 @@ use crate::util::table::Table;
 /// that CI stitches across runs (run-numbered artifacts) to track the
 /// system's performance trajectory.
 pub const TRAJECTORY: &[&str] =
-    &["fig16", "tier", "shard", "serve", "overlap", "flashpath", "prefix"];
+    &["fig16", "tier", "shard", "serve", "overlap", "flashpath", "prefix", "attr"];
 
 /// All paper targets in order; returns rendered tables.
 pub fn run_all() -> Vec<String> {
@@ -60,6 +62,7 @@ pub fn registry() -> Vec<(&'static str, BenchFn)> {
         ("overlap", overlap::overlap),
         ("flashpath", flashpath::flashpath),
         ("prefix", prefix::prefix),
+        ("attr", attr::attr),
         ("ablate-group", figures::ablate_group),
         ("ablate-dualk", figures::ablate_dualk),
         ("ablate-pipeline", figures::ablate_pipeline),

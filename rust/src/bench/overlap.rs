@@ -82,6 +82,17 @@ pub fn run_config(
     })
 }
 
+/// `bench overlap --trace`: run the designated sweep point (2 CSDs,
+/// chunk 4, 400 req/s, overlapped) with the trace plane installed and
+/// return the drained sink.
+pub fn traced(level: crate::obs::TraceLevel) -> anyhow::Result<crate::obs::TraceSink> {
+    crate::obs::install(level);
+    let run = run_config(2, 4, 400.0, true);
+    let sink = crate::obs::uninstall();
+    run?;
+    sink.ok_or_else(|| anyhow::anyhow!("trace sink was not installed"))
+}
+
 /// The serialized/overlapped pair for one config (test hook).
 pub fn run_pair(
     n_csds: usize,

@@ -89,6 +89,17 @@ pub fn run_config(share_ratio: f64, hit_rate: f64, prefix_on: bool) -> anyhow::R
     })
 }
 
+/// `bench prefix --trace`: run the designated sweep point (share 0.5,
+/// hit rate 1.0, cache on) with the trace plane installed and return the
+/// drained sink.
+pub fn traced(level: crate::obs::TraceLevel) -> anyhow::Result<crate::obs::TraceSink> {
+    crate::obs::install(level);
+    let run = run_config(0.5, 1.0, true);
+    let sink = crate::obs::uninstall();
+    run?;
+    sink.ok_or_else(|| anyhow::anyhow!("trace sink was not installed"))
+}
+
 /// The cold/warm pair for one config (test hook).
 pub fn run_pair(share_ratio: f64, hit_rate: f64) -> anyhow::Result<(PrefixRun, PrefixRun)> {
     Ok((

@@ -28,6 +28,7 @@ struct ServeRun {
     p50_latency_s: f64,
     p95_latency_s: f64,
     p50_ttft_s: f64,
+    p95_ttft_s: f64,
     mean_occupancy: f64,
     die_busy_s: f64,
     die_peak_q: usize,
@@ -55,7 +56,7 @@ fn run_continuous(rate: f64) -> anyhow::Result<ServeRun> {
     let arr = arrivals(&engine, rate);
     let report = run_open_loop(&mut engine, arr, sched())?;
     let [p50, p95, _] = report.latency_percentiles().unwrap_or([0.0; 3]);
-    let [t50, _, _] = report.ttft_percentiles().unwrap_or([0.0; 3]);
+    let [t50, t95, _] = report.ttft_percentiles().unwrap_or([0.0; 3]);
     // occupancy and flash utilisation read through the unified registry
     // so the bench rows embed the same snapshot `--metrics-json` dumps
     let reg = engine.metrics_registry(&report.overlap);
@@ -64,6 +65,7 @@ fn run_continuous(rate: f64) -> anyhow::Result<ServeRun> {
         p50_latency_s: p50,
         p95_latency_s: p95,
         p50_ttft_s: t50,
+        p95_ttft_s: t95,
         mean_occupancy: reg.value("engine.step_occupancy").unwrap_or(0.0),
         die_busy_s: reg.value("flash.die_busy_s").unwrap_or(0.0),
         die_peak_q: reg.value("flash.die_peak_depth").unwrap_or(0.0) as usize,
@@ -108,6 +110,7 @@ fn run_offline(rate: f64) -> anyhow::Result<ServeRun> {
         p50_latency_s: percentile(&mut lats, 50.0),
         p95_latency_s: percentile(&mut lats, 95.0),
         p50_ttft_s: percentile(&mut ttfts, 50.0),
+        p95_ttft_s: percentile(&mut ttfts, 95.0),
         mean_occupancy: reg.value("engine.step_occupancy").unwrap_or(0.0),
         die_busy_s: reg.value("flash.die_busy_s").unwrap_or(0.0),
         die_peak_q: reg.value("flash.die_peak_depth").unwrap_or(0.0) as usize,
@@ -120,6 +123,7 @@ fn err_row(t: &mut Table, rate: f64, mode: &str, e: &anyhow::Error) {
         mode.into(),
         "ERR".into(),
         format!("{e:#}"),
+        "-".into(),
         "-".into(),
         "-".into(),
         "-".into(),
@@ -138,6 +142,7 @@ pub fn serve() -> Table {
             "p50_latency_s",
             "p95_latency_s",
             "p50_ttft_s",
+            "p95_ttft_s",
             "mean_occupancy",
             "die_busy_ms",
             "peak_die_q",
@@ -151,6 +156,7 @@ pub fn serve() -> Table {
             eng(r.p50_latency_s),
             eng(r.p95_latency_s),
             eng(r.p50_ttft_s),
+            eng(r.p95_ttft_s),
             eng(r.mean_occupancy),
             eng(r.die_busy_s * 1e3),
             r.die_peak_q.to_string(),

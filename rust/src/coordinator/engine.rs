@@ -200,6 +200,16 @@ impl InferenceEngine {
             }
         }
         let t0 = Instant::now();
+        // causal edge: each request's track to the prefill stream that
+        // serves its cohort
+        for s in seqs.iter() {
+            crate::obs::flow(
+                "prefill_launch",
+                crate::obs::TraceLevel::Device,
+                (crate::obs::PID_REQUESTS, s.req.id, start),
+                (crate::obs::PID_STREAMS, 0, start),
+            );
+        }
 
         // ids (bucket, sp) padded with 0
         let mut ids = vec![0i32; bucket * sp];
@@ -222,6 +232,7 @@ impl InferenceEngine {
         if matches!(self.cfg.backend, AttnBackend::Csd(_)) {
             for s in seqs.iter() {
                 if s.prefix_hit > 0 {
+                    let _req = crate::obs::ReqScope::enter(s.req.id);
                     let t =
                         self.shards.attach_prefix(s.slot, &s.req.prompt, s.prefix_hit, start)?;
                     crate::obs::req_span(s.req.id, "prefix_attach", start, t);
@@ -337,6 +348,7 @@ impl InferenceEngine {
                 for (i, s) in seqs.iter().enumerate() {
                     let len = s.req.prompt.len();
                     let base = i * h * sp * dh;
+                    let _req = crate::obs::ReqScope::enter(s.req.id);
                     let t = self.shards.prefill_layer(
                         s.slot,
                         layer,
@@ -468,6 +480,7 @@ impl InferenceEngine {
         let vd = v.as_f32()?;
         let mut out = vec![0.0f32; bucket * h * dh];
         for (i, s) in seqs.iter().enumerate() {
+            let _req = crate::obs::ReqScope::enter(s.req.id);
             let (gathered, done, bd) = self.shards.decode_token(
                 s.slot,
                 layer,
@@ -652,6 +665,21 @@ impl InferenceEngine {
         let mut ledger = crate::sim::BusyLedger::default();
         for q in &self.shards.queues {
             ledger.merge(&q.csd.ledger);
+        }
+        // pre-seed every ledger component name at zero: `rows()` only
+        // reports components that accrued time, which would make the
+        // snapshot's name set config-dependent and break downstream
+        // diffing/gating
+        for name in [
+            "argtopk",
+            "dram_hit",
+            "flash_chan_busy",
+            "flash_die_busy",
+            "flash_read",
+            "kernel",
+            "nfc_filter",
+        ] {
+            r.gauge(&format!("ledger.{name}_s"), 0.0);
         }
         for (name, secs, _frac) in ledger.rows() {
             r.gauge(&format!("ledger.{name}_s"), secs);

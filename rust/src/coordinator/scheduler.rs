@@ -34,6 +34,7 @@ use crate::coordinator::engine::{AttnBackend, InferenceEngine};
 use crate::coordinator::kvmgr::SlotManager;
 use crate::coordinator::metrics::EngineMetrics;
 use crate::coordinator::request::{RequestPhase, Sequence};
+use crate::obs::attr;
 use crate::pipeline::{OverlapStats, PipelineState};
 use crate::sim::Time;
 use crate::util::stats::percentile;
@@ -227,6 +228,7 @@ impl Scheduler {
             },
         );
         crate::obs::req_instant(a.req.id, "arrive", a.at);
+        attr::mark(a.req.id, attr::MarkKind::Arrive, a.at);
         self.queue.push(a);
         Ok(())
     }
@@ -350,7 +352,15 @@ impl Scheduler {
             for s in &cohort {
                 crate::obs::req_instant(s.req.id, "admit", now);
                 crate::obs::req_span(s.req.id, "prefill", now, first_token_at);
+                attr::mark(s.req.id, attr::MarkKind::Admit, now);
+                attr::frame(s.req.id, attr::FrameKind::Prefill, now, first_token_at);
                 if let Some(m) = self.meta.get_mut(&s.req.id) {
+                    crate::obs::flow(
+                        "admit",
+                        crate::obs::TraceLevel::Request,
+                        (crate::obs::PID_REQUESTS, s.req.id, m.arrived_at),
+                        (crate::obs::PID_REQUESTS, s.req.id, now),
+                    );
                     m.admitted_at = now;
                     m.first_token_at = first_token_at;
                 }
@@ -372,6 +382,11 @@ impl Scheduler {
             if crate::obs::enabled() {
                 for s in &self.running {
                     crate::obs::req_span(s.req.id, "decode_step", d0, engine.sim_now);
+                }
+            }
+            if attr::enabled() {
+                for s in &self.running {
+                    attr::frame(s.req.id, attr::FrameKind::Decode, d0, engine.sim_now);
                 }
             }
         }
@@ -444,6 +459,11 @@ impl Scheduler {
                     crate::obs::req_span(s.req.id, "decode_step", d0, engine.sim_now);
                 }
             }
+            if attr::enabled() {
+                for s in &self.running {
+                    attr::frame(s.req.id, attr::FrameKind::Decode, d0, engine.sim_now);
+                }
+            }
             Some((d0, engine.sim_now))
         };
         rep.occupancy = self.running.len();
@@ -459,7 +479,15 @@ impl Scheduler {
             for s in &cohort {
                 crate::obs::req_instant(s.req.id, "admit", now);
                 crate::obs::req_span(s.req.id, "prefill", start, ready);
+                attr::mark(s.req.id, attr::MarkKind::Admit, now);
+                attr::frame(s.req.id, attr::FrameKind::Prefill, start, ready);
                 if let Some(m) = self.meta.get_mut(&s.req.id) {
+                    crate::obs::flow(
+                        "admit",
+                        crate::obs::TraceLevel::Request,
+                        (crate::obs::PID_REQUESTS, s.req.id, m.arrived_at),
+                        (crate::obs::PID_REQUESTS, s.req.id, now),
+                    );
                     // TTFT is pinned to the prefill STREAM's completion,
                     // not to the end of the decode step that later
                     // absorbs the cohort
@@ -555,6 +583,7 @@ impl Scheduler {
                 engine.metrics.preemptions += 1;
                 rep.preempted += 1;
                 crate::obs::req_instant(victim.req.id, "preempt", now);
+                attr::mark(victim.req.id, attr::MarkKind::Preempt, now);
                 self.suspended.push(victim);
             }
             match cand {
@@ -568,6 +597,7 @@ impl Scheduler {
                     engine.metrics.resumes += 1;
                     rep.resumed += 1;
                     crate::obs::req_instant(s.req.id, "resume", now);
+                    attr::mark(s.req.id, attr::MarkKind::Resume, now);
                     self.running.push(s);
                 }
                 Cand::Admit(i) => {
@@ -696,6 +726,7 @@ impl Scheduler {
             engine.metrics.requests_done += 1;
             engine.metrics.retirements += 1;
             crate::obs::req_instant(s.req.id, "retire", engine.sim_now);
+            attr::mark(s.req.id, attr::MarkKind::Retire, engine.sim_now);
             let m = self.meta.remove(&s.req.id).unwrap_or_else(|| ReqMeta {
                 priority: 0,
                 arrived_at: 0.0,

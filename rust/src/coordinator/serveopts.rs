@@ -238,6 +238,15 @@ pub const SERVE_FLAGS: &[FlagSpec] = &[
         help: "dump the unified metrics registry (engine/ledger/shard/\
                overlap/flash) as one deterministic JSON snapshot",
     },
+    FlagSpec {
+        name: "--attr-json",
+        alias: None,
+        value: Some("FILE"),
+        default: "",
+        help: "dump per-request critical-path latency attribution \
+               (instinfer-attr/v1: exclusive buckets summing to wall \
+               time, split e2e/TTFT/decode); observational only",
+    },
 ];
 
 fn default_of(name: &str) -> &'static str {
@@ -293,6 +302,8 @@ pub struct ServeOpts {
     pub trace_level: TraceLevel,
     /// unified metrics snapshot output path (None = no dump)
     pub metrics_json: Option<String>,
+    /// latency-attribution report output path (None = attribution off)
+    pub attr_json: Option<String>,
 }
 
 impl Default for ServeOpts {
@@ -391,6 +402,7 @@ impl ServeOpts {
         let trace = get("--trace").filter(|v| !v.is_empty()).map(String::from);
         let trace_level = TraceLevel::parse(val("--trace-level"))?;
         let metrics_json = get("--metrics-json").filter(|v| !v.is_empty()).map(String::from);
+        let attr_json = get("--attr-json").filter(|v| !v.is_empty()).map(String::from);
 
         Ok(ServeOpts {
             requests,
@@ -416,6 +428,7 @@ impl ServeOpts {
             trace,
             trace_level,
             metrics_json,
+            attr_json,
         })
     }
 
@@ -555,17 +568,20 @@ mod tests {
         assert_eq!(o.trace, None);
         assert_eq!(o.trace_level, TraceLevel::Device);
         assert_eq!(o.metrics_json, None);
+        assert_eq!(o.attr_json, None);
     }
 
     #[test]
     fn trace_flags_parse_and_validate() {
         let o = ServeOpts::parse(&sv(&[
             "--trace", "out.json", "--trace-level", "full", "--metrics-json", "m.json",
+            "--attr-json", "a.json",
         ]))
         .unwrap();
         assert_eq!(o.trace.as_deref(), Some("out.json"));
         assert_eq!(o.trace_level, TraceLevel::Full);
         assert_eq!(o.metrics_json.as_deref(), Some("m.json"));
+        assert_eq!(o.attr_json.as_deref(), Some("a.json"));
         assert!(ServeOpts::parse(&sv(&["--trace-level", "verbose"])).is_err());
     }
 

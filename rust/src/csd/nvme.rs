@@ -8,6 +8,7 @@
 
 use super::engine::{AttnMode, InstCsd, UnitBreakdown};
 use crate::config::hw::PcieSpec;
+use crate::obs::attr;
 use crate::sim::{FifoResource, Time};
 use anyhow::Result;
 
@@ -115,6 +116,10 @@ impl NvmeQueue {
         self.submitted += 1;
         let _scope = crate::obs::DeviceScope::enter(self.dev);
         let cmd_name = cmd.name();
+        let is_write = matches!(
+            cmd,
+            CsdCommand::WriteToken { .. } | CsdCommand::WritePrefillLayer { .. }
+        );
         let (d0, dispatched) = self.sq.schedule(at, self.cmd_latency);
         let comp: Result<CsdCompletion> = match cmd {
             CsdCommand::WriteToken { slot, layer, heads, k, v } => {
@@ -209,6 +214,34 @@ impl NvmeQueue {
         };
         let comp = comp?;
         crate::obs::device_span(self.dev, cmd_name, d0, comp.done);
+        // attribution: charge this command's wall window to the ambient
+        // request.  The flash/GC accumulators are drained per command
+        // regardless, so no busy time ever leaks into a later command.
+        let (fifo_wait, fifo_svc) = attr::drain_flash();
+        let gc = attr::drain_gc();
+        if let Some(req) = crate::obs::cur_req() {
+            crate::obs::cmd_flow(req, at, self.dev, d0);
+        }
+        attr::seg(attr::Bucket::NvmeCmd, at, dispatched, dispatched - at);
+        if let Some(bd) = &comp.breakdown {
+            // attention: split the device window into data-fetch wall
+            // (flash tR/transfer + DRAM-tier hits), the share of it spent
+            // queued behind other reads (FIFO conflicts), in-storage
+            // compute, and GC interference
+            let fetch_wall = bd.flash_read + bd.dram_hit;
+            let denom = fifo_wait + fifo_svc;
+            let conflict = if denom > 0.0 { fetch_wall * fifo_wait / denom } else { 0.0 };
+            attr::seg(attr::Bucket::FlashConflict, dispatched, comp.done, conflict);
+            attr::seg(attr::Bucket::FlashRead, dispatched, comp.done, fetch_wall - conflict);
+            let compute =
+                bd.argtopk + bd.nfc_filter + bd.logit0 + bd.logit + bd.attend + bd.writeback;
+            attr::seg(attr::Bucket::CsdCompute, dispatched, comp.done, compute);
+            attr::seg(attr::Bucket::Gc, dispatched, comp.done, gc);
+        } else if is_write {
+            let svc = comp.done - dispatched;
+            attr::seg(attr::Bucket::Gc, dispatched, comp.done, gc);
+            attr::seg(attr::Bucket::KvShip, dispatched, comp.done, (svc - gc).max(0.0));
+        }
         Ok(comp)
     }
 }

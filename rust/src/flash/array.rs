@@ -141,6 +141,13 @@ impl FlashArray {
         let (c0, done) = self.channels[ch].schedule(unit_done, xfer);
         crate::obs::flash_unit_span(unit, "read", u0, unit_done);
         crate::obs::flash_channel_span(ch, "read_xfer", c0, done);
+        crate::obs::flash_read_flow(unit, unit_done, ch, c0);
+        // FIFO wait vs service split for the attribution plane (values
+        // already computed by the schedulers — purely observational)
+        crate::obs::attr::flash_read_busy(
+            (u0 - at) + (c0 - unit_done),
+            (unit_done - u0) + (done - c0),
+        );
         self.counters.page_reads += 1;
         self.counters.bytes_read += self.spec.page_bytes as u64;
         Ok((self.data[ppa.0].as_deref().unwrap(), done))

@@ -367,6 +367,7 @@ impl KvFtl {
         }
         let te = self.array.erase(victim, t)?;
         crate::obs::ftl_gc(self.counters.gc_relocations, te);
+        crate::obs::attr::gc_busy(te - at);
         self.block_valid[victim.0] = 0;
         // the victim may still sit in an open slot (a full block lingers
         // there until the unit's next program) — clear it so the erased

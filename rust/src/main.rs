@@ -44,10 +44,15 @@ fn usage() -> ! {
          \x20 bench <target|all> [--json FILE]   regenerate paper figures\n\
          \x20       (fig4 fig5 fig6 fig11 fig12 fig13 fig14 fig15 fig16\n\
          \x20       fig17a fig17b table1 tier shard serve overlap flashpath\n\
-         \x20       prefix ablate-group ablate-dualk ablate-pipeline\n\
+         \x20       prefix attr ablate-group ablate-dualk ablate-pipeline\n\
          \x20       ablate-p2p ablate-placement);\n\
          \x20       `bench all --json` emits one stitched trajectory document\n\
-         \x20       (schema instinfer-bench-trajectory/v1, run-numbered in CI)\n\
+         \x20       (schema instinfer-bench-trajectory/v1, run-numbered in CI);\n\
+         \x20       overlap|prefix|flashpath accept --trace FILE\n\
+         \x20       [--trace-level L] to dump one sweep point's timeline\n\
+         \x20 bench gate [--bench FILE] [--baseline FILE] [--update]\n\
+         \x20       diff BENCH_all.json key metrics against the committed\n\
+         \x20       baseline (fails loudly on out-of-tolerance regressions)\n\
          \x20 golden [--artifacts DIR] [--tol T]\n\
          \x20 inspect [--artifacts DIR]",
         ServeOpts::usage_block()
@@ -127,6 +132,9 @@ fn serve(args: &[String]) -> Result<()> {
     if opts.trace.is_some() {
         instinfer::obs::install(opts.trace_level);
     }
+    if opts.attr_json.is_some() {
+        instinfer::obs::attr::install();
+    }
     let t0 = std::time::Instant::now();
     let report = match opts.arrival_rate {
         Some(rate) => {
@@ -161,6 +169,32 @@ fn serve(args: &[String]) -> Result<()> {
             );
             trace_digest = Some(digest);
         }
+    }
+
+    // drain the attribution sink next (also observational-only); the
+    // report is folded into the metrics snapshot further down
+    let mut attr_report: Option<instinfer::obs::attr::AttrReport> = None;
+    if let Some(path) = &opts.attr_json {
+        let sink = instinfer::obs::attr::uninstall().unwrap_or_default();
+        let rep = instinfer::obs::attr::extract(&sink);
+        std::fs::write(path, format!("{}\n", rep.to_json()))
+            .with_context(|| format!("writing {path}"))?;
+        println!(
+            "attr: {} requests, {:.4}s attributed wall time -> {path}",
+            rep.requests.len(),
+            rep.wall_total,
+        );
+        if rep.wall_total > 0.0 {
+            let ranked = instinfer::obs::attr::AttrReport::ranked(&rep.total);
+            let top: Vec<String> = ranked
+                .iter()
+                .filter(|(_, v)| *v > 0.0)
+                .take(5)
+                .map(|(l, v)| format!("{l} {:.1}%", 100.0 * v / rep.wall_total))
+                .collect();
+            println!("attr top buckets: {}", top.join(", "));
+        }
+        attr_report = Some(rep);
     }
 
     let mut records = report.records.clone();
@@ -286,7 +320,13 @@ fn serve(args: &[String]) -> Result<()> {
         );
     }
     if let Some(path) = &opts.metrics_json {
-        let reg = engine.metrics_registry(&report.overlap);
+        let mut reg = engine.metrics_registry(&report.overlap);
+        // fold an empty report when attribution is off so the snapshot
+        // name set does not depend on --attr-json
+        match &attr_report {
+            Some(rep) => rep.fold_into(&mut reg),
+            None => instinfer::obs::attr::AttrReport::default().fold_into(&mut reg),
+        }
         let mut doc = std::collections::BTreeMap::new();
         doc.insert("schema".to_string(), Json::Str("instinfer-metrics/v1".to_string()));
         doc.insert("metrics".to_string(), reg.to_json());
@@ -354,8 +394,13 @@ fn write_trajectory_json(path: &str, tables: &[(&str, Table)]) -> Result<()> {
 }
 
 fn bench_cmd(args: &[String]) -> Result<()> {
+    if args.first().map(|s| s.as_str()) == Some("gate") {
+        return bench::gate::gate_cmd(&args[1..]);
+    }
     let mut target: Option<&str> = None;
     let mut json_path: Option<&str> = None;
+    let mut trace_path: Option<&str> = None;
+    let mut trace_level = instinfer::obs::TraceLevel::Device;
     let mut i = 0;
     while i < args.len() {
         match args[i].as_str() {
@@ -366,12 +411,47 @@ fn bench_cmd(args: &[String]) -> Result<()> {
                 }
                 i += 2;
             }
+            "--trace" => {
+                trace_path = args.get(i + 1).map(|s| s.as_str());
+                if trace_path.is_none() {
+                    bail!("--trace needs a file path");
+                }
+                i += 2;
+            }
+            "--trace-level" => {
+                let Some(v) = args.get(i + 1) else {
+                    bail!("--trace-level needs a value");
+                };
+                trace_level = instinfer::obs::TraceLevel::parse(v)?;
+                i += 2;
+            }
             t if target.is_none() => {
                 target = Some(t);
                 i += 1;
             }
             other => bail!("unexpected bench argument {other:?}"),
         }
+    }
+    if let Some(path) = trace_path {
+        if json_path.is_some() {
+            bail!("--trace and --json are mutually exclusive for bench targets");
+        }
+        let sink = match target {
+            Some("overlap") => bench::overlap::traced(trace_level)?,
+            Some("prefix") => bench::prefix::traced(trace_level)?,
+            Some("flashpath") => bench::flashpath::traced(trace_level)?,
+            other => bail!(
+                "--trace supports bench overlap|prefix|flashpath (got {other:?})"
+            ),
+        };
+        std::fs::write(path, sink.export()).with_context(|| format!("writing {path}"))?;
+        println!(
+            "trace: {} events -> {path} (level {}, digest {})",
+            sink.len(),
+            sink.level.label(),
+            sink.digest_hex(),
+        );
+        return Ok(());
     }
     match target {
         None | Some("all") => {

@@ -1,0 +1,649 @@
+//! Critical-path latency attribution over the trace plane.
+//!
+//! Answers "where did this request's milliseconds go?" by partitioning
+//! each request's wall time `[arrive, retire]` into **exclusive** labeled
+//! intervals, so per-request attributed fractions sum to measured wall
+//! time *by construction* (pinned to 1e-6 relative in `tests/obs.rs`).
+//!
+//! Like the trace plane, the attr plane is strictly observational: hooks
+//! record `(start, end)` values the simulation already computed and
+//! never schedule, so enabling attribution leaves outputs AND simulated
+//! timestamps bit-identical.  Hooks are cheap no-ops when no [`AttrSink`]
+//! is installed.
+//!
+//! The model: the scheduler marks request lifecycle points
+//! ([`MarkKind`]) and brackets every scheduling occupancy into *frames*
+//! ([`FrameKind`]: one per prefill launch, one per decode step).  Device
+//! hooks deep in the call stack (NVMe, flash array, FTL GC, PCIe, shard
+//! merge) record weighted *segments* against the ambient request
+//! (`obs::cur_req`).  The extractor then walks each request's timeline:
+//!
+//! * time between frames is classified by context — [`Bucket::Queue`]
+//!   before the first frame, [`Bucket::PreemptWait`] when a preempt mark
+//!   falls inside the gap, [`Bucket::Park`] between prefill completion
+//!   and the first decode step (pipeline park), [`Bucket::AdmitStall`]
+//!   otherwise;
+//! * time inside a frame is split across the segment buckets recorded in
+//!   it, rescaled so they tile exactly the span the request's own work
+//!   covers; the remainder of the frame — time the request sat waiting
+//!   on cohort peers — is [`Bucket::BatchWait`].
+//!
+//! TTFT attribution is the prefix of the partition ending at the first
+//! prefill frame's end; decode attribution is the rest.
+
+use std::cell::{Cell, RefCell};
+use std::collections::BTreeMap;
+
+use crate::sim::Time;
+use crate::util::json::Json;
+
+use super::MetricsRegistry;
+
+// ---------------------------------------------------------------------------
+// Buckets
+// ---------------------------------------------------------------------------
+
+/// Exclusive latency components.  Every second of a request's wall time
+/// lands in exactly one bucket.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Bucket {
+    /// waiting in the arrival queue before first admission
+    Queue,
+    /// admitted but stalled between frames (batch formation, seat wait)
+    AdmitStall,
+    /// evicted by the scheduler, waiting to resume
+    PreemptWait,
+    /// prefill done, parked in the pipeline awaiting the decode stream
+    Park,
+    /// GPU prefill compute
+    PrefillCompute,
+    /// shipping prefill KV to the flash tier (background PCIe)
+    KvShip,
+    /// NVMe submission-queue wait + command overhead
+    NvmeCmd,
+    /// flash die tR + channel transfer (the paper's headline bucket)
+    FlashRead,
+    /// die/channel FIFO conflict wait (queueing behind other reads)
+    FlashConflict,
+    /// FTL garbage-collection interference
+    Gc,
+    /// in-storage compute: argtopk, NFC filter, logits, attend, writeback
+    CsdCompute,
+    /// foreground PCIe all-reduce transfer
+    PcieXfer,
+    /// PCIe ingress-contention delay (background traffic in the way)
+    PcieContend,
+    /// GPU-side shard merge
+    GpuMerge,
+    /// in-frame wait on cohort peers (batch straggler time)
+    BatchWait,
+}
+
+/// All buckets, in stable report order.
+pub const BUCKETS: [Bucket; 15] = [
+    Bucket::Queue,
+    Bucket::AdmitStall,
+    Bucket::PreemptWait,
+    Bucket::Park,
+    Bucket::PrefillCompute,
+    Bucket::KvShip,
+    Bucket::NvmeCmd,
+    Bucket::FlashRead,
+    Bucket::FlashConflict,
+    Bucket::Gc,
+    Bucket::CsdCompute,
+    Bucket::PcieXfer,
+    Bucket::PcieContend,
+    Bucket::GpuMerge,
+    Bucket::BatchWait,
+];
+
+pub const NBUCKETS: usize = BUCKETS.len();
+
+impl Bucket {
+    pub fn index(self) -> usize {
+        BUCKETS.iter().position(|&b| b == self).unwrap()
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Bucket::Queue => "queue",
+            Bucket::AdmitStall => "admit_stall",
+            Bucket::PreemptWait => "preempt_wait",
+            Bucket::Park => "park",
+            Bucket::PrefillCompute => "prefill_compute",
+            Bucket::KvShip => "kv_ship",
+            Bucket::NvmeCmd => "nvme_cmd",
+            Bucket::FlashRead => "flash_read",
+            Bucket::FlashConflict => "flash_conflict",
+            Bucket::Gc => "gc",
+            Bucket::CsdCompute => "csd_compute",
+            Bucket::PcieXfer => "pcie_xfer",
+            Bucket::PcieContend => "pcie_contend",
+            Bucket::GpuMerge => "gpu_merge",
+            Bucket::BatchWait => "batch_wait",
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Raw recording
+// ---------------------------------------------------------------------------
+
+/// Request-lifecycle points the scheduler marks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MarkKind {
+    Arrive,
+    Admit,
+    Preempt,
+    Resume,
+    Retire,
+}
+
+/// Scheduling occupancy kinds the scheduler brackets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameKind {
+    Prefill,
+    Decode,
+}
+
+/// One weighted component segment: `w` seconds of `bucket` anchored on
+/// the wall interval `[t0, t1]` (the weight may differ from `t1 - t0`
+/// when components overlap inside a device span — the extractor rescales
+/// weights to tile the frame exactly).
+#[derive(Debug, Clone, Copy)]
+pub struct Seg {
+    pub req: u64,
+    pub bucket: Bucket,
+    pub t0: Time,
+    pub t1: Time,
+    pub w: f64,
+}
+
+/// Raw attribution recording: lifecycle marks, scheduling frames, and
+/// weighted component segments, in emission order.
+#[derive(Debug, Default)]
+pub struct AttrSink {
+    pub marks: Vec<(u64, MarkKind, Time)>,
+    pub frames: Vec<(u64, FrameKind, Time, Time)>,
+    pub segs: Vec<Seg>,
+}
+
+thread_local! {
+    static ATTR: RefCell<Option<AttrSink>> = const { RefCell::new(None) };
+    /// (conflict_wait_s, service_s) accumulated by flash-array reads
+    /// since the last NVMe-command drain.
+    static PEND_FLASH: Cell<(f64, f64)> = const { Cell::new((0.0, 0.0)) };
+    /// GC stall seconds accumulated by the FTL since the last drain.
+    static PEND_GC: Cell<f64> = const { Cell::new(0.0) };
+}
+
+/// Install a fresh attribution sink on this thread.
+pub fn install() {
+    ATTR.with(|s| *s.borrow_mut() = Some(AttrSink::default()));
+    PEND_FLASH.with(|c| c.set((0.0, 0.0)));
+    PEND_GC.with(|c| c.set(0.0));
+}
+
+/// Remove and return the thread's attribution sink.
+pub fn uninstall() -> Option<AttrSink> {
+    ATTR.with(|s| s.borrow_mut().take())
+}
+
+/// Is an attribution sink installed on this thread?
+pub fn enabled() -> bool {
+    ATTR.with(|s| s.borrow().is_some())
+}
+
+/// Record a lifecycle mark for `req`.
+pub fn mark(req: u64, kind: MarkKind, ts: Time) {
+    ATTR.with(|s| {
+        if let Some(sink) = s.borrow_mut().as_mut() {
+            sink.marks.push((req, kind, ts));
+        }
+    });
+}
+
+/// Record a scheduling frame `[t0, t1]` for `req`.
+pub fn frame(req: u64, kind: FrameKind, t0: Time, t1: Time) {
+    ATTR.with(|s| {
+        if let Some(sink) = s.borrow_mut().as_mut() {
+            sink.frames.push((req, kind, t0, t1));
+        }
+    });
+}
+
+/// Record `w` seconds of `bucket` anchored on `[t0, t1]` against the
+/// ambient request (no-op outside a `ReqScope` or for w ≤ 0).
+pub fn seg(bucket: Bucket, t0: Time, t1: Time, w: f64) {
+    if w <= 0.0 {
+        return;
+    }
+    let Some(req) = super::cur_req() else { return };
+    ATTR.with(|s| {
+        if let Some(sink) = s.borrow_mut().as_mut() {
+            sink.segs.push(Seg { req, bucket, t0, t1, w });
+        }
+    });
+}
+
+/// Flash-array read hook: accumulate FIFO conflict wait and die/channel
+/// service seconds for the NVMe command currently being submitted.
+pub fn flash_read_busy(wait: f64, service: f64) {
+    if !enabled() {
+        return;
+    }
+    PEND_FLASH.with(|c| {
+        let (w, s) = c.get();
+        c.set((w + wait.max(0.0), s + service.max(0.0)));
+    });
+}
+
+/// FTL hook: accumulate GC stall seconds for the current NVMe command.
+pub fn gc_busy(d: f64) {
+    if !enabled() {
+        return;
+    }
+    PEND_GC.with(|c| c.set(c.get() + d.max(0.0)));
+}
+
+/// Take and reset the accumulated (conflict_wait, service) pair.
+pub fn drain_flash() -> (f64, f64) {
+    PEND_FLASH.with(|c| c.replace((0.0, 0.0)))
+}
+
+/// Take and reset the accumulated GC stall.
+pub fn drain_gc() -> f64 {
+    PEND_GC.with(|c| c.replace(0.0))
+}
+
+// ---------------------------------------------------------------------------
+// Extraction
+// ---------------------------------------------------------------------------
+
+/// One request's attribution: exclusive per-bucket seconds over the whole
+/// wall time, plus the TTFT-prefix / decode-suffix split of the same
+/// partition.  `buckets[i] == ttft_buckets[i] + decode_buckets[i]`.
+#[derive(Debug, Clone)]
+pub struct ReqAttr {
+    pub req: u64,
+    pub wall: f64,
+    pub ttft: f64,
+    pub buckets: [f64; NBUCKETS],
+    pub ttft_buckets: [f64; NBUCKETS],
+    pub decode_buckets: [f64; NBUCKETS],
+}
+
+/// Aggregated attribution report over all completed requests.
+#[derive(Debug, Clone, Default)]
+pub struct AttrReport {
+    pub requests: Vec<ReqAttr>,
+    pub total: [f64; NBUCKETS],
+    pub ttft_total: [f64; NBUCKETS],
+    pub decode_total: [f64; NBUCKETS],
+    pub wall_total: f64,
+}
+
+struct ReqRaw {
+    marks: Vec<(MarkKind, Time)>,
+    frames: Vec<(FrameKind, Time, Time)>,
+    segs: Vec<Seg>,
+}
+
+/// Extract the per-request critical-path attribution from a drained
+/// sink.  Requests without both an Arrive and a Retire mark (rejected or
+/// still in flight) are skipped.
+pub fn extract(sink: &AttrSink) -> AttrReport {
+    let mut by_req: BTreeMap<u64, ReqRaw> = BTreeMap::new();
+    let raw = |m: &mut BTreeMap<u64, ReqRaw>, req: u64| -> &mut ReqRaw {
+        m.entry(req)
+            .or_insert_with(|| ReqRaw { marks: Vec::new(), frames: Vec::new(), segs: Vec::new() })
+    };
+    for &(req, kind, ts) in &sink.marks {
+        raw(&mut by_req, req).marks.push((kind, ts));
+    }
+    for &(req, kind, t0, t1) in &sink.frames {
+        raw(&mut by_req, req).frames.push((kind, t0, t1));
+    }
+    for &s in &sink.segs {
+        raw(&mut by_req, s.req).segs.push(s);
+    }
+
+    let mut report = AttrReport::default();
+    for (req, r) in &by_req {
+        let arrive = r.marks.iter().find(|(k, _)| *k == MarkKind::Arrive).map(|&(_, t)| t);
+        let retire = r.marks.iter().find(|(k, _)| *k == MarkKind::Retire).map(|&(_, t)| t);
+        let (Some(arrive), Some(retire)) = (arrive, retire) else { continue };
+        if retire <= arrive {
+            continue;
+        }
+        let ra = attribute_one(*req, arrive, retire, r);
+        for i in 0..NBUCKETS {
+            report.total[i] += ra.buckets[i];
+            report.ttft_total[i] += ra.ttft_buckets[i];
+            report.decode_total[i] += ra.decode_buckets[i];
+        }
+        report.wall_total += ra.wall;
+        report.requests.push(ra);
+    }
+    report
+}
+
+/// One contiguous labeled piece of a request's timeline partition.
+struct Piece {
+    t1: Time,
+    buckets: [f64; NBUCKETS],
+}
+
+fn attribute_one(req: u64, arrive: Time, retire: Time, r: &ReqRaw) -> ReqAttr {
+    let mut frames: Vec<(FrameKind, Time, Time)> = r
+        .frames
+        .iter()
+        .map(|&(k, t0, t1)| (k, t0.max(arrive), t1.min(retire)))
+        .filter(|&(_, t0, t1)| t1 > t0)
+        .collect();
+    frames.sort_by(|a, b| a.1.total_cmp(&b.1).then(a.2.total_cmp(&b.2)));
+
+    let preempts: Vec<Time> = r
+        .marks
+        .iter()
+        .filter(|(k, _)| *k == MarkKind::Preempt)
+        .map(|&(_, t)| t)
+        .collect();
+
+    let mut pieces: Vec<Piece> = Vec::new();
+    let mut cur = arrive;
+    let mut prev_kind: Option<FrameKind> = None;
+    for &(kind, f0, f1) in &frames {
+        let f0 = f0.max(cur);
+        let f1 = f1.max(f0);
+        if f0 > cur {
+            pieces.push(gap_piece(cur, f0, prev_kind, Some(kind), &preempts));
+        }
+        if f1 > f0 {
+            pieces.push(frame_piece(kind, f0, f1, &r.segs));
+        }
+        cur = cur.max(f1);
+        prev_kind = Some(kind);
+    }
+    if retire > cur {
+        pieces.push(gap_piece(cur, retire, prev_kind, None, &preempts));
+    }
+
+    // TTFT boundary: the end of the first prefill frame (clamped order
+    // preserved above); pieces are never split by it because the frame
+    // partition introduced a boundary exactly there.
+    let ttft_end = frames
+        .iter()
+        .find(|(k, _, _)| *k == FrameKind::Prefill)
+        .map(|&(_, _, t1)| t1)
+        .unwrap_or(arrive);
+
+    let mut buckets = [0.0; NBUCKETS];
+    let mut ttft_buckets = [0.0; NBUCKETS];
+    let mut decode_buckets = [0.0; NBUCKETS];
+    for p in &pieces {
+        let ttft_side = p.t1 <= ttft_end + 1e-12;
+        for i in 0..NBUCKETS {
+            buckets[i] += p.buckets[i];
+            if ttft_side {
+                ttft_buckets[i] += p.buckets[i];
+            } else {
+                decode_buckets[i] += p.buckets[i];
+            }
+        }
+    }
+    ReqAttr {
+        req,
+        wall: retire - arrive,
+        ttft: ttft_end - arrive,
+        buckets,
+        ttft_buckets,
+        decode_buckets,
+    }
+}
+
+/// Classify an inter-frame gap `[g0, g1]` into one whole-interval bucket.
+fn gap_piece(
+    g0: Time,
+    g1: Time,
+    prev: Option<FrameKind>,
+    next: Option<FrameKind>,
+    preempts: &[Time],
+) -> Piece {
+    let bucket = if prev.is_none() {
+        Bucket::Queue
+    } else if preempts.iter().any(|&t| t > g0 - 1e-12 && t <= g1 + 1e-12) {
+        Bucket::PreemptWait
+    } else if prev == Some(FrameKind::Prefill) && next == Some(FrameKind::Decode) {
+        Bucket::Park
+    } else {
+        Bucket::AdmitStall
+    };
+    let mut b = [0.0; NBUCKETS];
+    b[bucket.index()] = g1 - g0;
+    Piece { t1: g1, buckets: b }
+}
+
+/// Split a frame `[f0, f1]` across the component segments anchored in
+/// it.  Segment weights are rescaled to tile `[f0, own_done]` exactly
+/// (own_done = the latest segment end, i.e. when the request's own work
+/// finished); `[own_done, f1]` is batch-straggler wait.  A frame with no
+/// segments is all scheduler-side work: prefill compute for prefill
+/// frames, in-storage compute for decode frames.
+fn frame_piece(kind: FrameKind, f0: Time, f1: Time, segs: &[Seg]) -> Piece {
+    let mut b = [0.0; NBUCKETS];
+    let mine: Vec<&Seg> = segs.iter().filter(|s| s.t0 >= f0 - 1e-12 && s.t0 < f1).collect();
+    if mine.is_empty() {
+        let default = match kind {
+            FrameKind::Prefill => Bucket::PrefillCompute,
+            FrameKind::Decode => Bucket::CsdCompute,
+        };
+        b[default.index()] = f1 - f0;
+        return Piece { t1: f1, buckets: b };
+    }
+    let own_done = mine
+        .iter()
+        .map(|s| s.t1)
+        .fold(f64::NEG_INFINITY, f64::max)
+        .clamp(f0, f1);
+    let own = own_done - f0;
+    let wsum: f64 = mine.iter().map(|s| s.w).sum();
+    if own > 0.0 && wsum > 0.0 {
+        let scale = own / wsum;
+        for s in &mine {
+            b[s.bucket.index()] += s.w * scale;
+        }
+        // push the float residue into the largest bucket so the piece
+        // sums exactly to its span
+        let assigned: f64 = b.iter().sum();
+        let largest = (0..NBUCKETS)
+            .max_by(|&i, &j| b[i].total_cmp(&b[j]))
+            .unwrap();
+        b[largest] += own - assigned;
+    }
+    b[Bucket::BatchWait.index()] += f1 - own_done;
+    Piece { t1: f1, buckets: b }
+}
+
+// ---------------------------------------------------------------------------
+// Report rendering
+// ---------------------------------------------------------------------------
+
+impl AttrReport {
+    /// Buckets of `totals` sorted descending, with labels.
+    pub fn ranked(totals: &[f64; NBUCKETS]) -> Vec<(&'static str, f64)> {
+        let mut v: Vec<(&'static str, f64)> =
+            BUCKETS.iter().map(|b| (b.label(), totals[b.index()])).collect();
+        v.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(b.0)));
+        v
+    }
+
+    /// The `instinfer-attr/v1` document.
+    pub fn to_json(&self) -> Json {
+        let scope = |t: &[f64; NBUCKETS]| {
+            let mut m = BTreeMap::new();
+            for b in BUCKETS {
+                m.insert(format!("{}_s", b.label()), Json::Num(t[b.index()]));
+            }
+            Json::Obj(m)
+        };
+        let mut scopes = BTreeMap::new();
+        scopes.insert("e2e".to_string(), scope(&self.total));
+        scopes.insert("ttft".to_string(), scope(&self.ttft_total));
+        scopes.insert("decode".to_string(), scope(&self.decode_total));
+
+        let per_req: Vec<Json> = self
+            .requests
+            .iter()
+            .map(|r| {
+                let mut m = BTreeMap::new();
+                m.insert("req".to_string(), Json::Num(r.req as f64));
+                m.insert("wall_s".to_string(), Json::Num(r.wall));
+                m.insert("ttft_s".to_string(), Json::Num(r.ttft));
+                m.insert("buckets".to_string(), scope(&r.buckets));
+                Json::Obj(m)
+            })
+            .collect();
+
+        let mut doc = BTreeMap::new();
+        doc.insert("schema".to_string(), Json::Str("instinfer-attr/v1".to_string()));
+        doc.insert("requests".to_string(), Json::Num(self.requests.len() as f64));
+        doc.insert("wall_s".to_string(), Json::Num(self.wall_total));
+        doc.insert("buckets".to_string(), Json::Obj(scopes));
+        doc.insert("per_request".to_string(), Json::Arr(per_req));
+        Json::Obj(doc)
+    }
+
+    /// Fold the aggregate into a [`MetricsRegistry`] snapshot.  Always
+    /// registers every bucket name (zero when unused) so the snapshot
+    /// shape is identical across configs.
+    pub fn fold_into(&self, reg: &mut MetricsRegistry) {
+        reg.counter("attr.requests", self.requests.len() as u64);
+        reg.gauge("attr.wall_s", self.wall_total);
+        for b in BUCKETS {
+            reg.gauge(&format!("attr.e2e.{}_s", b.label()), self.total[b.index()]);
+            reg.gauge(&format!("attr.decode.{}_s", b.label()), self.decode_total[b.index()]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: f64, b: f64) -> bool {
+        (a - b).abs() <= 1e-9 * a.abs().max(b.abs()).max(1.0)
+    }
+
+    /// hand-built timeline: queue 1s, prefill 2s (no segs), park 0.5s,
+    /// decode 1.5s with flash/compute segs + batch wait, stall 1s,
+    /// decode 1s (segless)
+    fn synthetic() -> AttrSink {
+        let mut s = AttrSink::default();
+        let req = 7;
+        s.marks.push((req, MarkKind::Arrive, 0.0));
+        s.marks.push((req, MarkKind::Admit, 1.0));
+        s.marks.push((req, MarkKind::Retire, 7.0));
+        s.frames.push((req, FrameKind::Prefill, 1.0, 3.0));
+        s.frames.push((req, FrameKind::Decode, 3.5, 5.0));
+        s.frames.push((req, FrameKind::Decode, 6.0, 7.0));
+        // decode step 1: own work ends at 4.7 (0.3 batch wait); weights
+        // flash 0.8, compute 0.4 → rescaled to tile the 1.2s own span
+        s.segs.push(Seg { req, bucket: Bucket::FlashRead, t0: 3.5, t1: 4.5, w: 0.8 });
+        s.segs.push(Seg { req, bucket: Bucket::CsdCompute, t0: 3.6, t1: 4.7, w: 0.4 });
+        s
+    }
+
+    #[test]
+    fn synthetic_partition_sums_to_wall() {
+        let report = extract(&synthetic());
+        assert_eq!(report.requests.len(), 1);
+        let r = &report.requests[0];
+        assert!(close(r.wall, 7.0));
+        let sum: f64 = r.buckets.iter().sum();
+        assert!(close(sum, r.wall), "buckets sum {sum} != wall {}", r.wall);
+        // each bucket == ttft part + decode part
+        for i in 0..NBUCKETS {
+            assert!(close(r.buckets[i], r.ttft_buckets[i] + r.decode_buckets[i]));
+        }
+        // expected pieces
+        assert!(close(r.buckets[Bucket::Queue.index()], 1.0));
+        assert!(close(r.buckets[Bucket::PrefillCompute.index()], 2.0));
+        assert!(close(r.buckets[Bucket::Park.index()], 0.5));
+        assert!(close(r.buckets[Bucket::AdmitStall.index()], 1.0));
+        // decode 1: 1.2 own split 2:1 flash:compute, 0.3 batch wait;
+        // decode 2 is segless → 1.0 csd_compute
+        assert!(close(r.buckets[Bucket::FlashRead.index()], 0.8));
+        assert!(close(r.buckets[Bucket::CsdCompute.index()], 0.4 + 1.0));
+        assert!(close(r.buckets[Bucket::BatchWait.index()], 0.3));
+        // ttft prefix = queue + prefill
+        assert!(close(r.ttft, 3.0));
+        let ttft_sum: f64 = r.ttft_buckets.iter().sum();
+        assert!(close(ttft_sum, 3.0));
+    }
+
+    #[test]
+    fn preempt_gap_and_unfinished_requests() {
+        let mut s = synthetic();
+        // the 5.0→6.0 gap now contains a preempt → PreemptWait not stall
+        s.marks.push((7, MarkKind::Preempt, 5.2));
+        s.marks.push((7, MarkKind::Resume, 6.0));
+        // a request with no Retire is skipped, not misattributed
+        s.marks.push((9, MarkKind::Arrive, 0.0));
+        let report = extract(&s);
+        assert_eq!(report.requests.len(), 1);
+        let r = &report.requests[0];
+        assert!(close(r.buckets[Bucket::PreemptWait.index()], 1.0));
+        assert!(close(r.buckets[Bucket::AdmitStall.index()], 0.0));
+        assert!(close(r.buckets.iter().sum::<f64>(), 7.0));
+    }
+
+    #[test]
+    fn install_gates_recording_and_drains_reset() {
+        assert!(!enabled());
+        // hooks are no-ops when not installed
+        mark(1, MarkKind::Arrive, 0.0);
+        flash_read_busy(1.0, 2.0);
+        gc_busy(3.0);
+        assert_eq!(drain_flash(), (0.0, 0.0));
+        assert_eq!(drain_gc(), 0.0);
+
+        install();
+        assert!(enabled());
+        flash_read_busy(0.25, 0.5);
+        flash_read_busy(0.25, 0.5);
+        gc_busy(0.125);
+        assert_eq!(drain_flash(), (0.5, 1.0));
+        assert_eq!(drain_flash(), (0.0, 0.0), "drain resets");
+        assert_eq!(drain_gc(), 0.125);
+        mark(1, MarkKind::Arrive, 0.0);
+        let sink = uninstall().unwrap();
+        assert!(!enabled());
+        assert_eq!(sink.marks.len(), 1);
+    }
+
+    #[test]
+    fn report_json_and_registry_shape_are_fixed() {
+        let report = extract(&synthetic());
+        let j = report.to_json();
+        assert_eq!(j.req("schema").unwrap().as_str(), Some("instinfer-attr/v1"));
+        let e2e = j.req("buckets").unwrap().req("e2e").unwrap();
+        for b in BUCKETS {
+            assert!(e2e.get(&format!("{}_s", b.label())).is_some(), "{:?} missing", b);
+        }
+        // folding an EMPTY report registers the same names as a full one
+        let mut full = MetricsRegistry::new();
+        report.fold_into(&mut full);
+        let mut empty = MetricsRegistry::new();
+        AttrReport::default().fold_into(&mut empty);
+        let names = |r: &MetricsRegistry| -> Vec<String> {
+            r.iter().map(|(k, _)| k.to_string()).collect()
+        };
+        assert_eq!(names(&full), names(&empty));
+        assert_eq!(full.len(), 2 + 2 * NBUCKETS);
+        // ranked puts the biggest bucket first
+        let ranked = AttrReport::ranked(&report.total);
+        assert_eq!(ranked[0].0, "prefill_compute");
+    }
+}

@@ -37,6 +37,8 @@ use std::collections::BTreeMap;
 use crate::sim::Time;
 use crate::util::json::Json;
 
+pub mod attr;
+
 // ---------------------------------------------------------------------------
 // Trace levels
 // ---------------------------------------------------------------------------
@@ -77,7 +79,9 @@ impl TraceLevel {
 
 /// One structured trace event on simulated time.  `ph` is the chrome
 /// trace-event phase: `'X'` for complete spans (with `dur`), `'i'` for
-/// instants.  Timestamps are seconds here; export converts to µs.
+/// instants, `'s'`/`'f'` for flow (dependency) edge endpoints — for the
+/// flow phases `arg` carries the flow id, exported top-level as `"id"`.
+/// Timestamps are seconds here; export converts to µs.
 #[derive(Debug, Clone)]
 pub struct TraceEvent {
     pub pid: u64,
@@ -91,18 +95,18 @@ pub struct TraceEvent {
 }
 
 /// Process ids of the track-naming scheme (see module docs).
-const PID_REQUESTS: u64 = 1;
-const PID_STREAMS: u64 = 2;
-const PID_PCIE: u64 = 3;
-const PID_CSD_BASE: u64 = 10;
+pub const PID_REQUESTS: u64 = 1;
+pub const PID_STREAMS: u64 = 2;
+pub const PID_PCIE: u64 = 3;
+pub const PID_CSD_BASE: u64 = 10;
 
 /// Tid offsets inside a CSD process / the PCIe process.
-const TID_NVME: u64 = 0;
-const TID_FTL: u64 = 1;
-const TID_CHANNEL_BASE: u64 = 100;
-const TID_UNIT_BASE: u64 = 1000;
-const TID_PCIE_BG_BASE: u64 = 100;
-const TID_PCIE_ARBITER: u64 = 999;
+pub const TID_NVME: u64 = 0;
+pub const TID_FTL: u64 = 1;
+pub const TID_CHANNEL_BASE: u64 = 100;
+pub const TID_UNIT_BASE: u64 = 1000;
+pub const TID_PCIE_BG_BASE: u64 = 100;
+pub const TID_PCIE_ARBITER: u64 = 999;
 
 fn process_label(pid: u64) -> String {
     match pid {
@@ -256,7 +260,18 @@ impl TraceEvent {
             // instant scope: thread
             m.insert("s".to_string(), Json::Str("t".to_string()));
         }
-        if let Some((k, v)) = self.arg {
+        if self.ph == 's' || self.ph == 'f' {
+            // flow edge endpoint: the arg slot holds the flow id, which
+            // chrome/Perfetto expects top-level next to a "flow" category
+            m.insert("cat".to_string(), Json::Str("flow".to_string()));
+            if let Some((_, id)) = self.arg {
+                m.insert("id".to_string(), Json::Num(id));
+            }
+            if self.ph == 'f' {
+                // bind the arrow to the enclosing slice's start
+                m.insert("bp".to_string(), Json::Str("e".to_string()));
+            }
+        } else if let Some((k, v)) = self.arg {
             let mut args = BTreeMap::new();
             args.insert(k.to_string(), Json::Num(v));
             m.insert("args".to_string(), Json::Obj(args));
@@ -283,12 +298,21 @@ thread_local! {
     /// [`DeviceScope`]) so FTL / flash-array emissions deep in the call
     /// stack tag the CSD that issued them.
     static CUR_DEV: Cell<usize> = const { Cell::new(0) };
+    /// Request id ambient context: set by the engine (via [`ReqScope`])
+    /// around per-sequence work so device-level emissions deep in the
+    /// call stack can draw request → device flow edges and the attr
+    /// plane can charge time to the right request.
+    static CUR_REQ: Cell<Option<u64>> = const { Cell::new(None) };
+    /// Monotone flow-edge id counter; reset on `install` so traces stay
+    /// byte-reproducible across runs.
+    static FLOW_ID: Cell<u64> = const { Cell::new(0) };
 }
 
 /// Install a fresh sink on this thread at the given level.  Replaces any
 /// existing sink.
 pub fn install(level: TraceLevel) {
     SINK.with(|s| *s.borrow_mut() = Some(TraceSink::new(level)));
+    FLOW_ID.with(|c| c.set(0));
 }
 
 /// Remove and return the thread's sink (None if tracing was off).
@@ -319,6 +343,30 @@ impl Drop for DeviceScope {
     fn drop(&mut self) {
         CUR_DEV.with(|c| c.set(self.prev));
     }
+}
+
+/// RAII guard scoping the ambient request id (see [`ReqScope::enter`]);
+/// restores the previous value on drop so nested scopes compose.
+pub struct ReqScope {
+    prev: Option<u64>,
+}
+
+impl ReqScope {
+    pub fn enter(req: u64) -> ReqScope {
+        let prev = CUR_REQ.with(|c| c.replace(Some(req)));
+        ReqScope { prev }
+    }
+}
+
+impl Drop for ReqScope {
+    fn drop(&mut self) {
+        CUR_REQ.with(|c| c.set(self.prev));
+    }
+}
+
+/// The ambient request id, if the call stack is inside a [`ReqScope`].
+pub fn cur_req() -> Option<u64> {
+    CUR_REQ.with(|c| c.get())
 }
 
 fn emit(min: TraceLevel, ev: TraceEvent) {
@@ -475,17 +523,80 @@ pub fn pcie_arbiter(background: usize, delay: Time, ts: Time) {
     );
 }
 
+/// Dependency (flow) edge between two tracks: a paired `'s'`/`'f'` event
+/// sharing one flow id, rendered as an arrow in Perfetto.  `from` and
+/// `to` are `(pid, tid, ts)` triples; the edge is recorded atomically
+/// (both endpoints or neither) so exports never hold dangling halves.
+pub fn flow(name: &'static str, min: TraceLevel, from: (u64, u64, Time), to: (u64, u64, Time)) {
+    SINK.with(|s| {
+        let mut b = s.borrow_mut();
+        let Some(sink) = b.as_mut() else { return };
+        if sink.level < min {
+            return;
+        }
+        let id = FLOW_ID.with(|c| {
+            let v = c.get();
+            c.set(v + 1);
+            v
+        }) as f64;
+        sink.record(TraceEvent {
+            pid: from.0,
+            tid: from.1,
+            name,
+            ph: 's',
+            ts: from.2,
+            dur: 0.0,
+            arg: Some(("id", id)),
+        });
+        sink.record(TraceEvent {
+            pid: to.0,
+            tid: to.1,
+            name,
+            ph: 'f',
+            ts: to.2,
+            dur: 0.0,
+            arg: Some(("id", id)),
+        });
+    });
+}
+
+/// Request → NVMe-command flow edge on the ambient device: the arrow
+/// from a request track to the device that serves its command.
+pub fn cmd_flow(req: u64, issued: Time, dev: usize, started: Time) {
+    flow(
+        "issue",
+        TraceLevel::Device,
+        (PID_REQUESTS, req, issued),
+        (PID_CSD_BASE + dev as u64, TID_NVME, started),
+    );
+}
+
+/// Flash die/plane FIFO → channel FIFO flow edge on the ambient device
+/// (`full` only): ties each die read to the channel transfer it feeds.
+pub fn flash_read_flow(unit: usize, unit_done: Time, ch: usize, chan_start: Time) {
+    let dev = CUR_DEV.with(|c| c.get()) as u64;
+    flow(
+        "die_to_channel",
+        TraceLevel::Full,
+        (PID_CSD_BASE + dev, TID_UNIT_BASE + unit as u64, unit_done),
+        (PID_CSD_BASE + dev, TID_CHANNEL_BASE + ch as u64, chan_start),
+    );
+}
+
 // ---------------------------------------------------------------------------
 // SampleStats — capped streaming reservoir
 // ---------------------------------------------------------------------------
 
-/// Streaming sample statistics with a first-N capped reservoir for
-/// percentiles: `count/sum/min/max` are exact over ALL pushed samples;
-/// `p50/p95` come from the first `cap` samples (deterministic — no RNG,
-/// no replacement), which is exact for every run shorter than the cap
-/// and a stable early-window estimate beyond it.  Replaces the unbounded
-/// per-step `Vec`s in `EngineMetrics` so open-loop serve memory no
-/// longer grows linearly with steps.
+/// Streaming sample statistics with a deterministic index-strided
+/// reservoir for percentiles: `count/sum/min/max` are exact over ALL
+/// pushed samples; `p50/p95` come from samples taken at indices
+/// `0, stride, 2·stride, …`, where the stride doubles (and the reservoir
+/// halves) each time the cap fills.  The kept set is always uniformly
+/// spread over the whole stream seen so far — no RNG, byte-reproducible
+/// — unlike a first-N window, whose percentiles freeze on the earliest
+/// samples of a long open-loop serve.  Exact for runs shorter than the
+/// cap.  Replaces the unbounded per-step `Vec`s in `EngineMetrics` so
+/// open-loop serve memory no longer grows linearly with steps.
 #[derive(Debug, Clone)]
 pub struct SampleStats {
     count: u64,
@@ -494,6 +605,7 @@ pub struct SampleStats {
     max: f64,
     reservoir: Vec<f64>,
     cap: usize,
+    stride: u64,
 }
 
 /// Default reservoir bound (samples, not bytes): 32 KiB of f64 per stat.
@@ -514,17 +626,34 @@ impl SampleStats {
             max: f64::NEG_INFINITY,
             reservoir: Vec::new(),
             cap,
+            stride: 1,
         }
     }
 
     pub fn push(&mut self, x: f64) {
+        let idx = self.count;
         self.count += 1;
         self.sum += x;
         self.min = self.min.min(x);
         self.max = self.max.max(x);
-        if self.reservoir.len() < self.cap {
-            self.reservoir.push(x);
+        if self.cap == 0 || idx % self.stride != 0 {
+            return;
         }
+        if self.reservoir.len() == self.cap {
+            // cap reached: keep every other kept sample (still uniform,
+            // twice the spacing) and double the stride going forward
+            let mut keep = 0;
+            self.reservoir.retain(|_| {
+                let k = keep % 2 == 0;
+                keep += 1;
+                k
+            });
+            self.stride *= 2;
+            if idx % self.stride != 0 {
+                return;
+            }
+        }
+        self.reservoir.push(x);
     }
 
     pub fn count(&self) -> u64 {
@@ -818,8 +947,11 @@ mod tests {
         assert!((s.mean() - 49.5).abs() < 1e-9);
         assert_eq!(s.min(), 0.0);
         assert_eq!(s.max(), 99.0);
-        // percentiles come from the first-8 window
-        assert!(s.percentile(50.0) <= 7.0);
+        // the strided reservoir stays uniform over the whole stream —
+        // kept samples are [0, 16, 32, 48, 64, 80, 96], so the median
+        // tracks the stream's middle instead of freezing on the first 8
+        assert_eq!(s.reservoir, vec![0.0, 16.0, 32.0, 48.0, 64.0, 80.0, 96.0]);
+        assert!((s.percentile(50.0) - 48.0).abs() < 1e-9);
         let snap = s.snapshot();
         assert_eq!(snap.count, 100);
         assert_eq!(snap.max, 99.0);
@@ -829,6 +961,35 @@ mod tests {
         assert_eq!(e.min(), 0.0);
         assert_eq!(e.max(), 0.0);
         assert_eq!(e.percentile(95.0), 0.0);
+    }
+
+    #[test]
+    fn sample_stats_stride_stays_deterministic_and_uniform() {
+        // below the cap the reservoir is exact
+        let mut s = SampleStats::with_cap(4);
+        for i in 0..3 {
+            s.push(i as f64);
+        }
+        assert_eq!(s.reservoir, vec![0.0, 1.0, 2.0]);
+        // beyond the cap: stride doubles, spacing stays uniform
+        for i in 3..16 {
+            s.push(i as f64);
+        }
+        assert_eq!(s.reservoir, vec![0.0, 4.0, 8.0, 12.0]);
+        // identical streams produce identical reservoirs (no RNG)
+        let mut t = SampleStats::with_cap(4);
+        for i in 0..16 {
+            t.push(i as f64);
+        }
+        assert_eq!(s.reservoir, t.reservoir);
+        // degenerate cap-0 stats keep exact aggregates, empty reservoir
+        let mut z = SampleStats::with_cap(0);
+        for i in 0..10 {
+            z.push(i as f64);
+        }
+        assert_eq!(z.count(), 10);
+        assert!(z.reservoir.is_empty());
+        assert_eq!(z.percentile(50.0), 0.0);
     }
 
     #[test]

@@ -193,6 +193,19 @@ pub fn fair_share_contended(
     };
     if let Some(t0) = reqs.iter().map(|r| r.start).reduce(Time::min) {
         crate::obs::pcie_arbiter(background.len(), delay, t0);
+        if delay > 0.0 {
+            // dependency arrow: the background stream that induced the
+            // delay feeds the arbiter's contended decision
+            let bg0 = background.iter().map(|r| r.start).fold(f64::INFINITY, f64::min);
+            if bg0.is_finite() {
+                crate::obs::flow(
+                    "contention",
+                    crate::obs::TraceLevel::Device,
+                    (crate::obs::PID_PCIE, crate::obs::TID_PCIE_BG_BASE, bg0),
+                    (crate::obs::PID_PCIE, crate::obs::TID_PCIE_ARBITER, t0.max(bg0)),
+                );
+            }
+        }
     }
     (fin, delay)
 }

@@ -155,6 +155,16 @@ impl PipelineState {
         // the stream is FIFO so push order == ready order, but keep the
         // join order explicit for safety
         ready.sort_by(|a, b| a.ready.total_cmp(&b.ready));
+        for c in &ready {
+            // dependency arrow: prefill-stream completion feeds the
+            // decode-stream tick that absorbs the cohort
+            crate::obs::flow(
+                "cohort_join",
+                crate::obs::TraceLevel::Device,
+                (crate::obs::PID_STREAMS, 0, c.ready),
+                (crate::obs::PID_STREAMS, 1, now),
+            );
+        }
         ready.into_iter().flat_map(|c| c.seqs).collect()
     }
 

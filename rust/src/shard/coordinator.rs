@@ -24,6 +24,7 @@ use crate::config::model::FP16_BYTES;
 use crate::csd::{AttnMode, CsdCommand, InstCsd, NvmeQueue, UnitBreakdown};
 use crate::ftl::{prefix_hashes, FtlConfig};
 use crate::kvtier::{TierConfig, TierStats};
+use crate::obs::attr;
 use crate::pcie::{self, XferReq};
 use crate::sim::Time;
 use anyhow::{Context, Result};
@@ -161,7 +162,14 @@ impl ShardCoordinator {
     /// `shards`), contention stats, and per-shard egress windows —
     /// shared by the head and context dispatch paths so the contention
     /// bookkeeping cannot drift between them.
-    fn contended_all_reduce(&mut self, shards: &[usize], reqs: &[XferReq], at: Time) -> Vec<Time> {
+    /// Returns the per-request finish times plus the total fair-share
+    /// contention delay (0 when no background traffic was in the way).
+    fn contended_all_reduce(
+        &mut self,
+        shards: &[usize],
+        reqs: &[XferReq],
+        at: Time,
+    ) -> (Vec<Time>, Time) {
         let bg = if self.overlap_tracking { self.active_bg(at) } else { Vec::new() };
         let ingress = self.pcie.gpu_p2p_ingress_bw;
         let (fin, delay) = pcie::fair_share_contended(ingress, reqs, &bg);
@@ -181,7 +189,7 @@ impl ShardCoordinator {
                 self.clock.note_egress(c, reqs[k].start, fin[k]);
             }
         }
-        fin
+        (fin, delay)
     }
 
     /// One sequence-layer decode on the array: ship this token's K/V,
@@ -283,12 +291,17 @@ impl ShardCoordinator {
                     dev_bw: self.dev_bw(),
                 })
                 .collect();
-            let fin = self.contended_all_reduce(&active, &reqs, at);
+            let (fin, delay) = self.contended_all_reduce(&active, &reqs, at);
             let arrived = fin.iter().cloned().fold(t_attn, f64::max);
             let merge_t = merge::gather_time(&self.gpu, self.topology.n_heads, d);
             done = arrived + merge_t;
             bd.pcie_xfer += arrived - t_attn;
             bd.gpu_merge += merge_t;
+            let xfer_wall = (arrived - t_attn).max(0.0);
+            let contend = delay.min(xfer_wall).max(0.0);
+            attr::seg(attr::Bucket::PcieContend, t_attn, done, contend);
+            attr::seg(attr::Bucket::PcieXfer, t_attn, done, xfer_wall - contend);
+            attr::seg(attr::Bucket::GpuMerge, t_attn, done, merge_t);
             self.stats.merge_span_s += done - t_attn;
             self.stats.xfer_bytes += reqs.iter().map(|r| r.bytes).sum::<f64>();
             self.stats.merges += 1;
@@ -376,12 +389,17 @@ impl ShardCoordinator {
                 dev_bw: self.dev_bw(),
             })
             .collect();
-        let fin = self.contended_all_reduce(&joined, &reqs, at);
+        let (fin, delay) = self.contended_all_reduce(&joined, &reqs, at);
         let arrived = fin.iter().cloned().fold(t_attn, f64::max);
         let merge_t = merge::lse_merge_time(&self.gpu, h, d, joined.len());
         let done = arrived + merge_t;
         bd.pcie_xfer += arrived - t_attn;
         bd.gpu_merge += merge_t;
+        let xfer_wall = (arrived - t_attn).max(0.0);
+        let contend = delay.min(xfer_wall).max(0.0);
+        attr::seg(attr::Bucket::PcieContend, t_attn, done, contend);
+        attr::seg(attr::Bucket::PcieXfer, t_attn, done, xfer_wall - contend);
+        attr::seg(attr::Bucket::GpuMerge, t_attn, done, merge_t);
         self.stats.merge_span_s += done - t_attn;
         self.stats.xfer_bytes += bytes * joined.len() as f64;
         self.stats.merges += 1;

@@ -14,11 +14,12 @@
 //! 4. The export parses as chrome trace-event JSON with the keys
 //!    Perfetto requires.
 
-use instinfer::coordinator::{run_open_loop, EngineConfig, InferenceEngine, SchedConfig};
+use instinfer::coordinator::{run_open_loop, EngineConfig, InferenceEngine, SchedConfig, ServeOpts};
+use instinfer::obs::attr;
 use instinfer::obs::{self, TraceLevel, TraceSink};
 use instinfer::runtime::Runtime;
 use instinfer::util::json::Json;
-use instinfer::workload::{Arrival, ArrivalGen, LengthProfile, WorkloadGen};
+use instinfer::workload::{Arrival, ArrivalGen, LengthProfile, PrefixWorkloadGen, WorkloadGen};
 
 fn artifacts_dir() -> std::path::PathBuf {
     std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../artifacts")
@@ -122,7 +123,10 @@ fn trace_spans_are_well_formed() {
     for ev in sink.events() {
         assert!(ev.dur >= 0.0, "span {:?} ends before it starts", ev.name);
         assert!(ev.ts.is_finite() && ev.ts >= 0.0);
-        assert!(matches!(ev.ph, 'X' | 'i'), "sink holds only data events");
+        assert!(
+            matches!(ev.ph, 'X' | 'i' | 's' | 'f'),
+            "sink holds only data and flow events"
+        );
     }
 
     let doc = Json::parse(&sink.export()).expect("export is valid json");
@@ -176,13 +180,151 @@ fn export_is_valid_chrome_trace_event_json() {
                 assert!(ev.req("ts").unwrap().as_f64().is_some());
                 assert_eq!(ev.req("s").unwrap().as_str(), Some("t"));
             }
+            "s" | "f" => {
+                assert!(ev.req("ts").unwrap().as_f64().is_some());
+                assert!(ev.get("id").is_some(), "flow event missing id");
+                assert_eq!(ev.req("cat").unwrap().as_str(), Some("flow"));
+                if ph == "f" {
+                    assert_eq!(ev.req("bp").unwrap().as_str(), Some("e"));
+                }
+            }
             other => panic!("unexpected phase {other:?}"),
         }
         phases.insert(ph);
     }
-    // a serve run must produce all three shapes: track names, request /
-    // device spans, and lifecycle instants
-    for want in ["M", "X", "i"] {
+    // a serve run must produce all four shapes: track names, request /
+    // device spans, lifecycle instants, and dependency (flow) edges
+    for want in ["M", "X", "i", "s", "f"] {
         assert!(phases.contains(want), "no {want:?} events in the export");
+    }
+}
+
+// ---- latency attribution (obs::attr) --------------------------------------
+
+/// One serving run of the attribution test matrix: `n_csds` devices,
+/// serialized/overlapped scheduling, prefix cache on/off (the prefix
+/// points serve a shared-stem multi-turn trace so the cache actually
+/// engages).  Deterministic per config.
+fn matrix_run(
+    n_csds: usize,
+    overlap: bool,
+    prefix: bool,
+) -> (InferenceEngine, instinfer::coordinator::ServeReport) {
+    let rt = Runtime::open(artifacts_dir()).expect("opening runtime");
+    let meta = rt.manifest.model.clone();
+    let opts =
+        ServeOpts { n_csds, prefix_cache: prefix, share_ratio: 0.5, ..ServeOpts::default() };
+    let mut e = InferenceEngine::new(rt, opts.engine_config(&meta)).unwrap();
+    let arrivals = if prefix {
+        let src = PrefixWorkloadGen::new(9100, meta.vocab, 12, 4, 0.5, meta.n, 1.0, 2);
+        ArrivalGen::new(src, 9101, 200.0).take(6)
+    } else {
+        let wg = WorkloadGen::new(321, meta.vocab, meta.max_seq, LengthProfile::Fixed, 6, 4);
+        ArrivalGen::new(wg, 654, 200.0).take(6)
+    };
+    let report = run_open_loop(&mut e, arrivals, sched(overlap)).unwrap();
+    (e, report)
+}
+
+/// The tentpole invariant: every request's exclusive buckets sum to its
+/// measured wall time (and the TTFT/decode split partitions the same
+/// total) within 1e-6 relative, across the whole config matrix.
+#[test]
+fn attr_buckets_sum_to_wall_across_matrix() {
+    for overlap in [false, true] {
+        for n_csds in [1usize, 2, 4] {
+            for prefix in [false, true] {
+                attr::install();
+                let _ = matrix_run(n_csds, overlap, prefix);
+                let sink = attr::uninstall().expect("attr sink should still be installed");
+                let rep = attr::extract(&sink);
+                let ctx = format!("csds={n_csds} overlap={overlap} prefix={prefix}");
+                assert!(!rep.requests.is_empty(), "no attributed requests ({ctx})");
+                for r in &rep.requests {
+                    let tol = 1e-6 * r.wall.max(1e-9);
+                    let sum: f64 = r.buckets.iter().sum();
+                    assert!(
+                        (sum - r.wall).abs() <= tol,
+                        "req {} buckets sum {sum} != wall {} ({ctx})",
+                        r.req,
+                        r.wall,
+                    );
+                    let tsum: f64 = r.ttft_buckets.iter().sum();
+                    assert!(
+                        (tsum - r.ttft).abs() <= tol,
+                        "req {} ttft buckets sum {tsum} != ttft {} ({ctx})",
+                        r.req,
+                        r.ttft,
+                    );
+                    let dsum: f64 = r.decode_buckets.iter().sum();
+                    assert!(
+                        (dsum - (r.wall - r.ttft)).abs() <= tol,
+                        "req {} decode buckets sum {dsum} != wall-ttft {} ({ctx})",
+                        r.req,
+                        r.wall - r.ttft,
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Attribution is strictly observational: installing the sink changes
+/// neither the run's outputs/timestamps nor the trace byte stream.
+#[test]
+fn attribution_is_observational_bit_identical() {
+    let (plain_sink, plain_fp) = traced_run(true, TraceLevel::Full);
+    attr::install();
+    let (sink, fp) = traced_run(true, TraceLevel::Full);
+    let asink = attr::uninstall().expect("attr sink should still be installed");
+    assert_eq!(plain_fp, fp, "attribution perturbed outputs or timestamps");
+    assert_eq!(
+        plain_sink.digest_hex(),
+        sink.digest_hex(),
+        "attribution perturbed the trace byte stream"
+    );
+    assert!(!attr::extract(&asink).requests.is_empty());
+}
+
+/// The paper's bottleneck claim on the DES plane: dense decode
+/// attention attributes to flash-read wait (service + die/channel
+/// conflict queueing), not to the on-device kernels.
+#[test]
+fn decode_attention_attributes_to_flash_wait_not_compute() {
+    let rep = instinfer::bench::attr::run_attributed().expect("attributed bench run");
+    let (flash, compute) = instinfer::bench::attr::measured_split(&rep);
+    assert!(flash > 0.0, "no flash wait attributed to decode");
+    assert!(
+        flash > compute,
+        "decode attention should be flash-bound: flash {flash}s vs compute {compute}s"
+    );
+}
+
+/// The metrics snapshot's name set is config-invariant: the same keys
+/// across CSD counts, scheduling modes, and prefix caching (with the
+/// attribution names folded in at zero), so cross-run diffing and the
+/// perf gate never chase schema drift.
+#[test]
+fn metrics_snapshot_name_set_is_config_invariant() {
+    let mut baseline: Option<std::collections::BTreeSet<String>> = None;
+    for n_csds in [1usize, 2, 4] {
+        for overlap in [false, true] {
+            for prefix in [false, true] {
+                let (e, report) = matrix_run(n_csds, overlap, prefix);
+                let mut reg = e.metrics_registry(&report.overlap);
+                attr::AttrReport::default().fold_into(&mut reg);
+                let keys: std::collections::BTreeSet<String> = match reg.to_json() {
+                    Json::Obj(m) => m.keys().cloned().collect(),
+                    other => panic!("metrics snapshot should be an object, got {other:?}"),
+                };
+                match &baseline {
+                    None => baseline = Some(keys),
+                    Some(b) => assert_eq!(
+                        b, &keys,
+                        "metric name set varies (csds={n_csds} overlap={overlap} prefix={prefix})"
+                    ),
+                }
+            }
+        }
     }
 }
