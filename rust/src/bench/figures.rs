@@ -205,18 +205,27 @@ pub fn fig15() -> Table {
 
 /// Fig. 16: SparF attention-engine unit breakdown (dense vs 1/8).
 pub fn fig16() -> Table {
+    fig16_with_threads(super::threads())
+}
+
+/// [`fig16`] at an explicit worker-thread count: both analytic points
+/// fan out on `sim::par::par_map` and land in index order, so the
+/// table is byte-identical for any thread count (the runs are cheap —
+/// this exists so the whole trajectory set shares one execution model).
+pub fn fig16_with_threads(threads: usize) -> Table {
     let mut t = Table::new(
         "Fig. 16 — SparF engine unit breakdown (% of engine time, bs=64 s=1536)",
         &["mode", "argtopk", "flash", "filter", "Logit-0", "Logit", "Attend"],
     );
-    for (label, cfg) in [
+    let points = vec![
         ("dense", base(OffloadPolicy::InStorage)),
         ("sparf-1/8", base(OffloadPolicy::InStorage).with_default_sparsity()),
-    ] {
+    ];
+    let rows = crate::sim::par::par_map(threads, points, |_, (label, cfg)| {
         let st = insti::csd_layer_step(&cfg, 64, 1536, cfg.model.n_heads);
         let u = &st.units;
         let tot = u.total().max(1e-30);
-        t.row(vec![
+        vec![
             label.into(),
             eng(100.0 * u.argtopk / tot),
             eng(100.0 * u.flash_read / tot),
@@ -224,7 +233,10 @@ pub fn fig16() -> Table {
             eng(100.0 * u.logit0 / tot),
             eng(100.0 * u.logit / tot),
             eng(100.0 * u.attend / tot),
-        ]);
+        ]
+    });
+    for r in rows {
+        t.row(r);
     }
     t
 }

@@ -121,6 +121,16 @@ fn err_row(t: &mut Table, dies: usize, label: String, e: &anyhow::Error) {
 }
 
 pub fn flashpath() -> Table {
+    flashpath_with_threads(super::threads())
+}
+
+/// `bench flashpath` at an explicit worker-thread count: each
+/// (dies, path) rung is an independent fixed-seed dense+SparF
+/// measurement pair, fanned out on `sim::par::par_map` (each dies
+/// group's first rung is the legacy baseline feeding its speedup
+/// columns) and reassembled in index order, so the table is
+/// byte-identical for any thread count.
+pub fn flashpath_with_threads(threads: usize) -> Table {
     let mut t = Table::new(
         "Flash data path — placement x sched x pipeline vs dies/channel (opt-micro, sim)",
         &[
@@ -135,15 +145,35 @@ pub fn flashpath() -> Table {
             "peak_die_q",
         ],
     );
+    let rungs = ladder();
+    let mut configs: Vec<(usize, FlashPathConfig)> = vec![];
     for dies in [1usize, 2, 4] {
-        // the ladder's first rung IS the baseline — run it once and
-        // reuse it for every speedup column (cf. bench shard's n=1 row)
-        let base_dense = run_attention(dies, FlashPathConfig::legacy(), AttnMode::Dense);
-        let base_sparf = run_attention(dies, FlashPathConfig::legacy(), sparf_mode());
-        let (base_dense, base_sparf) = match (base_dense, base_sparf) {
+        for path in &rungs {
+            configs.push((dies, *path));
+        }
+    }
+    let mut runs = crate::sim::par::par_map(threads, configs, |_, (dies, path)| {
+        (
+            dies,
+            path,
+            run_attention(dies, path, AttnMode::Dense),
+            run_attention(dies, path, sparf_mode()),
+        )
+    })
+    .into_iter();
+    for _ in 0..3 {
+        // the ladder's first rung IS the baseline — run once per dies
+        // group and reused for every speedup column in the group
+        let (dies, _, bd, bs) = runs.next().expect("baseline slot");
+        let (base_dense, base_sparf) = match (bd, bs) {
             (Ok(d), Ok(s)) => (d, s),
             (Err(e), _) | (_, Err(e)) => {
                 err_row(&mut t, dies, "legacy".into(), &e);
+                // drop the rest of this dies group, as the serial
+                // sweep's `continue` did
+                for _ in 1..rungs.len() {
+                    let _ = runs.next();
+                }
                 continue;
             }
         };
@@ -161,9 +191,8 @@ pub fn flashpath() -> Table {
             ]
         };
         t.row(mk(FlashPathConfig::legacy(), &base_dense, &base_sparf));
-        for path in ladder().into_iter().skip(1) {
-            let dense = run_attention(dies, path, AttnMode::Dense);
-            let sparf = run_attention(dies, path, sparf_mode());
+        for _ in 1..rungs.len() {
+            let (dies, path, dense, sparf) = runs.next().expect("sweep slot");
             match (dense, sparf) {
                 (Ok(d), Ok(s)) => t.row(mk(path, &d, &s)),
                 (Err(e), _) | (_, Err(e)) => err_row(&mut t, dies, path.label(), &e),

@@ -15,12 +15,32 @@ pub mod shard;
 pub mod tier;
 
 use crate::util::table::Table;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// The serving-dashboard trajectory targets: the subset of `bench all`
 /// that CI stitches across runs (run-numbered artifacts) to track the
 /// system's performance trajectory.
 pub const TRAJECTORY: &[&str] =
     &["fig16", "tier", "shard", "serve", "overlap", "flashpath", "prefix", "attr"];
+
+/// Worker threads for sweep execution (`bench ... --threads`).  The
+/// registry entries are plain `fn()` pointers, so the knob is a
+/// process-global rather than an argument; every sweep point is an
+/// independent fixed-seed simulation reassembled in index order, so the
+/// tables — and the trajectory document minus its wall-clock timing
+/// block — are byte-identical for any value (pinned by `tests/par.rs`
+/// through the `*_with_threads` entry points).
+static BENCH_THREADS: AtomicUsize = AtomicUsize::new(1);
+
+/// Set the sweep worker-thread count (clamped to >= 1).
+pub fn set_threads(n: usize) {
+    BENCH_THREADS.store(n.max(1), Ordering::Relaxed);
+}
+
+/// The sweep worker-thread count (1 = serial).
+pub fn threads() -> usize {
+    BENCH_THREADS.load(Ordering::Relaxed)
+}
 
 /// All paper targets in order; returns rendered tables.
 pub fn run_all() -> Vec<String> {
@@ -36,7 +56,22 @@ pub fn run_all() -> Vec<String> {
 
 /// All paper targets in order as structured tables (JSON dumps, CI).
 pub fn run_all_tables() -> Vec<(&'static str, Table)> {
-    registry().into_iter().map(|(n, f)| (n, f())).collect()
+    run_all_tables_timed().into_iter().map(|(n, t, _)| (n, t)).collect()
+}
+
+/// All paper targets with per-target wall-clock seconds — real time,
+/// not simulated: the only intentionally machine-dependent numbers in
+/// the bench plane, carried by the trajectory document under its
+/// strippable `"timing"` key.
+pub fn run_all_tables_timed() -> Vec<(&'static str, Table, f64)> {
+    registry()
+        .into_iter()
+        .map(|(n, f)| {
+            let t0 = std::time::Instant::now();
+            let t = f();
+            (n, t, t0.elapsed().as_secs_f64())
+        })
+        .collect()
 }
 
 type BenchFn = fn() -> Table;
@@ -81,13 +116,24 @@ pub fn run_one(name: &str) -> Option<Table> {
 /// catches any timing/ordering perturbation even when every table cell
 /// still agrees.
 pub fn canonical_trace_digest() -> anyhow::Result<String> {
+    // runs at the configured `--threads` count: the digest is pinned
+    // thread-count-invariant, so a threaded CI bench-all reproduces the
+    // serial run's fingerprint exactly — that equality IS the
+    // determinism proof the trajectory document carries
+    canonical_trace_digest_with(threads())
+}
+
+/// [`canonical_trace_digest`] at an explicit engine worker-thread count
+/// (the thread-invariance tests compare 1/2/8 directly).
+pub fn canonical_trace_digest_with(threads: usize) -> anyhow::Result<String> {
     use crate::coordinator::{run_open_loop, EngineConfig, InferenceEngine, SchedConfig};
     use crate::runtime::Runtime;
     use crate::workload::{ArrivalGen, LengthProfile, WorkloadGen};
 
     let rt = Runtime::open("artifacts")?;
     let meta = rt.manifest.model.clone();
-    let mut engine = InferenceEngine::new(rt, EngineConfig::micro_for(&meta, 2, false))?;
+    let mut engine =
+        InferenceEngine::new(rt, EngineConfig::micro_for(&meta, 2, false).threads(threads))?;
     let wg = WorkloadGen::new(777, meta.vocab, meta.max_seq, LengthProfile::Fixed, 16, 8);
     let arrivals = ArrivalGen::new(wg, 778, 100.0).take(8);
     crate::obs::install(crate::obs::TraceLevel::Full);

@@ -123,6 +123,15 @@ fn err_row(t: &mut Table, csds: usize, chunk: usize, rate: f64, e: &anyhow::Erro
 }
 
 pub fn overlap() -> Table {
+    overlap_with_threads(super::threads())
+}
+
+/// `bench overlap` at an explicit worker-thread count: the twelve
+/// (csds x chunk x rate) configs each produce an independent fixed-seed
+/// serialized/overlapped pair, fanned out on `sim::par::par_map` and
+/// reassembled in index order, so the table is byte-identical for any
+/// thread count.
+pub fn overlap_with_threads(threads: usize) -> Table {
     let mut t = Table::new(
         "Prefill/decode disaggregation — serialized vs overlapped streams (opt-micro, sim)",
         &[
@@ -140,48 +149,54 @@ pub fn overlap() -> Table {
             "peak_die_q",
         ],
     );
+    let mut configs: Vec<(usize, usize, f64)> = vec![];
     for n_csds in [1usize, 2, 4] {
         for chunk in [1usize, 4] {
             for rate in [100.0f64, 400.0] {
-                let pair = run_pair(n_csds, chunk, rate);
-                let (serial, piped) = match pair {
-                    Ok(p) => p,
-                    Err(e) => {
-                        err_row(&mut t, n_csds, chunk, rate, &e);
-                        continue;
-                    }
-                };
-                let speedup = serial.decode_step_s / piped.decode_step_s.max(1e-30);
-                t.row(vec![
-                    n_csds.to_string(),
-                    chunk.to_string(),
-                    format!("{rate}"),
-                    "serialized".into(),
-                    eng(serial.decode_step_s * 1e3),
-                    "1.0".into(),
-                    eng(serial.ttft_p50_s),
-                    "0".into(),
-                    "-".into(),
-                    "0".into(),
-                    eng(serial.die_busy_s * 1e3),
-                    serial.die_peak_q.to_string(),
-                ]);
-                t.row(vec![
-                    n_csds.to_string(),
-                    chunk.to_string(),
-                    format!("{rate}"),
-                    "overlapped".into(),
-                    eng(piped.decode_step_s * 1e3),
-                    eng(speedup),
-                    eng(piped.ttft_p50_s),
-                    eng(piped.overlapped_s * 1e3),
-                    eng(piped.gpu_idle_s * 1e3),
-                    eng(piped.contention_delay_s * 1e6),
-                    eng(piped.die_busy_s * 1e3),
-                    piped.die_peak_q.to_string(),
-                ]);
+                configs.push((n_csds, chunk, rate));
             }
         }
+    }
+    let runs = crate::sim::par::par_map(threads, configs, |_, (n_csds, chunk, rate)| {
+        (n_csds, chunk, rate, run_pair(n_csds, chunk, rate))
+    });
+    for (n_csds, chunk, rate, pair) in runs {
+        let (serial, piped) = match pair {
+            Ok(p) => p,
+            Err(e) => {
+                err_row(&mut t, n_csds, chunk, rate, &e);
+                continue;
+            }
+        };
+        let speedup = serial.decode_step_s / piped.decode_step_s.max(1e-30);
+        t.row(vec![
+            n_csds.to_string(),
+            chunk.to_string(),
+            format!("{rate}"),
+            "serialized".into(),
+            eng(serial.decode_step_s * 1e3),
+            "1.0".into(),
+            eng(serial.ttft_p50_s),
+            "0".into(),
+            "-".into(),
+            "0".into(),
+            eng(serial.die_busy_s * 1e3),
+            serial.die_peak_q.to_string(),
+        ]);
+        t.row(vec![
+            n_csds.to_string(),
+            chunk.to_string(),
+            format!("{rate}"),
+            "overlapped".into(),
+            eng(piped.decode_step_s * 1e3),
+            eng(speedup),
+            eng(piped.ttft_p50_s),
+            eng(piped.overlapped_s * 1e3),
+            eng(piped.gpu_idle_s * 1e3),
+            eng(piped.contention_delay_s * 1e6),
+            eng(piped.die_busy_s * 1e3),
+            piped.die_peak_q.to_string(),
+        ]);
     }
     t
 }

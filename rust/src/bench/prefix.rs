@@ -124,6 +124,14 @@ fn err_row(t: &mut Table, share: f64, hit: f64, e: &anyhow::Error) {
 }
 
 pub fn prefix() -> Table {
+    prefix_with_threads(super::threads())
+}
+
+/// `bench prefix` at an explicit worker-thread count: the six
+/// (share x hit) configs each produce an independent fixed-seed
+/// cold/warm pair, fanned out on `sim::par::par_map` and reassembled in
+/// index order, so the table is byte-identical for any thread count.
+pub fn prefix_with_threads(threads: usize) -> Table {
     let mut t = Table::new(
         "Cross-request prefix caching — cold vs warm flash KV reuse (opt-micro, sim)",
         &[
@@ -139,42 +147,48 @@ pub fn prefix() -> Table {
             "mapped_pages",
         ],
     );
+    let mut configs: Vec<(f64, f64)> = vec![];
     for share in [0.25f64, 0.5, 1.0] {
         for hit in [0.5f64, 1.0] {
-            let pair = run_pair(share, hit);
-            let (cold, warm) = match pair {
-                Ok(p) => p,
-                Err(e) => {
-                    err_row(&mut t, share, hit, &e);
-                    continue;
-                }
-            };
-            let save = 1.0 - warm.ttft_p50_s / cold.ttft_p50_s.max(1e-30);
-            t.row(vec![
-                format!("{share}"),
-                format!("{hit}"),
-                "cold".into(),
-                cold.prefill_tokens.to_string(),
-                cold.prefix_hit_tokens.to_string(),
-                eng(cold.ttft_p50_s),
-                "0".into(),
-                cold.attaches.to_string(),
-                cold.tokens_attached.to_string(),
-                cold.mapped_pages.to_string(),
-            ]);
-            t.row(vec![
-                format!("{share}"),
-                format!("{hit}"),
-                "warm".into(),
-                warm.prefill_tokens.to_string(),
-                warm.prefix_hit_tokens.to_string(),
-                eng(warm.ttft_p50_s),
-                eng(save),
-                warm.attaches.to_string(),
-                warm.tokens_attached.to_string(),
-                warm.mapped_pages.to_string(),
-            ]);
+            configs.push((share, hit));
         }
+    }
+    let runs = crate::sim::par::par_map(threads, configs, |_, (share, hit)| {
+        (share, hit, run_pair(share, hit))
+    });
+    for (share, hit, pair) in runs {
+        let (cold, warm) = match pair {
+            Ok(p) => p,
+            Err(e) => {
+                err_row(&mut t, share, hit, &e);
+                continue;
+            }
+        };
+        let save = 1.0 - warm.ttft_p50_s / cold.ttft_p50_s.max(1e-30);
+        t.row(vec![
+            format!("{share}"),
+            format!("{hit}"),
+            "cold".into(),
+            cold.prefill_tokens.to_string(),
+            cold.prefix_hit_tokens.to_string(),
+            eng(cold.ttft_p50_s),
+            "0".into(),
+            cold.attaches.to_string(),
+            cold.tokens_attached.to_string(),
+            cold.mapped_pages.to_string(),
+        ]);
+        t.row(vec![
+            format!("{share}"),
+            format!("{hit}"),
+            "warm".into(),
+            warm.prefill_tokens.to_string(),
+            warm.prefix_hit_tokens.to_string(),
+            eng(warm.ttft_p50_s),
+            eng(save),
+            warm.attaches.to_string(),
+            warm.tokens_attached.to_string(),
+            warm.mapped_pages.to_string(),
+        ]);
     }
     t
 }

@@ -133,6 +133,14 @@ fn err_row(t: &mut Table, rate: f64, mode: &str, e: &anyhow::Error) {
 }
 
 pub fn serve() -> Table {
+    serve_with_threads(super::threads())
+}
+
+/// `bench serve` at an explicit worker-thread count: the six sweep
+/// points (3 rates x continuous/offline) are independent fixed-seed
+/// simulations fanned out on `sim::par::par_map` and reassembled in
+/// index order, so the table is byte-identical for any thread count.
+pub fn serve_with_threads(threads: usize) -> Table {
     let mut t = Table::new(
         "Serving — continuous batching vs offline drain across arrival rates (sim)",
         &[
@@ -162,14 +170,19 @@ pub fn serve() -> Table {
             r.die_peak_q.to_string(),
         ]
     };
-    for rate in [25.0f64, 100.0, 400.0] {
-        match run_continuous(rate) {
-            Ok(r) => t.row(row(rate, "continuous", &r)),
-            Err(e) => err_row(&mut t, rate, "continuous", &e),
-        }
-        match run_offline(rate) {
-            Ok(r) => t.row(row(rate, "offline", &r)),
-            Err(e) => err_row(&mut t, rate, "offline", &e),
+    let points: Vec<(f64, bool)> = [25.0f64, 100.0, 400.0]
+        .iter()
+        .flat_map(|&rate| [(rate, true), (rate, false)])
+        .collect();
+    let runs = crate::sim::par::par_map(threads, points, |_, (rate, continuous)| {
+        let res = if continuous { run_continuous(rate) } else { run_offline(rate) };
+        (rate, continuous, res)
+    });
+    for (rate, continuous, res) in runs {
+        let mode = if continuous { "continuous" } else { "offline" };
+        match res {
+            Ok(r) => t.row(row(rate, mode, &r)),
+            Err(e) => err_row(&mut t, rate, mode, &e),
         }
     }
     t

@@ -80,6 +80,15 @@ fn err_row(t: &mut Table, policy: &str, n: usize, e: &anyhow::Error) {
 }
 
 pub fn shard() -> Table {
+    shard_with_threads(super::threads())
+}
+
+/// `bench shard` at an explicit worker-thread count: the single-CSD
+/// baseline plus the six sweep topologies are independent fixed-seed
+/// runs fanned out on `sim::par::par_map` (baseline at index 0 — its
+/// attention time feeds every speedup column) and reassembled in index
+/// order, so the table is byte-identical for any thread count.
+pub fn shard_with_threads(threads: usize) -> Table {
     let mut t = Table::new(
         "Head sharding — decode attention vs CSD count (opt-micro, sim)",
         &[
@@ -94,13 +103,6 @@ pub fn shard() -> Table {
             "peak_die_q",
         ],
     );
-    let base = match run_config(1, ShardPolicy::HeadStripe) {
-        Ok(r) => r,
-        Err(e) => {
-            err_row(&mut t, "stripe", 1, &e);
-            return t;
-        }
-    };
     let row = |r: &ShardRun, policy: ShardPolicy, n: usize, base: &ShardRun| {
         vec![
             policy.label().into(),
@@ -114,8 +116,7 @@ pub fn shard() -> Table {
             r.die_peak_q.to_string(),
         ]
     };
-    t.row(row(&base, ShardPolicy::HeadStripe, 1, &base));
-    let mut sweep: Vec<(ShardPolicy, usize)> = vec![];
+    let mut sweep: Vec<(ShardPolicy, usize)> = vec![(ShardPolicy::HeadStripe, 1)];
     for n in [2usize, 4, 8] {
         sweep.push((ShardPolicy::HeadStripe, n));
     }
@@ -123,8 +124,20 @@ pub fn shard() -> Table {
     for n in [2usize, 4] {
         sweep.push((ShardPolicy::Context, n));
     }
-    for (policy, n) in sweep {
-        match run_config(n, policy) {
+    let configs = sweep.clone();
+    let mut runs =
+        crate::sim::par::par_map(threads, configs, |_, (policy, n)| run_config(n, policy))
+            .into_iter();
+    let base = match runs.next().expect("baseline slot") {
+        Ok(r) => r,
+        Err(e) => {
+            err_row(&mut t, "stripe", 1, &e);
+            return t;
+        }
+    };
+    t.row(row(&base, ShardPolicy::HeadStripe, 1, &base));
+    for (policy, n) in sweep.into_iter().skip(1) {
+        match runs.next().expect("sweep slot") {
             Ok(r) => t.row(row(&r, policy, n, &base)),
             Err(e) => err_row(&mut t, policy.label(), n, &e),
         }

@@ -85,6 +85,15 @@ fn err_row(t: &mut Table, policy: &str, hot_kib: usize, cap: &str, e: &anyhow::E
 }
 
 pub fn tier() -> Table {
+    tier_with_threads(super::threads())
+}
+
+/// `bench tier` at an explicit worker-thread count: the flash-only
+/// baseline plus the nine policy x capacity configs are independent
+/// fixed-seed runs fanned out on `sim::par::par_map` (baseline at index
+/// 0 — its decode time feeds every speedup column) and reassembled in
+/// index order, so the table is byte-identical for any thread count.
+pub fn tier_with_threads(threads: usize) -> Table {
     let mut t = Table::new(
         "KV tiering — hot-tier capacity x policy (DRAM hit rate vs decode time)",
         &[
@@ -99,7 +108,21 @@ pub fn tier() -> Table {
         ],
     );
     let full = working_set_bytes();
-    let base = match run_config(TierConfig::flash_only()) {
+    let policies = [
+        TierPolicy::Lru,
+        TierPolicy::H2oScore,
+        TierPolicy::PinRecentWindow { window: 16 },
+    ];
+    let mut configs = vec![TierConfig::flash_only()];
+    for policy in policies {
+        for frac in [0.125f64, 0.5, 1.0] {
+            configs.push(TierConfig { hot_bytes: (full as f64 * frac) as usize, policy });
+        }
+    }
+    let fracs = [0.125f64, 0.5, 1.0];
+    let mut runs =
+        crate::sim::par::par_map(threads, configs, |_, cfg| run_config(cfg)).into_iter();
+    let base = match runs.next().expect("baseline slot") {
         Ok(r) => r,
         Err(e) => {
             err_row(&mut t, "flash-only", 0, "0%", &e);
@@ -116,16 +139,11 @@ pub fn tier() -> Table {
         eng(base.die_busy_s * 1e3),
         base.die_peak_q.to_string(),
     ]);
-    let policies = [
-        TierPolicy::Lru,
-        TierPolicy::H2oScore,
-        TierPolicy::PinRecentWindow { window: 16 },
-    ];
     for policy in policies {
-        for frac in [0.125f64, 0.5, 1.0] {
+        for frac in fracs {
             let hot_bytes = (full as f64 * frac) as usize;
             let cap = format!("{:.0}%", frac * 100.0);
-            match run_config(TierConfig { hot_bytes, policy }) {
+            match runs.next().expect("sweep slot") {
                 Ok(r) => t.row(vec![
                     policy.label(),
                     (hot_bytes / 1024).to_string(),

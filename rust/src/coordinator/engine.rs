@@ -52,6 +52,10 @@ pub struct EngineConfig {
     /// suffix.  Off keeps the engine bit-identical — outputs AND
     /// timestamps — to the pre-prefix-cache code path.
     pub prefix_cache: bool,
+    /// scoped worker threads for the per-shard dispatch fan-out
+    /// (`sim::par`); 1 = serial.  Any value produces bit-identical
+    /// outputs, metrics and trace exports.
+    pub threads: usize,
 }
 
 impl EngineConfig {
@@ -67,6 +71,7 @@ impl EngineConfig {
             csd_spec,
             shard_policy: ShardPolicy::HeadStripe,
             prefix_cache: false,
+            threads: 1,
         }
     }
 
@@ -116,6 +121,13 @@ impl EngineConfig {
         self.csd_spec.flash.path = path;
         self
     }
+
+    /// Worker threads for the per-shard dispatch fan-out (0 resolves to
+    /// the host's available parallelism).
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = if n == 0 { crate::sim::par::available_threads() } else { n };
+        self
+    }
 }
 
 pub struct InferenceEngine {
@@ -137,7 +149,7 @@ impl InferenceEngine {
         let m = &rt.manifest.model;
         let ftl_cfg = FtlConfig { d_head: m.d_head, m: m.m, n: m.n };
         let topology = ShardTopology::new(cfg.n_csds, cfg.shard_policy, m.n_heads, m.n);
-        let shards = ShardCoordinator::new(
+        let mut shards = ShardCoordinator::new(
             topology,
             cfg.csd_spec,
             ftl_cfg,
@@ -146,6 +158,7 @@ impl InferenceEngine {
             cfg.p2p,
             GpuSpec::a6000(),
         )?;
+        shards.threads = cfg.threads.max(1);
         Ok(InferenceEngine {
             rt,
             cfg,

@@ -213,6 +213,16 @@ pub const SERVE_FLAGS: &[FlagSpec] = &[
                workload (with --prefix-cache)",
     },
     FlagSpec {
+        name: "--threads",
+        alias: None,
+        value: Some("N"),
+        default: "1",
+        help: "worker threads for the deterministic parallel executor: \
+               per-CSD shard dispatch fans out on scoped threads between \
+               all-reduce barriers (0 = all available cores); outputs, \
+               metrics and trace digests are bit-identical for any value",
+    },
+    FlagSpec {
         name: "--trace",
         alias: None,
         value: Some("FILE"),
@@ -297,6 +307,9 @@ pub struct ServeOpts {
     pub flash_path: FlashPathConfig,
     pub prefix_cache: bool,
     pub share_ratio: f64,
+    /// worker threads for the parallel deterministic executor (resolved:
+    /// `--threads 0` already expanded to the available cores)
+    pub threads: usize,
     /// trace output path (None = tracing off)
     pub trace: Option<String>,
     pub trace_level: TraceLevel,
@@ -399,6 +412,12 @@ impl ServeOpts {
         if !(0.0..=1.0).contains(&share_ratio) {
             bail!("--share-ratio must be in [0, 1]");
         }
+        let threads_raw: usize = val("--threads").parse().context("--threads")?;
+        let threads = if threads_raw == 0 {
+            crate::sim::par::available_threads()
+        } else {
+            threads_raw
+        };
         let trace = get("--trace").filter(|v| !v.is_empty()).map(String::from);
         let trace_level = TraceLevel::parse(val("--trace-level"))?;
         let metrics_json = get("--metrics-json").filter(|v| !v.is_empty()).map(String::from);
@@ -425,6 +444,7 @@ impl ServeOpts {
             flash_path,
             prefix_cache,
             share_ratio,
+            threads,
             trace,
             trace_level,
             metrics_json,
@@ -441,6 +461,7 @@ impl ServeOpts {
             .sharded(self.shard_policy)
             .flash_path(self.flash_path)
             .prefix_cached(self.prefix_cache)
+            .threads(self.threads)
     }
 
     /// The scheduler-side config (seats, chunked prefill, slots,
@@ -532,6 +553,9 @@ impl fmt::Display for ServeOpts {
         if self.overlap {
             write!(f, ", overlapped streams")?;
         }
+        if self.threads > 1 {
+            write!(f, ", {} worker threads", self.threads)?;
+        }
         if self.drop_on_resume {
             write!(f, ", drop-on-resume keep {}", self.resume_keep)?;
         }
@@ -569,6 +593,20 @@ mod tests {
         assert_eq!(o.trace_level, TraceLevel::Device);
         assert_eq!(o.metrics_json, None);
         assert_eq!(o.attr_json, None);
+        assert_eq!(o.threads, 1);
+    }
+
+    #[test]
+    fn threads_flag_parses_and_resolves_zero() {
+        let o = ServeOpts::parse(&sv(&["--threads", "4"])).unwrap();
+        assert_eq!(o.threads, 4);
+        assert!(o.to_string().contains("4 worker threads"));
+        let o = ServeOpts::parse(&sv(&["--threads", "0"])).unwrap();
+        assert!(o.threads >= 1, "--threads 0 resolves to available cores");
+        assert!(ServeOpts::parse(&sv(&["--threads", "-1"])).is_err());
+        let meta = crate::runtime::native::micro_meta();
+        let ec = ServeOpts::parse(&sv(&["--threads", "8"])).unwrap().engine_config(&meta);
+        assert_eq!(ec.threads, 8);
     }
 
     #[test]

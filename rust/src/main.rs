@@ -41,13 +41,18 @@ fn usage() -> ! {
          \x20       requests through the FTL's content-addressed index.\n\
          \x20       Flags (generated from the ServeOpts table):\n\
          {}\
-         \x20 bench <target|all> [--json FILE]   regenerate paper figures\n\
-         \x20       (fig4 fig5 fig6 fig11 fig12 fig13 fig14 fig15 fig16\n\
-         \x20       fig17a fig17b table1 tier shard serve overlap flashpath\n\
-         \x20       prefix attr ablate-group ablate-dualk ablate-pipeline\n\
-         \x20       ablate-p2p ablate-placement);\n\
+         \x20 bench <target|all> [--json FILE] [--threads N]   regenerate\n\
+         \x20       paper figures (fig4 fig5 fig6 fig11 fig12 fig13 fig14\n\
+         \x20       fig15 fig16 fig17a fig17b table1 tier shard serve overlap\n\
+         \x20       flashpath prefix attr ablate-group ablate-dualk\n\
+         \x20       ablate-pipeline ablate-p2p ablate-placement);\n\
+         \x20       --threads N fans sweep points out on N worker threads\n\
+         \x20       (0 = all cores; tables are byte-identical for any N);\n\
          \x20       `bench all --json` emits one stitched trajectory document\n\
-         \x20       (schema instinfer-bench-trajectory/v1, run-numbered in CI);\n\
+         \x20       (schema instinfer-bench-trajectory/v1, run-numbered in CI)\n\
+         \x20       with per-target wall-clock timing under its strippable\n\
+         \x20       \"timing\" key; --timing-baseline FILE folds a previous\n\
+         \x20       trajectory document's total into a measured speedup;\n\
          \x20       overlap|prefix|flashpath accept --trace FILE\n\
          \x20       [--trace-level L] to dump one sweep point's timeline\n\
          \x20 bench gate [--bench FILE] [--baseline FILE] [--update]\n\
@@ -344,7 +349,7 @@ fn serve(args: &[String]) -> Result<()> {
     Ok(())
 }
 
-fn bench_tables_json(tables: &[(&str, Table)]) -> Vec<Json> {
+fn bench_tables_json<'a>(tables: impl IntoIterator<Item = (&'a str, &'a Table)>) -> Vec<Json> {
     let mut items = Vec::new();
     for (name, t) in tables {
         if let Json::Obj(mut m) = t.to_json() {
@@ -356,7 +361,7 @@ fn bench_tables_json(tables: &[(&str, Table)]) -> Vec<Json> {
 }
 
 fn write_bench_json(path: &str, tables: &[(&str, Table)]) -> Result<()> {
-    let doc = Json::Arr(bench_tables_json(tables));
+    let doc = Json::Arr(bench_tables_json(tables.iter().map(|(n, t)| (*n, t))));
     std::fs::write(path, format!("{doc}\n")).with_context(|| format!("writing {path}"))?;
     println!("wrote {path}");
     Ok(())
@@ -367,7 +372,17 @@ fn write_bench_json(path: &str, tables: &[(&str, Table)]) -> Result<()> {
 /// out so cross-run stitching knows which targets to chart.  CI names
 /// the uploaded artifact with the run number; `run` carries it inside
 /// the document too (from `GITHUB_RUN_NUMBER` when present).
-fn write_trajectory_json(path: &str, tables: &[(&str, Table)]) -> Result<()> {
+///
+/// The `timing` key is the document's only intentionally
+/// machine-dependent block (per-target and total wall-clock seconds at
+/// the configured thread count, plus the measured speedup against an
+/// optional previous document's total): strip it and two documents from
+/// runs at any `--threads` value must be byte-identical.
+fn write_trajectory_json(
+    path: &str,
+    tables: &[(&str, Table, f64)],
+    baseline_total_wall_s: Option<f64>,
+) -> Result<()> {
     let mut doc = std::collections::BTreeMap::new();
     doc.insert("schema".to_string(), Json::Str("instinfer-bench-trajectory/v1".to_string()));
     let run = std::env::var("GITHUB_RUN_NUMBER").map(Json::Str).unwrap_or(Json::Null);
@@ -386,11 +401,44 @@ fn write_trajectory_json(path: &str, tables: &[(&str, Table)]) -> Result<()> {
             Err(_) => Json::Null,
         },
     );
-    doc.insert("targets".to_string(), Json::Arr(bench_tables_json(tables)));
+    doc.insert(
+        "targets".to_string(),
+        Json::Arr(bench_tables_json(tables.iter().map(|(n, t, _)| (*n, t)))),
+    );
+    let total: f64 = tables.iter().map(|(_, _, s)| s).sum();
+    let mut timing = std::collections::BTreeMap::new();
+    timing.insert("threads".to_string(), Json::Num(bench::threads() as f64));
+    timing.insert("total_wall_s".to_string(), Json::Num(total));
+    timing.insert(
+        "targets".to_string(),
+        Json::Obj(
+            tables.iter().map(|(n, _, s)| (n.to_string(), Json::Num(*s))).collect(),
+        ),
+    );
+    timing.insert(
+        "baseline_total_wall_s".to_string(),
+        baseline_total_wall_s.map(Json::Num).unwrap_or(Json::Null),
+    );
+    timing.insert(
+        "speedup".to_string(),
+        baseline_total_wall_s.map(|b| Json::Num(b / total.max(1e-9))).unwrap_or(Json::Null),
+    );
+    doc.insert("timing".to_string(), Json::Obj(timing));
     let doc = Json::Obj(doc);
     std::fs::write(path, format!("{doc}\n")).with_context(|| format!("writing {path}"))?;
     println!("wrote {path} (stitched trajectory)");
     Ok(())
+}
+
+/// Total wall seconds recorded in a previous trajectory document (the
+/// `--timing-baseline` input for the measured-speedup column).
+fn baseline_total_wall_s(path: &str) -> Result<f64> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let doc = Json::parse(&text).map_err(|e| anyhow::anyhow!("parsing {path}: {e}"))?;
+    doc.get("timing")
+        .and_then(|t| t.get("total_wall_s"))
+        .and_then(|v| v.as_f64())
+        .with_context(|| format!("{path} has no timing.total_wall_s (not a trajectory doc?)"))
 }
 
 fn bench_cmd(args: &[String]) -> Result<()> {
@@ -401,6 +449,7 @@ fn bench_cmd(args: &[String]) -> Result<()> {
     let mut json_path: Option<&str> = None;
     let mut trace_path: Option<&str> = None;
     let mut trace_level = instinfer::obs::TraceLevel::Device;
+    let mut timing_baseline: Option<&str> = None;
     let mut i = 0;
     while i < args.len() {
         match args[i].as_str() {
@@ -408,6 +457,25 @@ fn bench_cmd(args: &[String]) -> Result<()> {
                 json_path = args.get(i + 1).map(|s| s.as_str());
                 if json_path.is_none() {
                     bail!("--json needs a file path");
+                }
+                i += 2;
+            }
+            "--threads" => {
+                let Some(v) = args.get(i + 1) else {
+                    bail!("--threads needs a value (0 = all cores)");
+                };
+                let n: usize = v.parse().with_context(|| format!("--threads {v:?}"))?;
+                bench::set_threads(if n == 0 {
+                    instinfer::sim::par::available_threads()
+                } else {
+                    n
+                });
+                i += 2;
+            }
+            "--timing-baseline" => {
+                timing_baseline = args.get(i + 1).map(|s| s.as_str());
+                if timing_baseline.is_none() {
+                    bail!("--timing-baseline needs a file path");
                 }
                 i += 2;
             }
@@ -455,13 +523,30 @@ fn bench_cmd(args: &[String]) -> Result<()> {
     }
     match target {
         None | Some("all") => {
-            let tables = bench::run_all_tables();
-            for (_, t) in &tables {
+            let baseline_total = match timing_baseline {
+                Some(p) => Some(baseline_total_wall_s(p)?),
+                None => None,
+            };
+            let tables = bench::run_all_tables_timed();
+            for (_, t, _) in &tables {
                 println!();
                 t.print();
             }
+            let total: f64 = tables.iter().map(|(_, _, s)| s).sum();
+            println!("\nbench all wall clock ({} threads):", bench::threads());
+            for (name, _, secs) in &tables {
+                println!("  {name:<16} {secs:>8.3}s");
+            }
+            match baseline_total {
+                Some(b) => println!(
+                    "  {:<16} {total:>8.3}s (baseline {b:.3}s, speedup {:.2}x)",
+                    "total",
+                    b / total.max(1e-9),
+                ),
+                None => println!("  {:<16} {total:>8.3}s", "total"),
+            }
             if let Some(p) = json_path {
-                write_trajectory_json(p, &tables)?;
+                write_trajectory_json(p, &tables, baseline_total)?;
             }
         }
         Some(name) => match bench::run_one(name) {

@@ -195,6 +195,20 @@ pub fn enabled() -> bool {
     ATTR.with(|s| s.borrow().is_some())
 }
 
+/// Append a `sim::par` worker's drained sink into the current thread's
+/// sink, preserving the worker's recording order.  Called in
+/// deterministic item order by `obs::merge_captured`; `extract()` groups
+/// by request id, so the merged report is identical to a serial run's.
+pub fn merge(worker: AttrSink) {
+    ATTR.with(|s| {
+        if let Some(sink) = s.borrow_mut().as_mut() {
+            sink.marks.extend(worker.marks);
+            sink.frames.extend(worker.frames);
+            sink.segs.extend(worker.segs);
+        }
+    });
+}
+
 /// Record a lifecycle mark for `req`.
 pub fn mark(req: u64, kind: MarkKind, ts: Time) {
     ATTR.with(|s| {

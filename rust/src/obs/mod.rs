@@ -325,6 +325,106 @@ pub fn enabled() -> bool {
     SINK.with(|s| s.borrow().is_some())
 }
 
+// ---------------------------------------------------------------------------
+// Capture-and-merge: worker-thread observability for `sim::par`
+// ---------------------------------------------------------------------------
+//
+// The sinks are thread-local, so parallel workers cannot record into the
+// spawning thread's sinks directly.  Instead each worker replicates the
+// spawning thread's installation (`CaptureSpec`), runs with its own
+// sinks, and hands them back (`Captured`); the spawning thread merges
+// them in deterministic item order (`merge_captured`).  Merging appends
+// trace events in the worker's emission order, so chunked fan-out joined
+// in index order reproduces the serial emission sequence exactly — and
+// the export's `(pid, tid, ts, emission)` stable sort does the rest.
+// The one global emission-order artifact in the exported bytes is the
+// flow-edge id: workers allocate dense ids from their own counter, and
+// the merge remaps them through the spawning thread's counter in
+// first-encounter order, which equals serial allocation order.
+
+/// Snapshot of this thread's observability installation, replicated onto
+/// `sim::par` worker threads: trace level, attribution on/off, and the
+/// ambient request scope.
+#[derive(Clone, Copy)]
+pub struct CaptureSpec {
+    level: Option<TraceLevel>,
+    attr_on: bool,
+    req: Option<u64>,
+}
+
+/// One worker's drained sinks, merged back on the spawning thread.
+pub struct Captured {
+    trace: Option<TraceSink>,
+    attr: Option<attr::AttrSink>,
+}
+
+impl CaptureSpec {
+    /// Snapshot the current thread's installation.
+    pub fn of_current() -> CaptureSpec {
+        CaptureSpec {
+            level: SINK.with(|s| s.borrow().as_ref().map(|k| k.level)),
+            attr_on: attr::enabled(),
+            req: cur_req(),
+        }
+    }
+
+    /// Install fresh sinks matching the spec on the current (worker)
+    /// thread.  Idempotent per work item: any previous item's leftover
+    /// state is replaced.
+    pub fn install(&self) {
+        match self.level {
+            Some(level) => install(level),
+            None => {
+                SINK.with(|s| *s.borrow_mut() = None);
+            }
+        }
+        if self.attr_on {
+            attr::install();
+        } else {
+            let _ = attr::uninstall();
+        }
+        CUR_REQ.with(|c| c.set(self.req));
+    }
+}
+
+/// Drain the current (worker) thread's sinks into a `Captured`.
+pub fn capture_take() -> Captured {
+    Captured { trace: uninstall(), attr: attr::uninstall() }
+}
+
+/// Merge one worker's captured sinks into the current thread's sinks.
+/// Call in deterministic item order — trace events append in the
+/// worker's emission order and flow ids are remapped through this
+/// thread's counter, so serial and parallel runs export byte-identical
+/// documents.
+pub fn merge_captured(cap: Captured) {
+    if let Some(worker) = cap.trace {
+        SINK.with(|s| {
+            if let Some(sink) = s.borrow_mut().as_mut() {
+                let mut remap = std::collections::HashMap::<u64, u64>::new();
+                for mut ev in worker.events {
+                    if ev.ph == 's' || ev.ph == 'f' {
+                        if let Some((key, id)) = ev.arg {
+                            let new = *remap.entry(id as u64).or_insert_with(|| {
+                                FLOW_ID.with(|c| {
+                                    let v = c.get();
+                                    c.set(v + 1);
+                                    v
+                                })
+                            });
+                            ev.arg = Some((key, new as f64));
+                        }
+                    }
+                    sink.record(ev);
+                }
+            }
+        });
+    }
+    if let Some(worker) = cap.attr {
+        attr::merge(worker);
+    }
+}
+
 /// RAII guard scoping the ambient CSD device index; restores the
 /// previous value on drop (NVMe submits never nest across devices, but
 /// restoring is cheap and makes the guard composable).

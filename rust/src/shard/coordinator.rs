@@ -21,7 +21,7 @@ use super::merge;
 use super::ShardTopology;
 use crate::config::hw::{CsdSpec, GpuSpec, PcieSpec};
 use crate::config::model::FP16_BYTES;
-use crate::csd::{AttnMode, CsdCommand, InstCsd, NvmeQueue, UnitBreakdown};
+use crate::csd::{AttnMode, CsdCommand, CsdCompletion, InstCsd, NvmeQueue, UnitBreakdown};
 use crate::ftl::{prefix_hashes, FtlConfig};
 use crate::kvtier::{TierConfig, TierStats};
 use crate::obs::attr;
@@ -70,6 +70,11 @@ pub struct ShardCoordinator {
     /// one device link serialize (the NVMe queue runs them one after
     /// another), so their wire windows must chain, not stack
     bg_free: Vec<Time>,
+    /// scoped worker threads for the per-shard fan-out sections between
+    /// all-reduce barriers (1 = serial dispatch on the calling thread).
+    /// Outputs, timestamps, stats and trace exports are bit-identical
+    /// for any value — pinned by `tests/par.rs`.
+    pub threads: usize,
 }
 
 impl ShardCoordinator {
@@ -101,6 +106,7 @@ impl ShardCoordinator {
             overlap_tracking: false,
             bg_ship: Vec::new(),
             bg_free: vec![0.0; n_csds],
+            threads: 1,
         })
     }
 
@@ -243,29 +249,44 @@ impl ShardCoordinator {
         let kparts = self.topology.scatter(k_hd, d);
         let vparts = self.topology.scatter(v_hd, d);
         let qparts = self.topology.scatter(q_hd, d);
+        // fan out: until the all-reduce barrier below, each shard's
+        // command stream is self-contained (own queue, own flash array,
+        // own local clock), so the dispatches run on scoped threads in
+        // contiguous shard chunks; clock advances and stat merges are
+        // applied post-join in shard order, keeping every output,
+        // timestamp and trace byte identical to the serial loop
+        let topology = &self.topology;
+        let comps = crate::sim::par::par_map_mut(
+            self.threads,
+            &mut self.queues,
+            |c, que| -> Result<Option<CsdCompletion>> {
+                let heads = topology.heads_of(c).to_vec();
+                if heads.is_empty() {
+                    // more devices than heads: nothing lives here, so no
+                    // commands, no clock advance, no all-reduce share
+                    return Ok(None);
+                }
+                let wr = que.submit(
+                    CsdCommand::WriteToken {
+                        slot,
+                        layer,
+                        heads: heads.clone(),
+                        k: kparts[c].clone(),
+                        v: vparts[c].clone(),
+                    },
+                    at,
+                )?;
+                let comp = que.submit(
+                    CsdCommand::Attention { slot, layer, heads, q: qparts[c].clone(), len, mode },
+                    wr.done,
+                )?;
+                Ok(Some(comp))
+            },
+        );
         let mut parts: Vec<Vec<f32>> = vec![Vec::new(); n];
         let mut attn_done = vec![at; n];
-        for c in 0..n {
-            let heads = self.topology.heads_of(c).to_vec();
-            if heads.is_empty() {
-                // more devices than heads: nothing lives here, so no
-                // commands, no clock advance, no share of the all-reduce
-                continue;
-            }
-            let wr = self.queues[c].submit(
-                CsdCommand::WriteToken {
-                    slot,
-                    layer,
-                    heads: heads.clone(),
-                    k: kparts[c].clone(),
-                    v: vparts[c].clone(),
-                },
-                at,
-            )?;
-            let comp = self.queues[c].submit(
-                CsdCommand::Attention { slot, layer, heads, q: qparts[c].clone(), len, mode },
-                wr.done,
-            )?;
+        for (c, res) in comps.into_iter().enumerate() {
+            let Some(comp) = res? else { continue };
             attn_done[c] = comp.done;
             self.clock.advance(c, comp.done);
             if let Some(b) = &comp.breakdown {
@@ -346,26 +367,39 @@ impl ShardCoordinator {
             },
             at,
         )?;
+        // fan out the partial-attention dispatches exactly like the
+        // head path: shard streams are independent until the barrier,
+        // clock/stat updates land post-join in shard order
+        let topology = &self.topology;
+        let wr_done = wr.done;
+        let comps = crate::sim::par::par_map_mut(
+            self.threads,
+            &mut self.queues,
+            |c, que| -> Result<Option<CsdCompletion>> {
+                let llen = topology.local_len(c, len);
+                if llen == 0 {
+                    return Ok(None);
+                }
+                let start = if c == owner { wr_done } else { at };
+                let comp = que.submit(
+                    CsdCommand::PartialAttention {
+                        slot,
+                        layer,
+                        heads: all_heads.clone(),
+                        q: q_hd.to_vec(),
+                        local_len: llen,
+                    },
+                    start,
+                )?;
+                Ok(Some(comp))
+            },
+        );
         let mut attn_done = vec![at; n];
         let mut pdata: Vec<Vec<f32>> = vec![Vec::new(); n];
         let mut pstats: Vec<Vec<(f32, f32)>> = vec![Vec::new(); n];
         let mut pweights: Vec<Vec<f32>> = vec![Vec::new(); n];
-        for c in 0..n {
-            let llen = self.topology.local_len(c, len);
-            if llen == 0 {
-                continue;
-            }
-            let start = if c == owner { wr.done } else { at };
-            let comp = self.queues[c].submit(
-                CsdCommand::PartialAttention {
-                    slot,
-                    layer,
-                    heads: all_heads.clone(),
-                    q: q_hd.to_vec(),
-                    local_len: llen,
-                },
-                start,
-            )?;
+        for (c, res) in comps.into_iter().enumerate() {
+            let Some(comp) = res? else { continue };
             attn_done[c] = comp.done;
             self.clock.advance(c, comp.done);
             if let Some(b) = &comp.breakdown {
@@ -476,28 +510,34 @@ impl ShardCoordinator {
             "prefill rows mismatch"
         );
         anyhow::ensure!(skip <= len, "prefix skip {skip} > prompt {len}");
-        let mut done = at;
-        if self.topology.splits_context() {
-            for c in 0..self.topology.n_csds {
-                let llen = self.topology.local_len(c, len);
+        // fan out: each shard's K/V gather (the CPU-heavy slice
+        // assembly) and its WritePrefillLayer submit are independent of
+        // every other shard's; background-ship registration and clock
+        // advances are applied post-join in shard order, so the wire
+        // windows chain — and the trace exports byte-match — exactly as
+        // in the serial loop
+        let topology = &self.topology;
+        let ships: Vec<Result<Option<(f64, Time)>>> = if topology.splits_context() {
+            crate::sim::par::par_map_mut(self.threads, &mut self.queues, |c, que| {
+                let llen = topology.local_len(c, len);
                 // this shard's share of the attached prefix is already
                 // resident at local positions [0, lskip)
-                let lskip = self.topology.local_len(c, skip);
+                let lskip = topology.local_len(c, skip);
                 if llen == lskip {
-                    continue;
+                    return Ok(None);
                 }
                 let mut kp = Vec::with_capacity(h * (llen - lskip) * d);
                 let mut vp = Vec::with_capacity(h * (llen - lskip) * d);
                 for hh in 0..h {
                     for lt in lskip..llen {
-                        let t = self.topology.to_global(c, lt);
+                        let t = topology.to_global(c, lt);
                         let base = (hh * sp + t) * d;
                         kp.extend_from_slice(&k_seq[base..base + d]);
                         vp.extend_from_slice(&v_seq[base..base + d]);
                     }
                 }
                 let ship_bytes = ((kp.len() + vp.len()) * FP16_BYTES) as f64;
-                let comp = self.queues[c].submit(
+                let comp = que.submit(
                     CsdCommand::WritePrefillLayer {
                         slot,
                         layer,
@@ -508,20 +548,16 @@ impl ShardCoordinator {
                     },
                     at,
                 )?;
-                if self.overlap_tracking {
-                    self.note_prefill_ship(c, at, ship_bytes, comp.done);
-                }
-                self.clock.advance(c, comp.done);
-                done = done.max(comp.done);
-            }
+                Ok(Some((ship_bytes, comp.done)))
+            })
         } else {
-            for c in 0..self.topology.n_csds {
-                let heads = self.topology.heads_of(c).to_vec();
+            crate::sim::par::par_map_mut(self.threads, &mut self.queues, |c, que| {
+                let heads = topology.heads_of(c).to_vec();
                 if heads.is_empty() {
-                    continue; // more devices than heads: nothing lives here
+                    return Ok(None); // more devices than heads: nothing lives here
                 }
                 if skip == len {
-                    continue; // whole prompt attached: nothing to ship
+                    return Ok(None); // whole prompt attached: nothing to ship
                 }
                 let mut kp = Vec::with_capacity(heads.len() * (len - skip) * d);
                 let mut vp = Vec::with_capacity(heads.len() * (len - skip) * d);
@@ -531,7 +567,7 @@ impl ShardCoordinator {
                     vp.extend_from_slice(&v_seq[base + skip * d..base + len * d]);
                 }
                 let ship_bytes = ((kp.len() + vp.len()) * FP16_BYTES) as f64;
-                let comp = self.queues[c].submit(
+                let comp = que.submit(
                     CsdCommand::WritePrefillLayer {
                         slot,
                         layer,
@@ -542,12 +578,17 @@ impl ShardCoordinator {
                     },
                     at,
                 )?;
-                if self.overlap_tracking {
-                    self.note_prefill_ship(c, at, ship_bytes, comp.done);
-                }
-                self.clock.advance(c, comp.done);
-                done = done.max(comp.done);
+                Ok(Some((ship_bytes, comp.done)))
+            })
+        };
+        let mut done = at;
+        for (c, res) in ships.into_iter().enumerate() {
+            let Some((ship_bytes, comp_done)) = res? else { continue };
+            if self.overlap_tracking {
+                self.note_prefill_ship(c, at, ship_bytes, comp_done);
             }
+            self.clock.advance(c, comp_done);
+            done = done.max(comp_done);
         }
         Ok(done)
     }

@@ -8,8 +8,16 @@
 //! these primitives, and per-unit busy counters feed the latency-breakdown
 //! figures (Figs. 5/14/15/16).
 
+pub mod par;
+
 /// Simulated time in seconds.
 pub type Time = f64;
+
+/// Completions kept per resource for backlog-depth accounting.  A burst
+/// deeper than this saturates the depth tracking (the true peak is
+/// recorded before capping), but a burst with no later arrivals can no
+/// longer hold its completion list forever.
+const IN_SYSTEM_CAP: usize = 4096;
 
 /// A serial FIFO resource (one job at a time): a flash die, a PCIe link,
 /// a DMA engine, the argtopk unit...
@@ -19,7 +27,9 @@ pub struct FifoResource {
     busy: Time,
     jobs: u64,
     /// completion times of jobs still in the system (waiting or in
-    /// service) relative to the last arrival — pruned on each schedule
+    /// service) relative to the last arrival — sorted ascending (ends
+    /// are monotone), prefix-pruned on each schedule, capped at
+    /// `IN_SYSTEM_CAP` newest entries
     in_system: Vec<Time>,
     peak_depth: usize,
 }
@@ -38,9 +48,27 @@ impl FifoResource {
         self.free_at = end;
         self.busy += service;
         self.jobs += 1;
-        self.in_system.retain(|&e| e > arrival);
+        // ends are monotone non-decreasing (end_k+1 = max(end_k, a) + s),
+        // so completed jobs form a prefix: drain it instead of scanning
+        let done = self.in_system.partition_point(|&e| e <= arrival);
+        if done > 0 {
+            self.in_system.drain(..done);
+            // a burst's worth of capacity should not outlive the burst
+            if self.in_system.capacity() > IN_SYSTEM_CAP
+                && self.in_system.len() <= IN_SYSTEM_CAP / 2
+            {
+                self.in_system.shrink_to_fit();
+            }
+        }
         self.in_system.push(end);
         self.peak_depth = self.peak_depth.max(self.in_system.len());
+        // cap AFTER recording the peak: drop the oldest completions (they
+        // finish first anyway), so a burst with no later arrivals cannot
+        // hold the whole vector until reset
+        if self.in_system.len() > IN_SYSTEM_CAP {
+            let excess = self.in_system.len() - IN_SYSTEM_CAP;
+            self.in_system.drain(..excess);
+        }
         (start, end)
     }
 
@@ -167,6 +195,41 @@ mod tests {
         assert_eq!((s3, e3), (10.0, 11.0));
         assert_eq!(r.busy(), 6.0);
         assert_eq!(r.jobs(), 3);
+    }
+
+    #[test]
+    fn fifo_in_system_is_capped_and_prefix_pruned() {
+        let mut r = FifoResource::new();
+        // a burst with no later arrivals: every job lands at t=0 and the
+        // backlog only grows — the cap must bound the vector while the
+        // peak keeps counting the true depth
+        for _ in 0..(IN_SYSTEM_CAP + 100) {
+            r.schedule(0.0, 1.0);
+        }
+        assert!(r.in_system.len() <= IN_SYSTEM_CAP);
+        assert_eq!(r.peak_depth(), IN_SYSTEM_CAP + 100);
+        // the survivors are the newest completions, still sorted
+        assert!(r.in_system.windows(2).all(|w| w[0] <= w[1]));
+        // a late arrival past the backlog drains everything completed
+        let drain_at = r.free_at() + 1.0;
+        r.schedule(drain_at, 1.0);
+        assert_eq!(r.in_system.len(), 1);
+        assert_eq!(r.peak_depth(), IN_SYSTEM_CAP + 100);
+    }
+
+    #[test]
+    fn fifo_prefix_prune_matches_retain_semantics() {
+        // interleaved idle gaps and overlap: depth accounting must match
+        // the old retain(|e| e > arrival) scan exactly
+        let mut r = FifoResource::new();
+        r.schedule(0.0, 2.0); // in system: [2]
+        r.schedule(1.0, 2.0); // arrival 1.0 < 2 -> [2, 4], depth 2
+        assert_eq!(r.peak_depth(), 2);
+        r.schedule(3.0, 1.0); // 2 completed -> [4, 5], depth stays 2
+        assert_eq!(r.peak_depth(), 2);
+        r.schedule(10.0, 1.0); // idle gap clears all -> [11]
+        assert_eq!(r.in_system.len(), 1);
+        assert_eq!(r.peak_depth(), 2);
     }
 
     #[test]

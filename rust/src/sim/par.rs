@@ -1,0 +1,171 @@
+//! Deterministic parallel execution over `std::thread::scope` — zero
+//! new dependencies.
+//!
+//! Two shapes cover every fan-out in the codebase:
+//!
+//! * [`par_map_mut`] — in-place fan-out over a mutable slice in
+//!   contiguous ascending chunks, one scoped thread per chunk, joined in
+//!   chunk order.  Used for the per-CSD shard loops: each shard's
+//!   command stream is self-contained between all-reduce barriers (the
+//!   per-CSD `ShardClock`s and `NvmeQueue`s share no state), so the
+//!   chunked join reproduces the serial emission order exactly.
+//! * [`par_map`] — consuming fan-out over independent work items on a
+//!   bounded worker pool with work stealing (atomic next-index).  Used
+//!   for the bench sweeps: every sweep point is an independent
+//!   fixed-seed simulation, and results are reassembled in item-index
+//!   order regardless of which worker ran which item.
+//!
+//! Determinism contract: the observability sinks (`TraceSink`,
+//! `AttrSink`) are thread-local, so each worker runs with its own sinks
+//! (replicated from the spawning thread via `obs::CaptureSpec`) and the
+//! spawning thread merges them back in item/chunk index order
+//! (`obs::merge_captured`).  Together with the export's
+//! `(pid, tid, ts, emission)` stable sort this makes trace exports,
+//! digests, metrics snapshots and all simulation outputs byte-identical
+//! for any thread count — pinned by `tests/par.rs`.
+//!
+//! `threads <= 1` (or a single item) short-circuits to a plain serial
+//! loop on the calling thread with no capture round-trip, so the default
+//! configuration has zero overhead.
+
+use crate::obs;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Worker threads the host offers (`--threads 0` resolves to this).
+pub fn available_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run `f(index, item)` for every item on up to `threads` scoped worker
+/// threads and return the results in item order.  Workers pull items via
+/// an atomic cursor (work stealing), so wall-clock tracks the slowest
+/// items rather than the unluckiest static partition; observability is
+/// captured per item and merged in index order, so outputs are
+/// byte-identical to the serial loop for any thread count.
+///
+/// A panic inside `f` propagates to the caller (the scope re-raises it
+/// on join), matching the serial loop's behavior.
+pub fn par_map<I, T, F>(threads: usize, items: Vec<I>, f: F) -> Vec<T>
+where
+    I: Send,
+    T: Send,
+    F: Fn(usize, I) -> T + Sync,
+{
+    let n = items.len();
+    if threads <= 1 || n <= 1 {
+        return items.into_iter().enumerate().map(|(i, x)| f(i, x)).collect();
+    }
+    let spec = obs::CaptureSpec::of_current();
+    let work: Vec<Mutex<Option<I>>> = items.into_iter().map(|x| Mutex::new(Some(x))).collect();
+    let slots: Vec<Mutex<Option<(T, obs::Captured)>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..threads.min(n) {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let item = work[i].lock().unwrap().take().expect("work item taken twice");
+                spec.install();
+                let out = f(i, item);
+                *slots[i].lock().unwrap() = Some((out, obs::capture_take()));
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|slot| {
+            let (out, cap) = slot
+                .into_inner()
+                .unwrap_or_else(|e| e.into_inner())
+                .expect("worker left a result slot empty");
+            obs::merge_captured(cap);
+            out
+        })
+        .collect()
+}
+
+/// Run `f(index, &mut item)` over a mutable slice, split into contiguous
+/// ascending chunks of one scoped thread each, joined (and observability
+/// merged) in chunk order.  Because the chunks are contiguous and merged
+/// in order, the concatenated emission sequence equals the serial
+/// loop's, making this the right shape for the per-shard NVMe dispatch
+/// loops.  Results come back in item order.
+pub fn par_map_mut<I, T, F>(threads: usize, items: &mut [I], f: F) -> Vec<T>
+where
+    I: Send,
+    T: Send,
+    F: Fn(usize, &mut I) -> T + Sync,
+{
+    let n = items.len();
+    if threads <= 1 || n <= 1 {
+        return items.iter_mut().enumerate().map(|(i, x)| f(i, x)).collect();
+    }
+    let spec = obs::CaptureSpec::of_current();
+    let chunk = n.div_ceil(threads.min(n));
+    let mut out: Vec<T> = Vec::with_capacity(n);
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for (w, slice) in items.chunks_mut(chunk).enumerate() {
+            let spec = &spec;
+            let f = &f;
+            handles.push(s.spawn(move || {
+                spec.install();
+                let base = w * chunk;
+                let res: Vec<T> =
+                    slice.iter_mut().enumerate().map(|(j, x)| f(base + j, x)).collect();
+                (res, obs::capture_take())
+            }));
+        }
+        for h in handles {
+            match h.join() {
+                Ok((res, cap)) => {
+                    obs::merge_captured(cap);
+                    out.extend(res);
+                }
+                Err(payload) => std::panic::resume_unwind(payload),
+            }
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_preserves_item_order() {
+        for threads in [1usize, 2, 8] {
+            let items: Vec<usize> = (0..17).collect();
+            let out = par_map(threads, items, |i, x| {
+                assert_eq!(i, x);
+                x * 3
+            });
+            assert_eq!(out, (0..17).map(|x| x * 3).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn par_map_mut_mutates_in_place_in_order() {
+        for threads in [1usize, 3, 8] {
+            let mut items: Vec<usize> = vec![0; 10];
+            let out = par_map_mut(threads, &mut items, |i, x| {
+                *x = i + 1;
+                i * 2
+            });
+            assert_eq!(items, (1..=10).collect::<Vec<_>>());
+            assert_eq!(out, (0..10).map(|i| i * 2).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn empty_and_single_inputs_stay_serial() {
+        let out: Vec<usize> = par_map(8, Vec::<usize>::new(), |_, x| x);
+        assert!(out.is_empty());
+        let out = par_map(8, vec![41usize], |_, x| x + 1);
+        assert_eq!(out, vec![42]);
+    }
+}

@@ -1,0 +1,131 @@
+//! Thread-count invariance: the scoped-thread executor must be
+//! bit-identical to serial execution — same generated tokens, same
+//! simulated timestamps, same metrics snapshots, same trace bytes —
+//! for any worker-thread count.  These tests pin the determinism
+//! contract `sim::par` promises: per-shard command streams are
+//! self-contained between all-reduce barriers, sweep points are
+//! independent fixed-seed simulations, and captured observability
+//! sinks merge back in index order.
+
+use instinfer::bench;
+use instinfer::coordinator::{
+    run_closed_loop, run_open_loop, EngineConfig, InferenceEngine, SchedConfig,
+};
+use instinfer::runtime::Runtime;
+use instinfer::workload::{ArrivalGen, LengthProfile, WorkloadGen};
+
+/// One traced open-loop serve at 2 CSDs: everything observable —
+/// outputs, per-request timestamps, the unified metrics snapshot, and
+/// the full-level trace bytes — folded into one comparable bundle.
+fn traced_open_loop(threads: usize) -> (Vec<(u64, Vec<i32>, String)>, String, String) {
+    let rt = Runtime::open("artifacts").unwrap();
+    let meta = rt.manifest.model.clone();
+    let cfg = EngineConfig::micro_for(&meta, 2, false).threads(threads);
+    let mut engine = InferenceEngine::new(rt, cfg).unwrap();
+    let wg = WorkloadGen::new(777, meta.vocab, meta.max_seq, LengthProfile::Fixed, 16, 8);
+    let arrivals = ArrivalGen::new(wg, 778, 100.0).take(8);
+    instinfer::obs::install(instinfer::obs::TraceLevel::Full);
+    let report = run_open_loop(&mut engine, arrivals, SchedConfig::serving(4, 2, 16)).unwrap();
+    let sink = instinfer::obs::uninstall().unwrap();
+    let mut recs = report.records.clone();
+    recs.sort_by_key(|r| r.id);
+    let outputs: Vec<(u64, Vec<i32>, String)> = recs
+        .iter()
+        .map(|r| {
+            (
+                r.id,
+                r.generated.clone(),
+                format!("{:.9}/{:.9}/{:.9}", r.arrived_at, r.first_token_at, r.finished_at),
+            )
+        })
+        .collect();
+    let metrics = engine.metrics_registry(&report.overlap).to_json().to_string();
+    (outputs, metrics, sink.export())
+}
+
+#[test]
+fn traced_serve_is_thread_count_invariant() {
+    let base = traced_open_loop(1);
+    for n in [2usize, 4] {
+        let run = traced_open_loop(n);
+        assert_eq!(run.0, base.0, "outputs/timestamps diverged at {n} threads");
+        assert_eq!(run.1, base.1, "metrics snapshot diverged at {n} threads");
+        assert_eq!(run.2, base.2, "trace bytes diverged at {n} threads");
+    }
+}
+
+/// Closed-loop decode across a 4-CSD array: the widest per-shard
+/// fan-out the micro topology offers.
+fn sharded_closed_loop(threads: usize) -> (Vec<Vec<i32>>, String) {
+    let rt = Runtime::open("artifacts").unwrap();
+    let meta = rt.manifest.model.clone();
+    let cfg = EngineConfig::micro_for(&meta, 4, false).threads(threads);
+    let mut engine = InferenceEngine::new(rt, cfg).unwrap();
+    let mut wg = WorkloadGen::new(4242, meta.vocab, meta.max_seq, LengthProfile::Fixed, 20, 8);
+    let reqs = wg.batch(4);
+    let report = run_closed_loop(
+        &mut engine,
+        reqs,
+        SchedConfig { max_batch: 4, prefill_chunk: 2, slots: 8, ..Default::default() },
+    )
+    .unwrap();
+    let mut recs = report.records.clone();
+    recs.sort_by_key(|r| r.id);
+    let outputs = recs.iter().map(|r| r.generated.clone()).collect();
+    let metrics = engine.metrics_registry(&report.overlap).to_json().to_string();
+    (outputs, metrics)
+}
+
+#[test]
+fn sharded_decode_is_thread_count_invariant() {
+    let base = sharded_closed_loop(1);
+    for n in [2usize, 8] {
+        assert_eq!(sharded_closed_loop(n), base, "4-CSD run diverged at {n} threads");
+    }
+}
+
+#[test]
+fn canonical_trace_digest_is_thread_count_invariant() {
+    let base = bench::canonical_trace_digest_with(1).unwrap();
+    for n in [2usize, 8] {
+        assert_eq!(
+            bench::canonical_trace_digest_with(n).unwrap(),
+            base,
+            "canonical digest diverged at {n} threads"
+        );
+    }
+}
+
+#[test]
+fn bench_serve_table_is_thread_count_invariant() {
+    let base = bench::serve::serve_with_threads(1).render();
+    for n in [2usize, 8] {
+        assert_eq!(bench::serve::serve_with_threads(n).render(), base);
+    }
+}
+
+#[test]
+fn bench_tier_table_is_thread_count_invariant() {
+    let base = bench::tier::tier_with_threads(1).render();
+    assert_eq!(bench::tier::tier_with_threads(4).render(), base);
+}
+
+#[test]
+fn bench_shard_table_is_thread_count_invariant() {
+    let base = bench::shard::shard_with_threads(1).render();
+    assert_eq!(bench::shard::shard_with_threads(4).render(), base);
+}
+
+#[test]
+fn bench_flashpath_table_is_thread_count_invariant() {
+    let base = bench::flashpath::flashpath_with_threads(1).render();
+    for n in [3usize, 8] {
+        assert_eq!(bench::flashpath::flashpath_with_threads(n).render(), base);
+    }
+}
+
+#[test]
+fn bench_fig16_table_is_thread_count_invariant() {
+    let base = bench::figures::fig16_with_threads(1).render();
+    assert_eq!(bench::figures::fig16_with_threads(2).render(), base);
+}
