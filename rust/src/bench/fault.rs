@@ -1,0 +1,192 @@
+//! `bench fault` — the fault-plane sweep: recovery policy x per-op
+//! fault rate under a scheduled mid-run CSD loss.  Closes the ROADMAP
+//! "degraded-mode serving" dashboard item: what does each recovery
+//! policy cost in goodput, tail latency and availability when a device
+//! dies while requests are in flight?
+//!
+//! Every point serves the identical fixed-seed Poisson trace the serve
+//! bench uses; a fault-free probe run first measures the healthy
+//! `sim_end`, and the loss is anchored at 50% of it so the death lands
+//! mid-decode for every policy.  The `faultfree` row is the reference:
+//! by the fault plane's bit-identity contract its cells match `bench
+//! serve`'s continuous row at the same rate.
+//!
+//! Expected shape: `retry` keeps the replacement device for new traffic
+//! only (in-flight work aborts — availability drops, goodput with it);
+//! `reprefill` re-runs lost prefills (everything completes, tail
+//! latency pays the re-prefill); `replicated` restores from the peer
+//! mirror (everything completes, recovery_ms pays the restore and the
+//! mirror writes tax the healthy path).
+
+use crate::coordinator::{run_open_loop, EngineConfig, InferenceEngine, SchedConfig};
+use crate::fault::{FaultConfig, RecoveryPolicy};
+use crate::runtime::Runtime;
+use crate::util::table::{eng, Table};
+use crate::workload::{ArrivalGen, LengthProfile, WorkloadGen};
+
+const PROMPT: usize = 16;
+const GEN: usize = 8;
+const REQUESTS: usize = 8;
+const SEATS: usize = 4;
+const ARRIVAL_RATE: f64 = 100.0;
+/// Base seed of every per-device fault stream in the sweep.
+const FAULT_SEED: u64 = 7;
+/// The device the scheduled loss kills (head-striped pair: csd1).
+const LOST_DEV: usize = 1;
+
+struct FaultRun {
+    goodput_tok_s: f64,
+    p50_latency_s: f64,
+    p95_latency_s: f64,
+    served: usize,
+    aborted: usize,
+    restarts: u64,
+    recovery_ms: f64,
+    nvme_timeouts: u64,
+    flash_retries: u64,
+    availability: f64,
+}
+
+fn engine(fault: FaultConfig) -> anyhow::Result<InferenceEngine> {
+    let rt = Runtime::open("artifacts")?;
+    let meta = rt.manifest.model.clone();
+    InferenceEngine::new(rt, EngineConfig::micro_for(&meta, 2, false).faults(fault))
+}
+
+fn arrivals(engine: &InferenceEngine) -> Vec<crate::workload::Arrival> {
+    let m = &engine.rt.manifest.model;
+    let wg = WorkloadGen::new(777, m.vocab, m.max_seq, LengthProfile::Fixed, PROMPT, GEN);
+    ArrivalGen::new(wg, 778, ARRIVAL_RATE).take(REQUESTS)
+}
+
+fn sched() -> SchedConfig {
+    SchedConfig::serving(SEATS, 2, 16)
+}
+
+/// Fault-free probe: the healthy run's `sim_end`, which anchors the
+/// scheduled loss at its midpoint for every sweep point.
+fn probe_end() -> anyhow::Result<f64> {
+    let mut engine = engine(FaultConfig::none())?;
+    let arr = arrivals(&engine);
+    let report = run_open_loop(&mut engine, arr, sched())?;
+    Ok(report.sim_end)
+}
+
+fn run_point(fault: FaultConfig) -> anyhow::Result<FaultRun> {
+    let mut engine = engine(fault)?;
+    let arr = arrivals(&engine);
+    let report = run_open_loop(&mut engine, arr, sched())?;
+    let [p50, p95, _] = report.latency_percentiles().unwrap_or([0.0; 3]);
+    let served = report.served().count();
+    // goodput counts completed requests' tokens only: an aborted
+    // request's pre-loss output is wasted work, not serving
+    let good_toks: u64 = report.served().map(|r| r.generated.len() as u64).sum();
+    let reg = engine.metrics_registry(&report.overlap);
+    Ok(FaultRun {
+        goodput_tok_s: good_toks as f64 / report.sim_end.max(1e-12),
+        p50_latency_s: p50,
+        p95_latency_s: p95,
+        served,
+        aborted: report.aborted_count(),
+        restarts: engine.metrics.restarts,
+        recovery_ms: engine.metrics.recovery_s * 1e3,
+        nvme_timeouts: reg.value("fault.nvme_timeouts").unwrap_or(0.0) as u64,
+        flash_retries: reg.value("fault.flash_read_retries").unwrap_or(0.0) as u64,
+        availability: served as f64 / REQUESTS as f64,
+    })
+}
+
+fn err_row(t: &mut Table, policy: &str, rate: f64, e: &anyhow::Error) {
+    t.row(vec![
+        policy.into(),
+        format!("{rate}"),
+        "ERR".into(),
+        format!("{e:#}"),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+    ]);
+}
+
+pub fn fault() -> Table {
+    fault_with_threads(super::threads())
+}
+
+/// `bench fault` at an explicit worker-thread count: the probe runs
+/// first (it anchors every point's loss time), then the sweep points
+/// fan out on `sim::par::par_map` and reassemble in index order, so the
+/// table is byte-identical for any thread count.
+pub fn fault_with_threads(threads: usize) -> Table {
+    let mut t = Table::new(
+        "Fault plane — recovery policy x fault rate under a mid-run CSD loss (sim)",
+        &[
+            "policy",
+            "fault_rate",
+            "goodput_tok_s",
+            "p50_latency_s",
+            "p95_latency_s",
+            "served",
+            "aborted",
+            "restarts",
+            "recovery_ms",
+            "nvme_timeouts",
+            "flash_retries",
+            "availability",
+        ],
+    );
+    let row = |policy: &str, rate: f64, r: &FaultRun| {
+        vec![
+            policy.into(),
+            format!("{rate}"),
+            eng(r.goodput_tok_s),
+            eng(r.p50_latency_s),
+            eng(r.p95_latency_s),
+            r.served.to_string(),
+            r.aborted.to_string(),
+            r.restarts.to_string(),
+            eng(r.recovery_ms),
+            r.nvme_timeouts.to_string(),
+            r.flash_retries.to_string(),
+            format!("{:.3}", r.availability),
+        ]
+    };
+    let loss_at = match probe_end() {
+        Ok(end) => end * 0.5,
+        Err(e) => {
+            err_row(&mut t, "probe", 0.0, &e);
+            return t;
+        }
+    };
+    // (policy, per-op rate, scheduled loss?) — the first point is the
+    // fault-free reference row
+    let mut points: Vec<(RecoveryPolicy, f64, bool)> = vec![(RecoveryPolicy::RePrefill, 0.0, false)];
+    for policy in [RecoveryPolicy::RetryOnly, RecoveryPolicy::RePrefill, RecoveryPolicy::Replicated]
+    {
+        for rate in [0.0, 2e-3] {
+            points.push((policy, rate, true));
+        }
+    }
+    let runs = crate::sim::par::par_map(threads, points, |_, (policy, rate, loss)| {
+        let fault = FaultConfig {
+            seed: FAULT_SEED,
+            rate,
+            csd_loss: loss.then_some((LOST_DEV, loss_at)),
+            recovery: policy,
+            kv_replicas: u8::from(loss && policy == RecoveryPolicy::Replicated),
+        };
+        (policy, rate, loss, run_point(fault))
+    });
+    for (policy, rate, loss, res) in runs {
+        let label = if loss { policy.label() } else { "faultfree" };
+        match res {
+            Ok(r) => t.row(row(label, rate, &r)),
+            Err(e) => err_row(&mut t, label, rate, &e),
+        }
+    }
+    t
+}

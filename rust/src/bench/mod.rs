@@ -5,6 +5,7 @@
 
 pub mod accuracy;
 pub mod attr;
+pub mod fault;
 pub mod figures;
 pub mod flashpath;
 pub mod gate;
@@ -21,7 +22,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 /// that CI stitches across runs (run-numbered artifacts) to track the
 /// system's performance trajectory.
 pub const TRAJECTORY: &[&str] =
-    &["fig16", "tier", "shard", "serve", "overlap", "flashpath", "prefix", "attr"];
+    &["fig16", "tier", "shard", "serve", "overlap", "flashpath", "prefix", "attr", "fault"];
 
 /// Worker threads for sweep execution (`bench ... --threads`).  The
 /// registry entries are plain `fn()` pointers, so the knob is a
@@ -98,6 +99,7 @@ pub fn registry() -> Vec<(&'static str, BenchFn)> {
         ("flashpath", flashpath::flashpath),
         ("prefix", prefix::prefix),
         ("attr", attr::attr),
+        ("fault", fault::fault),
         ("ablate-group", figures::ablate_group),
         ("ablate-dualk", figures::ablate_dualk),
         ("ablate-pipeline", figures::ablate_pipeline),

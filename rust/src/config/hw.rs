@@ -288,6 +288,9 @@ pub struct CsdSpec {
     /// software-defined InstCSD is backed by a 2 TB 980pro (§V-B, §VI-A),
     /// which is what the capacity gate in the timing plane uses.
     pub kv_capacity_bytes: u64,
+    /// Fault-injection knobs (`FaultConfig::none()` = fault plane off;
+    /// the default everywhere keeps the engine bit-identical).
+    pub fault: crate::fault::FaultConfig,
 }
 
 impl CsdSpec {
@@ -309,6 +312,7 @@ impl CsdSpec {
             dram_bw: 4.2e9, // Zynq PS-side DDR3 (~4.2 GB/s effective)
             hot_tier_bytes: 1 << 30, // half the 2 GB DRAM as KV hot tier
             kv_capacity_bytes: 2_000_000_000_000, // 2 TB 980pro backing
+            fault: crate::fault::FaultConfig::none(),
         }
     }
 
@@ -326,6 +330,7 @@ impl CsdSpec {
             dram_bw: 1.0e9,
             hot_tier_bytes: 0, // unit tests opt in explicitly
             kv_capacity_bytes: FlashSpec::tiny().usable_capacity_bytes() as u64,
+            fault: crate::fault::FaultConfig::none(),
         }
     }
 

@@ -128,6 +128,14 @@ impl EngineConfig {
         self.threads = if n == 0 { crate::sim::par::available_threads() } else { n };
         self
     }
+
+    /// Arm the deterministic fault plane for every CSD in the array
+    /// (`FaultConfig::none()` keeps the engine bit-identical to the
+    /// fault-free build).
+    pub fn faults(mut self, f: crate::fault::FaultConfig) -> Self {
+        self.csd_spec.fault = f;
+        self
+    }
 }
 
 pub struct InferenceEngine {
@@ -147,6 +155,13 @@ pub struct InferenceEngine {
 impl InferenceEngine {
     pub fn new(rt: Runtime, cfg: EngineConfig) -> Result<Self> {
         let m = &rt.manifest.model;
+        if cfg.csd_spec.fault.kv_replicas > 0 {
+            anyhow::ensure!(
+                !cfg.prefix_cache,
+                "--kv-replicas is incompatible with --prefix-cache \
+                 (refcount-shared sealed groups are not mirrored)"
+            );
+        }
         let ftl_cfg = FtlConfig { d_head: m.d_head, m: m.m, n: m.n };
         let topology = ShardTopology::new(cfg.n_csds, cfg.shard_policy, m.n_heads, m.n);
         let mut shards = ShardCoordinator::new(
@@ -599,6 +614,38 @@ impl InferenceEngine {
         Ok(())
     }
 
+    /// Whether any part of the fault plane is armed on this engine.
+    pub fn fault_active(&self) -> bool {
+        self.cfg.csd_spec.fault.any_active()
+    }
+
+    /// Device already dead at the engine clock, if any (CSD backend
+    /// only — the ablation backend has no CSD array to lose).
+    pub fn dead_device(&self) -> Option<usize> {
+        if !matches!(self.cfg.backend, AttnBackend::Csd(_)) {
+            return None;
+        }
+        self.shards.dead_device(self.sim_now)
+    }
+
+    /// Replace lost device `dev` and — under the replicated policy —
+    /// restore its streams from the peer mirrors.  Advances the engine
+    /// clock past the restore and returns the recovery wall window
+    /// `(t0, t1)` for attribution.  Sequence-level consequences
+    /// (aborts/restarts) are the scheduler's job.
+    pub fn recover_lost_device(&mut self, dev: usize) -> Result<(Time, Time)> {
+        let t0 = self.sim_now;
+        crate::obs::device_instant(dev, "csd_loss", t0);
+        self.shards.replace_device(dev)?;
+        if self.shards.recovery_policy() == crate::fault::RecoveryPolicy::Replicated {
+            let t = self.shards.restore_from_replica(dev, t0)?;
+            self.sim_now = self.sim_now.max(t);
+        }
+        crate::obs::device_instant(dev, "recovery_done", self.sim_now);
+        self.metrics.recovery_s += self.sim_now - t0;
+        Ok((t0, self.sim_now))
+    }
+
     /// Aggregate hot-tier statistics across the CSD array.
     pub fn tier_stats(&self) -> TierStats {
         self.shards.tier_stats()
@@ -705,6 +752,21 @@ impl InferenceEngine {
         r.gauge("shard.prefill_ship_bytes", st.prefill_ship_bytes);
         r.counter("shard.contended_merges", st.contended_merges);
         r.gauge("shard.contention_delay_s", st.contention_delay_s);
+        // fault plane: pre-seeded (all zeros with faults off) so the
+        // snapshot's name set stays config-independent
+        let ft = self.shards.fault_totals();
+        r.counter("fault.nvme_timeouts", ft.nvme_timeouts);
+        r.gauge("fault.nvme_retry_s", ft.nvme_retry_s);
+        r.counter("fault.flash_ecc_corrected", ft.flash_ecc_corrected);
+        r.counter("fault.flash_read_retries", ft.flash_read_retries);
+        r.counter("fault.flash_bad_blocks", ft.flash_bad_blocks);
+        r.counter("fault.csd_losses", st.csd_losses);
+        r.counter("fault.recoveries", st.recoveries);
+        r.gauge("fault.replica_bytes", st.replica_bytes);
+        r.gauge("fault.restore_bytes", st.restore_bytes);
+        r.counter("fault.restarts", m.restarts);
+        r.counter("fault.aborted_requests", m.aborted_requests);
+        r.gauge("fault.recovery_s", m.recovery_s);
         r.gauge("overlap.prefill_busy_s", overlap.prefill_busy_s);
         r.gauge("overlap.decode_busy_s", overlap.decode_busy_s);
         r.gauge("overlap.overlapped_s", overlap.overlapped_s);
@@ -783,6 +845,7 @@ impl CsdSpec {
             dram_bw: 8e9,
             hot_tier_bytes: 0,
             kv_capacity_bytes: flash.usable_capacity_bytes() as u64,
+            fault: crate::fault::FaultConfig::none(),
         }
     }
 }

@@ -67,6 +67,14 @@ pub struct EngineMetrics {
     /// co-scheduled admission's prefill + KV ship; overlapped: the
     /// decode stream only)
     pub busy_step_sim_s: Time,
+    // ---- fault plane ---------------------------------------------------
+    /// sequences reset to re-prefill after a device loss
+    pub restarts: u64,
+    /// requests aborted by the retry-only recovery policy
+    pub aborted_requests: u64,
+    /// simulated time spent in post-loss recovery (replacement build,
+    /// replica restore, restart bookkeeping)
+    pub recovery_s: Time,
 }
 
 impl EngineMetrics {

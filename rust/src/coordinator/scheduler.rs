@@ -34,6 +34,7 @@ use crate::coordinator::engine::{AttnBackend, InferenceEngine};
 use crate::coordinator::kvmgr::SlotManager;
 use crate::coordinator::metrics::EngineMetrics;
 use crate::coordinator::request::{RequestPhase, Sequence};
+use crate::fault::{FaultError, RecoveryPolicy};
 use crate::obs::attr;
 use crate::pipeline::{OverlapStats, PipelineState};
 use crate::sim::Time;
@@ -41,6 +42,15 @@ use crate::util::stats::percentile;
 use crate::workload::{Arrival, Request};
 use anyhow::{bail, Result};
 use std::collections::HashMap;
+
+/// The device behind an error completion, when the error is a whole-CSD
+/// loss (the one fault class the scheduler recovers from in-line).
+fn lost_device(e: &anyhow::Error) -> Option<usize> {
+    match e.downcast_ref::<FaultError>() {
+        Some(FaultError::DeviceLost { dev }) => Some(*dev),
+        _ => None,
+    }
+}
 
 #[derive(Debug, Clone)]
 pub struct SchedConfig {
@@ -128,6 +138,10 @@ pub struct RequestRecord {
     /// admission rejected the request (empty or over-long prompt); no
     /// tokens were generated and no slot was ever held
     pub rejected: bool,
+    /// the retry-only recovery policy aborted the request at a device
+    /// loss (its KV died with the device; `generated` holds whatever was
+    /// produced before the loss)
+    pub aborted: bool,
 }
 
 /// What one engine step did (for logs and tests).
@@ -149,6 +163,10 @@ pub struct StepReport {
     /// overlap executor: sequences still mid-prefill on the GPU stream
     /// at the end of this step
     pub prefill_inflight: usize,
+    /// in-flight sequences a device-loss recovery touched this step
+    /// (kept decoding on restored replicas, reset to re-prefill, or
+    /// aborted — per the configured [`RecoveryPolicy`])
+    pub recovered: usize,
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -334,7 +352,15 @@ impl Scheduler {
         engine.shards.set_overlap_tracking(false);
         let mut rep = StepReport::default();
         self.steps += 1;
-        rep.retired += self.retire(engine)?;
+        // a scheduled CSD loss may have fired between steps (or the idle
+        // fast-forward jumped the clock past it): recover before
+        // dispatching anything at the dead device
+        if engine.fault_active() {
+            if let Some(dev) = engine.dead_device() {
+                self.recover_loss(engine, dev, &mut rep)?;
+            }
+        }
+        self.retire(engine, &mut rep)?;
         let t_in = engine.sim_now;
 
         let now = engine.sim_now;
@@ -347,38 +373,67 @@ impl Scheduler {
                 self.slots.commit(s.slot)?;
             }
             let bucket = engine.bucket_for(cohort.len());
-            engine.prefill(&mut cohort, bucket)?;
-            let first_token_at = engine.sim_now;
-            for s in &cohort {
-                crate::obs::req_instant(s.req.id, "admit", now);
-                crate::obs::req_span(s.req.id, "prefill", now, first_token_at);
-                attr::mark(s.req.id, attr::MarkKind::Admit, now);
-                attr::frame(s.req.id, attr::FrameKind::Prefill, now, first_token_at);
-                if let Some(m) = self.meta.get_mut(&s.req.id) {
-                    crate::obs::flow(
-                        "admit",
-                        crate::obs::TraceLevel::Request,
-                        (crate::obs::PID_REQUESTS, s.req.id, m.arrived_at),
-                        (crate::obs::PID_REQUESTS, s.req.id, now),
-                    );
-                    m.admitted_at = now;
-                    m.first_token_at = first_token_at;
+            let mut prefilled = true;
+            if let Err(e) = engine.prefill(&mut cohort, bucket) {
+                let Some(dev) = lost_device(&e) else { return Err(e) };
+                let keep = engine.shards.recovery_policy() == RecoveryPolicy::Replicated;
+                if !keep {
+                    // the half-prefilled cohort joins the in-flight set
+                    // so the policy handler restarts or aborts it along
+                    // with everything else
+                    self.running.append(&mut cohort);
+                }
+                self.recover_loss(engine, dev, &mut rep)?;
+                if keep {
+                    // KV intact: replay — idempotent pos-aware writes
+                    // skip the layers that already shipped
+                    engine.prefill(&mut cohort, bucket)?;
+                } else {
+                    prefilled = false;
                 }
             }
-            engine.metrics.admissions += cohort.len() as u64;
-            rep.admitted = cohort.len();
-            self.running.append(&mut cohort);
+            if prefilled {
+                let first_token_at = engine.sim_now;
+                for s in &cohort {
+                    crate::obs::req_instant(s.req.id, "admit", now);
+                    crate::obs::req_span(s.req.id, "prefill", now, first_token_at);
+                    attr::mark(s.req.id, attr::MarkKind::Admit, now);
+                    attr::frame(s.req.id, attr::FrameKind::Prefill, now, first_token_at);
+                    if let Some(m) = self.meta.get_mut(&s.req.id) {
+                        crate::obs::flow(
+                            "admit",
+                            crate::obs::TraceLevel::Request,
+                            (crate::obs::PID_REQUESTS, s.req.id, m.arrived_at),
+                            (crate::obs::PID_REQUESTS, s.req.id, now),
+                        );
+                        m.admitted_at = now;
+                        m.first_token_at = first_token_at;
+                    }
+                }
+                engine.metrics.admissions += cohort.len() as u64;
+                rep.admitted = cohort.len();
+                self.running.append(&mut cohort);
+            }
         }
 
         // prefill alone can finish a request (max_new_tokens == 1):
         // retire before decoding so it never gets an extra token
-        rep.retired += self.retire(engine)?;
+        self.retire(engine, &mut rep)?;
 
         // ---- one decode step over the live batch ----------------------
         if !self.running.is_empty() {
             let bucket = engine.bucket_for(self.running.len());
             let d0 = engine.sim_now;
-            engine.decode_step(&mut self.running, bucket)?;
+            if let Err(e) = engine.decode_step(&mut self.running, bucket) {
+                let Some(dev) = lost_device(&e) else { return Err(e) };
+                if self.recover_loss(engine, dev, &mut rep)? && !self.running.is_empty() {
+                    // KV intact (replica restore): replay the whole step
+                    // — surviving shards skip the writes they already
+                    // applied, so outputs match the fault-free run
+                    let bucket = engine.bucket_for(self.running.len());
+                    engine.decode_step(&mut self.running, bucket)?;
+                }
+            }
             if crate::obs::enabled() {
                 for s in &self.running {
                     crate::obs::req_span(s.req.id, "decode_step", d0, engine.sim_now);
@@ -391,7 +446,7 @@ impl Scheduler {
             }
         }
         rep.occupancy = self.running.len();
-        rep.retired += self.retire(engine)?;
+        self.retire(engine, &mut rep)?;
         if rep.occupancy > 0 {
             engine.metrics.busy_steps += 1;
             engine.metrics.busy_step_sim_s += engine.sim_now - t_in;
@@ -410,7 +465,12 @@ impl Scheduler {
         engine.shards.set_overlap_tracking(true);
         let mut rep = StepReport::default();
         self.steps += 1;
-        rep.retired += self.retire(engine)?;
+        if engine.fault_active() {
+            if let Some(dev) = engine.dead_device() {
+                self.recover_loss(engine, dev, &mut rep)?;
+            }
+        }
+        self.retire(engine, &mut rep)?;
 
         let seats = self.cfg.max_batch.min(engine.max_bucket());
         // the decode plane is empty and nothing can resume — either no
@@ -434,7 +494,7 @@ impl Scheduler {
         self.running.extend(joined);
         // prefill alone can finish a request (max_new_tokens == 1):
         // retire at the join so it never gets an extra token
-        rep.retired += self.retire(engine)?;
+        self.retire(engine, &mut rep)?;
 
         let now = engine.sim_now;
         // parked cohorts hold seats: admission planning must count them
@@ -453,7 +513,13 @@ impl Scheduler {
         } else {
             let d0 = engine.sim_now;
             let bucket = engine.bucket_for(self.running.len());
-            engine.decode_step(&mut self.running, bucket)?;
+            if let Err(e) = engine.decode_step(&mut self.running, bucket) {
+                let Some(dev) = lost_device(&e) else { return Err(e) };
+                if self.recover_loss(engine, dev, &mut rep)? && !self.running.is_empty() {
+                    let bucket = engine.bucket_for(self.running.len());
+                    engine.decode_step(&mut self.running, bucket)?;
+                }
+            }
             if crate::obs::enabled() {
                 for s in &self.running {
                     crate::obs::req_span(s.req.id, "decode_step", d0, engine.sim_now);
@@ -475,36 +541,54 @@ impl Scheduler {
             }
             let bucket = engine.bucket_for(cohort.len());
             let start = now.max(self.pipeline.prefill_free);
-            let ready = engine.prefill_stage(&mut cohort, bucket, start)?;
-            for s in &cohort {
-                crate::obs::req_instant(s.req.id, "admit", now);
-                crate::obs::req_span(s.req.id, "prefill", start, ready);
-                attr::mark(s.req.id, attr::MarkKind::Admit, now);
-                attr::frame(s.req.id, attr::FrameKind::Prefill, start, ready);
-                if let Some(m) = self.meta.get_mut(&s.req.id) {
-                    crate::obs::flow(
-                        "admit",
-                        crate::obs::TraceLevel::Request,
-                        (crate::obs::PID_REQUESTS, s.req.id, m.arrived_at),
-                        (crate::obs::PID_REQUESTS, s.req.id, now),
-                    );
-                    // TTFT is pinned to the prefill STREAM's completion,
-                    // not to the end of the decode step that later
-                    // absorbs the cohort
-                    m.admitted_at = ready;
-                    m.first_token_at = ready;
+            let ready = match engine.prefill_stage(&mut cohort, bucket, start) {
+                Ok(t) => Some(t),
+                Err(e) => {
+                    let Some(dev) = lost_device(&e) else { return Err(e) };
+                    let keep = engine.shards.recovery_policy() == RecoveryPolicy::Replicated;
+                    if !keep {
+                        self.running.append(&mut cohort);
+                    }
+                    self.recover_loss(engine, dev, &mut rep)?;
+                    if keep {
+                        let s2 = start.max(engine.sim_now);
+                        Some(engine.prefill_stage(&mut cohort, bucket, s2)?)
+                    } else {
+                        None
+                    }
                 }
+            };
+            if let Some(ready) = ready {
+                for s in &cohort {
+                    crate::obs::req_instant(s.req.id, "admit", now);
+                    crate::obs::req_span(s.req.id, "prefill", start, ready);
+                    attr::mark(s.req.id, attr::MarkKind::Admit, now);
+                    attr::frame(s.req.id, attr::FrameKind::Prefill, start, ready);
+                    if let Some(m) = self.meta.get_mut(&s.req.id) {
+                        crate::obs::flow(
+                            "admit",
+                            crate::obs::TraceLevel::Request,
+                            (crate::obs::PID_REQUESTS, s.req.id, m.arrived_at),
+                            (crate::obs::PID_REQUESTS, s.req.id, now),
+                        );
+                        // TTFT is pinned to the prefill STREAM's completion,
+                        // not to the end of the decode step that later
+                        // absorbs the cohort
+                        m.admitted_at = ready;
+                        m.first_token_at = ready;
+                    }
+                }
+                engine.metrics.admissions += cohort.len() as u64;
+                rep.admitted = cohort.len();
+                self.pipeline.park(cohort, start, ready);
             }
-            engine.metrics.admissions += cohort.len() as u64;
-            rep.admitted = cohort.len();
-            self.pipeline.park(cohort, start, ready);
         }
         if let Some((d0, d1)) = decode_span {
             // accounted after the park so this tick's overlap with the
             // cohort it launched is counted too
             self.pipeline.note_decode(d0, d1);
         }
-        rep.retired += self.retire(engine)?;
+        self.retire(engine, &mut rep)?;
         if rep.occupancy > 0 {
             engine.metrics.busy_steps += 1;
             engine.metrics.busy_step_sim_s += engine.sim_now - t_in;
@@ -565,6 +649,7 @@ impl Scheduler {
                         generated: Vec::new(),
                         preemptions: 0,
                         rejected: true,
+                        aborted: false,
                     });
                     rep.rejected += 1;
                     continue;
@@ -704,11 +789,130 @@ impl Scheduler {
         Ok(())
     }
 
+    /// Recover from the loss of CSD `dev`: replace the device (and under
+    /// the replicated policy restore its KV from the peer mirrors), then
+    /// apply the policy's sequence-level consequences — keep decoding
+    /// (Replicated), reset every in-flight sequence to re-prefill
+    /// (RePrefill), or abort them (RetryOnly).  Returns whether in-flight
+    /// KV survived (i.e. the caller may replay the failed operation).
+    fn recover_loss(
+        &mut self,
+        engine: &mut InferenceEngine,
+        dev: usize,
+        rep: &mut StepReport,
+    ) -> Result<bool> {
+        let policy = engine.shards.recovery_policy();
+        let (rt0, rt1) = engine.recover_lost_device(dev)?;
+        // the outage window on every in-flight request's track: a frame
+        // fully covered by a Recovery segment keeps the per-request
+        // wall-time identity intact by construction (when the window
+        // falls inside a later decode frame, the segment still lands in
+        // that frame's weighted split)
+        if attr::enabled() && rt1 > rt0 {
+            for s in self.running.iter().chain(self.pipeline.pending_iter()) {
+                let _req = crate::obs::ReqScope::enter(s.req.id);
+                attr::frame(s.req.id, attr::FrameKind::Decode, rt0, rt1);
+                attr::seg(attr::Bucket::Recovery, rt0, rt1, rt1 - rt0);
+            }
+        }
+        match policy {
+            RecoveryPolicy::Replicated => {
+                rep.recovered += self.running.len() + self.pipeline.pending_seqs();
+                Ok(true)
+            }
+            RecoveryPolicy::RePrefill => {
+                self.restart_in_flight(engine, rep)?;
+                Ok(false)
+            }
+            RecoveryPolicy::RetryOnly => {
+                self.abort_in_flight(engine, rep)?;
+                Ok(false)
+            }
+        }
+    }
+
+    /// RePrefill recovery: every in-flight sequence (running, suspended,
+    /// or parked mid-pipeline) lost part of its KV with the device, so
+    /// free the surviving stripes, return the slots, and put the
+    /// requests back in the arrival queue.  They re-admit through the
+    /// normal planner and regenerate from scratch — the model is
+    /// deterministic, so the final outputs match the fault-free run.
+    fn restart_in_flight(
+        &mut self,
+        engine: &mut InferenceEngine,
+        rep: &mut StepReport,
+    ) -> Result<()> {
+        let mut seqs: Vec<Sequence> = Vec::new();
+        seqs.append(&mut self.running);
+        seqs.append(&mut self.suspended);
+        seqs.extend(self.pipeline.drain_all());
+        for s in seqs {
+            engine.free_sequence(&s)?;
+            self.slots.release(s.slot)?;
+            engine.metrics.restarts += 1;
+            rep.recovered += 1;
+            crate::obs::req_instant(s.req.id, "restart", engine.sim_now);
+            // the id is already in seen_ids and keeps its meta (arrival
+            // stamp, priority, preemption count) — requeue directly
+            // instead of enqueue()
+            let (at, priority) = {
+                let m = &self.meta[&s.req.id];
+                (m.arrived_at, m.priority)
+            };
+            self.queue.push(Arrival { req: s.req, at, priority });
+        }
+        Ok(())
+    }
+
+    /// RetryOnly recovery: in-flight sequences abort (their KV died with
+    /// the device); the replacement serves queued traffic only.
+    fn abort_in_flight(
+        &mut self,
+        engine: &mut InferenceEngine,
+        rep: &mut StepReport,
+    ) -> Result<()> {
+        let mut seqs: Vec<Sequence> = Vec::new();
+        seqs.append(&mut self.running);
+        seqs.append(&mut self.suspended);
+        seqs.extend(self.pipeline.drain_all());
+        for mut s in seqs {
+            s.finish();
+            engine.free_sequence(&s)?;
+            self.slots.release(s.slot)?;
+            engine.metrics.aborted_requests += 1;
+            rep.recovered += 1;
+            crate::obs::req_instant(s.req.id, "abort", engine.sim_now);
+            attr::mark(s.req.id, attr::MarkKind::Retire, engine.sim_now);
+            let m = self.meta.remove(&s.req.id).unwrap_or_else(|| ReqMeta {
+                priority: 0,
+                arrived_at: 0.0,
+                admitted_at: 0.0,
+                first_token_at: 0.0,
+                preemptions: 0,
+            });
+            self.finished.push(RequestRecord {
+                id: s.req.id,
+                priority: m.priority,
+                arrived_at: m.arrived_at,
+                admitted_at: m.admitted_at,
+                first_token_at: m.first_token_at,
+                finished_at: engine.sim_now,
+                prompt_len: s.req.prompt.len(),
+                generated: s.generated,
+                preemptions: m.preemptions,
+                rejected: false,
+                aborted: true,
+            });
+        }
+        Ok(())
+    }
+
     /// Drop finished (or context-exhausted) sequences from the batch,
-    /// freeing their KV slot and FTL streams immediately.
-    fn retire(&mut self, engine: &mut InferenceEngine) -> Result<usize> {
+    /// freeing their KV slot and FTL streams immediately.  A `FreeSlot`
+    /// that lands on a just-lost device triggers recovery and retries
+    /// against the replacement (a clean device frees as a no-op).
+    fn retire(&mut self, engine: &mut InferenceEngine, rep: &mut StepReport) -> Result<()> {
         let max_seq = engine.rt.manifest.model.max_seq;
-        let mut retired = 0;
         let mut i = 0;
         while i < self.running.len() {
             let done = {
@@ -721,7 +925,11 @@ impl Scheduler {
             }
             let mut s = self.running.swap_remove(i);
             s.finish();
-            engine.free_sequence(&s)?;
+            if let Err(e) = engine.free_sequence(&s) {
+                let Some(dev) = lost_device(&e) else { return Err(e) };
+                self.recover_loss(engine, dev, rep)?;
+                engine.free_sequence(&s)?;
+            }
             self.slots.release(s.slot)?;
             engine.metrics.requests_done += 1;
             engine.metrics.retirements += 1;
@@ -745,10 +953,11 @@ impl Scheduler {
                 generated: s.generated,
                 preemptions: m.preemptions,
                 rejected: false,
+                aborted: false,
             });
-            retired += 1;
+            rep.retired += 1;
         }
-        Ok(retired)
+        Ok(())
     }
 }
 
@@ -777,13 +986,16 @@ impl ServeReport {
         ])
     }
 
-    /// Records of requests that were actually served (not rejected).
-    fn served(&self) -> impl Iterator<Item = &RequestRecord> {
-        self.records.iter().filter(|r| !r.rejected)
+    /// Records of requests that were served to completion — neither
+    /// rejected at admission nor aborted at a device loss by the
+    /// retry-only recovery policy (the goodput set).
+    pub fn served(&self) -> impl Iterator<Item = &RequestRecord> {
+        self.records.iter().filter(|r| !r.rejected && !r.aborted)
     }
 
     /// p50/p95/p99 of request latency (arrival -> retirement, sim time).
-    /// Rejected requests are excluded — they never held a seat.
+    /// Rejected and aborted requests are excluded — the percentiles
+    /// describe the traffic the degraded array still completed.
     pub fn latency_percentiles(&self) -> Option<[f64; 3]> {
         Self::percentiles(
             self.served()
@@ -810,11 +1022,17 @@ impl ServeReport {
         self.records.iter().filter(|r| r.rejected).count()
     }
 
+    /// Requests the retry-only recovery policy aborted at a device loss.
+    pub fn aborted_count(&self) -> usize {
+        self.records.iter().filter(|r| r.aborted).count()
+    }
+
     pub fn summary(&self, metrics: &EngineMetrics) -> String {
         let rejected = self.rejected_count();
+        let aborted = self.aborted_count();
         let mut out = format!(
             "served {} requests in {} steps — {} tokens, sim_end {:.4}s, {}",
-            self.records.len() - rejected,
+            self.records.len() - rejected - aborted,
             self.steps,
             self.total_generated(),
             self.sim_end,
@@ -822,6 +1040,9 @@ impl ServeReport {
         );
         if rejected > 0 {
             out.push_str(&format!("\nrejected {rejected} invalid requests at admission"));
+        }
+        if aborted > 0 {
+            out.push_str(&format!("\naborted {aborted} in-flight requests at device loss"));
         }
         if let Some([p50, p95, p99]) = self.latency_percentiles() {
             out.push_str(&format!(
@@ -882,7 +1103,8 @@ pub fn run_open_loop(
             || rep.resumed > 0
             || rep.retired > 0
             || rep.rejected > 0
-            || rep.joined > 0;
+            || rep.joined > 0
+            || rep.recovered > 0;
         if !progressed {
             stalled_steps += 1;
             if stalled_steps > 3 {

@@ -213,6 +213,40 @@ pub const SERVE_FLAGS: &[FlagSpec] = &[
                workload (with --prefix-cache)",
     },
     FlagSpec {
+        name: "--fault-seed",
+        alias: None,
+        value: Some("S"),
+        default: "0",
+        help: "base seed of the deterministic per-device fault streams \
+               (same seed + same --threads => same faults, bit-identical)",
+    },
+    FlagSpec {
+        name: "--fault-rate",
+        alias: None,
+        value: Some("R"),
+        default: "0",
+        help: "per-operation fault probability for flash page reads and \
+               NVMe commands (0 = fault plane off, bit-identical to the \
+               fault-free engine)",
+    },
+    FlagSpec {
+        name: "--recovery",
+        alias: None,
+        value: Some("P"),
+        default: "reprefill",
+        help: "post-CSD-loss KV recovery policy: retry (abort in-flight) \
+               | reprefill (re-run lost prefills) | replicated (restore \
+               from the peer mirror; needs --kv-replicas 1)",
+    },
+    FlagSpec {
+        name: "--kv-replicas",
+        alias: None,
+        value: Some("N"),
+        default: "0",
+        help: "mirror sealed KV writes to N peer CSDs (0 or 1; needs \
+               >= 2 CSDs, head sharding, and no --prefix-cache)",
+    },
+    FlagSpec {
         name: "--threads",
         alias: None,
         value: Some("N"),
@@ -307,6 +341,9 @@ pub struct ServeOpts {
     pub flash_path: FlashPathConfig,
     pub prefix_cache: bool,
     pub share_ratio: f64,
+    /// deterministic fault plane (seed/rate/recovery/replication;
+    /// `FaultConfig::none()` when every knob is at its default)
+    pub fault: crate::fault::FaultConfig,
     /// worker threads for the parallel deterministic executor (resolved:
     /// `--threads 0` already expanded to the available cores)
     pub threads: usize,
@@ -412,6 +449,40 @@ impl ServeOpts {
         if !(0.0..=1.0).contains(&share_ratio) {
             bail!("--share-ratio must be in [0, 1]");
         }
+        let fault_seed: u64 = val("--fault-seed").parse().context("--fault-seed")?;
+        let fault_rate: f64 = val("--fault-rate").parse().context("--fault-rate")?;
+        if !(0.0..=1.0).contains(&fault_rate) {
+            bail!("--fault-rate must be in [0, 1]");
+        }
+        let recovery = crate::fault::RecoveryPolicy::parse(val("--recovery"))?;
+        let kv_replicas: u8 = val("--kv-replicas").parse().context("--kv-replicas")?;
+        if kv_replicas > 1 {
+            bail!("--kv-replicas supports 0 or 1 (one peer mirror per stream)");
+        }
+        if kv_replicas > 0 {
+            if n_csds < 2 {
+                bail!("--kv-replicas needs --n-csds >= 2 (the mirror lives on a peer CSD)");
+            }
+            if shard_policy == ShardPolicy::Context {
+                bail!("--kv-replicas supports head sharding only (stripe|block)");
+            }
+            if prefix_cache {
+                bail!(
+                    "--kv-replicas is incompatible with --prefix-cache \
+                     (refcount-shared sealed groups are not mirrored)"
+                );
+            }
+        }
+        if recovery == crate::fault::RecoveryPolicy::Replicated && kv_replicas == 0 {
+            bail!("--recovery replicated needs --kv-replicas 1");
+        }
+        let fault = crate::fault::FaultConfig {
+            seed: fault_seed,
+            rate: fault_rate,
+            csd_loss: None,
+            recovery,
+            kv_replicas,
+        };
         let threads_raw: usize = val("--threads").parse().context("--threads")?;
         let threads = if threads_raw == 0 {
             crate::sim::par::available_threads()
@@ -444,6 +515,7 @@ impl ServeOpts {
             flash_path,
             prefix_cache,
             share_ratio,
+            fault,
             threads,
             trace,
             trace_level,
@@ -461,6 +533,7 @@ impl ServeOpts {
             .sharded(self.shard_policy)
             .flash_path(self.flash_path)
             .prefix_cached(self.prefix_cache)
+            .faults(self.fault)
             .threads(self.threads)
     }
 
@@ -562,6 +635,16 @@ impl fmt::Display for ServeOpts {
         if self.prefix_cache {
             write!(f, ", prefix-cache (share ratio {:.2})", self.share_ratio)?;
         }
+        if self.fault.any_active() {
+            write!(
+                f,
+                ", faults (seed {} rate {} recovery {} replicas {})",
+                self.fault.seed,
+                self.fault.rate,
+                self.fault.recovery.label(),
+                self.fault.kv_replicas,
+            )?;
+        }
         if let Some(p) = &self.trace {
             write!(f, ", trace {} -> {p}", self.trace_level.label())?;
         }
@@ -647,6 +730,36 @@ mod tests {
         assert!(ServeOpts::parse(&sv(&["--share-ratio", "1.5"])).is_err());
         assert!(ServeOpts::parse(&sv(&["--arrival-rate", "0"])).is_err());
         assert!(ServeOpts::parse(&sv(&["--n-csds", "0"])).is_err());
+    }
+
+    #[test]
+    fn fault_flags_parse_and_validate() {
+        use crate::fault::RecoveryPolicy;
+        let o = ServeOpts::default();
+        assert!(!o.fault.any_active(), "default serve is fault-free");
+        let o = ServeOpts::parse(&sv(&[
+            "--fault-seed", "9", "--fault-rate", "0.01", "--recovery", "replicated",
+            "--kv-replicas", "1",
+        ]))
+        .unwrap();
+        assert_eq!(o.fault.seed, 9);
+        assert_eq!(o.fault.rate, 0.01);
+        assert_eq!(o.fault.recovery, RecoveryPolicy::Replicated);
+        assert_eq!(o.fault.kv_replicas, 1);
+        assert!(o.to_string().contains("recovery replicated"));
+        let meta = crate::runtime::native::micro_meta();
+        assert_eq!(o.engine_config(&meta).csd_spec.fault, o.fault);
+        // invalid combinations are caught at parse time, once
+        assert!(ServeOpts::parse(&sv(&["--fault-rate", "1.5"])).is_err());
+        assert!(ServeOpts::parse(&sv(&["--kv-replicas", "2"])).is_err());
+        assert!(ServeOpts::parse(&sv(&["--recovery", "replicated"])).is_err());
+        assert!(ServeOpts::parse(&sv(&["--recovery", "bogus"])).is_err());
+        assert!(ServeOpts::parse(&sv(&["--kv-replicas", "1", "--n-csds", "1"])).is_err());
+        assert!(ServeOpts::parse(&sv(&[
+            "--kv-replicas", "1", "--shard-policy", "context"
+        ]))
+        .is_err());
+        assert!(ServeOpts::parse(&sv(&["--kv-replicas", "1", "--prefix-cache"])).is_err());
     }
 
     #[test]

@@ -179,6 +179,20 @@ impl InstCsd {
         })
     }
 
+    /// Per-head embedding dimension this engine was configured with.
+    pub fn head_dim(&self) -> usize {
+        self.d_head
+    }
+
+    /// Arm the flash-layer fault injector for this engine (device index
+    /// `dev` seeds an independent per-device RNG stream).  A config with
+    /// `rate == 0` leaves the read path untouched.
+    pub fn install_fault(&mut self, cfg: &crate::fault::FaultConfig, dev: usize) {
+        if cfg.injecting() {
+            self.ftl.array.install_fault(cfg, dev);
+        }
+    }
+
     fn argtopk_time(&self, elems: usize) -> Time {
         elems as f64 / self.spec.argtopk_elems_per_s
     }
@@ -404,10 +418,26 @@ impl InstCsd {
     /// Register a just-prefilled slot's sealed prefix groups in the
     /// content-addressed index.  Hot-tier pages keyed under any
     /// LRU-evicted registration's pseudo-slot are purged with it.
-    pub fn register_prefix(&mut self, slot: u32, bounds: &[(u64, usize)]) {
+    /// Malformed bounds (non-ascending, or not group-aligned) are
+    /// rejected as error completions instead of corrupting the index.
+    pub fn register_prefix(&mut self, slot: u32, bounds: &[(u64, usize)]) -> Result<()> {
+        anyhow::ensure!(
+            slot < crate::ftl::PREFIX_SLOT_BASE,
+            "register_prefix: slot {slot} collides with the pseudo-slot range"
+        );
+        let n = self.ftl.cfg.n;
+        anyhow::ensure!(
+            bounds.windows(2).all(|w| w[0].1 < w[1].1),
+            "register_prefix: bounds not strictly ascending"
+        );
+        anyhow::ensure!(
+            bounds.iter().all(|&(_, t)| t > 0 && t % n == 0),
+            "register_prefix: bounds not aligned to the {n}-token group size"
+        );
         for pslot in self.ftl.register_prefix(slot, bounds) {
             self.tier.free_slot(pslot);
         }
+        Ok(())
     }
 
     /// Store one token's K/V rows for every head of a layer (decode write).
@@ -420,16 +450,22 @@ impl InstCsd {
         at: Time,
     ) -> Result<Time> {
         let heads: Vec<u16> = (0..(k_rows.len() / self.d_head) as u16).collect();
-        self.write_token_heads(slot, layer, &heads, k_rows, v_rows, at)
+        let pos = self.ftl.tokens_appended(StreamKey { slot, layer, head: 0 });
+        self.write_token_heads(slot, layer, &heads, pos, k_rows, v_rows, at)
     }
 
     /// Store one token's K/V rows for an explicit head subset (the rows are
     /// packed in the order of `heads` — what the head->CSD router ships).
+    /// `pos` is the token's stream position (tokens already appended
+    /// before it): a stream that is already past `pos` skips the append,
+    /// so re-running a partially-applied command after a fault is exact
+    /// instead of double-writing.
     pub fn write_token_heads(
         &mut self,
         slot: u32,
         layer: u16,
         heads: &[u16],
+        pos: usize,
         k_rows: &[f32],
         v_rows: &[f32],
         at: Time,
@@ -439,6 +475,11 @@ impl InstCsd {
         let mut t = at;
         for (i, &h) in heads.iter().enumerate() {
             let key = StreamKey { slot, layer, head: h };
+            let have = self.ftl.tokens_appended(key);
+            if have > pos {
+                continue; // already applied (command retried after a fault)
+            }
+            anyhow::ensure!(have == pos, "write_token at pos {pos} but stream holds {have}");
             t = t.max(self.ftl.append_token(
                 key,
                 &k_rows[i * d..(i + 1) * d],
@@ -461,16 +502,21 @@ impl InstCsd {
         at: Time,
     ) -> Result<Time> {
         let hs: Vec<u16> = (0..heads as u16).collect();
-        self.write_prefill_heads(slot, layer, &hs, s_len, k_hsd, v_hsd, at)
+        let pos = self.ftl.tokens_appended(StreamKey { slot, layer, head: 0 });
+        self.write_prefill_heads(slot, layer, &hs, pos, s_len, k_hsd, v_hsd, at)
     }
 
     /// Store a prefill layer's KV for an explicit head subset (rows packed
-    /// (heads, s_len, d) in the order of `heads`).
+    /// (heads, s_len, d) in the order of `heads`).  `pos` is the stream
+    /// position the `s_len` tokens start at (the prefix-attach/context
+    /// skip); a stream already holding `pos + s_len` tokens skips the
+    /// append, making post-fault re-runs exact.
     pub fn write_prefill_heads(
         &mut self,
         slot: u32,
         layer: u16,
         heads: &[u16],
+        pos: usize,
         s_len: usize,
         k_hsd: &[f32],
         v_hsd: &[f32],
@@ -481,6 +527,11 @@ impl InstCsd {
         let mut t = at;
         for (i, &h) in heads.iter().enumerate() {
             let key = StreamKey { slot, layer, head: h };
+            let have = self.ftl.tokens_appended(key);
+            if have >= pos + s_len {
+                continue; // already applied (command retried after a fault)
+            }
+            anyhow::ensure!(have == pos, "prefill at pos {pos} but stream holds {have}");
             let base = i * s_len * d;
             t = t.max(self.ftl.append_prefill(
                 key,
@@ -897,9 +948,15 @@ impl InstCsd {
 
     /// Fold externally-computed (globally-rescaled) attention mass into
     /// the H2O importance tracker — the context-shard write-back the
-    /// GPU issues after the log-sum-exp merge.
-    pub fn accumulate_importance(&mut self, slot: u32, weights: &[f32]) {
+    /// GPU issues after the log-sum-exp merge.  Non-finite mass is a
+    /// malformed command: surfaced as an error completion, not folded.
+    pub fn accumulate_importance(&mut self, slot: u32, weights: &[f32]) -> Result<()> {
+        anyhow::ensure!(
+            weights.iter().all(|w| w.is_finite()),
+            "accumulate_importance: non-finite attention mass for slot {slot}"
+        );
         self.tier.importance.accumulate(slot, weights);
+        Ok(())
     }
 
     /// Shared tiny-geometry engine for unit tests and benches (tiny

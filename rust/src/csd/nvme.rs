@@ -15,13 +15,17 @@ use anyhow::Result;
 /// Extended NVMe commands (vendor-specific opcodes in the real device).
 #[derive(Debug, Clone)]
 pub enum CsdCommand {
-    /// store one decode token's K/V rows for this CSD's heads
-    WriteToken { slot: u32, layer: u16, heads: Vec<u16>, k: Vec<f32>, v: Vec<f32> },
-    /// store a prefill layer for this CSD's heads (layer-wise shipping)
+    /// store one decode token's K/V rows for this CSD's heads; `pos` is
+    /// the token's stream position so a command replayed after a fault
+    /// (or mirrored to a replica) is idempotent
+    WriteToken { slot: u32, layer: u16, heads: Vec<u16>, pos: usize, k: Vec<f32>, v: Vec<f32> },
+    /// store a prefill layer for this CSD's heads (layer-wise shipping);
+    /// `pos` is the stream position the `s_len` tokens start at
     WritePrefillLayer {
         slot: u32,
         layer: u16,
         heads: Vec<u16>,
+        pos: usize,
         s_len: usize,
         k: Vec<f32>,
         v: Vec<f32>,
@@ -69,6 +73,84 @@ impl CsdCommand {
             CsdCommand::FreeSlot { .. } => "free_slot",
         }
     }
+
+    /// Structural validation at the submission boundary.  A malformed
+    /// command surfaces as a typed [`FaultError::MalformedCommand`]
+    /// error completion — even with fault injection off — instead of
+    /// panicking or corrupting device state deeper in the stack.
+    /// `d` is the device's per-head embedding dimension.
+    pub fn validate(&self, dev: usize, d: usize) -> Result<()> {
+        let malformed = |why: String| -> anyhow::Error {
+            crate::fault::FaultError::MalformedCommand { dev, cmd: self.name(), why }.into()
+        };
+        let slot = match self {
+            CsdCommand::WriteToken { slot, .. }
+            | CsdCommand::WritePrefillLayer { slot, .. }
+            | CsdCommand::Attention { slot, .. }
+            | CsdCommand::PartialAttention { slot, .. }
+            | CsdCommand::AccumulateImportance { slot, .. }
+            | CsdCommand::DropTokens { slot, .. }
+            | CsdCommand::RegisterPrefix { slot, .. }
+            | CsdCommand::AttachPrefix { slot, .. }
+            | CsdCommand::FreeSlot { slot } => *slot,
+        };
+        if slot >= crate::ftl::PREFIX_SLOT_BASE {
+            return Err(malformed(format!(
+                "slot {slot} collides with the prefix pseudo-slot range"
+            )));
+        }
+        match self {
+            CsdCommand::WriteToken { heads, k, v, .. } => {
+                if k.len() != v.len() {
+                    return Err(malformed(format!(
+                        "k rows ({}) != v rows ({})",
+                        k.len(),
+                        v.len()
+                    )));
+                }
+                if k.len() != heads.len() * d {
+                    return Err(malformed(format!(
+                        "{} k values for {} heads of dim {d}",
+                        k.len(),
+                        heads.len()
+                    )));
+                }
+            }
+            CsdCommand::WritePrefillLayer { heads, s_len, k, v, .. } => {
+                if k.len() != v.len() {
+                    return Err(malformed(format!(
+                        "k rows ({}) != v rows ({})",
+                        k.len(),
+                        v.len()
+                    )));
+                }
+                if k.len() != heads.len() * s_len * d {
+                    return Err(malformed(format!(
+                        "{} k values for {} heads x {s_len} tokens of dim {d}",
+                        k.len(),
+                        heads.len()
+                    )));
+                }
+            }
+            CsdCommand::Attention { heads, q, .. }
+            | CsdCommand::PartialAttention { heads, q, .. } => {
+                if q.len() != heads.len() * d {
+                    return Err(malformed(format!(
+                        "{} query values for {} heads of dim {d}",
+                        q.len(),
+                        heads.len()
+                    )));
+                }
+            }
+            CsdCommand::AccumulateImportance { weights, .. } => {
+                if weights.iter().any(|w| !w.is_finite()) {
+                    return Err(malformed("non-finite attention mass".into()));
+                }
+            }
+            _ => {}
+        }
+        Ok(())
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -103,27 +185,125 @@ pub struct NvmeQueue {
     /// (and, via the ambient device scope, everything the command
     /// touches down-stack: FTL GC, flash FIFOs).  Purely observational.
     pub dev: usize,
+    /// NVMe-domain fault injector (`None` = fault plane off: the submit
+    /// path is bit-identical to the fault-free engine)
+    fault: Option<crate::fault::FaultState>,
+    /// sim time at which this whole device dies; every submission at or
+    /// after it completes with `FaultError::DeviceLost`
+    dead_at: Option<Time>,
+    /// command timeouts detected (each cost one detection window + one
+    /// backoff step before the retry succeeded)
+    pub timeouts: u64,
+    /// total wall time spent in timeout detection + backoff on this queue
+    pub retry_s: f64,
 }
 
 impl NvmeQueue {
     /// `p2p`: commands arrive over the peer-to-peer path (no host FS).
     pub fn new(csd: InstCsd, pcie: &PcieSpec, p2p: bool) -> Self {
         let cmd_latency = if p2p { pcie.p2p_io_us } else { pcie.host_fs_io_us } * 1e-6;
-        NvmeQueue { csd, sq: FifoResource::new(), cmd_latency, submitted: 0, dev: 0 }
+        NvmeQueue {
+            csd,
+            sq: FifoResource::new(),
+            cmd_latency,
+            submitted: 0,
+            dev: 0,
+            fault: None,
+            dead_at: None,
+            timeouts: 0,
+            retry_s: 0.0,
+        }
+    }
+
+    /// Arm fault injection on this queue and its engine.  Must be called
+    /// after `dev` is set: the per-device RNG streams are seeded from it.
+    pub fn install_faults(&mut self, cfg: &crate::fault::FaultConfig) {
+        if cfg.injecting() {
+            self.fault =
+                Some(crate::fault::FaultState::new(cfg, self.dev, crate::fault::DOMAIN_NVME));
+        }
+        if let Some((dev, t)) = cfg.csd_loss {
+            if dev == self.dev {
+                self.dead_at = Some(t);
+            }
+        }
+        self.csd.install_fault(cfg, self.dev);
+    }
+
+    /// Whether the device has (already) died by sim time `at`.
+    pub fn dead(&self, at: Time) -> bool {
+        self.dead_at.is_some_and(|t| at >= t)
+    }
+
+    /// Build the replacement queue for a lost device: same command-path
+    /// latency and device index, a fresh submission queue, and a clean
+    /// bill of health (no injector, no scheduled death — the dead drive
+    /// was swapped for a good one).
+    pub fn successor(&self, csd: InstCsd) -> NvmeQueue {
+        NvmeQueue {
+            csd,
+            sq: FifoResource::new(),
+            cmd_latency: self.cmd_latency,
+            submitted: 0,
+            dev: self.dev,
+            fault: None,
+            dead_at: None,
+            timeouts: 0,
+            retry_s: 0.0,
+        }
     }
 
     pub fn submit(&mut self, cmd: CsdCommand, at: Time) -> Result<CsdCompletion> {
         self.submitted += 1;
         let _scope = crate::obs::DeviceScope::enter(self.dev);
+        if let Some(t) = self.dead_at {
+            if at >= t {
+                return Err(crate::fault::FaultError::DeviceLost { dev: self.dev }.into());
+            }
+        }
+        cmd.validate(self.dev, self.csd.head_dim())?;
         let cmd_name = cmd.name();
         let is_write = matches!(
             cmd,
             CsdCommand::WriteToken { .. } | CsdCommand::WritePrefillLayer { .. }
         );
-        let (d0, dispatched) = self.sq.schedule(at, self.cmd_latency);
+        // timeout detection + bounded retry with exponential backoff:
+        // each trip of the injector models a command the device never
+        // completed — the host notices after TIMEOUT_DETECT_S, backs off,
+        // and resubmits.  MAX_RETRY consecutive losses surface as a typed
+        // CommandTimeout error completion.
+        let mut at_eff = at;
+        let mut tries: u32 = 0;
+        let mut gave_up = false;
+        if let Some(f) = self.fault.as_mut() {
+            while f.trips() {
+                tries += 1;
+                if tries >= crate::fault::MAX_RETRY {
+                    gave_up = true;
+                    break;
+                }
+                at_eff += crate::fault::retry_delay(tries);
+            }
+        }
+        if tries > 0 {
+            self.timeouts += tries as u64;
+            self.retry_s += at_eff - at;
+            crate::obs::dev_instant("nvme_timeout", at);
+            attr::seg(attr::Bucket::FaultRetry, at, at_eff, at_eff - at);
+        }
+        if gave_up {
+            return Err(crate::fault::FaultError::CommandTimeout {
+                dev: self.dev,
+                cmd: cmd_name,
+                attempts: tries,
+            }
+            .into());
+        }
+        let (d0, dispatched) = self.sq.schedule(at_eff, self.cmd_latency);
         let comp: Result<CsdCompletion> = match cmd {
-            CsdCommand::WriteToken { slot, layer, heads, k, v } => {
-                let done = self.csd.write_token_heads(slot, layer, &heads, &k, &v, dispatched)?;
+            CsdCommand::WriteToken { slot, layer, heads, pos, k, v } => {
+                let done =
+                    self.csd.write_token_heads(slot, layer, &heads, pos, &k, &v, dispatched)?;
                 Ok(CsdCompletion {
                     data: vec![],
                     done,
@@ -132,10 +312,10 @@ impl NvmeQueue {
                     weights: vec![],
                 })
             }
-            CsdCommand::WritePrefillLayer { slot, layer, heads, s_len, k, v } => {
+            CsdCommand::WritePrefillLayer { slot, layer, heads, pos, s_len, k, v } => {
                 let done = self
                     .csd
-                    .write_prefill_heads(slot, layer, &heads, s_len, &k, &v, dispatched)?;
+                    .write_prefill_heads(slot, layer, &heads, pos, s_len, &k, &v, dispatched)?;
                 Ok(CsdCompletion {
                     data: vec![],
                     done,
@@ -162,7 +342,7 @@ impl NvmeQueue {
                 Ok(CsdCompletion { data: out, done, breakdown: Some(bd), stats, weights })
             }
             CsdCommand::AccumulateImportance { slot, weights } => {
-                self.csd.accumulate_importance(slot, &weights);
+                self.csd.accumulate_importance(slot, &weights)?;
                 Ok(CsdCompletion {
                     data: vec![],
                     done: dispatched,
@@ -182,7 +362,7 @@ impl NvmeQueue {
                 })
             }
             CsdCommand::RegisterPrefix { slot, bounds } => {
-                self.csd.register_prefix(slot, &bounds);
+                self.csd.register_prefix(slot, &bounds)?;
                 Ok(CsdCompletion {
                     data: vec![],
                     done: dispatched,
@@ -220,9 +400,9 @@ impl NvmeQueue {
         let (fifo_wait, fifo_svc) = attr::drain_flash();
         let gc = attr::drain_gc();
         if let Some(req) = crate::obs::cur_req() {
-            crate::obs::cmd_flow(req, at, self.dev, d0);
+            crate::obs::cmd_flow(req, at_eff, self.dev, d0);
         }
-        attr::seg(attr::Bucket::NvmeCmd, at, dispatched, dispatched - at);
+        attr::seg(attr::Bucket::NvmeCmd, at_eff, dispatched, dispatched - at_eff);
         if let Some(bd) = &comp.breakdown {
             // attention: split the device window into data-fetch wall
             // (flash tR/transfer + DRAM-tier hits), the share of it spent
@@ -259,11 +439,11 @@ mod tests {
     fn write_then_attend_roundtrip() {
         let mut q = queue(true);
         let mut rng = Rng::new(1);
-        for _ in 0..16 {
+        for pos in 0..16 {
             let k: Vec<f32> = (0..64).map(|_| rng.normal_f32()).collect();
             let v: Vec<f32> = (0..64).map(|_| rng.normal_f32()).collect();
             q.submit(
-                CsdCommand::WriteToken { slot: 0, layer: 0, heads: vec![0, 1], k, v },
+                CsdCommand::WriteToken { slot: 0, layer: 0, heads: vec![0, 1], pos, k, v },
                 0.0,
             )
             .unwrap();
@@ -292,10 +472,11 @@ mod tests {
     fn p2p_commands_cheaper_than_host_fs() {
         let mut a = queue(true);
         let mut b = queue(false);
-        let mk = |rng: &mut Rng| CsdCommand::WriteToken {
+        let mk = |rng: &mut Rng, pos: usize| CsdCommand::WriteToken {
             slot: 0,
             layer: 0,
             heads: vec![0, 1],
+            pos,
             k: (0..64).map(|_| rng.normal_f32()).collect(),
             v: (0..64).map(|_| rng.normal_f32()).collect(),
         };
@@ -303,10 +484,124 @@ mod tests {
         let mut ta: Time = 0.0;
         let mut tb: Time = 0.0;
         // enough commands that queueing on the submission path dominates
-        for _ in 0..100 {
-            ta = ta.max(a.submit(mk(&mut rng), 0.0).unwrap().done);
-            tb = tb.max(b.submit(mk(&mut rng), 0.0).unwrap().done);
+        for pos in 0..100 {
+            ta = ta.max(a.submit(mk(&mut rng, pos), 0.0).unwrap().done);
+            tb = tb.max(b.submit(mk(&mut rng, pos), 0.0).unwrap().done);
         }
         assert!(ta < tb, "p2p {ta} !< host-fs {tb}");
+    }
+
+    #[test]
+    fn malformed_commands_are_error_completions_not_panics() {
+        let mut q = queue(true);
+        // k/v length mismatch
+        let err = q
+            .submit(
+                CsdCommand::WriteToken {
+                    slot: 0,
+                    layer: 0,
+                    heads: vec![0, 1],
+                    pos: 0,
+                    k: vec![0.0; 64],
+                    v: vec![0.0; 32],
+                },
+                0.0,
+            )
+            .unwrap_err();
+        assert!(
+            matches!(
+                err.downcast_ref::<crate::fault::FaultError>(),
+                Some(crate::fault::FaultError::MalformedCommand { .. })
+            ),
+            "{err}"
+        );
+        // query length not heads * d
+        assert!(q
+            .submit(
+                CsdCommand::Attention {
+                    slot: 0,
+                    layer: 0,
+                    heads: vec![0],
+                    q: vec![0.0; 7],
+                    len: 1,
+                    mode: AttnMode::Dense,
+                },
+                0.0,
+            )
+            .is_err());
+        // slot in the prefix pseudo-slot range
+        assert!(q
+            .submit(CsdCommand::FreeSlot { slot: crate::ftl::PREFIX_SLOT_BASE }, 0.0)
+            .is_err());
+        // non-finite importance mass
+        assert!(q
+            .submit(
+                CsdCommand::AccumulateImportance { slot: 0, weights: vec![f32::NAN] },
+                0.0,
+            )
+            .is_err());
+        // the queue stays usable after error completions
+        q.submit(
+            CsdCommand::WriteToken {
+                slot: 0,
+                layer: 0,
+                heads: vec![0, 1],
+                pos: 0,
+                k: vec![0.0; 64],
+                v: vec![0.0; 64],
+            },
+            0.0,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn timeout_retry_is_deterministic_and_dead_device_errors() {
+        let run = |seed: u64| {
+            let mut q = queue(true);
+            let cfg = crate::fault::FaultConfig {
+                seed,
+                rate: 0.4,
+                csd_loss: Some((0, 0.5)),
+                ..crate::fault::FaultConfig::none()
+            };
+            q.install_faults(&cfg);
+            let mut rng = Rng::new(3);
+            let mut done: Vec<Time> = Vec::new();
+            for pos in 0..32 {
+                let k: Vec<f32> = (0..64).map(|_| rng.normal_f32()).collect();
+                let v: Vec<f32> = (0..64).map(|_| rng.normal_f32()).collect();
+                // a command may exhaust MAX_RETRY at this trip rate —
+                // record the typed error completion instead of unwrapping
+                match q.submit(
+                    CsdCommand::WriteToken { slot: 0, layer: 0, heads: vec![0, 1], pos, k, v },
+                    pos as f64 * 1e-4,
+                ) {
+                    Ok(c) => done.push(c.done),
+                    Err(_) => done.push(-1.0),
+                }
+            }
+            (done, q.timeouts, q.retry_s)
+        };
+        let a = run(7);
+        let b = run(7);
+        assert_eq!(a, b, "same fault seed must replay bit-identically");
+        assert!(a.1 > 0, "a 40% trip rate over 32 commands must time out at least once");
+        // past the scheduled death every submission is a DeviceLost error
+        let mut q = queue(true);
+        q.install_faults(&crate::fault::FaultConfig {
+            csd_loss: Some((0, 0.5)),
+            ..crate::fault::FaultConfig::none()
+        });
+        assert!(!q.dead(0.49));
+        assert!(q.dead(0.5));
+        let err = q.submit(CsdCommand::FreeSlot { slot: 0 }, 0.6).unwrap_err();
+        assert!(
+            matches!(
+                err.downcast_ref::<crate::fault::FaultError>(),
+                Some(crate::fault::FaultError::DeviceLost { dev: 0 })
+            ),
+            "{err}"
+        );
     }
 }

@@ -1,0 +1,295 @@
+//! Deterministic fault plane: seed-reproducible failure injection for
+//! every layer of the KV data path.
+//!
+//! Three fault classes, one knob surface ([`FaultConfig`] on the CSD
+//! spec):
+//!
+//! - **flash page reads** fail transiently (ECC-correctable, or
+//!   uncorrectable with escalating read-retry `tR` steps) or permanently
+//!   (bad block — the FTL relocates the still-valid pages with full
+//!   refcount/prefix-sharing discipline and retires the block);
+//! - **NVMe commands** time out and are retried with exponential
+//!   backoff; past the retry budget the error completion propagates as
+//!   a typed `Result` instead of being assumed successful;
+//! - **a whole CSD dies** mid-decode ([`FaultConfig::csd_loss`]); the
+//!   shard coordinator + scheduler then recover the lost heads' KV by
+//!   re-prefill or from a peer replica ([`RecoveryPolicy`]).
+//!
+//! Determinism contract: every injection site draws from a private
+//! per-device, per-domain xoshiro stream seeded from
+//! `(FaultConfig::seed, device, domain)`.  Per-device command order is
+//! thread-count invariant (the `sim/par.rs` dispatch preserves it), so
+//! the fault sequence is too — same seed, same faults, any `--threads`.
+//! With `rate == 0` and no scheduled loss, no stream is even
+//! constructed and the engine is bit-identical (outputs AND timestamps)
+//! to the fault-free build.
+
+use crate::util::rng::Rng;
+
+/// Simulated latency to *detect* an NVMe command timeout (the host-side
+/// completion poll deadline).
+pub const TIMEOUT_DETECT_S: f64 = 500e-6;
+/// Base step of the exponential retry backoff (doubles per attempt,
+/// exponent capped so the wait stays bounded).
+pub const BACKOFF_BASE_S: f64 = 100e-6;
+/// NVMe retry budget; exceeding it surfaces [`FaultError::CommandTimeout`].
+pub const MAX_RETRY: u32 = 8;
+
+/// Extra `tR` fraction added by a correctable-ECC read (one soft retry
+/// inside the die, no host involvement).
+pub const ECC_EXTRA_TR: f64 = 0.2;
+/// Per-step escalation of the read-retry voltage sweep: retry `i` costs
+/// an extra `0.5 * i * tR`.
+pub const RETRY_STEP_TR: f64 = 0.5;
+
+/// Domain tags separating the per-device fault streams so flash reads
+/// and NVMe submissions never share draws.
+pub const DOMAIN_NVME: u64 = 1;
+pub const DOMAIN_FLASH: u64 = 2;
+
+/// How the serving plane recovers the lost heads' KV after a CSD dies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecoveryPolicy {
+    /// No KV recovery: in-flight requests on the lost device abort; the
+    /// replacement device serves new traffic only.
+    RetryOnly,
+    /// Re-run prefill for affected requests on the replacement device
+    /// (reuses the restart machinery; no extra capacity cost).
+    RePrefill,
+    /// Restore the lost streams from a peer CSD's mirror
+    /// (`--kv-replicas 1`): capacity-for-availability tradeoff.
+    Replicated,
+}
+
+impl RecoveryPolicy {
+    pub fn parse(s: &str) -> anyhow::Result<RecoveryPolicy> {
+        match s {
+            "retry" => Ok(RecoveryPolicy::RetryOnly),
+            "reprefill" => Ok(RecoveryPolicy::RePrefill),
+            "replicated" => Ok(RecoveryPolicy::Replicated),
+            other => anyhow::bail!("unknown recovery policy {other:?} (retry|reprefill|replicated)"),
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            RecoveryPolicy::RetryOnly => "retry",
+            RecoveryPolicy::RePrefill => "reprefill",
+            RecoveryPolicy::Replicated => "replicated",
+        }
+    }
+}
+
+/// Fault-injection knobs, carried on [`crate::config::hw::CsdSpec`] so
+/// every engine layer sees the same configuration.  `none()` (the
+/// default everywhere) constructs no RNG state and injects nothing.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultConfig {
+    /// Base seed for every per-device fault stream.
+    pub seed: u64,
+    /// Per-operation fault probability (flash page reads and NVMe
+    /// command submissions draw independently).
+    pub rate: f64,
+    /// Scheduled whole-device loss: `(device index, sim time)`.  The
+    /// device rejects every submission at or after the given time until
+    /// the coordinator replaces it.
+    pub csd_loss: Option<(usize, f64)>,
+    /// What the scheduler does about a lost device's KV.
+    pub recovery: RecoveryPolicy,
+    /// Mirror sealed KV writes to this many peer CSDs (0 or 1).
+    pub kv_replicas: u8,
+}
+
+impl FaultConfig {
+    pub fn none() -> FaultConfig {
+        FaultConfig {
+            seed: 0,
+            rate: 0.0,
+            csd_loss: None,
+            recovery: RecoveryPolicy::RePrefill,
+            kv_replicas: 0,
+        }
+    }
+
+    /// True when per-operation injection is on (flash/NVMe draws).
+    pub fn injecting(&self) -> bool {
+        self.rate > 0.0
+    }
+
+    /// True when *any* part of the fault plane is active (injection,
+    /// scheduled loss, or replication).
+    pub fn any_active(&self) -> bool {
+        self.rate > 0.0 || self.csd_loss.is_some() || self.kv_replicas > 0
+    }
+}
+
+impl Default for FaultConfig {
+    fn default() -> FaultConfig {
+        FaultConfig::none()
+    }
+}
+
+/// Aggregate fault/recovery counters across a CSD array — the metrics
+/// surface of the fault plane (all zeros with faults off).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct FaultTotals {
+    /// NVMe command timeouts detected (each cost one detect + backoff)
+    pub nvme_timeouts: u64,
+    /// wall seconds spent in NVMe timeout detection + backoff
+    pub nvme_retry_s: f64,
+    /// flash reads that needed a correctable-ECC soft retry
+    pub flash_ecc_corrected: u64,
+    /// escalating read-retry steps taken on uncorrectable flash reads
+    pub flash_read_retries: u64,
+    /// blocks retired permanently (valid pages relocated by the FTL)
+    pub flash_bad_blocks: u64,
+}
+
+impl FaultTotals {
+    pub fn add(&mut self, other: &FaultTotals) {
+        self.nvme_timeouts += other.nvme_timeouts;
+        self.nvme_retry_s += other.nvme_retry_s;
+        self.flash_ecc_corrected += other.flash_ecc_corrected;
+        self.flash_read_retries += other.flash_read_retries;
+        self.flash_bad_blocks += other.flash_bad_blocks;
+    }
+}
+
+/// Typed fault completions.  Carried through `anyhow::Result` chains;
+/// callers that need to branch on the class downcast with
+/// `e.downcast_ref::<FaultError>()`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FaultError {
+    /// The device is dead (scheduled loss fired); the submission never
+    /// entered the queue.
+    DeviceLost { dev: usize },
+    /// The command timed out `attempts` times and exhausted the retry
+    /// budget.
+    CommandTimeout { dev: usize, cmd: &'static str, attempts: u32 },
+    /// The command failed validation before dispatch — a host-side bug,
+    /// surfaced as an error completion instead of a panic.
+    MalformedCommand { dev: usize, cmd: &'static str, why: String },
+}
+
+impl std::fmt::Display for FaultError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FaultError::DeviceLost { dev } => write!(f, "csd{dev} is lost"),
+            FaultError::CommandTimeout { dev, cmd, attempts } => {
+                write!(f, "csd{dev} {cmd} timed out after {attempts} attempts")
+            }
+            FaultError::MalformedCommand { dev, cmd, why } => {
+                write!(f, "csd{dev} malformed {cmd}: {why}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for FaultError {}
+
+/// Stable per-device, per-domain stream seed (splitmix-style avalanche
+/// so adjacent devices get uncorrelated streams).
+fn mix(seed: u64, dev: u64, domain: u64) -> u64 {
+    let mut x = seed
+        .wrapping_mul(0x9e3779b97f4a7c15)
+        .wrapping_add(dev.wrapping_mul(0xbf58476d1ce4e5b9))
+        .wrapping_add(domain.wrapping_mul(0x94d049bb133111eb));
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d049bb133111eb);
+    x ^ (x >> 31)
+}
+
+/// Per-device injection state: a private RNG stream plus the rate.
+/// Only constructed when `rate > 0` — the `Option<FaultState>` gate is
+/// what makes faults-off bit-identical.
+#[derive(Debug, Clone)]
+pub struct FaultState {
+    pub rate: f64,
+    rng: Rng,
+}
+
+impl FaultState {
+    pub fn new(cfg: &FaultConfig, dev: usize, domain: u64) -> FaultState {
+        FaultState { rate: cfg.rate, rng: Rng::new(mix(cfg.seed, dev as u64, domain)) }
+    }
+
+    /// One Bernoulli trial at the configured rate (always consumes
+    /// exactly one draw, so the stream position is operation-count
+    /// deterministic).
+    pub fn trips(&mut self) -> bool {
+        self.rng.f64() < self.rate
+    }
+
+    /// Uniform severity draw in [0, 1) for sites that need to pick a
+    /// fault class after `trips()` fired.
+    pub fn severity(&mut self) -> f64 {
+        self.rng.f64()
+    }
+}
+
+/// Detect-plus-backoff delay for NVMe retry attempt `attempt` (1-based):
+/// timeout detection plus an exponentially growing wait, exponent capped
+/// at 6 so a deep retry chain stays bounded.
+pub fn retry_delay(attempt: u32) -> f64 {
+    TIMEOUT_DETECT_S + BACKOFF_BASE_S * (1u64 << (attempt - 1).min(6)) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_is_inactive() {
+        let f = FaultConfig::none();
+        assert!(!f.injecting());
+        assert!(!f.any_active());
+        assert_eq!(f, FaultConfig::default());
+    }
+
+    #[test]
+    fn any_active_tracks_each_knob() {
+        let mut f = FaultConfig::none();
+        f.kv_replicas = 1;
+        assert!(f.any_active() && !f.injecting());
+        let mut f = FaultConfig::none();
+        f.csd_loss = Some((1, 0.5));
+        assert!(f.any_active());
+        let mut f = FaultConfig::none();
+        f.rate = 0.1;
+        assert!(f.any_active() && f.injecting());
+    }
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        for p in [RecoveryPolicy::RetryOnly, RecoveryPolicy::RePrefill, RecoveryPolicy::Replicated]
+        {
+            assert_eq!(RecoveryPolicy::parse(p.label()).unwrap(), p);
+        }
+        assert!(RecoveryPolicy::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn per_device_streams_are_deterministic_and_distinct() {
+        let cfg = FaultConfig { seed: 7, rate: 0.5, ..FaultConfig::none() };
+        let mut a0 = FaultState::new(&cfg, 0, DOMAIN_NVME);
+        let mut a1 = FaultState::new(&cfg, 0, DOMAIN_NVME);
+        let mut b = FaultState::new(&cfg, 1, DOMAIN_NVME);
+        let mut c = FaultState::new(&cfg, 0, DOMAIN_FLASH);
+        let sa: Vec<bool> = (0..64).map(|_| a0.trips()).collect();
+        let sa2: Vec<bool> = (0..64).map(|_| a1.trips()).collect();
+        let sb: Vec<bool> = (0..64).map(|_| b.trips()).collect();
+        let sc: Vec<bool> = (0..64).map(|_| c.trips()).collect();
+        assert_eq!(sa, sa2, "same (seed, dev, domain) must replay");
+        assert_ne!(sa, sb, "devices must not share a stream");
+        assert_ne!(sa, sc, "domains must not share a stream");
+    }
+
+    #[test]
+    fn retry_delay_grows_then_caps() {
+        assert!(retry_delay(1) < retry_delay(2));
+        assert!(retry_delay(2) < retry_delay(5));
+        // exponent cap: attempts past 7 cost the same
+        assert_eq!(retry_delay(7), retry_delay(8));
+        assert_eq!(retry_delay(7), retry_delay(20));
+    }
+}

@@ -40,6 +40,10 @@ pub struct FlashCounters {
     pub block_erases: u64,
     pub bytes_read: u64,
     pub bytes_programmed: u64,
+    /// reads that needed the in-die ECC soft retry (correctable)
+    pub ecc_corrected: u64,
+    /// escalating read-retry steps taken on uncorrectable reads
+    pub read_retries: u64,
 }
 
 pub struct FlashArray {
@@ -54,6 +58,12 @@ pub struct FlashArray {
     units: Vec<FifoResource>,
     channels: Vec<FifoResource>,
     pub counters: FlashCounters,
+    /// per-device read-fault stream; `None` (faults off) takes exactly
+    /// the pre-fault code path — no draws, no state, bit-identical
+    fault: Option<crate::fault::FaultState>,
+    /// blocks that hit a permanent read failure; the FTL drains these
+    /// and retires them (relocate valid pages, never reuse the block)
+    pending_retire: Vec<BlockAddr>,
 }
 
 impl FlashArray {
@@ -75,7 +85,21 @@ impl FlashArray {
             units: (0..n_units).map(|_| FifoResource::new()).collect(),
             channels: (0..spec.channels).map(|_| FifoResource::new()).collect(),
             counters: FlashCounters::default(),
+            fault: None,
+            pending_retire: Vec::new(),
         }
+    }
+
+    /// Arm read-fault injection with this device's private stream.
+    /// Never called when `cfg.rate == 0`, preserving bit-identity.
+    pub fn install_fault(&mut self, cfg: &crate::fault::FaultConfig, dev: usize) {
+        self.fault = Some(crate::fault::FaultState::new(cfg, dev, crate::fault::DOMAIN_FLASH));
+    }
+
+    /// Blocks flagged bad by permanent read failures since the last
+    /// drain; the FTL retires them between command boundaries.
+    pub fn take_pending_retire(&mut self) -> Vec<BlockAddr> {
+        std::mem::take(&mut self.pending_retire)
     }
 
     fn xfer_time(&self, bytes: usize) -> Time {
@@ -137,7 +161,41 @@ impl FlashArray {
         let unit = self.unit_of(self.geo.block_of(ppa));
         let ch = self.geo.page_channel(ppa);
         let xfer = self.xfer_time(self.spec.page_bytes);
-        let (u0, unit_done) = self.units[unit].schedule(at, self.spec.read_us * 1e-6);
+        // fault draw happens BEFORE scheduling so the stream position is
+        // a pure function of per-device read order (thread-invariant);
+        // retries inflate the unit occupancy (extra tR steps on the die)
+        let mut read_s = self.spec.read_us * 1e-6;
+        if let Some(f) = self.fault.as_mut() {
+            if f.trips() {
+                let t_r = self.spec.read_us * 1e-6;
+                let sev = f.severity();
+                if sev < 0.70 {
+                    // correctable: one in-die ECC soft retry
+                    read_s += crate::fault::ECC_EXTRA_TR * t_r;
+                    self.counters.ecc_corrected += 1;
+                } else {
+                    // uncorrectable: escalating read-retry voltage sweep;
+                    // severity >= 0.95 is a permanent failure — the sweep
+                    // runs to its deepest step and the block is retired
+                    let k: u64 = if sev < 0.95 {
+                        1 + (((sev - 0.70) / 0.25) * 3.0).min(2.0) as u64
+                    } else {
+                        4
+                    };
+                    read_s += crate::fault::RETRY_STEP_TR * t_r * (k * (k + 1) / 2) as f64;
+                    self.counters.read_retries += k;
+                    crate::obs::dev_instant("flash_retry", at);
+                    if sev >= 0.95 {
+                        let b = self.geo.block_of(ppa);
+                        if !self.pending_retire.contains(&b) {
+                            self.pending_retire.push(b);
+                            crate::obs::dev_instant("bad_block", at);
+                        }
+                    }
+                }
+            }
+        }
+        let (u0, unit_done) = self.units[unit].schedule(at, read_s);
         let (c0, done) = self.channels[ch].schedule(unit_done, xfer);
         crate::obs::flash_unit_span(unit, "read", u0, unit_done);
         crate::obs::flash_channel_span(ch, "read_xfer", c0, done);

@@ -121,6 +121,8 @@ pub struct FtlCounters {
     pub prefix_attaches: u64,
     /// local tokens served by attachment instead of host writes
     pub prefix_tokens_attached: u64,
+    /// blocks retired after a permanent read failure (never reused)
+    pub bad_blocks: u64,
 }
 
 /// One sealed token group fetched back from the data path: its first
@@ -132,6 +134,25 @@ pub struct GroupFetch {
     pub base: usize,
     pub rows: Vec<f32>,
     pub done: Time,
+}
+
+/// Raw image of one KV stream — sealed page payloads plus the DRAM
+/// stream state — produced by [`KvFtl::export_stream`] and consumed by
+/// [`KvFtl::import_stream`] for bit-exact replica restore.
+#[derive(Debug, Clone)]
+pub struct StreamExport {
+    buf: StreamBuf,
+    token_pages: Vec<(KvKind, u32, Vec<u8>)>,
+    emb_pages: Vec<(u16, u32, Vec<u8>)>,
+}
+
+impl StreamExport {
+    /// Payload bytes carried by this export (the peer-to-peer restore
+    /// traffic it represents on the wire).
+    pub fn bytes(&self) -> usize {
+        self.token_pages.iter().map(|(_, _, d)| d.len()).sum::<usize>()
+            + self.emb_pages.iter().map(|(_, _, d)| d.len()).sum::<usize>()
+    }
 }
 
 /// Pseudo-slot ids for the content-addressed prefix index live far above
@@ -208,6 +229,8 @@ pub struct KvFtl {
     /// none exist the device is genuinely full and we must error, not
     /// recurse)
     gc_active: bool,
+    /// retired bad blocks — out of the free pool for good
+    bad: Vec<BlockAddr>,
 }
 
 impl KvFtl {
@@ -244,6 +267,7 @@ impl KvFtl {
             streams: HashMap::new(),
             counters: FtlCounters::default(),
             gc_active: false,
+            bad: Vec::new(),
         })
     }
 
@@ -380,6 +404,41 @@ impl KvFtl {
         let ch = self.array.geo.block_channel(victim);
         self.free[ch].push_back(victim);
         Ok(te)
+    }
+
+    /// Retire a block flagged bad by a permanent read failure: relocate
+    /// its valid pages with full GC discipline (refcounts, prefix
+    /// sharing, co-owner retagging), erase it, then pull it out of the
+    /// free pool for good.  Idempotent per block.
+    pub fn retire_block(&mut self, victim: BlockAddr, at: Time) -> Result<Time> {
+        if self.bad.contains(&victim) {
+            return Ok(at);
+        }
+        self.gc_active = true;
+        let res = self.gc_block(victim, at);
+        self.gc_active = false;
+        let te = res?;
+        // gc_block returned the erased victim to the free pool — a bad
+        // block must never be handed out again
+        let ch = self.array.geo.block_channel(victim);
+        if let Some(pos) = self.free[ch].iter().position(|&b| b == victim) {
+            self.free[ch].remove(pos);
+        }
+        self.bad.push(victim);
+        self.counters.bad_blocks += 1;
+        Ok(te)
+    }
+
+    /// Drain the array's pending bad-block flags (raised by permanent
+    /// read failures) and retire each — called at command boundaries so
+    /// retirement never interleaves with an in-flight batch read.
+    fn drain_retirements(&mut self, at: Time) -> Result<Time> {
+        let mut t = at;
+        let pending = self.array.take_pending_retire();
+        for b in pending {
+            t = t.max(self.retire_block(b, at)?);
+        }
+        Ok(t)
     }
 
     /// Point every owner tag at a page's new location.  The physical
@@ -680,6 +739,7 @@ impl KvFtl {
             out.push(GroupFetch { base: g * n, rows, done: times[i] });
         }
         out.sort_by_key(|g| g.base);
+        self.drain_retirements(done)?;
         Ok((out, done))
     }
 
@@ -728,6 +788,7 @@ impl KvFtl {
         }
         let done = self.array.read_batch(&ppas, at)?;
         self.counters.page_fetches += ppas.len() as u64;
+        self.drain_retirements(done)?;
 
         let buf = self.streams.get(&key).ok_or_else(|| anyhow!("unknown stream"))?;
         let emb_tail = buf.emb_tail.clone();
@@ -819,6 +880,7 @@ impl KvFtl {
         };
         self.counters.page_fetches += 1;
         self.counters.promotions += 1;
+        self.drain_retirements(t)?;
         Ok((rows, t))
     }
 
@@ -855,6 +917,186 @@ impl KvFtl {
             self.counters.dropped_groups += 1;
         }
         freed
+    }
+
+    // ---- replica export/import (fault recovery) ----------------------------
+    //
+    // A CSD that dies takes its FTL with it; the replicated recovery
+    // policy restores the lost streams from a peer's mirror.  Export is
+    // raw page surgery — sealed page images plus the DRAM stream state —
+    // so the import reconstructs the stream bit-exactly (same quantised
+    // rows, same tail, same v̄), not a lossy re-append.
+
+    /// Read every sealed page of one stream off flash (timed, on this
+    /// device's die/channel FIFOs) and snapshot its DRAM state.
+    pub fn export_stream(&mut self, key: StreamKey, at: Time) -> Result<(StreamExport, Time)> {
+        let buf = self
+            .streams
+            .get(&key)
+            .ok_or_else(|| anyhow!("export of unknown stream {key:?}"))?
+            .clone();
+        let mut tkeys: Vec<(KvKind, u32)> = self
+            .token_map
+            .keys()
+            .filter(|(k, _, _)| *k == key)
+            .map(|&(_, kind, g)| (kind, g))
+            .collect();
+        tkeys.sort();
+        let mut ekeys: Vec<(u16, u32)> = self
+            .emb_map
+            .keys()
+            .filter(|(k, _, _)| *k == key)
+            .map(|&(_, eg, tp)| (eg, tp))
+            .collect();
+        ekeys.sort();
+        let ppas: Vec<Ppa> = tkeys
+            .iter()
+            .map(|&(kind, g)| self.token_map[&(key, kind, g)])
+            .chain(ekeys.iter().map(|&(eg, tp)| self.emb_map[&(key, eg, tp)]))
+            .collect();
+        let done = self.array.read_batch(&ppas, at)?;
+        self.counters.page_fetches += ppas.len() as u64;
+        let mut token_pages = Vec::with_capacity(tkeys.len());
+        for (i, &(kind, g)) in tkeys.iter().enumerate() {
+            token_pages.push((kind, g, self.array.page_data(ppas[i])?.to_vec()));
+        }
+        let mut emb_pages = Vec::with_capacity(ekeys.len());
+        for (i, &(eg, tp)) in ekeys.iter().enumerate() {
+            emb_pages.push((eg, tp, self.array.page_data(ppas[tkeys.len() + i])?.to_vec()));
+        }
+        self.drain_retirements(done)?;
+        Ok((StreamExport { buf, token_pages, emb_pages }, done))
+    }
+
+    /// Program an exported stream into this FTL under `key`: pages land
+    /// through the normal placement path (same channel formula as the
+    /// append path, so the striping invariant holds) and the DRAM stream
+    /// state is installed verbatim.
+    pub fn import_stream(&mut self, key: StreamKey, exp: &StreamExport, at: Time) -> Result<Time> {
+        let chans = self.array.spec.channels;
+        let mut done = at;
+        for (kind, g, data) in &exp.token_pages {
+            let ch = match kind {
+                KvKind::K => (key.head as usize + *g as usize) % chans,
+                KvKind::V => (key.head as usize + *g as usize + 1) % chans,
+            };
+            let tag = PageTag::Token { key, kind: *kind, group: *g };
+            done = done.max(self.stage_page(tag, ch, data, at)?);
+        }
+        for (eg, tp, data) in &exp.emb_pages {
+            let ch = (key.head as usize + *eg as usize + *tp as usize) % chans;
+            let tag = PageTag::Emb { key, eg: *eg, tpage: *tp };
+            done = done.max(self.stage_page(tag, ch, data, at)?);
+        }
+        self.counters.host_bytes += exp
+            .token_pages
+            .iter()
+            .map(|(_, _, d)| d.len() as u64)
+            .chain(exp.emb_pages.iter().map(|(_, _, d)| d.len() as u64))
+            .sum::<u64>();
+        self.streams.insert(key, exp.buf.clone());
+        Ok(done)
+    }
+
+    /// Retired bad blocks so far.
+    pub fn bad_blocks(&self) -> usize {
+        self.bad.len()
+    }
+
+    /// Keys of every live stream on this device, sorted (deterministic
+    /// enumeration order for replica restore).
+    pub fn stream_keys(&self) -> Vec<StreamKey> {
+        let mut keys: Vec<StreamKey> = self.streams.keys().copied().collect();
+        keys.sort();
+        keys
+    }
+
+    /// Internal-consistency audit for the property tests: every page
+    /// accounting identity the promote/demote/GC/free/share machinery
+    /// must conserve.  Cheap enough to run after every op on the tiny
+    /// geometry.
+    pub fn audit(&self) -> Result<()> {
+        let geo = self.array.geo;
+        // physical valid pages == reverse-map population, per block and total
+        let mut sum_valid = 0usize;
+        for b in 0..geo.total_blocks() {
+            let ba = BlockAddr(b);
+            let phys = self.array.valid_pages(ba).len();
+            let acct = self.block_valid[b] as usize;
+            if phys != acct {
+                bail!("block {b}: {phys} valid pages on flash but block_valid={acct}");
+            }
+            sum_valid += acct;
+        }
+        if sum_valid != self.rev.len() {
+            bail!("sum(block_valid)={} != rev.len()={}", sum_valid, self.rev.len());
+        }
+        // shared lists are real shares and rev holds the canonical owner
+        for (ppa, refs) in &self.shared {
+            if refs.len() < 2 {
+                bail!("shared list of page {} has {} owners", ppa.0, refs.len());
+            }
+            if self.rev.get(ppa) != Some(&refs[0]) {
+                bail!("page {}: rev tag is not the canonical shared owner", ppa.0);
+            }
+        }
+        // every forward mapping is owned by its page, and maps back
+        let owners = |ppa: Ppa| -> Vec<PageTag> {
+            match self.shared.get(&ppa) {
+                Some(refs) => refs.clone(),
+                None => self.rev.get(&ppa).map(|&t| vec![t]).unwrap_or_default(),
+            }
+        };
+        for (&(key, kind, g), &ppa) in &self.token_map {
+            let tag = PageTag::Token { key, kind, group: g };
+            if !owners(ppa).contains(&tag) {
+                bail!("token map entry {key:?}/{kind:?}/{g} not among page {}'s owners", ppa.0);
+            }
+        }
+        for (&(key, eg, tp), &ppa) in &self.emb_map {
+            let tag = PageTag::Emb { key, eg, tpage: tp };
+            if !owners(ppa).contains(&tag) {
+                bail!("emb map entry {key:?}/{eg}/{tp} not among page {}'s owners", ppa.0);
+            }
+        }
+        // every owner tag resolves back to its page
+        for (&ppa, _) in &self.rev {
+            for tag in owners(ppa) {
+                let mapped = match tag {
+                    PageTag::Token { key, kind, group } => {
+                        self.token_map.get(&(key, kind, group)).copied()
+                    }
+                    PageTag::Emb { key, eg, tpage } => self.emb_map.get(&(key, eg, tpage)).copied(),
+                };
+                if mapped != Some(ppa) {
+                    bail!("owner tag {tag:?} of page {} maps to {mapped:?}", ppa.0);
+                }
+            }
+        }
+        // pool accounting: free, bad, and open sets are disjoint, and
+        // free/bad blocks hold no valid pages
+        for (ch, pool) in self.free.iter().enumerate() {
+            for &b in pool {
+                if geo.block_channel(b) != ch {
+                    bail!("block {} pooled on wrong channel {ch}", b.0);
+                }
+                if self.block_valid[b.0] != 0 {
+                    bail!("free block {} still has valid pages", b.0);
+                }
+                if self.bad.contains(&b) {
+                    bail!("bad block {} is in the free pool", b.0);
+                }
+            }
+        }
+        for &b in &self.bad {
+            if self.block_valid[b.0] != 0 {
+                bail!("bad block {} still has valid pages", b.0);
+            }
+            if self.open.iter().any(|&o| o == Some(b)) {
+                bail!("bad block {} is still an open block", b.0);
+            }
+        }
+        Ok(())
     }
 
     // ---- cross-request prefix caching --------------------------------------

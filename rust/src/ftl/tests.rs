@@ -409,3 +409,106 @@ fn prop_random_append_fetch_consistency() {
         },
     );
 }
+
+/// Page accounting is conserved under randomized interleavings of
+/// append / promote / demote / group-drop / slot-free / prefix-attach
+/// over a shared prefix group: `audit()` holds after every single op
+/// (forward/reverse maps stay a bijection, shared owner lists stay
+/// canonical, block valid counts match physical state), and once every
+/// slot is freed and every registration released the reverse map drains
+/// to exactly zero mapped pages — nothing leaks, nothing double-frees.
+#[test]
+fn prop_page_accounting_conserved_under_shared_churn() {
+    check(
+        "ftl_page_accounting_conserved",
+        15,
+        |r| r.next_u64(),
+        |&seed| {
+            let mut ftl = mk();
+            let mut rng = Rng::new(seed);
+            fill_slot(&mut ftl, 0, 24, seed ^ 1);
+            let prompt: Vec<i32> = (0..24).collect();
+            let hashes = register(&mut ftl, &prompt);
+            let mut pslots: Vec<u32> = Vec::new();
+            let mut used: Vec<u32> = vec![0];
+            for (i, &h) in hashes.iter().enumerate() {
+                let slot = 5 + i as u32;
+                let (p, _) = ftl.attach_prefix(h, slot).map_err(|e| format!("attach: {e:#}"))?;
+                if !pslots.contains(&p) {
+                    pslots.push(p);
+                }
+                used.push(slot);
+            }
+            let mut next_attach = 40u32;
+            for step in 0..80 {
+                match rng.below(6) {
+                    // churn: one full 8-token group onto a scratch slot
+                    // (skipped near capacity — the tiny device holds 256
+                    // pages and GC needs its relocation reserve)
+                    0 if ftl.mapped_pages_total() < 160 => {
+                        let slot = 10 + rng.below(4) as u32;
+                        if !used.contains(&slot) {
+                            used.push(slot);
+                        }
+                        let k = key(slot, 0, 0);
+                        for _ in 0..8 {
+                            ftl.append_token(k, &row(&mut rng, 32), &row(&mut rng, 32), 0.0)
+                                .map_err(|e| format!("step {step}: append: {e:#}"))?;
+                        }
+                    }
+                    0 => {}
+                    1 => {
+                        // promote a donor group (Err when already dropped)
+                        let head = rng.below(2) as u16;
+                        let g = rng.below(3);
+                        let _ = ftl.promote_group(key(0, 0, head), KvKind::K, g, 0.0);
+                    }
+                    2 => {
+                        let head = rng.below(2) as u16;
+                        ftl.demote_group(key(0, 0, head), KvKind::V, rng.below(3));
+                    }
+                    3 => {
+                        // drop-on-resume on any in-use slot: shared groups
+                        // must detach, exclusive ones reclaim
+                        let slot = used[rng.below(used.len())];
+                        let head = rng.below(2) as u16;
+                        ftl.free_token_group(key(slot, 0, head), rng.below(3));
+                    }
+                    4 => {
+                        let slot = 10 + rng.below(4) as u32;
+                        ftl.free_slot(slot, 0.0)
+                            .map_err(|e| format!("step {step}: free_slot: {e:#}"))?;
+                    }
+                    _ => {
+                        // late attach of a random boundary onto a fresh slot
+                        let h = hashes[rng.below(hashes.len())];
+                        if let Ok((p, _)) = ftl.attach_prefix(h, next_attach) {
+                            if !pslots.contains(&p) {
+                                pslots.push(p);
+                            }
+                            used.push(next_attach);
+                            next_attach += 1;
+                        }
+                    }
+                }
+                ftl.audit().map_err(|e| format!("step {step}: audit: {e:#}"))?;
+            }
+            // teardown: every slot freed, every registration released —
+            // the mapping must drain completely
+            for &slot in &used {
+                ftl.free_slot(slot, 0.0).map_err(|e| format!("teardown free: {e:#}"))?;
+            }
+            for &p in &pslots {
+                ftl.release_prefix(p);
+            }
+            ftl.audit().map_err(|e| format!("final audit: {e:#}"))?;
+            if ftl.prefix_registrations() != 0 {
+                return Err(format!("{} registrations leaked", ftl.prefix_registrations()));
+            }
+            if ftl.mapped_pages_total() != 0 {
+                return Err(format!("{} mapped pages leaked", ftl.mapped_pages_total()));
+            }
+            Ok(())
+        },
+    );
+}

@@ -21,6 +21,9 @@
 //!   for the same PCIe links.
 //! * [`coordinator`] is the L3 host control plane: request batching,
 //!   prefill/decode scheduling, head->CSD routing, KV management.
+//! * [`fault`] is the deterministic fault plane: seeded flash/NVMe/CSD
+//!   failure injection with typed error completions and end-to-end
+//!   recovery (re-prefill or peer-replica restore).
 //! * [`obs`] is the deterministic trace plane: zero-perturbation span
 //!   recording on simulated time, Perfetto-loadable export, and the
 //!   unified metrics registry.
@@ -31,6 +34,7 @@ pub mod baselines;
 pub mod config;
 pub mod coordinator;
 pub mod csd;
+pub mod fault;
 pub mod flash;
 pub mod ftl;
 pub mod gpu;

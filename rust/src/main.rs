@@ -44,8 +44,9 @@ fn usage() -> ! {
          \x20 bench <target|all> [--json FILE] [--threads N]   regenerate\n\
          \x20       paper figures (fig4 fig5 fig6 fig11 fig12 fig13 fig14\n\
          \x20       fig15 fig16 fig17a fig17b table1 tier shard serve overlap\n\
-         \x20       flashpath prefix attr ablate-group ablate-dualk\n\
+         \x20       flashpath prefix attr fault ablate-group ablate-dualk\n\
          \x20       ablate-pipeline ablate-p2p ablate-placement);\n\
+         \x20       `bench all` exits non-zero if any table has error rows;\n\
          \x20       --threads N fans sweep points out on N worker threads\n\
          \x20       (0 = all cores; tables are byte-identical for any N);\n\
          \x20       `bench all --json` emits one stitched trajectory document\n\
@@ -216,7 +217,13 @@ fn serve(args: &[String]) -> Result<()> {
             r.arrived_at,
             r.first_token_at,
             r.finished_at,
-            if r.rejected { "  REJECTED (invalid prompt)" } else { "" },
+            if r.rejected {
+                "  REJECTED (invalid prompt)"
+            } else if r.aborted {
+                "  ABORTED (device loss, retry-only recovery)"
+            } else {
+                ""
+            },
         );
     }
     println!("\n{}", report.summary(&engine.metrics));
@@ -547,6 +554,17 @@ fn bench_cmd(args: &[String]) -> Result<()> {
             }
             if let Some(p) = json_path {
                 write_trajectory_json(p, &tables, baseline_total)?;
+            }
+            // a sweep that degraded to error rows must fail the run,
+            // not just print "ERR" cells CI never reads — the artifact
+            // above is still written for post-mortem
+            let broken: Vec<&str> = tables
+                .iter()
+                .filter(|(_, t, _)| t.has_error_rows())
+                .map(|(n, _, _)| *n)
+                .collect();
+            if !broken.is_empty() {
+                bail!("bench targets with error rows: {broken:?}");
             }
         }
         Some(name) => match bench::run_one(name) {

@@ -77,10 +77,14 @@ pub enum Bucket {
     GpuMerge,
     /// in-frame wait on cohort peers (batch straggler time)
     BatchWait,
+    /// NVMe timeout detection + exponential-backoff retry wait
+    FaultRetry,
+    /// post-fault KV recovery (replica restore / re-prefill cleanup)
+    Recovery,
 }
 
 /// All buckets, in stable report order.
-pub const BUCKETS: [Bucket; 15] = [
+pub const BUCKETS: [Bucket; 17] = [
     Bucket::Queue,
     Bucket::AdmitStall,
     Bucket::PreemptWait,
@@ -96,6 +100,8 @@ pub const BUCKETS: [Bucket; 15] = [
     Bucket::PcieContend,
     Bucket::GpuMerge,
     Bucket::BatchWait,
+    Bucket::FaultRetry,
+    Bucket::Recovery,
 ];
 
 pub const NBUCKETS: usize = BUCKETS.len();
@@ -122,6 +128,8 @@ impl Bucket {
             Bucket::PcieContend => "pcie_contend",
             Bucket::GpuMerge => "gpu_merge",
             Bucket::BatchWait => "batch_wait",
+            Bucket::FaultRetry => "fault_retry",
+            Bucket::Recovery => "recovery",
         }
     }
 }

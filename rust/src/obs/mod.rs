@@ -524,6 +524,43 @@ pub fn device_span(dev: usize, name: &'static str, t0: Time, t1: Time) {
     );
 }
 
+/// Fault-plane instant on the ambient device's command track
+/// (nvme_timeout / flash_retry / bad_block).  Faults-off emits nothing,
+/// so the trace digest is unchanged.
+pub fn dev_instant(name: &'static str, ts: Time) {
+    let dev = CUR_DEV.with(|c| c.get());
+    emit(
+        TraceLevel::Device,
+        TraceEvent {
+            pid: PID_CSD_BASE + dev as u64,
+            tid: TID_NVME,
+            name,
+            ph: 'i',
+            ts,
+            dur: 0.0,
+            arg: None,
+        },
+    );
+}
+
+/// Fault-plane instant on an explicit device's command track
+/// (csd_loss / recovery_done — emitted from the coordinator, outside
+/// any DeviceScope).
+pub fn device_instant(dev: usize, name: &'static str, ts: Time) {
+    emit(
+        TraceLevel::Device,
+        TraceEvent {
+            pid: PID_CSD_BASE + dev as u64,
+            tid: TID_NVME,
+            name,
+            ph: 'i',
+            ts,
+            dur: 0.0,
+            arg: None,
+        },
+    );
+}
+
 /// FTL garbage-collection instant on the ambient device's FTL track.
 pub fn ftl_gc(relocations: u64, ts: Time) {
     let dev = CUR_DEV.with(|c| c.get());

@@ -168,6 +168,14 @@ impl PipelineState {
         ready.into_iter().flat_map(|c| c.seqs).collect()
     }
 
+    /// Drain every parked cohort regardless of readiness.  Post-fault
+    /// recovery: the scheduler restarts or aborts the parked sequences,
+    /// so they must leave the stream without a join.  The prefill-stream
+    /// frontier and busy ledger are untouched — the shipping happened.
+    pub fn drain_all(&mut self) -> Vec<Sequence> {
+        self.pending.drain(..).flat_map(|c| c.seqs).collect()
+    }
+
     /// Account one decode-stream step span `[d0, d1)` against the
     /// prefill stream's busy intervals.
     pub fn note_decode(&mut self, d0: Time, d1: Time) {

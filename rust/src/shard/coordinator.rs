@@ -49,6 +49,15 @@ pub struct ShardStats {
     pub contended_merges: u64,
     /// extra all-reduce latency attributable to that contention
     pub contention_delay_s: Time,
+    /// KV bytes mirrored to peer CSDs by the replication knob
+    pub replica_bytes: f64,
+    /// whole-CSD losses detected on this array
+    pub csd_losses: u64,
+    /// device recoveries completed (replacement built and, under the
+    /// replicated policy, streams restored)
+    pub recoveries: u64,
+    /// bytes moved peer-to-peer by replica restores
+    pub restore_bytes: f64,
 }
 
 pub struct ShardCoordinator {
@@ -75,6 +84,25 @@ pub struct ShardCoordinator {
     /// Outputs, timestamps, stats and trace exports are bit-identical
     /// for any value — pinned by `tests/par.rs`.
     pub threads: usize,
+    /// construction recipe kept for building replacement devices after a
+    /// whole-CSD loss (spec carries the fault/replication knobs too)
+    spec: CsdSpec,
+    ftl_cfg: FtlConfig,
+    tier: TierConfig,
+    /// fault counters inherited from devices that were replaced
+    retired: crate::fault::FaultTotals,
+}
+
+/// Disjoint mutable borrows of two queues (`a != b`).
+fn two_queues(queues: &mut [NvmeQueue], a: usize, b: usize) -> (&mut NvmeQueue, &mut NvmeQueue) {
+    debug_assert_ne!(a, b);
+    if a < b {
+        let (l, r) = queues.split_at_mut(b);
+        (&mut l[a], &mut r[0])
+    } else {
+        let (l, r) = queues.split_at_mut(a);
+        (&mut r[0], &mut l[b])
+    }
 }
 
 impl ShardCoordinator {
@@ -88,11 +116,27 @@ impl ShardCoordinator {
         gpu: GpuSpec,
     ) -> Result<Self> {
         let n_csds = topology.n_csds;
+        if spec.fault.kv_replicas > 0 {
+            anyhow::ensure!(
+                n_csds >= 2,
+                "KV replication needs at least 2 CSDs to place a peer mirror"
+            );
+            anyhow::ensure!(
+                !topology.splits_context(),
+                "KV replication supports head-sharded topologies only \
+                 (context stripes reuse the same stream keys on every device)"
+            );
+            anyhow::ensure!(
+                spec.fault.kv_replicas == 1,
+                "only 1 KV replica per token group is modeled"
+            );
+        }
         let mut queues = Vec::with_capacity(n_csds);
         for c in 0..n_csds {
             let csd = InstCsd::with_tier(spec, ftl_cfg, tier).context("constructing InstCSD")?;
             let mut q = NvmeQueue::new(csd, &pcie, p2p);
             q.dev = c;
+            q.install_faults(&spec.fault);
             queues.push(q);
         }
         Ok(ShardCoordinator {
@@ -107,7 +151,21 @@ impl ShardCoordinator {
             bg_ship: Vec::new(),
             bg_free: vec![0.0; n_csds],
             threads: 1,
+            spec,
+            ftl_cfg,
+            tier,
+            retired: crate::fault::FaultTotals::default(),
         })
+    }
+
+    /// Whether the replication knob mirrors this array's KV writes.
+    fn replicate(&self) -> bool {
+        self.spec.fault.kv_replicas > 0 && self.topology.n_csds > 1
+    }
+
+    /// The peer CSD holding device `c`'s replica streams.
+    fn replica_peer(&self, c: usize) -> usize {
+        (c + 1) % self.topology.n_csds
     }
 
     pub fn n_csds(&self) -> usize {
@@ -271,6 +329,7 @@ impl ShardCoordinator {
                         slot,
                         layer,
                         heads: heads.clone(),
+                        pos: len - 1,
                         k: kparts[c].clone(),
                         v: vparts[c].clone(),
                     },
@@ -285,14 +344,33 @@ impl ShardCoordinator {
         );
         let mut parts: Vec<Vec<f32>> = vec![Vec::new(); n];
         let mut attn_done = vec![at; n];
+        // advance every surviving shard's clock before propagating a
+        // failure: a DeviceLost on one shard must not rewind (or leak
+        // into) the others' frontiers across the recovery path
+        let mut first_err: Option<anyhow::Error> = None;
         for (c, res) in comps.into_iter().enumerate() {
-            let Some(comp) = res? else { continue };
-            attn_done[c] = comp.done;
-            self.clock.advance(c, comp.done);
-            if let Some(b) = &comp.breakdown {
-                bd.merge(b);
+            match res {
+                Ok(None) => {}
+                Ok(Some(comp)) => {
+                    attn_done[c] = comp.done;
+                    self.clock.advance(c, comp.done);
+                    if let Some(b) = &comp.breakdown {
+                        bd.merge(b);
+                    }
+                    parts[c] = comp.data;
+                }
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
             }
-            parts[c] = comp.data;
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        if self.replicate() {
+            self.mirror_decode_writes(slot, layer, len, &kparts, &vparts, at)?;
         }
         let t_attn = attn_done.iter().cloned().fold(at, f64::max);
         self.stats.attn_span_s += t_attn - at;
@@ -362,6 +440,7 @@ impl ShardCoordinator {
                 slot,
                 layer,
                 heads: all_heads.clone(),
+                pos: self.topology.local_len(owner, len - 1),
                 k: k_hd.to_vec(),
                 v: v_hd.to_vec(),
             },
@@ -398,16 +477,31 @@ impl ShardCoordinator {
         let mut pdata: Vec<Vec<f32>> = vec![Vec::new(); n];
         let mut pstats: Vec<Vec<(f32, f32)>> = vec![Vec::new(); n];
         let mut pweights: Vec<Vec<f32>> = vec![Vec::new(); n];
+        // as in the head path: land every surviving shard's completion
+        // before propagating the first failure
+        let mut first_err: Option<anyhow::Error> = None;
         for (c, res) in comps.into_iter().enumerate() {
-            let Some(comp) = res? else { continue };
-            attn_done[c] = comp.done;
-            self.clock.advance(c, comp.done);
-            if let Some(b) = &comp.breakdown {
-                bd.merge(b);
+            match res {
+                Ok(None) => {}
+                Ok(Some(comp)) => {
+                    attn_done[c] = comp.done;
+                    self.clock.advance(c, comp.done);
+                    if let Some(b) = &comp.breakdown {
+                        bd.merge(b);
+                    }
+                    pdata[c] = comp.data;
+                    pstats[c] = comp.stats;
+                    pweights[c] = comp.weights;
+                }
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
             }
-            pdata[c] = comp.data;
-            pstats[c] = comp.stats;
-            pweights[c] = comp.weights;
+        }
+        if let Some(e) = first_err {
+            return Err(e);
         }
         let t_attn = attn_done.iter().cloned().fold(at, f64::max);
         self.stats.attn_span_s += t_attn - at;
@@ -542,6 +636,7 @@ impl ShardCoordinator {
                         slot,
                         layer,
                         heads: (0..h as u16).collect(),
+                        pos: lskip,
                         s_len: llen - lskip,
                         k: kp,
                         v: vp,
@@ -572,6 +667,7 @@ impl ShardCoordinator {
                         slot,
                         layer,
                         heads,
+                        pos: skip,
                         s_len: len - skip,
                         k: kp,
                         v: vp,
@@ -582,15 +678,222 @@ impl ShardCoordinator {
             })
         };
         let mut done = at;
+        let mut first_err: Option<anyhow::Error> = None;
         for (c, res) in ships.into_iter().enumerate() {
-            let Some((ship_bytes, comp_done)) = res? else { continue };
-            if self.overlap_tracking {
-                self.note_prefill_ship(c, at, ship_bytes, comp_done);
+            match res {
+                Ok(None) => {}
+                Ok(Some((ship_bytes, comp_done))) => {
+                    if self.overlap_tracking {
+                        self.note_prefill_ship(c, at, ship_bytes, comp_done);
+                    }
+                    self.clock.advance(c, comp_done);
+                    done = done.max(comp_done);
+                }
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
             }
-            self.clock.advance(c, comp_done);
-            done = done.max(comp_done);
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        if self.replicate() && skip < len {
+            done = done.max(self.mirror_prefill_writes(
+                slot, layer, sp, len, skip, k_seq, v_seq, at,
+            )?);
         }
         Ok(done)
+    }
+
+    /// Mirror one decode token's per-shard K/V to each shard's replica
+    /// peer (head policies only; the replica stream reuses the primary's
+    /// `StreamKey`, which is collision-free because head subsets are
+    /// disjoint across devices).  Runs post-join at the dispatch anchor,
+    /// so the mirror overlaps the attention fan-out on the wire model
+    /// but serializes behind the peer's own write in its queue.
+    fn mirror_decode_writes(
+        &mut self,
+        slot: u32,
+        layer: u16,
+        len: usize,
+        kparts: &[Vec<f32>],
+        vparts: &[Vec<f32>],
+        at: Time,
+    ) -> Result<()> {
+        for c in 0..self.topology.n_csds {
+            let heads = self.topology.heads_of(c).to_vec();
+            if heads.is_empty() {
+                continue;
+            }
+            let peer = self.replica_peer(c);
+            if self.queues[peer].dead(at) {
+                continue; // the peer is the lost device; its replicas die with it
+            }
+            let bytes = ((kparts[c].len() + vparts[c].len()) * FP16_BYTES) as f64;
+            let comp = self.queues[peer].submit(
+                CsdCommand::WriteToken {
+                    slot,
+                    layer,
+                    heads,
+                    pos: len - 1,
+                    k: kparts[c].clone(),
+                    v: vparts[c].clone(),
+                },
+                at,
+            )?;
+            self.clock.advance(peer, comp.done);
+            self.stats.replica_bytes += bytes;
+        }
+        Ok(())
+    }
+
+    /// Mirror one prefill layer to each shard's replica peer (see
+    /// [`Self::mirror_decode_writes`]).  Returns the latest mirror
+    /// completion: the layer only counts as sealed once its replica is
+    /// durable too.
+    #[allow(clippy::too_many_arguments)]
+    fn mirror_prefill_writes(
+        &mut self,
+        slot: u32,
+        layer: u16,
+        sp: usize,
+        len: usize,
+        skip: usize,
+        k_seq: &[f32],
+        v_seq: &[f32],
+        at: Time,
+    ) -> Result<Time> {
+        let d = self.d_head;
+        let mut done = at;
+        for c in 0..self.topology.n_csds {
+            let heads = self.topology.heads_of(c).to_vec();
+            if heads.is_empty() {
+                continue;
+            }
+            let peer = self.replica_peer(c);
+            if self.queues[peer].dead(at) {
+                continue;
+            }
+            let mut kp = Vec::with_capacity(heads.len() * (len - skip) * d);
+            let mut vp = Vec::with_capacity(heads.len() * (len - skip) * d);
+            for &hh in &heads {
+                let base = hh as usize * sp * d;
+                kp.extend_from_slice(&k_seq[base + skip * d..base + len * d]);
+                vp.extend_from_slice(&v_seq[base + skip * d..base + len * d]);
+            }
+            let bytes = ((kp.len() + vp.len()) * FP16_BYTES) as f64;
+            let comp = self.queues[peer].submit(
+                CsdCommand::WritePrefillLayer {
+                    slot,
+                    layer,
+                    heads,
+                    pos: skip,
+                    s_len: len - skip,
+                    k: kp,
+                    v: vp,
+                },
+                at,
+            )?;
+            self.clock.advance(peer, comp.done);
+            self.stats.replica_bytes += bytes;
+            done = done.max(comp.done);
+        }
+        Ok(done)
+    }
+
+    /// First device already dead at `at`, if any.
+    pub fn dead_device(&self, at: Time) -> Option<usize> {
+        self.queues.iter().position(|q| q.dead(at))
+    }
+
+    /// The recovery policy configured on this array's spec.
+    pub fn recovery_policy(&self) -> crate::fault::RecoveryPolicy {
+        self.spec.fault.recovery
+    }
+
+    /// Swap lost device `c` for a fresh replacement: same device index
+    /// and command path, empty flash/FTL/hot tier, clean bill of health.
+    /// The dead device's fault counters are folded into the array totals
+    /// before it is dropped.
+    pub fn replace_device(&mut self, c: usize) -> Result<()> {
+        let csd = InstCsd::with_tier(self.spec, self.ftl_cfg, self.tier)
+            .context("constructing replacement InstCSD")?;
+        let old = &self.queues[c];
+        self.retired.nvme_timeouts += old.timeouts;
+        self.retired.nvme_retry_s += old.retry_s;
+        self.retired.flash_ecc_corrected += old.csd.ftl.array.counters.ecc_corrected;
+        self.retired.flash_read_retries += old.csd.ftl.array.counters.read_retries;
+        self.retired.flash_bad_blocks += old.csd.ftl.counters.bad_blocks;
+        let succ = self.queues[c].successor(csd);
+        self.queues[c] = succ;
+        self.stats.csd_losses += 1;
+        Ok(())
+    }
+
+    /// Restore device `lost`'s KV onto its (already-replaced, empty)
+    /// successor from the peer mirrors: the lost primaries come off the
+    /// replica peer, and the replicas the lost device was holding for
+    /// its predecessor are rebuilt from that predecessor's primaries —
+    /// so the array tolerates a subsequent single loss too.  Returns the
+    /// restore completion time.
+    pub fn restore_from_replica(&mut self, lost: usize, at: Time) -> Result<Time> {
+        anyhow::ensure!(
+            self.replicate(),
+            "replica restore needs --kv-replicas 1 on a multi-CSD head topology"
+        );
+        let n = self.topology.n_csds;
+        let peer = self.replica_peer(lost);
+        let prev = (lost + n - 1) % n;
+        let mut t = at;
+        let mut bytes = 0f64;
+        // (source device, heads whose streams to copy)
+        let plans: [(usize, Vec<u16>); 2] = [
+            (peer, self.topology.heads_of(lost).to_vec()),
+            (prev, self.topology.heads_of(prev).to_vec()),
+        ];
+        for (src, heads) in plans {
+            if src == lost || heads.is_empty() {
+                continue;
+            }
+            let keys: Vec<crate::ftl::StreamKey> = self.queues[src]
+                .csd
+                .ftl
+                .stream_keys()
+                .into_iter()
+                .filter(|k| {
+                    k.slot < crate::ftl::PREFIX_SLOT_BASE && heads.contains(&k.head)
+                })
+                .collect();
+            for key in keys {
+                let (a, b) = two_queues(&mut self.queues, src, lost);
+                let (exp, rd) = a.csd.ftl.export_stream(key, at)?;
+                let wr = b.csd.ftl.import_stream(key, &exp, rd)?;
+                bytes += exp.bytes() as f64;
+                t = t.max(wr);
+                self.clock.advance(src, rd);
+                self.clock.advance(lost, wr);
+            }
+        }
+        self.stats.restore_bytes += bytes;
+        self.stats.recoveries += 1;
+        crate::obs::device_instant(lost, "replica_restore", t);
+        Ok(t)
+    }
+
+    /// Aggregate fault counters across the array (live devices plus the
+    /// retired counters of replaced ones).
+    pub fn fault_totals(&self) -> crate::fault::FaultTotals {
+        let mut tot = self.retired;
+        for q in &self.queues {
+            tot.nvme_timeouts += q.timeouts;
+            tot.nvme_retry_s += q.retry_s;
+            tot.flash_ecc_corrected += q.csd.ftl.array.counters.ecc_corrected;
+            tot.flash_read_retries += q.csd.ftl.array.counters.read_retries;
+            tot.flash_bad_blocks += q.csd.ftl.counters.bad_blocks;
+        }
+        tot
     }
 
     /// Local tokens of a `global`-token prefix resident on shard `c`:

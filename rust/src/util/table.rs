@@ -54,6 +54,14 @@ impl Table {
         print!("{}", self.render());
     }
 
+    /// True when any row is an error row — the bench harness's shared
+    /// convention puts the literal sentinel `ERR` in a data cell and the
+    /// rendered error next to it.  `bench all` gates its exit code on
+    /// this so a sweep that silently degraded to error rows fails CI.
+    pub fn has_error_rows(&self) -> bool {
+        self.rows.iter().any(|r| r.iter().any(|c| c == "ERR"))
+    }
+
     /// JSON view (`{"title", "header", "rows"}`) for machine-readable
     /// bench output (`instinfer bench <target> --json FILE`).
     pub fn to_json(&self) -> crate::util::json::Json {
@@ -116,6 +124,15 @@ mod tests {
         let parsed = crate::util::json::Json::parse(&j.to_string()).unwrap();
         assert_eq!(parsed.get("title").unwrap().as_str(), Some("demo"));
         assert_eq!(parsed.get("rows").unwrap().as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn error_rows_detected() {
+        let mut t = Table::new("demo", &["bs", "tput"]);
+        t.row(vec!["4".into(), "12.5".into()]);
+        assert!(!t.has_error_rows());
+        t.row(vec!["8".into(), "ERR".into()]);
+        assert!(t.has_error_rows());
     }
 
     #[test]

@@ -61,9 +61,9 @@ fn mismatched_row_lengths_rejected() {
     let mut csd = InstCsd::tiny_test();
     let bad = vec![0.0f32; 31];
     let good = vec![0.0f32; 32];
-    assert!(csd.write_token_heads(0, 0, &[0], &bad, &good, 0.0).is_err());
+    assert!(csd.write_token_heads(0, 0, &[0], 0, &bad, &good, 0.0).is_err());
     let err = csd
-        .write_token_heads(0, 0, &[0, 1], &good, &good, 0.0)
+        .write_token_heads(0, 0, &[0, 1], 0, &good, &good, 0.0)
         .unwrap_err()
         .to_string();
     assert!(err.contains("mismatch"), "{err}");

@@ -1,0 +1,175 @@
+//! Fault-plane acceptance pins: the deterministic failure-injection
+//! contract end to end.  Faults off must be bit-identical (outputs AND
+//! timestamps) to the fault-free engine; a fault seed must replay
+//! byte-identically at any worker-thread count; a CSD death mid-decode
+//! must recover to the exact fault-free outputs under both re-prefill
+//! and replicated recovery; and the recovery work must stay inside the
+//! exclusive attribution buckets' wall-time identity.
+
+use instinfer::coordinator::{
+    run_open_loop, EngineConfig, InferenceEngine, SchedConfig, ServeReport,
+};
+use instinfer::fault::{FaultConfig, RecoveryPolicy};
+use instinfer::obs::{self, attr, TraceLevel};
+use instinfer::runtime::Runtime;
+use instinfer::workload::{ArrivalGen, LengthProfile, WorkloadGen};
+
+/// The serve-bench recipe at 2 head-striped CSDs: 8 fixed-seed Poisson
+/// arrivals, prompt 16, gen 8 — long enough that a midpoint loss lands
+/// while decode is in flight.
+fn serve(fault: Option<FaultConfig>, threads: usize) -> (InferenceEngine, ServeReport) {
+    let rt = Runtime::open("artifacts").unwrap();
+    let meta = rt.manifest.model.clone();
+    let mut cfg = EngineConfig::micro_for(&meta, 2, false).threads(threads);
+    if let Some(f) = fault {
+        cfg = cfg.faults(f);
+    }
+    let mut engine = InferenceEngine::new(rt, cfg).unwrap();
+    let wg = WorkloadGen::new(777, meta.vocab, meta.max_seq, LengthProfile::Fixed, 16, 8);
+    let arrivals = ArrivalGen::new(wg, 778, 100.0).take(8);
+    let report = run_open_loop(&mut engine, arrivals, SchedConfig::serving(4, 2, 16)).unwrap();
+    (engine, report)
+}
+
+/// Everything observable about one traced run, folded into a comparable
+/// bundle: `(id, tokens, arrival/TTFT/finish timestamps)` per request,
+/// the unified metrics snapshot, and the full-level trace bytes.
+fn traced_bundle(
+    fault: Option<FaultConfig>,
+    threads: usize,
+) -> (Vec<(u64, Vec<i32>, String)>, String, String) {
+    obs::install(TraceLevel::Full);
+    let (engine, report) = serve(fault, threads);
+    let sink = obs::uninstall().unwrap();
+    let mut recs = report.records.clone();
+    recs.sort_by_key(|r| r.id);
+    let outputs = recs
+        .iter()
+        .map(|r| {
+            (
+                r.id,
+                r.generated.clone(),
+                format!("{:.9}/{:.9}/{:.9}", r.arrived_at, r.first_token_at, r.finished_at),
+            )
+        })
+        .collect();
+    let metrics = engine.metrics_registry(&report.overlap).to_json().to_string();
+    (outputs, metrics, sink.export())
+}
+
+/// Sorted `(id, generated)` pairs — the output-only view used where
+/// recovery legitimately shifts timestamps but must not touch tokens.
+fn outputs_of(report: &ServeReport) -> Vec<(u64, Vec<i32>)> {
+    let mut out: Vec<(u64, Vec<i32>)> =
+        report.records.iter().map(|r| (r.id, r.generated.clone())).collect();
+    out.sort_by_key(|(id, _)| *id);
+    out
+}
+
+/// A scheduled loss of csd1 at the midpoint of the healthy run, plus
+/// per-op injection at `rate`.
+fn loss_config(rate: f64, recovery: RecoveryPolicy, replicas: u8) -> FaultConfig {
+    let (_, probe) = serve(None, 1);
+    FaultConfig {
+        seed: 7,
+        rate,
+        csd_loss: Some((1, probe.sim_end * 0.5)),
+        recovery,
+        kv_replicas: replicas,
+    }
+}
+
+/// Pin 1: `FaultConfig::none()` constructs no fault state at all — the
+/// run is bit-identical (outputs, simulated timestamps, metrics
+/// snapshot, trace bytes) to an engine built without the fault plane.
+#[test]
+fn faults_off_is_bit_identical_to_fault_free_engine() {
+    let plain = traced_bundle(None, 1);
+    let off = traced_bundle(Some(FaultConfig::none()), 1);
+    assert_eq!(off.0, plain.0, "faults-off perturbed outputs or timestamps");
+    assert_eq!(off.1, plain.1, "faults-off perturbed the metrics snapshot");
+    assert_eq!(off.2, plain.2, "faults-off perturbed the trace bytes");
+}
+
+/// Pin 2: the fault sequence rides the per-device command order, which
+/// the parallel executor keeps thread-count invariant — so one seed
+/// replays byte-identically (outputs, timestamps, metrics, trace) at
+/// any `--threads`, faults, loss, recovery and all.
+#[test]
+fn same_seed_fault_run_is_thread_count_invariant() {
+    let fault = loss_config(2e-3, RecoveryPolicy::Replicated, 1);
+    let base = traced_bundle(Some(fault), 1);
+    for n in [2usize, 4] {
+        let run = traced_bundle(Some(fault), n);
+        assert_eq!(run.0, base.0, "fault outputs/timestamps diverged at {n} threads");
+        assert_eq!(run.1, base.1, "fault metrics snapshot diverged at {n} threads");
+        assert_eq!(run.2, base.2, "fault trace bytes diverged at {n} threads");
+    }
+}
+
+/// Pin 3: a whole-CSD death mid-decode recovers to the exact fault-free
+/// outputs — greedy decode is deterministic, so re-prefill and the peer
+/// replica must both reconstruct the lost KV bit-exactly and every
+/// request must finish with the same tokens it would have produced on a
+/// healthy array.
+#[test]
+fn csd_loss_recovers_exact_outputs_under_reprefill_and_replicated() {
+    let (_, reference) = serve(None, 1);
+    let want = outputs_of(&reference);
+    for (recovery, replicas) in
+        [(RecoveryPolicy::RePrefill, 0u8), (RecoveryPolicy::Replicated, 1)]
+    {
+        let fault = loss_config(0.0, recovery, replicas);
+        let (engine, report) = serve(Some(fault), 1);
+        let label = recovery.label();
+        let reg = engine.metrics_registry(&report.overlap);
+        assert_eq!(reg.value("fault.csd_losses"), Some(1.0), "{label}: loss never fired");
+        match recovery {
+            // re-prefill recovers by restarting the in-flight requests
+            // (the replacement device itself comes up instantly)
+            RecoveryPolicy::RePrefill => assert!(
+                engine.metrics.restarts > 0,
+                "{label}: loss mid-decode restarted no requests"
+            ),
+            // the replica restore is a timed peer-to-peer copy
+            RecoveryPolicy::Replicated => {
+                assert_eq!(reg.value("fault.recoveries"), Some(1.0), "{label}: no restore");
+                assert!(
+                    engine.metrics.recovery_s > 0.0,
+                    "{label}: restore took no simulated time"
+                );
+            }
+            RecoveryPolicy::RetryOnly => unreachable!(),
+        }
+        assert_eq!(report.aborted_count(), 0, "{label}: recovery aborted requests");
+        assert_eq!(outputs_of(&report), want, "{label}: outputs diverged from fault-free run");
+    }
+}
+
+/// Pin 4: recovery work lands in its own exclusive attribution bucket
+/// without breaking the per-request identity — buckets still sum to
+/// measured wall time within 1e-6 relative, and the recovery bucket
+/// actually carries the restore cost.
+#[test]
+fn recovery_attribution_preserves_wall_time_identity() {
+    let fault = loss_config(2e-3, RecoveryPolicy::Replicated, 1);
+    attr::install();
+    let (_, report) = serve(Some(fault), 1);
+    let sink = attr::uninstall().expect("attr sink should still be installed");
+    let rep = attr::extract(&sink);
+    assert_eq!(report.aborted_count(), 0, "replicated recovery aborted requests");
+    assert!(!rep.requests.is_empty(), "no attributed requests");
+    for r in &rep.requests {
+        let tol = 1e-6 * r.wall.max(1e-9);
+        let sum: f64 = r.buckets.iter().sum();
+        assert!(
+            (sum - r.wall).abs() <= tol,
+            "req {} buckets sum {sum} != wall {} under faults",
+            r.req,
+            r.wall,
+        );
+    }
+    let recovered: f64 =
+        rep.requests.iter().map(|r| r.buckets[attr::Bucket::Recovery.index()]).sum();
+    assert!(recovered > 0.0, "replicated recovery attributed no time to the recovery bucket");
+}
